@@ -1,0 +1,143 @@
+"""AOT driver: lower every catalog executable to HLO text + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format — jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only core,lm] [--force]
+    python -m compile.aot --list
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .methods import Built
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_one(built: Built, out_dir: str) -> dict:
+    arg_specs = [jax.ShapeDtypeStruct(tuple(s.shape), _DTYPES[s.dtype])
+                 for s in built.inputs]
+    # keep_unused: the positional manifest contract requires every declared
+    # input to stay a parameter even if the graph ignores it (e.g. `raw` in
+    # reconstruct graphs, gw's in linear-variant evals).
+    lowered = jax.jit(built.fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{built.name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    out_shapes = jax.eval_shape(built.fn, *arg_specs)
+    if len(out_shapes) != len(built.outputs):
+        raise RuntimeError(
+            f"{built.name}: declared {len(built.outputs)} outputs, "
+            f"graph produces {len(out_shapes)}")
+    outputs = []
+    for (name, _shape, _dt), s in zip(built.outputs, out_shapes):
+        dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[s.dtype]
+        outputs.append({"name": name, "shape": list(s.shape), "dtype": dt})
+
+    return {
+        "name": built.name,
+        "file": f"{built.name}.hlo.txt",
+        "inputs": [s.to_meta() for s in built.inputs],
+        "outputs": outputs,
+        "meta": built.meta,
+        "hlo_bytes": len(text),
+    }
+
+
+def _source_stamp() -> str:
+    """Hash of the compile-path sources — artifacts rebuilt when it changes."""
+    h = hashlib.sha256()
+    root = os.path.dirname(__file__)
+    for dirpath, _, files in sorted(os.walk(root)):
+        if "__pycache__" in dirpath:
+            continue
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default="", help="comma-separated groups")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    from .specs import all_specs
+
+    catalog = all_specs()
+    if args.list:
+        for g, b in catalog:
+            print(f"{g:12s} {b.name}")
+        return 0
+
+    only = set(args.only.split(",")) if args.only else None
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    man_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "entries": {}}
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            manifest = json.load(f)
+    stamp = _source_stamp()
+    stale = manifest.get("stamp") != stamp
+
+    n_built = n_skipped = 0
+    t_all = time.time()
+    for group, built in catalog:
+        if only and group not in only:
+            continue
+        path = os.path.join(out_dir, f"{built.name}.hlo.txt")
+        have = built.name in manifest["entries"] and os.path.exists(path)
+        if have and not args.force and not stale:
+            n_skipped += 1
+            continue
+        t0 = time.time()
+        entry = lower_one(built, out_dir)
+        entry["group"] = group
+        manifest["entries"][built.name] = entry
+        n_built += 1
+        print(f"[aot] {group:12s} {built.name:32s} "
+              f"{entry['hlo_bytes']/1024:8.0f} KiB  {time.time()-t0:5.1f}s",
+              flush=True)
+
+    if not only:
+        # Partial (--only) builds must not mark the whole catalog fresh:
+        # other groups were lowered from older sources.
+        manifest["stamp"] = stamp
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] built {n_built}, skipped {n_skipped} (up to date), "
+          f"total {time.time()-t_all:.1f}s → {man_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

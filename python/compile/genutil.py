@@ -1,0 +1,116 @@
+"""Generator configuration and weight construction (build-time twin of
+``rust/src/mcnc/generator.rs``).
+
+The MCNC generator is a frozen random MLP ``φ : R^k → S^{d-1}``:
+
+    u = act(freq · α W₁); u = act(u W₂); …; v = act(u W_depth)
+    φ(α) = v / ‖v‖₂           (if cfg.normalize)
+
+No biases anywhere — with α = 0 every pre-activation is 0, so sine/linear
+generators give φ(0) ∝ 0 and the reparameterized residual starts at exactly
+zero (the paper's zero-init guarantee).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import rng
+
+
+@dataclass(frozen=True)
+class GenCfg:
+    """Architecture + init of the generator φ (paper Table 10 defaults)."""
+
+    k: int = 9  # input (manifold) dimension
+    d: int = 5000  # output dimension = chunk size
+    width: int = 1000  # hidden width
+    depth: int = 3  # number of linear layers (>= 2)
+    freq: float = 4.5  # input frequency (first-layer sine multiplier)
+    act: str = "sine"  # sine|sigmoid|relu|lrelu|elu|linear
+    # L2-normalize output onto S^{d-1}. Default False, matching the paper's
+    # released implementation (appendix A.1: `generator(alpha) * beta`, no
+    # normalization): at the zero init φ(0) = 0, and the exact-normalization
+    # gradient is 0/0 there. The normalized variant is used for the sphere-
+    # coverage analysis (Fig 2 / SWGAN), where inputs are never zero.
+    normalize: bool = False
+    residual: bool = False  # residual connections on hidden layers
+    init: str = "uniform"  # uniform|normal
+    init_scale: float = 1.0  # the paper's `c` factor on the init variance
+
+    def layer_shapes(self) -> list[tuple[int, int]]:
+        if self.depth < 2:
+            raise ValueError("generator depth must be >= 2")
+        dims = [self.k] + [self.width] * (self.depth - 1) + [self.d]
+        return [(dims[i], dims[i + 1]) for i in range(self.depth)]
+
+    def n_weights(self) -> int:
+        return sum(a * b for a, b in self.layer_shapes())
+
+    def flops_per_chunk(self) -> int:
+        """FLOPs to reconstruct one d-chunk: matmuls + activations + scale.
+
+        Matches the paper's Appendix A.6 accounting: 2·Σ fan_in·fan_out for
+        the matmuls plus d for the β scale (activation transcendentals are
+        excluded there; we follow the same convention).
+        """
+        mm = 2 * sum(a * b for a, b in self.layer_shapes())
+        return mm + self.d
+
+    def to_meta(self) -> dict:
+        return asdict(self)
+
+
+def make_weights(cfg: GenCfg, seed: int) -> list[np.ndarray]:
+    """Frozen generator weights from a scalar seed (layer i uses substream
+    ``seed ^ (TAG_GEN_LAYER + i)``); U[-c/fan_in, c/fan_in) by default."""
+    ws = []
+    for i, (fan_in, fan_out) in enumerate(cfg.layer_shapes()):
+        s = rng.substream(seed, rng.TAG_GEN_LAYER + i)
+        n = fan_in * fan_out
+        if cfg.init == "uniform":
+            bound = cfg.init_scale / fan_in
+            w = rng.symmetric_f32(s, n, bound)
+        elif cfg.init == "normal":
+            # variance matched to the uniform baseline: Var(U[-1/n,1/n]) = 1/(3n^2)
+            std = cfg.init_scale / (np.sqrt(3.0) * fan_in)
+            w = rng.normal_f32(s, n, std)
+        else:
+            raise ValueError(f"unknown init {cfg.init!r}")
+        ws.append(w.reshape(fan_in, fan_out))
+    return ws
+
+
+def activation(name: str):
+    import jax.nn
+
+    return {
+        "sine": jnp.sin,
+        "sigmoid": jax.nn.sigmoid,
+        "relu": jax.nn.relu,
+        "lrelu": lambda x: jax.nn.leaky_relu(x, 0.01),
+        "elu": jax.nn.elu,
+        "linear": lambda x: x,
+    }[name]
+
+
+def generator_ref(cfg: GenCfg, ws: list[jnp.ndarray], alpha: jnp.ndarray,
+                  beta: jnp.ndarray, freq=None) -> jnp.ndarray:
+    """Pure-jnp oracle. alpha: [n, k], beta: [n] → [n, d].
+
+    ``freq`` may be a traced scalar (the Table-6 frequency-sweep executable
+    takes it as a runtime input so one HLO covers the whole sweep).
+    """
+    act = activation(cfg.act)
+    f = jnp.float32(cfg.freq) if freq is None else freq
+    u = act(f * (alpha @ ws[0]))
+    for w in ws[1:-1]:
+        h = act(u @ w)
+        u = h + u if cfg.residual else h
+    v = act(u @ ws[-1])
+    if cfg.normalize:
+        v = v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-8)
+    return v * beta[:, None]

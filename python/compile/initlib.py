@@ -1,0 +1,119 @@
+"""Synthesize initial tensor values from manifest init laws + a scalar seed.
+
+Python twin of ``rust/src/train/init.rs``. Both implementations must agree
+bit-for-bit (golden-tested): the Rust coordinator uses this to build the
+PJRT inputs at runtime, the Python tests use it to sanity-train lowered
+graphs and to pin the Rust results.
+
+An *init law* is the ``init`` dict of a manifest input spec, interpreted in
+the context of the executable's leaf registry (``meta.registry``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from . import rng
+from .genutil import GenCfg, make_weights
+
+
+def _draw(dist: str, param: float, n: int, stream: int) -> np.ndarray:
+    if dist == "zeros":
+        return np.zeros(n, np.float32)
+    if dist == "ones":
+        return np.ones(n, np.float32)
+    if dist == "sym_uniform":
+        return rng.symmetric_f32(stream, n, param)
+    if dist == "normal":
+        return rng.normal_f32(stream, n, param)
+    raise ValueError(f"unknown dist {dist!r}")
+
+
+def _leaves(registry: dict, compress: bool):
+    return [l for l in registry["leaves"] if l["compress"] == compress]
+
+
+def _leaf_size(l: dict) -> int:
+    n = 1
+    for s in l["shape"]:
+        n *= s
+    return n
+
+
+def _lora_targets(registry: dict):
+    return [l for l in registry["leaves"] if l["compress"] and l["lora"]]
+
+
+def init_tensor(init: dict, shape, registry: dict, seed: int) -> np.ndarray:
+    """Build one input tensor according to its init law."""
+    n = int(np.prod(shape)) if shape else 1
+    kind = init["kind"]
+    if kind == "zeros":
+        return np.zeros(shape, np.float32)
+    if kind == "ones":
+        return np.ones(shape, np.float32)
+    if kind == "sym_uniform":
+        s = rng.substream(seed, init.get("tag", rng.TAG_COEF))
+        return _draw("sym_uniform", init["bound"], n, s).reshape(shape)
+    if kind == "comp_leaves":
+        parts = [
+            _draw(l["dist"], l["param"], _leaf_size(l),
+                  rng.substream(seed, rng.TAG_THETA0 + i))
+            for i, l in enumerate(_leaves(registry, True))
+        ]
+        return np.concatenate(parts) if parts else np.zeros(0, np.float32)
+    if kind == "raw_leaves":
+        parts = [
+            _draw(l["dist"], l["param"], _leaf_size(l),
+                  rng.substream(seed, rng.TAG_RAW + i))
+            for i, l in enumerate(_leaves(registry, False))
+        ]
+        out = np.concatenate(parts) if parts else np.zeros(0, np.float32)
+        if out.size == 0:  # methods pad empty raw to size 1
+            out = np.zeros(1, np.float32)
+        return out
+    if kind == "gen_layer":
+        cfg = GenCfg(**init["gen"])
+        return make_weights(cfg, seed)[init["layer"]]
+    if kind == "lora_a":
+        r = init["rank"]
+        parts = [
+            _draw("sym_uniform", 1.0 / math.sqrt(l["lora"][0]), l["lora"][0] * r,
+                  rng.substream(seed, rng.TAG_LORA + j))
+            for j, l in enumerate(_lora_targets(registry))
+        ]
+        return np.concatenate(parts)
+    if kind == "lora0":
+        r = init["rank"]
+        a = init_tensor({"kind": "lora_a", "rank": r}, None, registry, seed)
+        db = sum(r * l["lora"][1] for l in _lora_targets(registry))
+        return np.concatenate([a, np.zeros(db, np.float32)])
+    if kind == "nola_basis":
+        m, r, side = init["m"], init["rank"], init["side"]
+        parts = []
+        for j, l in enumerate(_lora_targets(registry)):
+            a, b = l["lora"]
+            if side == "a":
+                s = rng.substream(seed, rng.TAG_NOLA_BASIS + 2 * j)
+                parts.append(_draw("sym_uniform", 1.0 / math.sqrt(a), m * a * r, s))
+            else:
+                s = rng.substream(seed, rng.TAG_NOLA_BASIS + 2 * j + 1)
+                parts.append(_draw("sym_uniform", 1.0 / math.sqrt(r), m * r * b, s))
+        return np.concatenate(parts)
+    if kind == "nola_coef":
+        m = init["m"]
+        s = rng.substream(seed, rng.TAG_COEF)
+        return _draw("sym_uniform", 1.0 / math.sqrt(m), n, s).reshape(shape)
+    raise ValueError(f"unknown init kind {kind!r}")
+
+
+def init_all(inputs_meta: list[dict], registry: dict, seed: int) -> dict:
+    """Initial values for every spec that has an init law."""
+    out = {}
+    for spec in inputs_meta:
+        if spec.get("init"):
+            out[spec["name"]] = init_tensor(spec["init"], tuple(spec["shape"]),
+                                            registry, seed)
+    return out

@@ -1,0 +1,133 @@
+"""L1 — the MCNC generator as a Pallas kernel.
+
+Reconstructing parameter chunks from ``(α, β)`` is the compute hot-spot of
+MCNC serving (every request batch pays it when its adapter is cold), so it
+is written as a single fused kernel: three matmuls + sine epilogues +
+L2-normalize + β-scale, tiled over the chunk axis.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+blocks of chunks (``block_n``) and, when ``d`` is large, over output tiles
+(``block_d``); W1/W2 and the α-block stay resident in VMEM across the inner
+d-tiles, W3 is streamed tile-by-tile, and all three matmuls hit the MXU with
+VPU epilogues. Normalization needs the full row norm, so the d-tiled variant
+accumulates squared sums in a scratch pass; the single-tile fast path
+(d == block_d) normalizes in-register.
+
+On this CPU image the kernel must run with ``interpret=True`` (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT client cannot execute);
+interpret mode lowers to plain HLO so the same graph runs inside the AOT
+train steps that the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-8
+
+
+def _kernel_fused(alpha_ref, beta_ref, w1_ref, w2_ref, w3_ref, o_ref, *,
+                  freq: float, normalize: bool):
+    """One grid step: reconstruct a (block_n, d) tile of chunks."""
+    a = alpha_ref[...]  # (bn, k)
+    u = jnp.sin(jnp.float32(freq) * jnp.dot(a, w1_ref[...]))  # (bn, h) — MXU
+    u = jnp.sin(jnp.dot(u, w2_ref[...]))  # (bn, h) — MXU
+    v = jnp.sin(jnp.dot(u, w3_ref[...]))  # (bn, d) — MXU
+    if normalize:
+        # VPU epilogue: row norms never leave VMEM. Matches the reference's
+        # v / (||v|| + eps) law exactly.
+        nrm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+        v = v / (nrm + EPS)
+    o_ref[...] = v * beta_ref[...][:, None]
+
+
+def _generator3_pallas_raw(alpha, beta, w1, w2, w3, *, freq: float,
+                           normalize: bool = True, block_n: int = 64,
+                           interpret: bool = True):
+    """Fused MCNC generator forward. alpha: [n,k], beta: [n] → [n,d].
+
+    Pads the chunk axis up to a multiple of ``block_n`` (padded rows are
+    sliced off afterwards — they cost one wasted grid step at most).
+    """
+    n, k = alpha.shape
+    h = w1.shape[1]
+    d = w3.shape[1]
+    if w1.shape != (k, h) or w2.shape != (h, h) or w3.shape != (h, d):
+        raise ValueError("generator weight shapes are inconsistent")
+    bn = min(block_n, max(n, 1))
+    n_pad = (-n) % bn
+    if n_pad:
+        alpha = jnp.pad(alpha, ((0, n_pad), (0, 0)))
+        beta = jnp.pad(beta, ((0, n_pad),))
+    grid = ((n + n_pad) // bn,)
+
+    out = pl.pallas_call(
+        partial(_kernel_fused, freq=freq, normalize=normalize),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((k, h), lambda i: (0, 0)),
+            pl.BlockSpec((h, h), lambda i: (0, 0)),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, d), jnp.float32),
+        interpret=interpret,
+    )(alpha.astype(jnp.float32), beta.astype(jnp.float32),
+      w1.astype(jnp.float32), w2.astype(jnp.float32), w3.astype(jnp.float32))
+    return out[:n]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _gen3(alpha, beta, w1, w2, w3, freq, normalize, block_n, interpret):
+    return _generator3_pallas_raw(alpha, beta, w1, w2, w3, freq=freq,
+                                  normalize=normalize, block_n=block_n,
+                                  interpret=interpret)
+
+
+def _gen3_fwd(alpha, beta, w1, w2, w3, freq, normalize, block_n, interpret):
+    out = _generator3_pallas_raw(alpha, beta, w1, w2, w3, freq=freq,
+                                 normalize=normalize, block_n=block_n,
+                                 interpret=interpret)
+    return out, (alpha, beta, w1, w2, w3)
+
+
+def _gen3_bwd(freq, normalize, block_n, interpret, res, g):
+    # Backward pass through the mathematically identical jnp reference
+    # (interpret-mode pallas_call has no reverse-mode rule). Gradients w.r.t.
+    # the frozen generator weights are dead code and DCE'd by XLA.
+    from .ref import generator3_ref
+
+    alpha, beta, w1, w2, w3 = res
+    _, vjp = jax.vjp(
+        lambda a, b, x, y, z: generator3_ref(a, b, x, y, z, freq, normalize),
+        alpha, beta, w1, w2, w3)
+    return vjp(g)
+
+
+_gen3.defvjp(_gen3_fwd, _gen3_bwd)
+
+
+def generator3_pallas(alpha, beta, w1, w2, w3, *, freq: float,
+                      normalize: bool = True, block_n: int = 64,
+                      interpret: bool = True):
+    """Differentiable fused generator: Pallas forward, reference VJP."""
+    return _gen3(alpha.astype(jnp.float32), beta.astype(jnp.float32),
+                 w1, w2, w3, float(freq), bool(normalize), int(block_n),
+                 bool(interpret))
+
+
+def vmem_bytes(k: int, h: int, d: int, block_n: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step of the fused kernel.
+
+    Used by DESIGN.md/EXPERIMENTS.md to pick ``block_n`` against the ~16 MiB
+    VMEM budget of a TPU core (operands + both hidden activations + output).
+    """
+    operands = block_n * k + block_n + k * h + h * h + h * d
+    activations = 2 * block_n * h + block_n * d
+    return (operands + activations) * dtype_bytes

@@ -1,0 +1,26 @@
+"""Pure-jnp correctness oracle for the MCNC generator Pallas kernel.
+
+The hot-path configuration (depth-3, sine, L2-normalized) written as plain
+jnp ops. ``python/tests/test_kernel.py`` pins the Pallas kernel to this
+oracle across shapes/dtypes with hypothesis; the generic-config oracle lives
+in ``compile.genutil.generator_ref``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def generator3_ref(alpha, beta, w1, w2, w3, freq: float, normalize: bool = True):
+    """alpha: [n,k] f32, beta: [n] f32, w1: [k,h], w2: [h,h], w3: [h,d] → [n,d].
+
+    u = sin(freq·α W1); u = sin(u W2); v = sin(u W3); out = β · v/‖v‖.
+    """
+    u = jnp.sin(jnp.float32(freq) * (alpha @ w1))
+    u = jnp.sin(u @ w2)
+    v = jnp.sin(u @ w3)
+    if normalize:
+        v = v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + EPS)
+    return v * beta[:, None]

@@ -1,0 +1,525 @@
+"""L2 — reparameterization methods and AOT-able train/eval step builders.
+
+Each *method* (dense, MCNC, PRANC, LoRA, MCNC-LoRA, NOLA-LoRA) defines
+  * ``statics``     — frozen inputs (θ0, generator weights, random bases …),
+  * ``trainables``  — the optimized state (the compressed representation),
+  * ``materialize`` — how statics + trainables become the model's params.
+
+Every tensor spec carries an *init law* (dict) so the Rust coordinator can
+synthesize the exact initial value from a scalar seed via the shared
+SplitMix64 streams (``initlib.py`` is the Python twin used in tests). The
+step functions keep Adam entirely inside the graph; the only things crossing
+the PJRT boundary each step are the data batch and scalar hyperparameters.
+
+Positional input convention (recorded per-executable in the manifest):
+    train_step : [*statics, *trainables, *adam_m, *adam_v, t, lr, x, y]
+               → [*trainables', *adam_m', *adam_v', t', loss, acc (, imp)]
+    eval_step  : [*statics, *trainables, x, y] → [loss, acc]
+    predict    : [*statics, *trainables, x] → [logits]
+    reconstruct: [*statics, *trainables] → [theta_c]
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import genutil
+from .genutil import GenCfg
+from .kernels.generator import generator3_pallas
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# --------------------------------------------------------------------------
+# Tensor specs + registry
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: tuple
+    dtype: str = "f32"  # f32 | i32
+    role: str = "static"  # static | trainable | data | hyper
+    init: dict | None = None  # init law for the Rust coordinator
+
+    @property
+    def size(self):
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def to_meta(self):
+        return {"name": self.name, "shape": list(self.shape),
+                "dtype": self.dtype, "role": self.role, "init": self.init}
+
+
+class Registry:
+    """Flattened layout of a model's leaves: compressed part + raw part."""
+
+    def __init__(self, leaves):
+        self.leaves = leaves
+        self.comp, self.raw = [], []
+        dc = r = 0
+        for leaf in leaves:
+            if leaf.compress:
+                self.comp.append((leaf, dc))
+                dc += leaf.size
+            else:
+                self.raw.append((leaf, r))
+                r += leaf.size
+        self.Dc, self.R = dc, r
+        self.lora_targets = [(leaf, off) for leaf, off in self.comp if leaf.lora]
+
+    def unflatten(self, theta_c, raw_vec):
+        p = {}
+        for leaf, off in self.comp:
+            p[leaf.name] = jax.lax.dynamic_slice_in_dim(theta_c, off, leaf.size).reshape(leaf.shape)
+        for leaf, off in self.raw:
+            p[leaf.name] = jax.lax.dynamic_slice_in_dim(raw_vec, off, leaf.size).reshape(leaf.shape)
+        return p
+
+    def lora_dims(self, rank):
+        """[(leaf, a, b, a_off, b_off)] with offsets into A_flat / B_flat."""
+        out, ao, bo = [], 0, 0
+        for leaf, _ in self.lora_targets:
+            a, b = leaf.lora
+            out.append((leaf, a, b, ao, bo))
+            ao += a * rank
+            bo += rank * b
+        return out, ao, bo
+
+    def to_meta(self):
+        return {"Dc": self.Dc, "R": self.R,
+                "leaves": [l.to_meta() for l in self.leaves]}
+
+
+def chunk_for_rate(Dc: int, rate: float, k: int) -> tuple[int, int]:
+    """Pick chunk size d and count n so n·(k+1) ≈ rate·Dc (paper §3.3)."""
+    d = max(int(math.ceil((k + 1) / rate)), k + 1)
+    n = int(math.ceil(Dc / d))
+    return d, n
+
+
+# --------------------------------------------------------------------------
+# Methods
+# --------------------------------------------------------------------------
+
+class Dense:
+    """Uncompressed baseline. The multiplicative ``mask`` static turns it
+    into the magnitude / PLATON-lite pruning substrate: Rust recomputes the
+    mask between steps from the ``importance`` output (|θ·∇θ|)."""
+
+    name = "dense"
+    emit_importance = True
+
+    def __init__(self, reg: Registry):
+        self.reg = reg
+
+    def statics(self):
+        return [TensorSpec("mask", (self.reg.Dc,), init={"kind": "ones"})]
+
+    def trainables(self):
+        return [
+            TensorSpec("theta_c", (self.reg.Dc,), role="trainable",
+                       init={"kind": "comp_leaves"}),
+            TensorSpec("raw", (max(self.reg.R, 1),), role="trainable",
+                       init={"kind": "raw_leaves"}),
+        ]
+
+    def materialize(self, st, tr):
+        return self.reg.unflatten(tr["theta_c"] * st["mask"], tr["raw"])
+
+    def reconstruct(self, st, tr):
+        return tr["theta_c"] * st["mask"]
+
+    def meta(self):
+        return {"method": "dense", "trainable_comp": self.reg.Dc,
+                "rate": 1.0}
+
+
+class Mcnc:
+    """The paper's contribution: per-chunk Δθ = β·φ(α) on S^{d-1}.
+
+    ``act='linear', normalize=False`` recovers a chunked PRANC (the paper's
+    Table 5 "None" row); that alias is exported as method name "pranc".
+    """
+
+    name = "mcnc"
+
+    def __init__(self, reg: Registry, gen: GenCfg, beta_init: float = 1.0,
+                 name: str = "mcnc", use_pallas: bool = True,
+                 freq_input: bool = False):
+        self.reg, self.gen, self.beta_init = reg, gen, beta_init
+        self.name = name
+        self.freq_input = freq_input
+        self.n = int(math.ceil(reg.Dc / gen.d))
+        self.use_pallas = (use_pallas and gen.depth == 3 and gen.act == "sine"
+                           and not gen.residual and not freq_input)
+
+    def statics(self):
+        specs = [TensorSpec("theta0_c", (self.reg.Dc,), init={"kind": "comp_leaves"})]
+        for i, (a, b) in enumerate(self.gen.layer_shapes()):
+            specs.append(TensorSpec(f"gw{i}", (a, b),
+                                    init={"kind": "gen_layer", "layer": i,
+                                          "gen": self.gen.to_meta()}))
+        if self.freq_input:
+            specs.append(TensorSpec("freq", (), init={"kind": "ones"}))
+        return specs
+
+    def trainables(self):
+        return [
+            TensorSpec("alpha", (self.n, self.gen.k), role="trainable",
+                       init={"kind": "zeros"}),
+            TensorSpec("beta", (self.n,), role="trainable",
+                       init={"kind": "ones"} if self.beta_init == 1.0
+                       else {"kind": "zeros"}),
+            TensorSpec("raw", (max(self.reg.R, 1),), role="trainable",
+                       init={"kind": "raw_leaves"}),
+        ]
+
+    def delta(self, st, tr):
+        ws = [st[f"gw{i}"] for i in range(self.gen.depth)]
+        if self.use_pallas:
+            out = generator3_pallas(tr["alpha"], tr["beta"], *ws,
+                                    freq=self.gen.freq,
+                                    normalize=self.gen.normalize)
+        else:
+            out = genutil.generator_ref(self.gen, ws, tr["alpha"], tr["beta"],
+                                        freq=st.get("freq"))
+        return out.reshape(-1)[: self.reg.Dc]
+
+    def materialize(self, st, tr):
+        return self.reg.unflatten(st["theta0_c"] + self.delta(st, tr), tr["raw"])
+
+    def reconstruct(self, st, tr):
+        return st["theta0_c"] + self.delta(st, tr)
+
+    def meta(self):
+        tc = self.n * (self.gen.k + 1)
+        return {"method": self.name, "gen": self.gen.to_meta(),
+                "n_chunks": self.n, "trainable_comp": tc,
+                "rate": tc / self.reg.Dc,
+                "recon_flops": self.n * self.gen.flops_per_chunk()}
+
+
+def _lora_delta_c(reg: Registry, rank: int, a_flat, b_flat, scale: float):
+    """Assemble the compressed-flat delta from per-target A@B low-rank updates."""
+    dims, _, _ = reg.lora_dims(rank)
+    by_name = {leaf.name: (leaf, a, b, ao, bo) for leaf, a, b, ao, bo in dims}
+    pieces = []
+    for leaf, _ in reg.comp:
+        if leaf.name in by_name:
+            _, a, b, ao, bo = by_name[leaf.name]
+            A = jax.lax.dynamic_slice_in_dim(a_flat, ao, a * rank).reshape(a, rank)
+            B = jax.lax.dynamic_slice_in_dim(b_flat, bo, rank * b).reshape(rank, b)
+            pieces.append(((A @ B) * scale).reshape(-1))
+        else:
+            pieces.append(jnp.zeros((leaf.size,), jnp.float32))
+    return jnp.concatenate(pieces)
+
+
+class Lora:
+    """Classic LoRA(r) on every matrix-shaped compressed leaf."""
+
+    name = "lora"
+
+    def __init__(self, reg: Registry, rank: int, scale: float = 1.0):
+        self.reg, self.rank, self.scale = reg, rank, scale
+        _, self.Da, self.Db = reg.lora_dims(rank)
+
+    def statics(self):
+        return [TensorSpec("theta0_c", (self.reg.Dc,), init={"kind": "comp_leaves"})]
+
+    def trainables(self):
+        return [
+            TensorSpec("lora_a", (self.Da,), role="trainable",
+                       init={"kind": "lora_a", "rank": self.rank}),
+            TensorSpec("lora_b", (self.Db,), role="trainable",
+                       init={"kind": "zeros"}),
+            TensorSpec("raw", (max(self.reg.R, 1),), role="trainable",
+                       init={"kind": "raw_leaves"}),
+        ]
+
+    def materialize(self, st, tr):
+        d = _lora_delta_c(self.reg, self.rank, tr["lora_a"], tr["lora_b"], self.scale)
+        return self.reg.unflatten(st["theta0_c"] + d, tr["raw"])
+
+    def reconstruct(self, st, tr):
+        d = _lora_delta_c(self.reg, self.rank, tr["lora_a"], tr["lora_b"], self.scale)
+        return st["theta0_c"] + d
+
+    def meta(self):
+        tc = self.Da + self.Db
+        return {"method": "lora", "rank": self.rank, "trainable_comp": tc,
+                "rate": tc / self.reg.Dc}
+
+
+class McncLora:
+    """MCNC reparameterizing the flattened LoRA factors (the paper's LLM
+    setting and its best from-scratch variant, "Ours w/ LoRA")."""
+
+    name = "mcnc_lora"
+
+    def __init__(self, reg: Registry, rank: int, gen: GenCfg, scale: float = 1.0):
+        self.reg, self.rank, self.gen, self.scale = reg, rank, gen, scale
+        _, self.Da, self.Db = reg.lora_dims(rank)
+        self.Dl = self.Da + self.Db
+        self.n = int(math.ceil(self.Dl / gen.d))
+        self.use_pallas = gen.depth == 3 and gen.act == "sine"
+
+    def statics(self):
+        specs = [
+            TensorSpec("theta0_c", (self.reg.Dc,), init={"kind": "comp_leaves"}),
+            # A-part random (so ∂Δ/∂B ≠ 0 at the zero-init point), B-part 0.
+            TensorSpec("lora0", (self.Dl,), init={"kind": "lora0", "rank": self.rank}),
+        ]
+        for i, (a, b) in enumerate(self.gen.layer_shapes()):
+            specs.append(TensorSpec(f"gw{i}", (a, b),
+                                    init={"kind": "gen_layer", "layer": i,
+                                          "gen": self.gen.to_meta()}))
+        return specs
+
+    def trainables(self):
+        return [
+            TensorSpec("alpha", (self.n, self.gen.k), role="trainable",
+                       init={"kind": "zeros"}),
+            TensorSpec("beta", (self.n,), role="trainable", init={"kind": "ones"}),
+            TensorSpec("raw", (max(self.reg.R, 1),), role="trainable",
+                       init={"kind": "raw_leaves"}),
+        ]
+
+    def _lora_vec(self, st, tr):
+        ws = [st[f"gw{i}"] for i in range(self.gen.depth)]
+        if self.use_pallas:
+            out = generator3_pallas(tr["alpha"], tr["beta"], *ws,
+                                    freq=self.gen.freq,
+                                    normalize=self.gen.normalize)
+        else:
+            out = genutil.generator_ref(self.gen, ws, tr["alpha"], tr["beta"])
+        return st["lora0"] + out.reshape(-1)[: self.Dl]
+
+    def _delta_c(self, st, tr):
+        lv = self._lora_vec(st, tr)
+        return _lora_delta_c(self.reg, self.rank, lv[: self.Da], lv[self.Da:],
+                             self.scale)
+
+    def materialize(self, st, tr):
+        return self.reg.unflatten(st["theta0_c"] + self._delta_c(st, tr), tr["raw"])
+
+    def reconstruct(self, st, tr):
+        return st["theta0_c"] + self._delta_c(st, tr)
+
+    def meta(self):
+        tc = self.n * (self.gen.k + 1)
+        return {"method": "mcnc_lora", "rank": self.rank, "gen": self.gen.to_meta(),
+                "n_chunks": self.n, "trainable_comp": tc,
+                "rate": tc / self.reg.Dc, "lora_dim": self.Dl,
+                "recon_flops": self.n * self.gen.flops_per_chunk()}
+
+
+class NolaLora:
+    """NOLA: LoRA factors as linear combinations of m frozen random bases."""
+
+    name = "nola"
+
+    def __init__(self, reg: Registry, rank: int, bases: int, scale: float = 1.0):
+        self.reg, self.rank, self.m, self.scale = reg, rank, bases, scale
+        self.dims, self.Da, self.Db = reg.lora_dims(rank)
+        self.L = len(self.dims)
+
+    def statics(self):
+        return [
+            TensorSpec("theta0_c", (self.reg.Dc,), init={"kind": "comp_leaves"}),
+            TensorSpec("basis_a", (self.m * self.Da,),
+                       init={"kind": "nola_basis", "side": "a", "m": self.m,
+                             "rank": self.rank}),
+            TensorSpec("basis_b", (self.m * self.Db,),
+                       init={"kind": "nola_basis", "side": "b", "m": self.m,
+                             "rank": self.rank}),
+        ]
+
+    def trainables(self):
+        return [
+            TensorSpec("coef_a", (self.L, self.m), role="trainable",
+                       init={"kind": "nola_coef", "m": self.m}),
+            TensorSpec("coef_b", (self.L, self.m), role="trainable",
+                       init={"kind": "zeros"}),
+            TensorSpec("raw", (max(self.reg.R, 1),), role="trainable",
+                       init={"kind": "raw_leaves"}),
+        ]
+
+    def _factors(self, st, tr):
+        """Per-target A [a,r], B [r,b] from coefficient × basis contractions."""
+        a_parts, b_parts = [], []
+        for j, (leaf, a, b, ao, bo) in enumerate(self.dims):
+            ba = jax.lax.dynamic_slice_in_dim(
+                st["basis_a"], self.m * ao, self.m * a * self.rank
+            ).reshape(self.m, a * self.rank)
+            bb = jax.lax.dynamic_slice_in_dim(
+                st["basis_b"], self.m * bo, self.m * self.rank * b
+            ).reshape(self.m, self.rank * b)
+            a_parts.append(tr["coef_a"][j] @ ba)
+            b_parts.append(tr["coef_b"][j] @ bb)
+        return jnp.concatenate(a_parts), jnp.concatenate(b_parts)
+
+    def _delta_c(self, st, tr):
+        af, bf = self._factors(st, tr)
+        return _lora_delta_c(self.reg, self.rank, af, bf, self.scale)
+
+    def materialize(self, st, tr):
+        return self.reg.unflatten(st["theta0_c"] + self._delta_c(st, tr), tr["raw"])
+
+    def reconstruct(self, st, tr):
+        return st["theta0_c"] + self._delta_c(st, tr)
+
+    def meta(self):
+        tc = 2 * self.L * self.m
+        # NOLA reconstruction: 2·m FLOPs per generated factor element.
+        return {"method": "nola", "rank": self.rank, "bases": self.m,
+                "trainable_comp": tc, "rate": tc / self.reg.Dc,
+                "recon_flops": 2 * self.m * (self.Da + self.Db)}
+
+
+# --------------------------------------------------------------------------
+# Step builders
+# --------------------------------------------------------------------------
+
+def _data_specs(model, batch):
+    xs, ys = model.data_shapes(batch)
+    xdtype = getattr(model, "data_dtype", "f32")
+    return [TensorSpec("x", xs, xdtype, "data"), TensorSpec("y", ys, "i32", "data")]
+
+
+def _adam_update(p, g, m, v, t, lr):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mh = m / (1.0 - ADAM_B1 ** t)
+    vh = v / (1.0 - ADAM_B2 ** t)
+    return p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS), m, v
+
+
+@dataclass
+class Built:
+    """A lowered-able executable: fn + positional specs + manifest meta."""
+    name: str
+    fn: object
+    inputs: list
+    outputs: list  # [(name, shape, dtype)]
+    meta: dict
+
+
+def build_train_step(name, model, method, batch: int) -> Built:
+    statics, trains = method.statics(), method.trainables()
+    data = _data_specs(model, batch)
+    hyper = [TensorSpec("t", (), "f32", "hyper"), TensorSpec("lr", (), "f32", "hyper")]
+    emit_imp = getattr(method, "emit_importance", False)
+
+    ns, nt = len(statics), len(trains)
+
+    def step(*args):
+        st = {s.name: a for s, a in zip(statics, args[:ns])}
+        tr_list = args[ns: ns + nt]
+        m_list = args[ns + nt: ns + 2 * nt]
+        v_list = args[ns + 2 * nt: ns + 3 * nt]
+        t, lr, x, y = args[ns + 3 * nt:]
+
+        def loss_fn(tr_tuple):
+            tr = {s.name: a for s, a in zip(trains, tr_tuple)}
+            params = method.materialize(st, tr)
+            loss, acc = model.loss_and_acc(params, x, y)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(tuple(tr_list))
+        t1 = t + 1.0
+        outs_p, outs_m, outs_v = [], [], []
+        for p, g, m, v in zip(tr_list, grads, m_list, v_list):
+            p1, m1, v1 = _adam_update(p, g, m, v, t1, lr)
+            outs_p.append(p1)
+            outs_m.append(m1)
+            outs_v.append(v1)
+        extra = ()
+        if emit_imp:
+            # PLATON-style importance for the pruning substrate: |θ·∇θ|.
+            extra = (jnp.abs(tr_list[0] * grads[0]),)
+        return (*outs_p, *outs_m, *outs_v, t1, loss, acc, *extra)
+
+    inputs = (
+        statics
+        + trains
+        + [TensorSpec(f"m_{s.name}", s.shape, s.dtype, "opt") for s in trains]
+        + [TensorSpec(f"v_{s.name}", s.shape, s.dtype, "opt") for s in trains]
+        + hyper
+        + data
+    )
+    outputs = (
+        [(s.name, s.shape, s.dtype) for s in trains]
+        + [(f"m_{s.name}", s.shape, s.dtype) for s in trains]
+        + [(f"v_{s.name}", s.shape, s.dtype) for s in trains]
+        + [("t", (), "f32"), ("loss", (), "f32"), ("acc", (), "f32")]
+    )
+    if emit_imp:
+        outputs.append(("importance", (method.reg.Dc,), "f32"))
+    meta = {"kind": "train_step", "model": model.name, "batch": batch,
+            "registry": method.reg.to_meta(), **method.meta()}
+    return Built(name, step, inputs, outputs, meta)
+
+
+def build_eval_step(name, model, method, batch: int) -> Built:
+    statics, trains = method.statics(), method.trainables()
+    data = _data_specs(model, batch)
+    ns = len(statics)
+
+    def evalf(*args):
+        st = {s.name: a for s, a in zip(statics, args[:ns])}
+        tr = {s.name: a for s, a in zip(trains, args[ns: ns + len(trains)])}
+        x, y = args[ns + len(trains):]
+        params = method.materialize(st, tr)
+        loss, acc = model.loss_and_acc(params, x, y)
+        return (loss, acc)
+
+    inputs = statics + trains + data
+    outputs = [("loss", (), "f32"), ("acc", (), "f32")]
+    meta = {"kind": "eval_step", "model": model.name, "batch": batch,
+            "registry": method.reg.to_meta(), **method.meta()}
+    return Built(name, evalf, inputs, outputs, meta)
+
+
+def build_predict(name, model, method, batch: int) -> Built:
+    statics, trains = method.statics(), method.trainables()
+    xs, _ = model.data_shapes(batch)
+    xdtype = getattr(model, "data_dtype", "f32")
+    ns = len(statics)
+
+    def pred(*args):
+        st = {s.name: a for s, a in zip(statics, args[:ns])}
+        tr = {s.name: a for s, a in zip(trains, args[ns: ns + len(trains)])}
+        x = args[-1]
+        params = method.materialize(st, tr)
+        return (model.apply(params, x),)
+
+    inputs = statics + trains + [TensorSpec("x", xs, xdtype, "data")]
+    # output shape resolved at lower time; recorded as None here
+    meta = {"kind": "predict", "model": model.name, "batch": batch,
+            "registry": method.reg.to_meta(), **method.meta()}
+    return Built(name, pred, inputs, [("logits", None, "f32")], meta)
+
+
+def build_reconstruct(name, model, method) -> Built:
+    statics, trains = method.statics(), method.trainables()
+    ns = len(statics)
+
+    def rec(*args):
+        st = {s.name: a for s, a in zip(statics, args[:ns])}
+        tr = {s.name: a for s, a in zip(trains, args[ns:])}
+        return (method.reconstruct(st, tr),)
+
+    inputs = statics + trains
+    outputs = [("theta_c", (method.reg.Dc,), "f32")]
+    meta = {"kind": "reconstruct", "model": model.name,
+            "registry": method.reg.to_meta(), **method.meta()}
+    return Built(name, rec, inputs, outputs, meta)

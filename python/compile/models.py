@@ -1,0 +1,398 @@
+"""L2 — the model zoo, as pure-functional jax.
+
+Every model is described by a flat *leaf registry*: an ordered list of named
+parameter tensors, each marked ``compress`` (participates in the
+reparameterization and in compression-rate accounting) or raw (trained
+dense and excluded from the rate, exactly as the paper excludes norm /
+position-embedding / CLS parameters). ``apply`` consumes a ``{name: array}``
+dict; the methods layer (``methods.py``) is responsible for materializing
+that dict from a compressed trainable state.
+
+Initialization laws are recorded per leaf (dist + parameter) so the Rust
+coordinator can synthesize θ0 / raw inits from a seed via the shared
+SplitMix64 streams — initial values are PJRT *inputs*, never HLO constants.
+
+Models (scaled-down but topology-faithful stand-ins, DESIGN.md §7):
+  mlp        784→h→h→10            — the paper's MNIST ablation model
+  resnet     CIFAR-style ResNet-20/56 (GroupNorm for BatchNorm)
+  vit        patch-4 ViT-tiny for 32×32
+  lm         decoder-only transformer LM (the LLaMA-2 PEFT analog)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# --------------------------------------------------------------------------
+# Leaf registry
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Leaf:
+    name: str
+    shape: tuple
+    compress: bool
+    dist: str  # sym_uniform | normal | zeros | ones
+    param: float = 0.0  # bound (sym_uniform) or std (normal)
+    lora: tuple | None = None  # (a, b): matrix view for LoRA targeting
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def to_meta(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "compress": self.compress,
+            "dist": self.dist,
+            "param": self.param,
+            "lora": list(self.lora) if self.lora else None,
+        }
+
+
+def _w(name, shape, fan_in, lora=None, compress=True):
+    """Weight leaf with torch-style U[-1/sqrt(fan_in), 1/sqrt(fan_in)) init."""
+    return Leaf(name, tuple(shape), compress, "sym_uniform", 1.0 / math.sqrt(fan_in), lora)
+
+
+def _zeros(name, shape, compress=False):
+    return Leaf(name, tuple(shape), compress, "zeros")
+
+
+def _ones(name, shape):
+    return Leaf(name, tuple(shape), False, "ones")
+
+
+def _emb(name, shape, std=0.02):
+    return Leaf(name, tuple(shape), False, "normal", std)
+
+
+# --------------------------------------------------------------------------
+# Shared nn ops
+# --------------------------------------------------------------------------
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    """GroupNorm over NHWC (our BatchNorm stand-in — see DESIGN.md §7)."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g)
+    mu = xg.mean((1, 2, 4), keepdims=True)
+    var = ((xg - mu) ** 2).mean((1, 2, 4), keepdims=True)
+    xg = (xg - mu) / jnp.sqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+def conv2d(x, w, stride=1):
+    """NHWC x HWIO → NHWC, SAME padding."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def attention(x, wqkv, bqkv, wproj, bproj, heads, causal=False):
+    b, t, dm = x.shape
+    dh = dm // heads
+    qkv = x @ wqkv + bqkv  # [b, t, 3*dm]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_first(z):
+        return z.reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads_first(q), heads_first(k), heads_first(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(dh)  # [b, h, t, t]
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        att = jnp.where(mask, att, jnp.float32(-1e9))
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, dm)
+    return out @ wproj + bproj
+
+
+def softmax_xent(logits, y, num_classes):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+# --------------------------------------------------------------------------
+# MLP (MNIST-shape ablation model)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MlpCfg:
+    in_dim: int = 784
+    hidden: int = 256
+    out_dim: int = 10
+
+    name: str = "mlp"
+
+    def leaves(self):
+        c = self
+        return [
+            _w("w1", (c.in_dim, c.hidden), c.in_dim, lora=(c.in_dim, c.hidden)),
+            _zeros("b1", (c.hidden,)),
+            _w("w2", (c.hidden, c.hidden), c.hidden, lora=(c.hidden, c.hidden)),
+            _zeros("b2", (c.hidden,)),
+            _w("w3", (c.hidden, c.out_dim), c.hidden, lora=(c.hidden, c.out_dim)),
+            _zeros("b3", (c.out_dim,)),
+        ]
+
+    def apply(self, p, x):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["w1"] + p["b1"])
+        x = jax.nn.relu(x @ p["w2"] + p["b2"])
+        return x @ p["w3"] + p["b3"]
+
+    def loss_and_acc(self, p, x, y):
+        return softmax_xent(self.apply(p, x), y, self.out_dim)
+
+    def data_shapes(self, batch):
+        return (batch, self.in_dim), (batch,)
+
+
+# --------------------------------------------------------------------------
+# CIFAR-style ResNet (GroupNorm)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ResNetCfg:
+    blocks_per_stage: int = 3  # 3 → ResNet-20, 9 → ResNet-56
+    widths: tuple = (16, 32, 64)
+    num_classes: int = 10
+    image: int = 32
+    channels: int = 3
+
+    @property
+    def name(self):
+        depth = 6 * self.blocks_per_stage + 2
+        return f"resnet{depth}c{self.num_classes}"
+
+    def _block_names(self):
+        cin = self.widths[0]
+        out = []
+        for s, cout in enumerate(self.widths):
+            for b in range(self.blocks_per_stage):
+                stride = 2 if (s > 0 and b == 0) else 1
+                out.append((f"s{s}b{b}", cin, cout, stride))
+                cin = cout
+        return out
+
+    def leaves(self):
+        c = self
+        ls = [
+            _w("conv0", (3, 3, c.channels, c.widths[0]), 9 * c.channels,
+               lora=(3 * c.channels, 3 * c.widths[0])),
+            _ones("gn0s", (c.widths[0],)), _zeros("gn0b", (c.widths[0],)),
+        ]
+        for nm, cin, cout, stride in self._block_names():
+            ls += [
+                _w(f"{nm}.conv1", (3, 3, cin, cout), 9 * cin, lora=(3 * cin, 3 * cout)),
+                _ones(f"{nm}.gn1s", (cout,)), _zeros(f"{nm}.gn1b", (cout,)),
+                _w(f"{nm}.conv2", (3, 3, cout, cout), 9 * cout, lora=(3 * cout, 3 * cout)),
+                _ones(f"{nm}.gn2s", (cout,)), _zeros(f"{nm}.gn2b", (cout,)),
+            ]
+            if cin != cout or stride != 1:
+                ls.append(_w(f"{nm}.proj", (1, 1, cin, cout), cin, lora=(cin, cout)))
+        ls += [
+            _w("head.w", (c.widths[-1], c.num_classes), c.widths[-1],
+               lora=(c.widths[-1], c.num_classes)),
+            _zeros("head.b", (c.num_classes,)),
+        ]
+        return ls
+
+    def apply(self, p, x):
+        c = self
+        x = x.reshape(x.shape[0], c.image, c.image, c.channels)
+        h = jax.nn.relu(group_norm(conv2d(x, p["conv0"]), p["gn0s"], p["gn0b"]))
+        for nm, cin, cout, stride in self._block_names():
+            y = jax.nn.relu(group_norm(conv2d(h, p[f"{nm}.conv1"], stride),
+                                       p[f"{nm}.gn1s"], p[f"{nm}.gn1b"]))
+            y = group_norm(conv2d(y, p[f"{nm}.conv2"]), p[f"{nm}.gn2s"], p[f"{nm}.gn2b"])
+            sc = conv2d(h, p[f"{nm}.proj"], stride) if f"{nm}.proj" in p else h
+            h = jax.nn.relu(y + sc)
+        h = h.mean((1, 2))
+        return h @ p["head.w"] + p["head.b"]
+
+    def loss_and_acc(self, p, x, y):
+        return softmax_xent(self.apply(p, x), y, self.num_classes)
+
+    def data_shapes(self, batch):
+        return (batch, self.image * self.image * self.channels), (batch,)
+
+
+# --------------------------------------------------------------------------
+# ViT-tiny
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ViTCfg:
+    image: int = 32
+    patch: int = 4
+    dim: int = 64
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 2
+    num_classes: int = 10
+    channels: int = 3
+
+    @property
+    def name(self):
+        return f"vit{self.dim}d{self.depth}c{self.num_classes}"
+
+    @property
+    def n_tokens(self):
+        return (self.image // self.patch) ** 2 + 1
+
+    @property
+    def patch_dim(self):
+        return self.patch * self.patch * self.channels
+
+    def leaves(self):
+        c, d = self, self.dim
+        ls = [
+            _w("patch.w", (c.patch_dim, d), c.patch_dim, lora=(c.patch_dim, d)),
+            _zeros("patch.b", (d,)),
+            # pos/cls excluded from compression, like the paper.
+            _emb("pos", (c.n_tokens, d)),
+            _emb("cls", (1, d)),
+        ]
+        hid = d * c.mlp_ratio
+        for i in range(c.depth):
+            ls += [
+                _ones(f"blk{i}.ln1s", (d,)), _zeros(f"blk{i}.ln1b", (d,)),
+                _w(f"blk{i}.wqkv", (d, 3 * d), d, lora=(d, 3 * d)),
+                _zeros(f"blk{i}.bqkv", (3 * d,)),
+                _w(f"blk{i}.wproj", (d, d), d, lora=(d, d)),
+                _zeros(f"blk{i}.bproj", (d,)),
+                _ones(f"blk{i}.ln2s", (d,)), _zeros(f"blk{i}.ln2b", (d,)),
+                _w(f"blk{i}.wfc1", (d, hid), d, lora=(d, hid)),
+                _zeros(f"blk{i}.bfc1", (hid,)),
+                _w(f"blk{i}.wfc2", (hid, d), hid, lora=(hid, d)),
+                _zeros(f"blk{i}.bfc2", (d,)),
+            ]
+        ls += [
+            _ones("lnf.s", (d,)), _zeros("lnf.b", (d,)),
+            _w("head.w", (d, c.num_classes), d, lora=(d, c.num_classes)),
+            _zeros("head.b", (c.num_classes,)),
+        ]
+        return ls
+
+    def apply(self, p, x):
+        c = self
+        b = x.shape[0]
+        g = c.image // c.patch
+        x = x.reshape(b, g, c.patch, g, c.patch, c.channels)
+        x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, g * g, c.patch_dim)
+        h = x @ p["patch.w"] + p["patch.b"]
+        cls = jnp.broadcast_to(p["cls"], (b, 1, c.dim))
+        h = jnp.concatenate([cls, h], axis=1) + p["pos"]
+        for i in range(c.depth):
+            z = layer_norm(h, p[f"blk{i}.ln1s"], p[f"blk{i}.ln1b"])
+            h = h + attention(z, p[f"blk{i}.wqkv"], p[f"blk{i}.bqkv"],
+                              p[f"blk{i}.wproj"], p[f"blk{i}.bproj"], c.heads)
+            z = layer_norm(h, p[f"blk{i}.ln2s"], p[f"blk{i}.ln2b"])
+            z = jax.nn.gelu(z @ p[f"blk{i}.wfc1"] + p[f"blk{i}.bfc1"])
+            h = h + z @ p[f"blk{i}.wfc2"] + p[f"blk{i}.bfc2"]
+        h = layer_norm(h[:, 0], p["lnf.s"], p["lnf.b"])
+        return h @ p["head.w"] + p["head.b"]
+
+    def loss_and_acc(self, p, x, y):
+        return softmax_xent(self.apply(p, x), y, self.num_classes)
+
+    def data_shapes(self, batch):
+        return (batch, self.image * self.image * self.channels), (batch,)
+
+
+# --------------------------------------------------------------------------
+# Decoder-only LM (the LLaMA-2 PEFT analog)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LmCfg:
+    vocab: int = 256
+    dim: int = 128
+    depth: int = 2
+    heads: int = 4
+    seq: int = 64
+    mlp_ratio: int = 2
+
+    @property
+    def name(self):
+        return f"lm{self.dim}d{self.depth}"
+
+    def leaves(self):
+        c, d = self, self.dim
+        ls = [
+            _emb("wte", (c.vocab, d)),
+            _emb("wpe", (c.seq, d)),
+        ]
+        hid = d * c.mlp_ratio
+        for i in range(c.depth):
+            ls += [
+                _ones(f"blk{i}.ln1s", (d,)), _zeros(f"blk{i}.ln1b", (d,)),
+                _w(f"blk{i}.wqkv", (d, 3 * d), d, lora=(d, 3 * d)),
+                _zeros(f"blk{i}.bqkv", (3 * d,)),
+                _w(f"blk{i}.wproj", (d, d), d, lora=(d, d)),
+                _zeros(f"blk{i}.bproj", (d,)),
+                _ones(f"blk{i}.ln2s", (d,)), _zeros(f"blk{i}.ln2b", (d,)),
+                _w(f"blk{i}.wfc1", (d, hid), d, lora=(d, hid)),
+                _zeros(f"blk{i}.bfc1", (hid,)),
+                _w(f"blk{i}.wfc2", (hid, d), hid, lora=(hid, d)),
+                _zeros(f"blk{i}.bfc2", (d,)),
+            ]
+        ls += [
+            _ones("lnf.s", (d,)), _zeros("lnf.b", (d,)),
+            _w("head.w", (d, c.vocab), d, lora=(d, c.vocab)),
+        ]
+        return ls
+
+    def apply(self, p, x):
+        """x: int32 [b, t] → logits [b, t, vocab]."""
+        c = self
+        b, t = x.shape
+        h = jnp.take(p["wte"], x, axis=0) + p["wpe"][None, :t]
+        for i in range(c.depth):
+            z = layer_norm(h, p[f"blk{i}.ln1s"], p[f"blk{i}.ln1b"])
+            h = h + attention(z, p[f"blk{i}.wqkv"], p[f"blk{i}.bqkv"],
+                              p[f"blk{i}.wproj"], p[f"blk{i}.bproj"], c.heads,
+                              causal=True)
+            z = layer_norm(h, p[f"blk{i}.ln2s"], p[f"blk{i}.ln2b"])
+            z = jax.nn.gelu(z @ p[f"blk{i}.wfc1"] + p[f"blk{i}.bfc1"])
+            h = h + z @ p[f"blk{i}.wfc2"] + p[f"blk{i}.bfc2"]
+        h = layer_norm(h, p["lnf.s"], p["lnf.b"])
+        return h @ p["head.w"]
+
+    def loss_and_acc(self, p, x, y):
+        """Next-token prediction: y[b, t] are the shifted targets."""
+        logits = self.apply(p, x)
+        return softmax_xent(logits, y, self.vocab)
+
+    def data_shapes(self, batch):
+        return (batch, self.seq), (batch, self.seq)
+
+    data_dtype = "i32"
+
+
+MODELS = {
+    "mlp": MlpCfg,
+    "resnet": ResNetCfg,
+    "vit": ViTCfg,
+    "lm": LmCfg,
+}

@@ -1,0 +1,88 @@
+"""SplitMix64-based deterministic parameter streams.
+
+This module is the *Python twin* of ``rust/src/util/prng.rs``. Both sides
+must produce bit-identical f32 streams from the same seed: the Rust
+coordinator owns all seeds at runtime (generator weights, θ0, NOLA bases are
+PJRT *inputs*, never baked into HLO), while the Python tests re-derive the
+same tensors to pin kernel/model numerics.
+
+Stream construction
+-------------------
+``splitmix64`` is a counter-based mix: output ``i`` of stream ``s`` is
+``mix(s + (i+1)*GAMMA)`` — embarrassingly vectorizable on both sides.
+Sub-streams (per layer / per leaf) are derived as ``mix(seed ^ (tag * TAG)``,
+so each tensor can be generated independently and in any order.
+
+f32 uniforms use the top 24 bits (``(x >> 40) * 2^-24``) so the f32 math is
+exact and byte-for-byte reproducible across numpy and Rust.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GAMMA = np.uint64(0x9E3779B97F4A7C15)
+TAG = np.uint64(0xBF58476D1CE4E5B9)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+_U64 = np.uint64
+
+
+def mix(z: np.ndarray | int) -> np.ndarray:
+    """The splitmix64 finalizer. Accepts scalars or uint64 arrays."""
+    z = np.asarray(z, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = (z ^ (z >> _U64(30))) * _M1
+        z = (z ^ (z >> _U64(27))) * _M2
+        return z ^ (z >> _U64(31))
+
+
+def substream(seed: int, tag: int) -> int:
+    """Derive an independent stream seed for (seed, tag)."""
+    with np.errstate(over="ignore"):
+        return int(mix(_U64(seed) ^ (_U64(tag) * TAG)))
+
+
+def raw_u64(seed: int, n: int) -> np.ndarray:
+    """First ``n`` raw u64 outputs of stream ``seed``."""
+    idx = np.arange(1, n + 1, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        return mix(_U64(seed) + idx * GAMMA)
+
+
+def uniform_f32(seed: int, n: int, lo: float = 0.0, hi: float = 1.0) -> np.ndarray:
+    """``n`` f32 uniforms in [lo, hi) — bit-identical to Rust."""
+    u = (raw_u64(seed, n) >> _U64(40)).astype(np.float32) * np.float32(2.0**-24)
+    return (u * (np.float32(hi) - np.float32(lo)) + np.float32(lo)).astype(np.float32)
+
+
+def symmetric_f32(seed: int, n: int, bound: float) -> np.ndarray:
+    """``n`` f32 uniforms in [-bound, bound) — the generator-weight law."""
+    u = (raw_u64(seed, n) >> _U64(40)).astype(np.float32) * np.float32(2.0**-24)
+    return ((np.float32(2.0) * u - np.float32(1.0)) * np.float32(bound)).astype(np.float32)
+
+
+def normal_f32(seed: int, n: int, std: float = 1.0) -> np.ndarray:
+    """Box–Muller normals. Matches Rust to ~1e-5 (libm sin/cos may differ in ulp)."""
+    m = (n + 1) // 2
+    u = raw_u64(seed, 2 * m)
+    u1 = ((u[:m] >> _U64(40)).astype(np.float64) + 1.0) * 2.0**-24  # (0, 1]
+    u2 = (u[m:] >> _U64(40)).astype(np.float64) * 2.0**-24  # [0, 1)
+    r = np.sqrt(-2.0 * np.log(u1))
+    out = np.empty(2 * m, dtype=np.float32)
+    out[0::2] = (r * np.cos(2.0 * np.pi * u2)).astype(np.float32)
+    out[1::2] = (r * np.sin(2.0 * np.pi * u2)).astype(np.float32)
+    return (out[:n] * np.float32(std)).astype(np.float32)
+
+
+# Well-known stream tags shared with rust/src/util/prng.rs. Keep in sync.
+TAG_GEN_LAYER = 0x47454E00  # + layer index
+TAG_THETA0 = 0x54480000  # + compressed-leaf index
+TAG_RAW = 0x52415700  # + raw-leaf index
+TAG_LORA = 0x4C4F5200  # + lora-target index (A factors)
+TAG_NOLA_BASIS = 0x4E4F4C00  # + 2*target (A) / 2*target+1 (B)
+TAG_COEF = 0x434F4500
+TAG_DATA = 0x44415400
+TAG_SPHERE = 0x53504800
+TAG_ALPHA = 0x414C5000
+TAG_PROJ = 0x50524A00

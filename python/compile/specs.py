@@ -1,0 +1,217 @@
+"""The artifact catalog: every AOT-compiled executable in the system.
+
+Each entry is a (group, Built) pair; ``aot.py`` lowers Built.fn to HLO text
+and records the positional input/output specs + metadata in
+``artifacts/manifest.json``. Groups let `make artifacts ONLY=core,lm`
+rebuild a subset during development; benches load executables by name.
+
+Scaling notes (DESIGN.md §7): model dims and generator widths are scaled so
+a full table regenerates in CPU-minutes. Generator width tracks the chunk
+size d (the paper's Table 15 shows width saturates early); the paper's
+exact defaults (k=9, depth 3, freq 4.5, U[-1/n,1/n]) are kept.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .genutil import GenCfg
+from . import models
+from .methods import (Built, Dense, Lora, Mcnc, McncLora, NolaLora, Registry,
+                      TensorSpec, build_eval_step, build_predict,
+                      build_reconstruct, build_train_step)
+from .swgan import build_swgan_step
+
+
+def gen_width(d: int) -> int:
+    return int(min(256, max(32, d // 4)))
+
+
+def gen_for_rate(Dc: int, rate: float, k: int = 9, **kw) -> GenCfg:
+    d = max(int(math.ceil((k + 1) / rate)), k + 1)
+    return GenCfg(k=k, d=d, width=kw.pop("width", gen_width(d)), **kw)
+
+
+def gen_for_budget(Dc: int, budget: int, k: int = 9, **kw) -> GenCfg:
+    """Chunk size so that n·(k+1) ≈ budget trainable params."""
+    n = max(1, budget // (k + 1))
+    d = int(math.ceil(Dc / n))
+    return GenCfg(k=k, d=d, width=kw.pop("width", gen_width(d)), **kw)
+
+
+def _family(out, group, name, model, method, batch, train=True, evals=True,
+            predict=False, recon=False):
+    if train:
+        out.append((group, build_train_step(f"{name}_train", model, method, batch)))
+    if evals:
+        out.append((group, build_eval_step(f"{name}_eval", model, method, batch)))
+    if predict:
+        out.append((group, build_predict(f"{name}_predict", model, method, batch)))
+    if recon:
+        out.append((group, build_reconstruct(f"{name}_recon", model, method)))
+
+
+def build_gen_fwd(name: str, cfg: GenCfg, n: int) -> Built:
+    """Standalone generator forward (the L1 kernel as its own executable —
+    the serving hot path reconstructs adapters through this)."""
+    from .kernels.generator import generator3_pallas
+    from . import genutil
+
+    gws = [TensorSpec(f"gw{i}", s,
+                      init={"kind": "gen_layer", "layer": i, "gen": cfg.to_meta()})
+           for i, s in enumerate(cfg.layer_shapes())]
+    inputs = [TensorSpec("alpha", (n, cfg.k), role="trainable",
+                         init={"kind": "zeros"}),
+              TensorSpec("beta", (n,), role="trainable",
+                         init={"kind": "zeros"})] + gws
+
+    def fwd(alpha, beta, *ws):
+        if cfg.depth == 3 and cfg.act == "sine" and not cfg.residual:
+            out = generator3_pallas(alpha, beta, *ws, freq=cfg.freq,
+                                    normalize=cfg.normalize)
+        else:
+            out = genutil.generator_ref(cfg, list(ws), alpha, beta)
+        return (out,)
+
+    meta = {"kind": "gen_fwd", "gen": cfg.to_meta(), "n_chunks": n,
+            "recon_flops": n * cfg.flops_per_chunk(),
+            "registry": {"Dc": 0, "R": 0, "leaves": []}}
+    return Built(name, fwd, inputs, [("out", (n, cfg.d), "f32")], meta)
+
+
+def all_specs() -> list[tuple[str, Built]]:
+    out: list[tuple[str, Built]] = []
+
+    # ---------------- core: the paper's MNIST-ablation model ----------------
+    mlp = models.MlpCfg(hidden=256)
+    reg_mlp = Registry(mlp.leaves())
+    B = 128
+    gen02 = GenCfg(k=9, d=5000, width=256)  # paper default, width scaled
+    _family(out, "core", "mlp_dense", mlp, Dense(reg_mlp), B, recon=True)
+    _family(out, "core", "mlp_mcnc02", mlp, Mcnc(reg_mlp, gen02), B, recon=True)
+    n02 = int(math.ceil(reg_mlp.Dc / gen02.d))
+    out.append(("core", build_gen_fwd("gen_mlp02_fwd", gen02, n02)))
+
+    # ---------------- ablations (Tables 5, 6, 7, 13, 15, 16) ----------------
+    for act in ["sigmoid", "relu", "lrelu", "elu", "linear"]:
+        m = Mcnc(reg_mlp, GenCfg(k=9, d=5000, width=256, act=act),
+                 name=f"mcnc_{act}")
+        _family(out, "abl_act", f"mlp_mcnc02_{act}", mlp, m, B)
+    _family(out, "abl_freq", "mlp_mcnc02_freqin", mlp,
+            Mcnc(reg_mlp, gen02, freq_input=True), B)
+    # Table 7: model size sweep at fixed 54 chunks (540 trainable params).
+    for hidden in [16, 32, 64, 128, 512]:
+        m2 = models.MlpCfg(hidden=hidden)
+        r2 = Registry(m2.leaves())
+        d = int(math.ceil(r2.Dc / n02))
+        _family(out, "abl_scale", f"mlp{hidden}_mcnc_fix", m2,
+                Mcnc(r2, GenCfg(k=9, d=d, width=gen_width(d))), B)
+    # Table 13: k/d at fixed rate.
+    for k, d in [(1, 1000), (3, 2000), (7, 4000), (15, 8000), (31, 16000)]:
+        _family(out, "abl_kd", f"mlp_mcnc_k{k}", mlp,
+                Mcnc(reg_mlp, GenCfg(k=k, d=d, width=gen_width(d))), B)
+    # Table 15: generator width.
+    for w in [64, 128, 512, 1024]:
+        _family(out, "abl_width", f"mlp_mcnc02_w{w}", mlp,
+                Mcnc(reg_mlp, GenCfg(k=9, d=5000, width=w)), B)
+    # Table 16: generator depth (± residual).
+    for depth in [2, 4, 5]:
+        _family(out, "abl_depth", f"mlp_mcnc02_dep{depth}", mlp,
+                Mcnc(reg_mlp, GenCfg(k=9, d=5000, width=256, depth=depth)), B)
+    for depth in [3, 4, 5]:
+        _family(out, "abl_depth", f"mlp_mcnc02_dep{depth}res", mlp,
+                Mcnc(reg_mlp, GenCfg(k=9, d=5000, width=256, depth=depth,
+                                     residual=True)), B)
+
+    # ---------------- Table 1: ViT vs pruning ----------------
+    vit = models.ViTCfg()
+    reg_vit = Registry(vit.leaves())
+    BV = 64
+    _family(out, "vit", "vit_dense", vit, Dense(reg_vit), BV, recon=True)
+    for pct in [50, 20, 10, 5, 2, 1]:
+        _family(out, "vit", f"vit_mcnc{pct}", vit,
+                Mcnc(reg_vit, gen_for_rate(reg_vit.Dc, pct / 100.0)), BV)
+
+    # ---------------- Tables 2 & 3: ResNets vs PRANC/NOLA ----------------
+    r20c10 = models.ResNetCfg(blocks_per_stage=3, num_classes=10)
+    reg20 = Registry(r20c10.leaves())
+    BR = 32
+    _family(out, "resnet", "r20c10_dense", r20c10, Dense(reg20), BR, recon=True)
+    for pct in [10, 5, 2, 1]:
+        _family(out, "resnet", f"r20c10_mcnc{pct}", r20c10,
+                Mcnc(reg20, gen_for_rate(reg20.Dc, pct / 100.0)), BR)
+    for pct in [2, 1]:
+        g = gen_for_rate(reg20.Dc, pct / 100.0, act="linear", normalize=False)
+        _family(out, "resnet", f"r20c10_pranc{pct}", r20c10,
+                Mcnc(reg20, g, name="pranc"), BR)
+        # MCNC over LoRA(8) factors at the same trainable budget.
+        regl = reg20
+        rank = 8
+        _, Da, Db = regl.lora_dims(rank)
+        budget = Mcnc(reg20, gen_for_rate(reg20.Dc, pct / 100.0)).meta()["trainable_comp"]
+        gl = gen_for_budget(Da + Db, budget, k=9)
+        _family(out, "resnet", f"r20c10_mcnclora{pct}", r20c10,
+                McncLora(reg20, rank, gl), BR)
+    # NOLA at the 1% budget.
+    budget1 = Mcnc(reg20, gen_for_rate(reg20.Dc, 0.01)).meta()["trainable_comp"]
+    L20 = len(reg20.lora_targets)
+    m20 = max(2, budget1 // (2 * L20))
+    _family(out, "resnet", "r20c10_nola", r20c10, NolaLora(reg20, 8, m20), BR)
+
+    # Table 3 settings: ≈5k trainable params on all four (arch, dataset).
+    t3 = [
+        ("r20c10", models.ResNetCfg(3, num_classes=10)),
+        ("r20c100", models.ResNetCfg(3, num_classes=100)),
+        ("r56c10", models.ResNetCfg(9, num_classes=10)),
+        ("r56c100", models.ResNetCfg(9, num_classes=100)),
+    ]
+    for nm, cfg in t3:
+        reg = Registry(cfg.leaves())
+        _family(out, "resnet_t3", f"{nm}_dense5k", cfg, Dense(reg), BR)
+        g = gen_for_budget(reg.Dc, 5000)
+        _family(out, "resnet_t3", f"{nm}_mcnc5k", cfg, Mcnc(reg, g), BR)
+        gp = gen_for_budget(reg.Dc, 5000, act="linear", normalize=False)
+        _family(out, "resnet_t3", f"{nm}_pranc5k", cfg, Mcnc(reg, gp, name="pranc"), BR)
+        L = len(reg.lora_targets)
+        m = max(2, 5000 // (2 * L))
+        _family(out, "resnet_t3", f"{nm}_nola5k", cfg, NolaLora(reg, 8, m), BR)
+        rank = 8
+        _, Da, Db = reg.lora_dims(rank)
+        gl = gen_for_budget(Da + Db, 5000)
+        _family(out, "resnet_t3", f"{nm}_mcnclora5k", cfg, McncLora(reg, rank, gl), BR)
+
+    # ---------------- Table 4: LM PEFT + serving ----------------
+    lm = models.LmCfg(vocab=128, dim=96, depth=2, heads=4, seq=32)
+    reg_lm = Registry(lm.leaves())
+    BL = 16
+    _family(out, "lm", "lm_dense", lm, Dense(reg_lm), BL, predict=True)
+    rank = 8
+    _family(out, "lm", "lm_lora1", lm, Lora(reg_lm, 1), BL, predict=True, recon=True)
+    _family(out, "lm", "lm_lora8", lm, Lora(reg_lm, rank), BL, predict=True, recon=True)
+    gen_ad = GenCfg(k=5, d=512, width=64)
+    mcl = McncLora(reg_lm, rank, gen_ad)
+    _family(out, "lm", "lm_mcnclora8", lm, mcl, BL, predict=True, recon=True)
+    Llm = len(reg_lm.lora_targets)
+    m_lm = max(2, mcl.meta()["trainable_comp"] // (2 * Llm))
+    _family(out, "lm", "lm_nola8", lm, NolaLora(reg_lm, rank, m_lm), BL,
+            predict=True, recon=True)
+    # Standalone adapter-reconstruction kernel for the serving hot path.
+    out.append(("lm", build_gen_fwd("gen_adapter_fwd", gen_ad, mcl.n)))
+
+    # ---------------- Fig 2 / Table 9: generator training ----------------
+    out.append(("sphere", build_swgan_step(
+        "swgan_k1d3", GenCfg(k=1, d=3, width=256, depth=3, normalize=True),
+        batch=512, n_proj=32)))
+    g_t3 = gen_for_budget(reg20.Dc, 5000, normalize=True)
+    out.append(("sphere", build_swgan_step(
+        "swgan_r20gen", g_t3, batch=128, n_proj=32)))
+    reg20c100 = Registry(models.ResNetCfg(3, num_classes=100).leaves())
+    g_t3c100 = gen_for_budget(reg20c100.Dc, 5000, normalize=True)
+    out.append(("sphere", build_swgan_step(
+        "swgan_r20c100gen", g_t3c100, batch=128, n_proj=32)))
+
+    return out
+
+
+def spec_names() -> list[str]:
+    return [b.name for _, b in all_specs()]

@@ -1,0 +1,108 @@
+"""SWGAN-style generator training (paper §3.1, Fig 2 right panel, Table 9).
+
+The generator φ is optimized to push U([-L,L]^k) onto U(S^{d-1}) by
+minimizing the *sliced* Wasserstein-2 distance between φ(α) batches and
+uniform sphere samples: project both point clouds onto P random directions,
+sort each 1-D projection, and penalize the pairwise squared differences.
+The Rust coordinator drives the loop — it supplies fresh α / target /
+projection tensors each step (from the shared SplitMix64 streams) and feeds
+the updated weights back in, so the artifact is a single Adam step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import genutil
+from .genutil import GenCfg
+from .methods import Built, TensorSpec, _adam_update
+
+
+@jax.custom_vjp
+def _sorted_sq_diff(xp, tp):
+    """mean((sort(xp) − sort(tp))²) for 1-D xp, tp — the W2² between their
+    empirical distributions. Hand-written VJP: the optimal assignment is
+    locally constant in the inputs, so the gradient is the pairwise residual
+    scattered back through the argsort permutations (this sidesteps
+    jax's sort-VJP, which lowers to a gather the pinned jaxlib rejects).
+    """
+    dx = jnp.sort(xp) - jnp.sort(tp)
+    return jnp.mean(dx * dx)
+
+
+def _ssd_fwd(xp, tp):
+    ix = jnp.argsort(xp)
+    it = jnp.argsort(tp)
+    dx = jnp.take(xp, ix) - jnp.take(tp, it)
+    return jnp.mean(dx * dx), (ix, it, dx)
+
+
+def _ssd_bwd(res, g):
+    ix, it, dx = res
+    b = dx.shape[0]
+    gx = jnp.zeros_like(dx).at[ix].set(2.0 * dx / b * g)
+    gt = jnp.zeros_like(dx).at[it].set(-2.0 * dx / b * g)
+    return gx, gt
+
+
+_sorted_sq_diff.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def sw2_distance(xs, ts, proj):
+    """Sliced W2² between point clouds xs, ts: [B, d] under proj [d, P]."""
+    xp = xs @ proj
+    tp = ts @ proj
+    total = jnp.float32(0.0)
+    for j in range(proj.shape[1]):
+        total = total + _sorted_sq_diff(xp[:, j], tp[:, j])
+    return total / proj.shape[1]
+
+
+def build_swgan_step(name: str, cfg: GenCfg, batch: int, n_proj: int) -> Built:
+    shapes = cfg.layer_shapes()
+    depth = len(shapes)
+
+    gws = [TensorSpec(f"gw{i}", s, role="trainable",
+                      init={"kind": "gen_layer", "layer": i, "gen": cfg.to_meta()})
+           for i, s in enumerate(shapes)]
+    opt_m = [TensorSpec(f"m_gw{i}", s, role="opt") for i, s in enumerate(shapes)]
+    opt_v = [TensorSpec(f"v_gw{i}", s, role="opt") for i, s in enumerate(shapes)]
+    hyper = [TensorSpec("t", (), "f32", "hyper"), TensorSpec("lr", (), "f32", "hyper")]
+    data = [
+        TensorSpec("alpha", (batch, cfg.k), role="data"),
+        TensorSpec("target", (batch, cfg.d), role="data"),
+        TensorSpec("proj", (cfg.d, n_proj), role="data"),
+    ]
+
+    def step(*args):
+        ws = list(args[:depth])
+        ms = list(args[depth: 2 * depth])
+        vs = list(args[2 * depth: 3 * depth])
+        t, lr, alpha, target, proj = args[3 * depth:]
+
+        def loss_fn(ws_tuple):
+            out = genutil.generator_ref(cfg, list(ws_tuple), alpha,
+                                        jnp.ones((batch,), jnp.float32))
+            return sw2_distance(out, target, proj)
+
+        loss, grads = jax.value_and_grad(loss_fn)(tuple(ws))
+        t1 = t + 1.0
+        ws1, ms1, vs1 = [], [], []
+        for p, g, m, v in zip(ws, grads, ms, vs):
+            p1, m1, v1 = _adam_update(p, g, m, v, t1, lr)
+            ws1.append(p1)
+            ms1.append(m1)
+            vs1.append(v1)
+        return (*ws1, *ms1, *vs1, t1, loss)
+
+    inputs = gws + opt_m + opt_v + hyper + data
+    outputs = (
+        [(f"gw{i}", s, "f32") for i, s in enumerate(shapes)]
+        + [(f"m_gw{i}", s, "f32") for i, s in enumerate(shapes)]
+        + [(f"v_gw{i}", s, "f32") for i, s in enumerate(shapes)]
+        + [("t", (), "f32"), ("loss", (), "f32")]
+    )
+    meta = {"kind": "swgan_step", "gen": cfg.to_meta(), "batch": batch,
+            "n_proj": n_proj, "registry": {"Dc": 0, "R": 0, "leaves": []}}
+    return Built(name, step, inputs, outputs, meta)

@@ -1,0 +1,83 @@
+"""Generator config / weight-law tests (Tables 5, 14, 15, 16 substrate)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import genutil, rng
+from compile.genutil import GenCfg
+
+
+def test_layer_shapes_depths():
+    assert GenCfg(k=9, d=5000, width=1000, depth=3).layer_shapes() == [
+        (9, 1000), (1000, 1000), (1000, 5000)]
+    assert GenCfg(k=2, d=7, width=4, depth=2).layer_shapes() == [(2, 4), (4, 7)]
+    with pytest.raises(ValueError):
+        GenCfg(depth=1).layer_shapes()
+
+
+def test_flops_per_chunk_paper_llama_shapes():
+    """Appendix A.6: the 5→32→32→5000 generator costs 2·(5·32+32·32+32·5000)
+    per forward pass (+ d for the β scale, our convention)."""
+    cfg = GenCfg(k=5, d=5000, width=32, depth=3)
+    assert cfg.flops_per_chunk() == 2 * (5 * 32 + 32 * 32 + 32 * 5000) + 5000
+
+
+def test_make_weights_bounds_and_determinism():
+    cfg = GenCfg(k=3, d=20, width=8, depth=3)
+    ws = genutil.make_weights(cfg, 77)
+    ws2 = genutil.make_weights(cfg, 77)
+    ws3 = genutil.make_weights(cfg, 78)
+    for w, w2, w3, (fi, fo) in zip(ws, ws2, ws3, cfg.layer_shapes()):
+        assert w.shape == (fi, fo)
+        assert np.array_equal(w, w2)
+        assert not np.array_equal(w, w3)
+        assert np.abs(w).max() <= 1.0 / fi + 1e-7
+
+
+def test_make_weights_normal_variance_matched():
+    cfg = GenCfg(k=64, d=512, width=256, depth=3, init="normal", init_scale=1.0)
+    cfg_u = GenCfg(k=64, d=512, width=256, depth=3)
+    wn = genutil.make_weights(cfg, 5)[1]
+    wu = genutil.make_weights(cfg_u, 5)[1]
+    # same variance law: Var = 1/(3·fan_in²)
+    assert abs(wn.std() / wu.std() - 1.0) < 0.05
+
+
+@settings(max_examples=15, deadline=None)
+@given(act=st.sampled_from(["sine", "sigmoid", "relu", "lrelu", "elu", "linear"]),
+       depth=st.integers(2, 5), residual=st.booleans())
+def test_generator_ref_all_configs_finite(act, depth, residual):
+    cfg = GenCfg(k=4, d=16, width=8, depth=depth, act=act, residual=residual,
+                 normalize=True)
+    ws = [jnp.asarray(w) for w in genutil.make_weights(cfg, 1)]
+    alpha = jnp.asarray(rng.normal_f32(2, 6 * 4).reshape(6, 4))
+    out = np.asarray(genutil.generator_ref(cfg, ws, alpha, jnp.ones(6)))
+    assert out.shape == (6, 16)
+    assert np.isfinite(out).all()
+    # normalized output ⇒ unit rows — except rows a dead ReLU zeroed out,
+    # which stay at 0 (the eps in the normalizer keeps them finite).
+    norms = np.linalg.norm(out, axis=1)
+    assert np.all((np.abs(norms - 1.0) < 5e-3) | (norms < 1e-6))
+
+
+def test_residual_changes_output():
+    base = GenCfg(k=4, d=16, width=8, depth=4)
+    res = GenCfg(k=4, d=16, width=8, depth=4, residual=True)
+    ws = [jnp.asarray(w) for w in genutil.make_weights(base, 3)]
+    alpha = jnp.asarray(rng.normal_f32(4, 5 * 4).reshape(5, 4))
+    a = np.asarray(genutil.generator_ref(base, ws, alpha, jnp.ones(5)))
+    b = np.asarray(genutil.generator_ref(res, ws, alpha, jnp.ones(5)))
+    assert not np.allclose(a, b)
+
+
+def test_freq_override_traced():
+    cfg = GenCfg(k=2, d=8, width=4, depth=3, freq=4.5)
+    ws = [jnp.asarray(w) for w in genutil.make_weights(cfg, 9)]
+    alpha = jnp.asarray(rng.normal_f32(1, 3 * 2).reshape(3, 2))
+    a = genutil.generator_ref(cfg, ws, alpha, jnp.ones(3))
+    b = genutil.generator_ref(cfg, ws, alpha, jnp.ones(3),
+                              freq=jnp.float32(4.5))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,0 +1,94 @@
+"""Init-law tests: every manifest init kind, shapes, and zero-delta wiring."""
+
+import numpy as np
+import pytest
+
+from compile import initlib, models, rng
+from compile.methods import Dense, Lora, Mcnc, McncLora, NolaLora, Registry
+from compile.genutil import GenCfg, make_weights
+
+MLP = models.MlpCfg(hidden=16)
+REG = Registry(MLP.leaves())
+REGM = {"Dc": REG.Dc, "R": REG.R, "leaves": [l.to_meta() for l in MLP.leaves()]}
+
+
+def test_comp_leaves_layout():
+    v = initlib.init_tensor({"kind": "comp_leaves"}, (REG.Dc,), REGM, 5)
+    assert v.shape == (REG.Dc,)
+    # first leaf (w1) drawn from its dedicated substream:
+    first, _ = REG.comp[0]
+    s = rng.substream(5, rng.TAG_THETA0 + 0)
+    expect = rng.symmetric_f32(s, first.size, first.param)
+    np.testing.assert_array_equal(v[: first.size], expect)
+
+
+def test_raw_leaves_zeros_and_ones():
+    v = initlib.init_tensor({"kind": "raw_leaves"}, (max(REG.R, 1),), REGM, 5)
+    assert v.shape[0] == max(REG.R, 1)
+    # mlp raw leaves are all biases (zeros)
+    assert np.all(v == 0.0)
+
+
+def test_gen_layer_matches_make_weights():
+    cfg = GenCfg(k=3, d=11, width=5, depth=3)
+    for i in range(3):
+        v = initlib.init_tensor({"kind": "gen_layer", "layer": i,
+                                 "gen": cfg.to_meta()},
+                                cfg.layer_shapes()[i], REGM, 21)
+        np.testing.assert_array_equal(v, make_weights(cfg, 21)[i])
+
+
+def test_lora0_structure():
+    r = 3
+    v = initlib.init_tensor({"kind": "lora0", "rank": r}, None, REGM, 9)
+    da = sum(l["lora"][0] * r for l in REGM["leaves"] if l["lora"] and l["compress"])
+    db = sum(r * l["lora"][1] for l in REGM["leaves"] if l["lora"] and l["compress"])
+    assert v.shape == (da + db,)
+    assert np.abs(v[:da]).max() > 0  # A part random
+    assert np.all(v[da:] == 0.0)  # B part zero
+
+
+def test_nola_basis_sizes_and_streams():
+    m, r = 4, 2
+    va = initlib.init_tensor({"kind": "nola_basis", "side": "a", "m": m,
+                              "rank": r}, None, REGM, 13)
+    vb = initlib.init_tensor({"kind": "nola_basis", "side": "b", "m": m,
+                              "rank": r}, None, REGM, 13)
+    targets = [l for l in REGM["leaves"] if l["compress"] and l["lora"]]
+    assert va.size == sum(m * l["lora"][0] * r for l in targets)
+    assert vb.size == sum(m * r * l["lora"][1] for l in targets)
+    assert not np.array_equal(va[: vb.size], vb)
+
+
+def test_nola_coef_bound():
+    m = 16
+    v = initlib.init_tensor({"kind": "nola_coef", "m": m}, (3, m), REGM, 1)
+    assert v.shape == (3, m)
+    assert np.abs(v).max() <= 1.0 / np.sqrt(m) + 1e-7
+
+
+def test_zeros_ones():
+    assert np.all(initlib.init_tensor({"kind": "zeros"}, (4, 2), REGM, 0) == 0)
+    assert np.all(initlib.init_tensor({"kind": "ones"}, (7,), REGM, 0) == 1)
+
+
+def test_init_all_covers_method_specs():
+    for method in [Dense(REG), Mcnc(REG, GenCfg(k=3, d=200, width=16)),
+                   Lora(REG, 2), McncLora(REG, 2, GenCfg(k=3, d=64, width=8)),
+                   NolaLora(REG, 2, 4)]:
+        specs = [s.to_meta() for s in method.statics() + method.trainables()]
+        out = initlib.init_all(specs, REGM, 3)
+        for s in specs:
+            v = out[s["name"]]
+            assert list(v.reshape(tuple(s["shape"])).shape) == s["shape"], s["name"]
+
+
+def test_seed_sensitivity():
+    a = initlib.init_tensor({"kind": "comp_leaves"}, (REG.Dc,), REGM, 1)
+    b = initlib.init_tensor({"kind": "comp_leaves"}, (REG.Dc,), REGM, 2)
+    assert not np.array_equal(a, b)
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(ValueError):
+        initlib.init_tensor({"kind": "nope"}, (1,), REGM, 0)

@@ -1,0 +1,145 @@
+"""L1 correctness: the Pallas generator kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: hypothesis sweeps
+shapes, block sizes, frequencies and β laws; every case must match
+``generator3_ref`` to f32 tolerance, and the custom VJP must match the
+oracle's gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import genutil, rng
+from compile.kernels.generator import generator3_pallas, vmem_bytes
+from compile.kernels.ref import generator3_ref
+
+
+def _mk(n, k, h, d, seed=0):
+    cfg = genutil.GenCfg(k=k, d=d, width=h, depth=3)
+    ws = [jnp.asarray(w) for w in genutil.make_weights(cfg, seed)]
+    alpha = jnp.asarray(
+        rng.normal_f32(rng.substream(seed, rng.TAG_ALPHA), n * k).reshape(n, k))
+    beta = jnp.asarray(rng.uniform_f32(seed + 1, n, -2.0, 2.0))
+    return alpha, beta, ws
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    k=st.integers(1, 12),
+    h=st.integers(2, 48),
+    d=st.integers(2, 96),
+    block_n=st.sampled_from([1, 4, 16, 64]),
+    freq=st.sampled_from([1.0, 4.5, 32.0]),
+)
+def test_kernel_matches_ref(n, k, h, d, block_n, freq):
+    alpha, beta, ws = _mk(n, k, h, d, seed=n * 1000 + k)
+    ref = generator3_ref(alpha, beta, *ws, freq=freq)
+    out = generator3_pallas(alpha, beta, *ws, freq=freq, block_n=block_n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 17), d=st.integers(3, 50))
+def test_output_on_sphere(n, d):
+    """‖φ(α)‖ = |β| after normalization — the manifold constraint."""
+    alpha, beta, ws = _mk(n, 5, 16, d, seed=d)
+    out = np.asarray(generator3_pallas(alpha, beta, *ws, freq=4.5))
+    np.testing.assert_allclose(np.linalg.norm(out, axis=1),
+                               np.abs(np.asarray(beta)), rtol=1e-4, atol=1e-5)
+
+
+def test_unnormalized_variant():
+    alpha, beta, ws = _mk(6, 3, 8, 12)
+    ref = generator3_ref(alpha, beta, *ws, freq=2.0, normalize=False)
+    out = generator3_pallas(alpha, beta, *ws, freq=2.0, normalize=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_beta_scales_linearly():
+    alpha, beta, ws = _mk(5, 4, 8, 16)
+    one = generator3_pallas(alpha, jnp.ones_like(beta), *ws, freq=4.5)
+    three = generator3_pallas(alpha, 3.0 * jnp.ones_like(beta), *ws, freq=4.5)
+    np.testing.assert_allclose(np.asarray(three), 3.0 * np.asarray(one),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_zero_alpha_zero_beta_gives_zero():
+    """The zero-init guarantee: α=0, β=0 ⇒ Δθ = 0 exactly."""
+    _, _, ws = _mk(4, 9, 16, 32)
+    out = generator3_pallas(jnp.zeros((4, 9)), jnp.zeros((4,)), *ws, freq=4.5)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_grad_matches_ref():
+    alpha, beta, ws = _mk(7, 4, 12, 20)
+
+    def loss_k(a, b):
+        return jnp.sum(generator3_pallas(a, b, *ws, freq=4.5) ** 2)
+
+    def loss_r(a, b):
+        return jnp.sum(generator3_ref(a, b, *ws, freq=4.5) ** 2)
+
+    ga_k, gb_k = jax.grad(loss_k, argnums=(0, 1))(alpha, beta)
+    ga_r, gb_r = jax.grad(loss_r, argnums=(0, 1))(alpha, beta)
+    np.testing.assert_allclose(np.asarray(ga_k), np.asarray(ga_r), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gb_k), np.asarray(gb_r), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_grad_nonzero_at_zero_alpha():
+    """Training config (normalize=False, β=1): ∂/∂α ≠ 0 at the zero init —
+    the paper's zero-init point is a usable starting point, not a saddle."""
+    _, _, ws = _mk(3, 4, 12, 20)
+    alpha = jnp.zeros((3, 4))
+    beta = jnp.ones((3,))
+
+    def loss(a):
+        out = generator3_pallas(a, beta, *ws, freq=4.5, normalize=False)
+        return jnp.sum(out * jnp.arange(out.size).reshape(out.shape))
+
+    g = np.asarray(jax.grad(loss)(alpha))
+    assert np.isfinite(g).all()
+    assert np.abs(g).max() > 0
+
+
+def test_normalized_grad_nan_at_zero_documented():
+    """The exactly-normalized variant is 0/0 at α=0 — this pins WHY the
+    training default is normalize=False (DESIGN.md §6)."""
+    _, _, ws = _mk(2, 3, 8, 10)
+
+    def loss(a):
+        return jnp.sum(generator3_pallas(a, jnp.ones(2), *ws, freq=4.5,
+                                         normalize=True))
+
+    g = np.asarray(jax.grad(loss)(jnp.zeros((2, 3))))
+    assert not np.isfinite(g).all()
+
+
+def test_kernel_inside_jit():
+    alpha, beta, ws = _mk(9, 5, 8, 24)
+    f = jax.jit(lambda a, b: generator3_pallas(a, b, *ws, freq=4.5))
+    np.testing.assert_allclose(np.asarray(f(alpha, beta)),
+                               np.asarray(generator3_ref(alpha, beta, *ws, freq=4.5)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_shape_validation():
+    alpha, beta, ws = _mk(3, 4, 8, 16)
+    with pytest.raises(ValueError):
+        generator3_pallas(alpha, beta, ws[0], ws[2], ws[1], freq=1.0)
+
+
+def test_vmem_estimate_default_cfg():
+    """DESIGN.md §Hardware-Adaptation numbers: paper-default generator at
+    block_n=128 must not fit 16 MiB without d-tiling, and the d-tiled
+    footprint quoted in the doc must."""
+    full = vmem_bytes(k=9, h=1000, d=5000, block_n=128)
+    assert full > 16 * 2**20
+    small = vmem_bytes(k=9, h=256, d=5000, block_n=64)
+    assert small < 16 * 2**20

@@ -1,0 +1,95 @@
+"""Manifest contract tests (run after `make artifacts`; skipped otherwise).
+
+The Rust runtime is entirely manifest-driven — these tests pin the schema
+and the invariants it assumes.
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MAN = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MAN), reason="artifacts not built (run `make artifacts`)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MAN) as f:
+        return json.load(f)
+
+
+def test_every_entry_has_hlo_file(manifest):
+    for name, e in manifest["entries"].items():
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100, name
+
+
+def test_input_specs_wellformed(manifest):
+    for name, e in manifest["entries"].items():
+        for spec in e["inputs"]:
+            assert spec["dtype"] in ("f32", "i32"), name
+            assert spec["role"] in ("static", "trainable", "opt", "hyper", "data")
+            assert all(isinstance(d, int) and d > 0 for d in spec["shape"]), name
+            if spec["role"] in ("static", "trainable"):
+                assert spec["init"] is not None, f"{name}:{spec['name']}"
+
+
+def test_train_step_convention(manifest):
+    for name, e in manifest["entries"].items():
+        if e["meta"]["kind"] != "train_step":
+            continue
+        roles = [s["role"] for s in e["inputs"]]
+        nt = roles.count("trainable")
+        assert roles.count("opt") == 2 * nt, name
+        assert [s["name"] for s in e["inputs"][-4:]] == ["t", "lr", "x", "y"], name
+        # outputs: trainables, m, v, t, loss, acc (+ importance for dense)
+        outs = [o["name"] for o in e["outputs"]]
+        assert outs[3 * nt: 3 * nt + 3] == ["t", "loss", "acc"], name
+        # every trainable's output shape matches its input shape
+        tr_in = [s for s in e["inputs"] if s["role"] == "trainable"]
+        for s, o in zip(tr_in, e["outputs"][:nt]):
+            assert s["name"] == o["name"] and s["shape"] == o["shape"], name
+
+
+def test_rate_accounting(manifest):
+    for name, e in manifest["entries"].items():
+        meta = e["meta"]
+        if meta.get("rate") and meta["kind"] == "train_step":
+            if meta["method"] != "dense":
+                assert 0 < meta["rate"] <= 1.2, name
+                assert meta["trainable_comp"] > 0, name
+
+
+def test_vit_table1_rates(manifest):
+    """The Table-1 sweep must hit its advertised compression points."""
+    for pct in [50, 20, 10, 5, 2, 1]:
+        e = manifest["entries"].get(f"vit_mcnc{pct}_train")
+        assert e is not None
+        got = e["meta"]["rate"] * 100
+        assert abs(got - pct) / pct < 0.15, f"{pct}%: got {got:.2f}%"
+
+
+def test_paper_required_entries_present(manifest):
+    required = [
+        "mlp_mcnc02_train", "mlp_dense_train", "gen_mlp02_fwd",
+        "vit_dense_train", "vit_mcnc1_train",
+        "r20c10_mcnc1_train", "r20c10_nola_train", "r20c10_pranc1_train",
+        "r20c10_mcnc5k_train", "r56c10_mcnc5k_train",
+        "lm_dense_train", "lm_lora8_train", "lm_nola8_train",
+        "lm_mcnclora8_train", "gen_adapter_fwd",
+        "swgan_k1d3", "swgan_r20gen",
+        "mlp_mcnc02_freqin_train", "mlp_mcnc02_sigmoid_train",
+    ]
+    for r in required:
+        assert r in manifest["entries"], r
+
+
+def test_groups_cover_paper_tables(manifest):
+    groups = {e["group"] for e in manifest["entries"].values()}
+    assert {"core", "abl_act", "abl_freq", "abl_scale", "abl_kd", "abl_width",
+            "abl_depth", "vit", "resnet", "resnet_t3", "lm", "sphere"} <= groups

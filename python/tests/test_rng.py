@@ -1,0 +1,75 @@
+"""SplitMix64 stream tests + the cross-language golden vectors.
+
+The golden constants here are duplicated in ``rust/src/util/prng.rs`` tests;
+if either side changes, both fail. Keep in sync.
+"""
+
+import numpy as np
+import pytest
+
+from compile import rng
+
+
+def test_mix_golden():
+    # splitmix64(seed=0) canonical first outputs (state += GAMMA then mix).
+    assert rng.raw_u64(0, 3).tolist() == [
+        0xE220A8397B1DCDAF,
+        0x6E789E6AA1B965F4,
+        0x06C45D188009454F,
+    ]
+
+
+def test_mix_golden_nonzero_seed():
+    assert rng.raw_u64(42, 2).tolist() == [
+        0xBDD732262FEB6E95,
+        0x28EFE333B266F103,
+    ]
+
+
+def test_substream_deterministic():
+    a = rng.substream(7, rng.TAG_THETA0)
+    b = rng.substream(7, rng.TAG_THETA0)
+    c = rng.substream(7, rng.TAG_THETA0 + 1)
+    assert a == b and a != c
+    assert 0 <= a < 2**64
+
+
+def test_uniform_range_and_determinism():
+    u = rng.uniform_f32(123, 10_000)
+    assert u.dtype == np.float32
+    assert (u >= 0).all() and (u < 1).all()
+    assert np.array_equal(u, rng.uniform_f32(123, 10_000))
+    # mean ~ 0.5
+    assert abs(float(u.mean()) - 0.5) < 0.02
+
+
+def test_uniform_f32_golden():
+    u = rng.uniform_f32(1, 4)
+    expect = (np.array(rng.raw_u64(1, 4) >> np.uint64(40), dtype=np.float32)
+              * np.float32(2.0**-24))
+    assert np.array_equal(u, expect)
+
+
+def test_symmetric_bounds():
+    s = rng.symmetric_f32(9, 5000, 0.25)
+    assert (np.abs(s) <= 0.25).all()
+    assert abs(float(s.mean())) < 0.01
+    assert s.min() < -0.2 and s.max() > 0.2
+
+
+def test_normal_moments():
+    z = rng.normal_f32(11, 100_000, std=2.0)
+    assert abs(float(z.mean())) < 0.05
+    assert abs(float(z.std()) - 2.0) < 0.05
+
+
+def test_prefix_stability():
+    """Stream prefix must not depend on the requested length."""
+    long = rng.uniform_f32(5, 1000)
+    short = rng.uniform_f32(5, 10)
+    assert np.array_equal(long[:10], short)
+
+
+@pytest.mark.parametrize("n", [0, 1, 2, 7])
+def test_normal_odd_lengths(n):
+    assert rng.normal_f32(3, n).shape == (n,)

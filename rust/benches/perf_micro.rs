@@ -1,0 +1,108 @@
+//! Micro-benchmarks for the §Perf pass: generator reconstruction throughput
+//! (native vs PJRT), router/batcher ops, LRU cache, JSON parsing, session
+//! overhead. Baselines for EXPERIMENTS.md §Perf live here.
+
+use std::time::Instant;
+
+use mcnc::coordinator::{BatchPolicy, Request, Router};
+use mcnc::exp::Ctx;
+use mcnc::mcnc::{GenCfg, Generator};
+use mcnc::runtime::init;
+use mcnc::tensor::Tensor;
+use mcnc::util::bench::{fmt_si, fmt_time, time_it, Table};
+use mcnc::util::prng::Stream;
+
+fn main() {
+    let mut table = Table::new("perf micro", &["target", "metric", "value"]);
+
+    // --- native generator reconstruction ---
+    let cfg = GenCfg { k: 9, d: 5000, width: 256, depth: 3, ..GenCfg::default() };
+    let n = 54usize;
+    let gen = Generator::from_seed(cfg.clone(), 1);
+    let alpha = Stream::new(2).normal_f32(n * cfg.k, 0.5);
+    let beta = vec![1.0f32; n];
+    let mut out = vec![0.0f32; n * cfg.d];
+    let s = time_it(3, 20, || gen.forward_into(&alpha, &beta, &mut out));
+    let params_per_sec = (n * cfg.d) as f64 / s.median();
+    let flops = (n * cfg.flops_per_chunk()) as f64 / s.median();
+    table.row(vec![
+        "native generator (mlp02 shape)".into(),
+        "params/s | GFLOP/s".into(),
+        format!("{} | {:.2}", fmt_si(params_per_sec), flops / 1e9),
+    ]);
+
+    // --- PJRT generator executable ---
+    if let Some(ctx) = Ctx::open() {
+        let entry = ctx.session.entry("gen_mlp02_fwd").unwrap().clone();
+        let slots = init::init_inputs(&entry, 1).unwrap();
+        let mut inputs: Vec<Tensor> = slots.iter().map(|(_, t)| t.clone().unwrap()).collect();
+        inputs[0] = Tensor::from_f32(alpha.clone(), &[n, cfg.k]).unwrap();
+        inputs[1] = Tensor::from_f32(beta.clone(), &[n]).unwrap();
+        ctx.session.load("gen_mlp02_fwd").unwrap();
+        let s = time_it(3, 20, || {
+            let _ = ctx.session.run("gen_mlp02_fwd", &inputs).unwrap();
+        });
+        table.row(vec![
+            "PJRT generator (incl. marshal)".into(),
+            "params/s".into(),
+            fmt_si((n * cfg.d) as f64 / s.median()),
+        ]);
+
+        // session overhead: smallest executable round-trip
+        let s = time_it(3, 30, || {
+            let _ = ctx.session.run("gen_mlp02_fwd", &inputs).unwrap();
+        });
+        table.row(vec![
+            "session round-trip".into(),
+            "median".into(),
+            fmt_time(s.median()),
+        ]);
+    }
+
+    // --- router + batcher throughput ---
+    let t0 = Instant::now();
+    let mut total = 0u64;
+    while t0.elapsed().as_secs_f64() < 0.3 {
+        let mut r = Router::default();
+        let now = Instant::now();
+        for i in 0..10_000u64 {
+            r.push(Request { id: i, task: (i % 16) as usize, tokens: Vec::new(), enqueued: now });
+        }
+        let p = BatchPolicy { max_batch: 16, max_delay: std::time::Duration::ZERO };
+        while r.next_batch(p, now, true).is_some() {}
+        total += 10_000;
+    }
+    table.row(vec![
+        "router push+batch".into(),
+        "req/s".into(),
+        fmt_si(total as f64 / t0.elapsed().as_secs_f64()),
+    ]);
+
+    // --- JSON manifest parse ---
+    let man_path = mcnc::runtime::artifacts_dir().join("manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&man_path) {
+        let s = time_it(2, 10, || {
+            let _ = mcnc::util::json::parse(&text).unwrap();
+        });
+        table.row(vec![
+            "json parse (manifest)".into(),
+            "MB/s".into(),
+            format!("{:.1}", text.len() as f64 / 1e6 / s.median()),
+        ]);
+    }
+
+    // --- data generation ---
+    use mcnc::data::{Dataset, Split, SynthVision};
+    let ds = SynthVision::cifar_like(1, 10);
+    let s = time_it(2, 10, || {
+        let _ = ds.batch(Split::Train, 0, 64);
+    });
+    table.row(vec![
+        "synth-cifar batch(64)".into(),
+        "median".into(),
+        fmt_time(s.median()),
+    ]);
+
+    table.print();
+    table.save_csv("perf_micro");
+}

@@ -1,0 +1,54 @@
+//! Table 14 (appendix): generator weight init law — uniform vs normal ×
+//! variance scale c. Weights are runtime inputs, so one executable covers
+//! the whole sweep: we synthesize each variant natively and install it
+//! into the gw* statics (first layer keeps c=1, like the paper).
+
+use std::sync::Arc;
+
+use mcnc::data::{Dataset, SynthVision};
+use mcnc::exp::{steps_mlp, Ctx};
+use mcnc::mcnc::GenCfg;
+use mcnc::tensor::Tensor;
+use mcnc::train::{self, LrSchedule, TrainCfg, TrainState};
+use mcnc::util::bench::Table;
+
+fn main() {
+    let Some(ctx) = Ctx::open() else { return };
+    let data: Arc<dyn Dataset> = Arc::new(SynthVision::new(42, 10, 28, 28, 1));
+    let steps = steps_mlp();
+    let entry = ctx.session.entry("mlp_mcnc02_train").unwrap().clone();
+    let base = GenCfg::from_json(
+        entry.meta.get("gen").expect("mcnc entry carries gen cfg"),
+    )
+    .unwrap();
+
+    let mut table =
+        Table::new("Table 14 — generator weight init", &["init", "c", "val acc"]);
+    for init in ["uniform", "normal"] {
+        for c in [0.5f32, 1.0, 2.0, 4.0] {
+            let mut st = TrainState::new(&ctx.session, "mlp_mcnc02_train", 5).unwrap();
+            let cfg = GenCfg { init: init.into(), init_scale: c, ..base.clone() };
+            let ws = cfg.make_weights(42);
+            let ws1 = GenCfg { init: init.into(), init_scale: 1.0, ..base.clone() }
+                .make_weights(42);
+            for (i, (a, b)) in cfg.layer_shapes().into_iter().enumerate() {
+                // first layer keeps c = 1 (c also changes the input
+                // frequency, which Table 6 sweeps separately)
+                let w = if i == 0 { &ws1[i] } else { &ws[i] };
+                st.set(&format!("gw{i}"), Tensor::from_f32(w.clone(), &[a, b]).unwrap())
+                    .unwrap();
+            }
+            let tc = TrainCfg {
+                steps,
+                batch: 128,
+                schedule: LrSchedule::Cosine { base: 0.05, total: steps, floor_frac: 0.05 },
+                ..TrainCfg::default()
+            };
+            let hist = train::run(&mut st, Arc::clone(&data), &tc).unwrap();
+            table.row(vec![init.into(), format!("{c}"), format!("{:.3}", hist.final_val_acc())]);
+        }
+    }
+    table.print();
+    table.save_csv("table14_init");
+    println!("\npaper shape: uniform ≥ normal; smaller variance better for uniform.");
+}

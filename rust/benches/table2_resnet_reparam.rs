@@ -1,0 +1,45 @@
+//! Table 2: ResNet (CIFAR-style, the ResNet-18 analog) — MCNC ± LoRA vs
+//! PRANC vs NOLA across compression rates on the synthetic CIFAR-10 task.
+
+use std::sync::Arc;
+
+use mcnc::data::{Dataset, SynthVision};
+use mcnc::exp::{steps_resnet, Ctx};
+use mcnc::util::bench::Table;
+
+fn main() {
+    let Some(ctx) = Ctx::open() else { return };
+    let data: Arc<dyn Dataset> = Arc::new(SynthVision::cifar_like(55, 10));
+    let steps = steps_resnet();
+    let lrs = [0.02f32, 0.01, 0.05];
+    let mut table = Table::new(
+        "Table 2 — ResNet20 (R18 analog), % size vs accuracy",
+        &["method", "size %", "val acc"],
+    );
+
+    let (acc, _) = ctx.best_acc("r20c10_dense_train", Arc::clone(&data), steps, &[0.004], 3).unwrap();
+    table.row(vec!["baseline".into(), "100".into(), format!("{acc:.3}")]);
+
+    for pct in [10u32, 5, 2, 1] {
+        let (acc, _) = ctx
+            .best_acc(&format!("r20c10_mcnc{pct}_train"), Arc::clone(&data), steps, &lrs, 3)
+            .unwrap();
+        table.row(vec!["MCNC".into(), pct.to_string(), format!("{acc:.3}")]);
+    }
+    for pct in [2u32, 1] {
+        let (acc, _) = ctx
+            .best_acc(&format!("r20c10_mcnclora{pct}_train"), Arc::clone(&data), steps, &lrs, 3)
+            .unwrap();
+        table.row(vec!["MCNC w/ LoRA".into(), pct.to_string(), format!("{acc:.3}")]);
+        let (acc, _) = ctx
+            .best_acc(&format!("r20c10_pranc{pct}_train"), Arc::clone(&data), steps, &lrs, 3)
+            .unwrap();
+        table.row(vec!["PRANC".into(), pct.to_string(), format!("{acc:.3}")]);
+    }
+    let (acc, _) = ctx.best_acc("r20c10_nola_train", Arc::clone(&data), steps, &lrs, 3).unwrap();
+    table.row(vec!["NOLA".into(), "1".into(), format!("{acc:.3}")]);
+
+    table.print();
+    table.save_csv("table2_resnet_reparam");
+    println!("\npaper shape: MCNC > PRANC at equal budget; LoRA variant best at extreme rates.");
+}

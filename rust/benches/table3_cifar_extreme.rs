@@ -1,0 +1,52 @@
+//! Table 3: extreme compression (~5k trainable params) on ResNet-20/56 ×
+//! CIFAR-10/100 analogs — MCNC ± LoRA vs PRANC vs NOLA vs dense baseline.
+
+use std::sync::Arc;
+
+use mcnc::data::{Dataset, SynthVision};
+use mcnc::exp::{full_mode, steps_resnet, Ctx};
+use mcnc::util::bench::Table;
+
+fn main() {
+    let Some(ctx) = Ctx::open() else { return };
+    let steps = steps_resnet();
+    let lrs = [0.02f32, 0.05, 0.01];
+    let mut table = Table::new(
+        "Table 3 — ~5k trainable params, arch × dataset",
+        &["arch", "dataset", "method", "params", "val acc"],
+    );
+
+    // quick mode: skip the slow ResNet-56 rows unless running full
+    let settings: Vec<(&str, usize)> = if full_mode() {
+        vec![("r20c10", 10), ("r20c100", 100), ("r56c10", 10), ("r56c100", 100)]
+    } else {
+        vec![("r20c10", 10), ("r20c100", 100)]
+    };
+
+    for (arch, classes) in settings {
+        let data: Arc<dyn Dataset> = Arc::new(SynthVision::cifar_like(55, classes));
+        let (acc, _) = ctx
+            .best_acc(&format!("{arch}_dense5k_train"), Arc::clone(&data), steps, &[0.004], 3)
+            .unwrap();
+        let dc = ctx.session.entry(&format!("{arch}_dense5k_train")).unwrap().registry().unwrap().dc;
+        table.row(vec![arch.into(), format!("c{classes}"), "baseline".into(), dc.to_string(), format!("{acc:.3}")]);
+        for method in ["pranc5k", "nola5k", "mcnc5k", "mcnclora5k"] {
+            let exec = format!("{arch}_{method}_train");
+            let params = ctx.session.entry(&exec).unwrap().trainable_comp();
+            let (acc, _) = ctx.best_acc(&exec, Arc::clone(&data), steps, &lrs, 3).unwrap();
+            table.row(vec![
+                arch.into(),
+                format!("c{classes}"),
+                method.trim_end_matches("5k").into(),
+                params.to_string(),
+                format!("{acc:.3}"),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("table3_cifar_extreme");
+    println!("\npaper shape: MCNC ≥ NOLA > PRANC ≫ dense-at-5k-impossible; LoRA variant best.");
+    if !full_mode() {
+        println!("(ResNet-56 rows: MCNC_BENCH_FULL=1)");
+    }
+}

@@ -1,0 +1,33 @@
+//! Table 7: model size grows, compressed budget fixed (540 params) — the
+//! over-parameterization premise: bigger models have more good solutions
+//! reachable from the fixed-size manifold.
+
+use std::sync::Arc;
+
+use mcnc::data::{Dataset, SynthVision};
+use mcnc::exp::{steps_mlp, Ctx};
+use mcnc::util::bench::Table;
+
+fn main() {
+    let Some(ctx) = Ctx::open() else { return };
+    let data: Arc<dyn Dataset> = Arc::new(SynthVision::new(42, 10, 28, 28, 1));
+    let steps = steps_mlp();
+    let lrs = [0.05f32, 0.01, 0.1];
+    let mut table = Table::new(
+        "Table 7 — MLP hidden size @ fixed 540 compressed params",
+        &["hidden", "model params", "val acc"],
+    );
+    for hidden in [16usize, 32, 64, 128, 256, 512] {
+        let exec = if hidden == 256 {
+            "mlp_mcnc02_train".to_string()
+        } else {
+            format!("mlp{hidden}_mcnc_fix_train")
+        };
+        let dc = ctx.session.entry(&exec).unwrap().registry().unwrap().dc;
+        let (acc, _) = ctx.best_acc(&exec, Arc::clone(&data), steps, &lrs, 5).unwrap();
+        table.row(vec![hidden.to_string(), dc.to_string(), format!("{acc:.3}")]);
+    }
+    table.print();
+    table.save_csv("table7_model_scale");
+    println!("\npaper shape: accuracy rises with model size at fixed budget.");
+}

@@ -1,0 +1,9 @@
+//! Baselines the paper compares against, native side: pruning (magnitude /
+//! PLATON-lite driving the dense executable's mask), NOLA reconstruction,
+//! and simulated base-weight quantization (QLoRA stand-in).
+
+pub mod nola;
+pub mod prune;
+pub mod quant;
+
+pub use prune::{cubic_sparsity, sparsity_for_size, topk_mask, Platon};

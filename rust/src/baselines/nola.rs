@@ -1,0 +1,114 @@
+//! Native NOLA reconstruction (Koohpayegani et al. 2024): LoRA factors as
+//! linear combinations of m frozen random bases. The PJRT executables carry
+//! the same math in-graph; this mirror exists for FLOPs-vs-wallclock
+//! micro-benchmarks (Table 4's reconstruction-cost comparison) and tests.
+
+/// One LoRA target's dimensions.
+#[derive(Debug, Clone, Copy)]
+pub struct TargetDims {
+    pub a: usize,
+    pub b: usize,
+}
+
+/// Reconstruct one factor: coef [m] × basis [m, rows*cols] → [rows*cols].
+pub fn combine(coef: &[f32], basis: &[f32], len: usize, out: &mut [f32]) {
+    assert_eq!(basis.len(), coef.len() * len);
+    assert_eq!(out.len(), len);
+    out.fill(0.0);
+    for (j, &c) in coef.iter().enumerate() {
+        if c == 0.0 {
+            continue;
+        }
+        let row = &basis[j * len..(j + 1) * len];
+        for (o, &b) in out.iter_mut().zip(row) {
+            *o += c * b;
+        }
+    }
+}
+
+/// Full adapter reconstruction: per-target A = Σ cA_j·basisA_j and B
+/// likewise, then ΔW = A·B. Returns the per-target ΔW flats.
+pub fn reconstruct_deltas(
+    dims: &[TargetDims],
+    rank: usize,
+    coef_a: &[f32], // [L, m]
+    coef_b: &[f32],
+    basis_a: &[f32], // concatenated [m * a * rank] per target
+    basis_b: &[f32],
+    m: usize,
+) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(dims.len());
+    let (mut ao, mut bo) = (0usize, 0usize);
+    for (l, t) in dims.iter().enumerate() {
+        let alen = t.a * rank;
+        let blen = rank * t.b;
+        let mut fa = vec![0.0f32; alen];
+        let mut fb = vec![0.0f32; blen];
+        combine(&coef_a[l * m..(l + 1) * m], &basis_a[m * ao..m * (ao + alen)], alen, &mut fa);
+        combine(&coef_b[l * m..(l + 1) * m], &basis_b[m * bo..m * (bo + blen)], blen, &mut fb);
+        ao += alen;
+        bo += blen;
+        // ΔW = A [a, r] @ B [r, b]
+        let mut dw = vec![0.0f32; t.a * t.b];
+        for i in 0..t.a {
+            for r in 0..rank {
+                let av = fa[i * rank + r];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &fb[r * t.b..(r + 1) * t.b];
+                let orow = &mut dw[i * t.b..(i + 1) * t.b];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out.push(dw);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream;
+
+    #[test]
+    fn combine_is_linear() {
+        let basis = Stream::new(1).normal_f32(3 * 10, 1.0);
+        let mut out1 = vec![0.0; 10];
+        let mut out2 = vec![0.0; 10];
+        combine(&[1.0, 0.0, 0.0], &basis, 10, &mut out1);
+        assert_eq!(out1, &basis[..10]);
+        combine(&[2.0, -1.0, 0.5], &basis, 10, &mut out2);
+        for i in 0..10 {
+            let want = 2.0 * basis[i] - basis[10 + i] + 0.5 * basis[20 + i];
+            assert!((out2[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_coefs_zero_delta() {
+        let dims = [TargetDims { a: 4, b: 6 }, TargetDims { a: 3, b: 3 }];
+        let m = 2;
+        let rank = 2;
+        let na: usize = dims.iter().map(|t| t.a * rank).sum();
+        let nb: usize = dims.iter().map(|t| rank * t.b).sum();
+        let basis_a = Stream::new(2).normal_f32(m * na, 1.0);
+        let basis_b = Stream::new(3).normal_f32(m * nb, 1.0);
+        let coef_a = Stream::new(4).normal_f32(dims.len() * m, 1.0);
+        let coef_b = vec![0.0; dims.len() * m];
+        let d = reconstruct_deltas(&dims, rank, &coef_a, &coef_b, &basis_a, &basis_b, m);
+        assert!(d.iter().flatten().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn rank1_outer_product() {
+        let dims = [TargetDims { a: 2, b: 3 }];
+        // single basis, coef 1 → A = basisA, B = basisB, ΔW = A·B
+        let basis_a = vec![1.0, 2.0]; // A [2,1]
+        let basis_b = vec![3.0, 4.0, 5.0]; // B [1,3]
+        let d = reconstruct_deltas(&dims, 1, &[1.0], &[1.0], &basis_a, &basis_b, 1);
+        assert_eq!(d[0], vec![3.0, 4.0, 5.0, 6.0, 8.0, 10.0]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Pruning baselines (Table 1): one-shot / iterative magnitude pruning and
+//! PLATON-lite, both driving the dense train-step's multiplicative `mask`
+//! input from the Rust side between steps.
+//!
+//! PLATON (Zhang et al. 2022) scores weights by an uncertainty-adjusted
+//! EMA of the sensitivity |θ·∇θ|; the lite variant keeps the two EMAs
+//! (importance Ī and uncertainty Ū, score = Ī·Ū) and the cubic sparsity
+//! schedule, dropping the transformer-specific bells.
+
+/// Keep the top-(1-sparsity) fraction of |scores|; returns a 0/1 mask.
+pub fn topk_mask(scores: &[f32], sparsity: f32) -> Vec<f32> {
+    let n = scores.len();
+    let keep = ((1.0 - sparsity as f64) * n as f64).round() as usize;
+    if keep >= n {
+        return vec![1.0; n];
+    }
+    if keep == 0 {
+        return vec![0.0; n];
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let kth = n - keep; // elements below this index are pruned
+    idx.select_nth_unstable_by(kth, |&a, &b| {
+        scores[a as usize]
+            .abs()
+            .partial_cmp(&scores[b as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut mask = vec![0.0f32; n];
+    for &i in &idx[kth..] {
+        mask[i as usize] = 1.0;
+    }
+    mask
+}
+
+/// Cubic sparsity schedule (PLATON eq. 8 / Zhu & Gupta):
+/// s(t) ramps 0 → s_final between t_i and t_f, cubically.
+pub fn cubic_sparsity(step: usize, t_i: usize, t_f: usize, s_final: f32) -> f32 {
+    if step <= t_i {
+        return 0.0;
+    }
+    if step >= t_f {
+        return s_final;
+    }
+    let frac = (step - t_i) as f32 / (t_f - t_i) as f32;
+    s_final * (1.0 - (1.0 - frac).powi(3))
+}
+
+/// PLATON-lite importance state.
+pub struct Platon {
+    pub ibar: Vec<f32>, // EMA of sensitivity
+    pub ubar: Vec<f32>, // EMA of |sensitivity - EMA| (uncertainty)
+    pub beta1: f32,
+    pub beta2: f32,
+}
+
+impl Platon {
+    pub fn new(n: usize, beta1: f32, beta2: f32) -> Platon {
+        Platon { ibar: vec![0.0; n], ubar: vec![0.0; n], beta1, beta2 }
+    }
+
+    /// Fold one step's sensitivity |θ·∇θ| into the EMAs.
+    pub fn update(&mut self, sensitivity: &[f32]) {
+        assert_eq!(sensitivity.len(), self.ibar.len());
+        for i in 0..sensitivity.len() {
+            let s = sensitivity[i];
+            let prev = self.ibar[i];
+            self.ibar[i] = self.beta1 * prev + (1.0 - self.beta1) * s;
+            let u = (s - self.ibar[i]).abs();
+            self.ubar[i] = self.beta2 * self.ubar[i] + (1.0 - self.beta2) * u;
+        }
+    }
+
+    /// Uncertainty-weighted scores (PLATON's Ī ⊙ Ū).
+    pub fn scores(&self) -> Vec<f32> {
+        self.ibar.iter().zip(&self.ubar).map(|(i, u)| i * u).collect()
+    }
+
+    pub fn mask(&self, sparsity: f32) -> Vec<f32> {
+        topk_mask(&self.scores(), sparsity)
+    }
+}
+
+/// Account for unstructured-pruning index storage the way the paper does:
+/// at equal *model size*, pruning must go to 1.5× the sparsity because each
+/// surviving weight also stores a half-precision index (§4.1).
+pub fn sparsity_for_size(size_fraction: f32) -> f32 {
+    // keep fraction = size / 1.5  ⇒  sparsity = 1 − (2/3)·size
+    (1.0 - size_fraction * (2.0 / 3.0)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn topk_keeps_largest() {
+        let scores = vec![0.1, -5.0, 0.3, 2.0, -0.01];
+        let m = topk_mask(&scores, 0.6); // keep 2 of 5
+        assert_eq!(m, vec![0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_edge_cases() {
+        assert_eq!(topk_mask(&[1.0, 2.0], 0.0), vec![1.0, 1.0]);
+        assert_eq!(topk_mask(&[1.0, 2.0], 1.0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_mask_count_property() {
+        run_prop("topk_count", 100, |g| {
+            let n = g.usize(1, 500);
+            let s = g.f32(0.0, 1.0);
+            let scores = g.vec_f32(n, -1.0, 1.0);
+            let m = topk_mask(&scores, s);
+            let kept = m.iter().filter(|&&x| x == 1.0).count();
+            let want = ((1.0 - s as f64) * n as f64).round() as usize;
+            prop_assert!(kept == want.min(n), "kept {kept}, want {want}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cubic_schedule_monotone() {
+        let mut prev = -1.0f32;
+        for t in 0..200 {
+            let s = cubic_sparsity(t, 10, 150, 0.9);
+            assert!(s >= prev - 1e-6);
+            assert!((0.0..=0.9).contains(&s));
+            prev = s;
+        }
+        assert_eq!(cubic_sparsity(0, 10, 150, 0.9), 0.0);
+        assert_eq!(cubic_sparsity(199, 10, 150, 0.9), 0.9);
+    }
+
+    #[test]
+    fn platon_prefers_consistent_importance() {
+        let mut p = Platon::new(3, 0.85, 0.95);
+        for step in 0..50 {
+            // weight 0: consistently important; weight 1: noisy; weight 2: dead
+            let noisy = if step % 2 == 0 { 2.0 } else { 0.0 };
+            p.update(&[1.0, noisy, 0.001]);
+        }
+        let s = p.scores();
+        let m = p.mask(2.0 / 3.0); // keep 1
+        assert!(s[1] > s[0], "noisy weight should have higher uncertainty score");
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 1);
+        assert_eq!(m[2], 0.0);
+    }
+
+    #[test]
+    fn size_accounting_paper_rule() {
+        // paper: prune to sparsity 1.5x higher than the size target,
+        // i.e. size 10% → keep 6.7% of weights (sparsity 93.3%)
+        let s = sparsity_for_size(0.10);
+        assert!((s - 0.9333).abs() < 1e-3, "{s}");
+        assert!((sparsity_for_size(0.05) - 0.9667).abs() < 1e-3);
+        assert_eq!(sparsity_for_size(1.6), 0.0); // no pruning needed
+    }
+}

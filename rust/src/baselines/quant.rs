@@ -1,0 +1,88 @@
+//! Simulated weight quantization (QLoRA-style frozen base): per-block
+//! absmax int-N quantize→dequantize of θ0 before it is fed to the PEFT
+//! executables. Stands in for the paper's 4-bit base model (DESIGN.md §7).
+
+/// Quantize-dequantize `w` in place: per `block`-sized group, symmetric
+/// absmax scaling to `bits`-wide signed integers.
+pub fn fake_quant(w: &mut [f32], bits: u32, block: usize) {
+    assert!((2..=8).contains(&bits));
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    for chunk in w.chunks_mut(block.max(1)) {
+        let absmax = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if absmax == 0.0 {
+            continue;
+        }
+        let scale = absmax / qmax;
+        for v in chunk.iter_mut() {
+            let q = (*v / scale).round().clamp(-qmax - 1.0, qmax);
+            *v = q * scale;
+        }
+    }
+}
+
+/// Bytes to store the quantized block layout (payload + f32 scales).
+pub fn quant_bytes(n: usize, bits: u32, block: usize) -> usize {
+    (n * bits as usize).div_ceil(8) + n.div_ceil(block) * 4
+}
+
+/// Max representable relative error of absmax int-N quantization.
+pub fn worst_rel_error(bits: u32) -> f32 {
+    0.5 / (((1i32 << (bits - 1)) - 1) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream;
+
+    #[test]
+    fn int8_is_accurate() {
+        let mut w = Stream::new(1).normal_f32(4096, 0.05);
+        let orig = w.clone();
+        fake_quant(&mut w, 8, 64);
+        let max_rel = orig
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        // error bounded by scale/2 = absmax/254
+        let absmax = orig.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(max_rel <= absmax * worst_rel_error(8) * 1.01);
+    }
+
+    #[test]
+    fn int4_coarser_than_int8() {
+        let base = Stream::new(2).normal_f32(4096, 0.05);
+        let mut w4 = base.clone();
+        let mut w8 = base.clone();
+        fake_quant(&mut w4, 4, 64);
+        fake_quant(&mut w8, 8, 64);
+        let err = |q: &[f32]| -> f64 {
+            base.iter().zip(q).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        assert!(err(&w4) > err(&w8) * 4.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut w = Stream::new(3).normal_f32(256, 1.0);
+        fake_quant(&mut w, 4, 32);
+        let once = w.clone();
+        fake_quant(&mut w, 4, 32);
+        assert_eq!(once, w);
+    }
+
+    #[test]
+    fn zero_block_untouched() {
+        let mut w = vec![0.0f32; 64];
+        fake_quant(&mut w, 4, 32);
+        assert!(w.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn storage_accounting() {
+        // 4-bit, block 64: n/2 payload bytes + n/64 scales * 4B
+        assert_eq!(quant_bytes(4096, 4, 64), 2048 + 256);
+        assert_eq!(quant_bytes(10, 4, 64), 5 + 4);
+    }
+}

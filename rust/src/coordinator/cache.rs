@@ -1,0 +1,185 @@
+//! Byte-bounded LRU cache — the adapter cache of the serving engine
+//! ("merged" mode caches reconstructed full weights per task; the cap makes
+//! the memory/recompute trade-off of Table 4's discussion explicit).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+pub trait Weigh {
+    fn weight(&self) -> usize;
+}
+
+impl Weigh for crate::tensor::Tensor {
+    fn weight(&self) -> usize {
+        self.size_bytes()
+    }
+}
+
+impl<T: Weigh> Weigh for Vec<T> {
+    fn weight(&self) -> usize {
+        self.iter().map(Weigh::weight).sum()
+    }
+}
+
+pub struct LruCache<K: Eq + Hash + Clone, V: Weigh> {
+    capacity_bytes: usize,
+    used_bytes: usize,
+    tick: u64,
+    map: HashMap<K, (V, u64)>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl<K: Eq + Hash + Clone, V: Weigh> LruCache<K, V> {
+    pub fn new(capacity_bytes: usize) -> Self {
+        LruCache {
+            capacity_bytes,
+            used_bytes: 0,
+            tick: 0,
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(k) {
+            Some((v, t)) => {
+                *t = tick;
+                self.hits += 1;
+                Some(&*v)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&mut self, k: K, v: V) {
+        let w = v.weight();
+        if w > self.capacity_bytes {
+            return; // would never fit; don't thrash the rest out
+        }
+        if let Some((old, _)) = self.map.remove(&k) {
+            self.used_bytes -= old.weight();
+        }
+        while self.used_bytes + w > self.capacity_bytes {
+            // evict least-recently-used
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(vk) => {
+                    if let Some((old, _)) = self.map.remove(&vk) {
+                        self.used_bytes -= old.weight();
+                        self.evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        self.tick += 1;
+        self.used_bytes += w;
+        self.map.insert(k, (v, self.tick));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn contains(&self, k: &K) -> bool {
+        self.map.contains_key(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct Blob(usize);
+
+    impl Weigh for Blob {
+        fn weight(&self) -> usize {
+            self.0
+        }
+    }
+
+    #[test]
+    fn hit_miss_counting() {
+        let mut c: LruCache<u32, Blob> = LruCache::new(100);
+        assert!(c.get(&1).is_none());
+        c.put(1, Blob(10));
+        assert_eq!(c.get(&1), Some(&Blob(10)));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn evicts_lru_not_mru() {
+        let mut c: LruCache<u32, Blob> = LruCache::new(30);
+        c.put(1, Blob(10));
+        c.put(2, Blob(10));
+        c.put(3, Blob(10));
+        let _ = c.get(&1); // 1 is now MRU
+        c.put(4, Blob(10)); // must evict 2 (LRU)
+        assert!(c.contains(&1));
+        assert!(!c.contains(&2));
+        assert!(c.contains(&3) && c.contains(&4));
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_value_rejected() {
+        let mut c: LruCache<u32, Blob> = LruCache::new(10);
+        c.put(1, Blob(5));
+        c.put(2, Blob(100));
+        assert!(c.contains(&1));
+        assert!(!c.contains(&2));
+    }
+
+    #[test]
+    fn replace_updates_bytes() {
+        let mut c: LruCache<u32, Blob> = LruCache::new(100);
+        c.put(1, Blob(40));
+        c.put(1, Blob(10));
+        assert_eq!(c.used_bytes(), 10);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn capacity_invariant_property() {
+        run_prop("lru_capacity", 100, |g| {
+            let cap = g.usize(1, 200);
+            let mut c: LruCache<usize, Blob> = LruCache::new(cap);
+            for _ in 0..50 {
+                if g.bool() {
+                    c.put(g.usize(0, 10), Blob(g.usize(1, 50)));
+                } else {
+                    let _ = c.get(&g.usize(0, 10));
+                }
+                prop_assert!(c.used_bytes() <= cap, "over capacity");
+                let real: usize = c.map.values().map(|(v, _)| v.weight()).sum();
+                prop_assert!(real == c.used_bytes(), "byte accounting drift");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 — the serving coordinator: request router, dynamic batcher, adapter
+//! cache, single-threaded PJRT engine, workload generators and metrics.
+//! This is where the paper's multi-task adapter-serving claim (Table 4)
+//! and the transfer claim (Table 8) are exercised.
+
+pub mod cache;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod workload;
+
+pub use cache::LruCache;
+pub use metrics::{Histogram, ServeStats};
+pub use router::{Batch, BatchPolicy, Request, Router};
+pub use server::{Engine, Mode, Response, Server, ServerCfg};
+pub use workload::{open_loop, Arrival, Zipf};

@@ -1,0 +1,202 @@
+//! Request router + dynamic batcher (pure data structures; the engine
+//! thread drives them). Requests for different tasks can never share a
+//! batch — their adapters differ — which is exactly why reconstruction
+//! speed matters for multi-task serving (the paper's Table-4 argument).
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// One inference request (LM serving: a token sequence).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub task: usize,
+    pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug)]
+pub struct Batch {
+    pub task: usize,
+    pub requests: Vec<Request>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Hard upper bound = the predict executable's compiled batch size.
+    pub max_batch: usize,
+    /// Flush a non-full batch once its oldest request waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(5) }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Router {
+    queues: HashMap<usize, VecDeque<Request>>,
+    /// Round-robin cursor over task ids for fairness.
+    rr: Vec<usize>,
+    rr_pos: usize,
+    pub enqueued: u64,
+    pub dispatched: u64,
+}
+
+impl Router {
+    pub fn push(&mut self, req: Request) {
+        if !self.queues.contains_key(&req.task) {
+            self.rr.push(req.task);
+        }
+        self.queues.entry(req.task).or_default().push_back(req);
+        self.enqueued += 1;
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(VecDeque::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending() == 0
+    }
+
+    /// Age of the oldest queued request.
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|r| now.duration_since(r.enqueued))
+            .max()
+    }
+
+    /// Pop the next ready batch under `policy`, scanning tasks round-robin
+    /// from the fairness cursor. `drain` forces flushing partial batches.
+    pub fn next_batch(&mut self, policy: BatchPolicy, now: Instant, drain: bool) -> Option<Batch> {
+        let n = self.rr.len();
+        for step in 0..n {
+            let task = self.rr[(self.rr_pos + step) % n];
+            let ready = {
+                let q = match self.queues.get(&task) {
+                    Some(q) if !q.is_empty() => q,
+                    _ => continue,
+                };
+                q.len() >= policy.max_batch
+                    || drain
+                    || q.front()
+                        .map(|r| now.duration_since(r.enqueued) >= policy.max_delay)
+                        .unwrap_or(false)
+            };
+            if !ready {
+                continue;
+            }
+            let q = self.queues.get_mut(&task).unwrap();
+            let take = q.len().min(policy.max_batch);
+            let requests: Vec<Request> = q.drain(..take).collect();
+            self.rr_pos = (self.rr_pos + step + 1) % n;
+            self.dispatched += requests.len() as u64;
+            return Some(Batch { task, requests });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+
+    fn req(id: u64, task: usize, at: Instant) -> Request {
+        Request { id, task, tokens: vec![0; 4], enqueued: at }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut r = Router::default();
+        let now = Instant::now();
+        for i in 0..20 {
+            r.push(req(i, 1, now));
+        }
+        let p = BatchPolicy { max_batch: 16, max_delay: Duration::from_secs(10) };
+        let b = r.next_batch(p, now, false).unwrap();
+        assert_eq!(b.requests.len(), 16);
+        assert_eq!(b.task, 1);
+        // remaining 4 wait (not timed out, not full)
+        assert!(r.next_batch(p, now, false).is_none());
+        assert_eq!(r.pending(), 4);
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let mut r = Router::default();
+        let t0 = Instant::now();
+        r.push(req(0, 2, t0));
+        let p = BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(5) };
+        assert!(r.next_batch(p, t0, false).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let b = r.next_batch(p, later, false).unwrap();
+        assert_eq!(b.requests.len(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut r = Router::default();
+        let now = Instant::now();
+        r.push(req(0, 1, now));
+        r.push(req(1, 2, now));
+        let p = BatchPolicy::default();
+        let mut seen = 0;
+        while let Some(b) = r.next_batch(p, now, true) {
+            seen += b.requests.len();
+        }
+        assert_eq!(seen, 2);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn round_robin_fairness() {
+        let mut r = Router::default();
+        let now = Instant::now();
+        for i in 0..64 {
+            r.push(req(i, (i % 2) as usize, now));
+        }
+        let p = BatchPolicy { max_batch: 16, max_delay: Duration::ZERO };
+        let b1 = r.next_batch(p, now, false).unwrap();
+        let b2 = r.next_batch(p, now, false).unwrap();
+        assert_ne!(b1.task, b2.task, "consecutive batches must alternate tasks");
+    }
+
+    #[test]
+    fn router_invariants_property() {
+        run_prop("router_exactly_once", 100, |g| {
+            let mut r = Router::default();
+            let now = Instant::now();
+            let n = g.usize(1, 200);
+            let tasks = g.usize(1, 8);
+            for i in 0..n {
+                r.push(req(i as u64, g.usize(0, tasks - 1), now));
+            }
+            let p = BatchPolicy { max_batch: g.usize(1, 32), max_delay: Duration::ZERO };
+            let mut ids = std::collections::HashSet::new();
+            while let Some(b) = r.next_batch(p, now, true) {
+                prop_assert!(b.requests.len() <= p.max_batch, "batch too big");
+                prop_assert!(
+                    b.requests.iter().all(|q| q.task == b.task),
+                    "mixed-task batch"
+                );
+                // FIFO within task
+                for w in b.requests.windows(2) {
+                    prop_assert!(w[0].id < w[1].id, "FIFO violated within batch");
+                }
+                for q in &b.requests {
+                    prop_assert!(ids.insert(q.id), "request {} dispatched twice", q.id);
+                }
+            }
+            prop_assert!(ids.len() == n, "dispatched {} of {n}", ids.len());
+            prop_assert!(r.is_empty(), "requests left behind");
+            Ok(())
+        });
+    }
+}

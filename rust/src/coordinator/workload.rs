@@ -1,0 +1,120 @@
+//! Deterministic workload generation for serving benchmarks: Poisson
+//! (open-loop) arrivals with Zipf task popularity — the standard model for
+//! multi-tenant adapter serving (few hot tasks, long cold tail).
+
+use std::time::Duration;
+
+use crate::util::prng::{tag, Stream};
+
+/// Zipf sampler over `n` tasks with exponent `s` (s=0 → uniform).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cum: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        let mut w: Vec<f64> = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect();
+        let total: f64 = w.iter().sum();
+        let mut acc = 0.0;
+        for x in w.iter_mut() {
+            acc += *x / total;
+            *x = acc;
+        }
+        Zipf { cum: w }
+    }
+
+    pub fn sample(&self, s: &mut Stream) -> usize {
+        let u = s.next_unit_f32() as f64;
+        match self.cum.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.cum.len() - 1),
+        }
+    }
+}
+
+/// One scheduled arrival.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    pub at: Duration,
+    pub task: usize,
+}
+
+/// Open-loop Poisson arrival schedule: `rate_hz` requests/sec over
+/// `duration`, tasks Zipf(s)-distributed. Fully deterministic in `seed`.
+pub fn open_loop(seed: u64, rate_hz: f64, duration: Duration, n_tasks: usize, zipf_s: f64) -> Vec<Arrival> {
+    let mut s = Stream::sub(seed, tag::DATA + 0xA331);
+    let zipf = Zipf::new(n_tasks, zipf_s);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // exponential inter-arrival
+        let u = (s.next_unit_f32() as f64).max(1e-9);
+        t += -u.ln() / rate_hz;
+        if t >= duration.as_secs_f64() {
+            break;
+        }
+        out.push(Arrival { at: Duration::from_secs_f64(t), task: zipf.sample(&mut s) });
+    }
+    out
+}
+
+/// Deterministic token sequence for a request (from the task's Markov LM).
+pub fn request_tokens(lm: &crate::data::MarkovLm, seed: u64, id: u64) -> Vec<i32> {
+    use crate::data::{Dataset, Split};
+    let (x, _) = lm.batch(Split::Val, seed ^ id, 1);
+    x.i32s().unwrap().to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_head_heavier_than_tail() {
+        let z = Zipf::new(16, 1.2);
+        let mut s = Stream::new(1);
+        let mut counts = vec![0usize; 16];
+        for _ in 0..10_000 {
+            counts[z.sample(&mut s)] += 1;
+        }
+        assert!(counts[0] > counts[8] * 3, "{counts:?}");
+        assert!(counts[0] > counts[15] * 5);
+    }
+
+    #[test]
+    fn zipf_zero_is_uniformish() {
+        let z = Zipf::new(8, 0.0);
+        let mut s = Stream::new(2);
+        let mut counts = vec![0usize; 8];
+        for _ in 0..8_000 {
+            counts[z.sample(&mut s)] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn open_loop_rate_and_determinism() {
+        let a = open_loop(3, 1000.0, Duration::from_secs(1), 4, 1.0);
+        let b = open_loop(3, 1000.0, Duration::from_secs(1), 4, 1.0);
+        assert_eq!(a.len(), b.len());
+        assert!((a.len() as f64 - 1000.0).abs() < 150.0, "{} arrivals", a.len());
+        // sorted in time
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(a.iter().all(|x| x.task < 4));
+    }
+
+    #[test]
+    fn request_tokens_deterministic() {
+        let lm = crate::data::MarkovLm::base(1, 32, 16);
+        let a = request_tokens(&lm, 5, 10);
+        let b = request_tokens(&lm, 5, 10);
+        let c = request_tokens(&lm, 5, 11);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 16);
+    }
+}

@@ -1,0 +1,75 @@
+//! Background batch prefetcher: overlaps synthetic-data generation with the
+//! PJRT step on the training hot path (one producer thread, bounded queue).
+
+use std::sync::mpsc;
+use std::thread;
+
+use super::Batch;
+
+pub struct Prefetcher {
+    rx: mpsc::Receiver<Batch>,
+    _handle: thread::JoinHandle<()>,
+}
+
+impl Prefetcher {
+    /// `make(step)` produces batch `step`; `depth` bounds the queue.
+    pub fn new(
+        make: impl Fn(u64) -> Batch + Send + 'static,
+        steps: u64,
+        depth: usize,
+    ) -> Prefetcher {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let handle = thread::Builder::new()
+            .name("mcnc-prefetch".into())
+            .spawn(move || {
+                for step in 0..steps {
+                    if tx.send(make(step)).is_err() {
+                        break; // consumer dropped
+                    }
+                }
+            })
+            .expect("spawn prefetcher");
+        Prefetcher { rx, _handle: handle }
+    }
+
+    pub fn next(&self) -> Option<Batch> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Iterator for Prefetcher {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Split, SynthVision};
+
+    #[test]
+    fn yields_all_batches_in_order() {
+        let ds = SynthVision::mnist_like(1);
+        let pf = Prefetcher::new(move |s| ds.batch(Split::Train, s, 4), 10, 2);
+        let ds2 = SynthVision::mnist_like(1);
+        let mut n = 0;
+        for (step, (x, y)) in pf.enumerate() {
+            let (ex, ey) = ds2.batch(Split::Train, step as u64, 4);
+            assert_eq!(x, ex);
+            assert_eq!(y, ey);
+            n += 1;
+        }
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let ds = SynthVision::mnist_like(2);
+        let mut pf = Prefetcher::new(move |s| ds.batch(Split::Train, s, 2), 1000, 2);
+        let _ = pf.next();
+        drop(pf); // producer must exit on closed channel
+    }
+}

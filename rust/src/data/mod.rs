@@ -1,0 +1,37 @@
+//! Deterministic synthetic datasets (DESIGN.md §7): the paper's claims are
+//! relative (method A vs B at equal parameter budget), so learnable
+//! synthetic tasks with matched shapes/class counts expose the same
+//! capacity-vs-compression trade-offs while staying CPU-trainable.
+
+pub mod lm;
+pub mod loader;
+pub mod vision;
+
+pub use lm::MarkovLm;
+pub use loader::Prefetcher;
+pub use vision::SynthVision;
+
+use crate::tensor::Tensor;
+
+/// A batch of (inputs, labels) host tensors.
+pub type Batch = (Tensor, Tensor);
+
+/// Anything that can produce deterministic batches by step index.
+pub trait Dataset: Send + Sync {
+    fn batch(&self, split: Split, step: u64, batch: usize) -> Batch;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+impl Split {
+    pub fn salt(&self) -> u64 {
+        match self {
+            Split::Train => 0x7252_4E00,
+            Split::Val => 0x7641_4C00,
+        }
+    }
+}

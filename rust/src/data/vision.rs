@@ -1,0 +1,173 @@
+//! Synthetic vision task: each class owns a smooth random prototype image;
+//! samples are prototypes + circular shifts + pixel noise. Shift+noise make
+//! the task benefit from both locality (convs) and capacity, and accuracy
+//! degrades smoothly with compression — the property Tables 1-3 probe.
+
+use crate::tensor::Tensor;
+use crate::util::prng::{tag, Stream};
+
+use super::{Batch, Dataset, Split};
+
+#[derive(Debug, Clone)]
+pub struct SynthVision {
+    pub classes: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub noise: f32,
+    pub max_shift: usize,
+    prototypes: Vec<f32>, // [classes, h*w*c]
+}
+
+impl SynthVision {
+    /// `mnist_like`: 28×28×1, 10 classes. `cifar_like`: 32×32×3, k classes.
+    pub fn new(seed: u64, classes: usize, h: usize, w: usize, c: usize) -> SynthVision {
+        let dim = h * w * c;
+        let mut prototypes = vec![0.0f32; classes * dim];
+        for cls in 0..classes {
+            let mut s = Stream::sub(seed, tag::DATA + 17 * cls as u64);
+            // low-frequency pattern: coarse 8x8 grid, bilinearly upsampled
+            let g = 8usize;
+            let coarse = s.normal_f32(g * g * c, 1.0);
+            for y in 0..h {
+                for x in 0..w {
+                    for ch in 0..c {
+                        let fy = y as f32 * (g - 1) as f32 / (h - 1).max(1) as f32;
+                        let fx = x as f32 * (g - 1) as f32 / (w - 1).max(1) as f32;
+                        let (y0, x0) = (fy as usize, fx as usize);
+                        let (y1, x1) = ((y0 + 1).min(g - 1), (x0 + 1).min(g - 1));
+                        let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+                        let at = |yy: usize, xx: usize| coarse[(yy * g + xx) * c + ch];
+                        let v = at(y0, x0) * (1.0 - dy) * (1.0 - dx)
+                            + at(y0, x1) * (1.0 - dy) * dx
+                            + at(y1, x0) * dy * (1.0 - dx)
+                            + at(y1, x1) * dy * dx;
+                        prototypes[cls * dim + (y * w + x) * c + ch] = v;
+                    }
+                }
+            }
+        }
+        SynthVision { classes, h, w, c, noise: 0.6, max_shift: 3, prototypes }
+    }
+
+    pub fn mnist_like(seed: u64) -> SynthVision {
+        SynthVision::new(seed, 10, 28, 28, 1)
+    }
+
+    pub fn cifar_like(seed: u64, classes: usize) -> SynthVision {
+        SynthVision::new(seed, classes, 32, 32, 3)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    fn sample_into(&self, s: &mut Stream, x: &mut [f32]) -> i32 {
+        let cls = (s.next_u64() % self.classes as u64) as usize;
+        let dim = self.dim();
+        let proto = &self.prototypes[cls * dim..(cls + 1) * dim];
+        let sy = (s.next_u64() % (2 * self.max_shift + 1) as u64) as usize;
+        let sx = (s.next_u64() % (2 * self.max_shift + 1) as u64) as usize;
+        for y in 0..self.h {
+            let yy = (y + sy) % self.h;
+            for xx0 in 0..self.w {
+                let xx = (xx0 + sx) % self.w;
+                for ch in 0..self.c {
+                    let v = proto[(yy * self.w + xx) * self.c + ch];
+                    x[(y * self.w + xx0) * self.c + ch] =
+                        v + self.noise * box_muller_one(s);
+                }
+            }
+        }
+        cls as i32
+    }
+}
+
+#[inline]
+fn box_muller_one(s: &mut Stream) -> f32 {
+    // single normal draw (wastes the sine half; fine for noise)
+    let u1 = ((s.next_u64() >> 40) as f64 + 1.0) * (1.0 / 16_777_216.0);
+    let u2 = (s.next_u64() >> 40) as f64 * (1.0 / 16_777_216.0);
+    ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+impl Dataset for SynthVision {
+    fn batch(&self, split: Split, step: u64, batch: usize) -> Batch {
+        let mut s = Stream::sub(split.salt().wrapping_add(step), tag::DATA);
+        let dim = self.dim();
+        let mut x = vec![0.0f32; batch * dim];
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            y[b] = self.sample_into(&mut s, &mut x[b * dim..(b + 1) * dim]);
+        }
+        (
+            Tensor::from_f32(x, &[batch, dim]).unwrap(),
+            Tensor::from_i32(y, &[batch]).unwrap(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_batches() {
+        let ds = SynthVision::cifar_like(1, 10);
+        let (x1, y1) = ds.batch(Split::Train, 5, 8);
+        let (x2, y2) = ds.batch(Split::Train, 5, 8);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        let (x3, _) = ds.batch(Split::Train, 6, 8);
+        assert_ne!(x1, x3);
+        let (x4, _) = ds.batch(Split::Val, 5, 8);
+        assert_ne!(x1, x4);
+    }
+
+    #[test]
+    fn labels_in_range_and_varied() {
+        let ds = SynthVision::mnist_like(2);
+        let (_, y) = ds.batch(Split::Train, 0, 256);
+        let ys = y.i32s().unwrap();
+        assert!(ys.iter().all(|&c| (0..10).contains(&c)));
+        let distinct: std::collections::HashSet<i32> = ys.iter().cloned().collect();
+        assert!(distinct.len() >= 8, "class draw is degenerate: {distinct:?}");
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-prototype classification on clean prototypes must be
+        // near-perfect on noisy samples at shift 0 — i.e. the task is
+        // learnable, not random labels.
+        let mut ds = SynthVision::cifar_like(3, 10);
+        ds.max_shift = 0;
+        let (x, y) = ds.batch(Split::Train, 1, 64);
+        let dim = ds.dim();
+        let xs = x.f32s().unwrap();
+        let ys = y.i32s().unwrap();
+        let mut correct = 0;
+        for b in 0..64 {
+            let sample = &xs[b * dim..(b + 1) * dim];
+            let mut best = (f32::MAX, 0usize);
+            for cls in 0..10 {
+                let proto = &ds.prototypes[cls * dim..(cls + 1) * dim];
+                let d2: f32 = sample.iter().zip(proto).map(|(a, b)| (a - b).powi(2)).sum();
+                if d2 < best.0 {
+                    best = (d2, cls);
+                }
+            }
+            if best.1 as i32 == ys[b] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 60, "only {correct}/64 nearest-prototype correct");
+    }
+
+    #[test]
+    fn shapes() {
+        let ds = SynthVision::cifar_like(4, 100);
+        let (x, y) = ds.batch(Split::Train, 0, 16);
+        assert_eq!(x.dims, vec![16, 3072]);
+        assert_eq!(y.dims, vec![16]);
+    }
+}

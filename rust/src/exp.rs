@@ -1,0 +1,98 @@
+//! Shared experiment plumbing for the per-table benches: one call trains
+//! any manifest executable on any dataset and reports held-out accuracy,
+//! with the paper's small learning-rate search when running in full mode.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::{artifacts_dir, Session};
+use crate::train::{self, LrSchedule, TrainCfg, TrainState};
+use crate::util::bench::bench_steps;
+
+/// Bench context; `None` (and a notice) when artifacts are missing.
+pub struct Ctx {
+    pub session: Session,
+}
+
+impl Ctx {
+    pub fn open() -> Option<Ctx> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("[bench] artifacts not built — run `make artifacts`; skipping");
+            return None;
+        }
+        Some(Ctx { session: Session::open(&dir).unwrap() })
+    }
+
+    /// Train `exec` for `steps` and return (final val acc, final val loss).
+    pub fn train_acc(
+        &self,
+        exec: &str,
+        data: Arc<dyn Dataset>,
+        steps: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<(f32, f32, TrainState<'_>)> {
+        let mut st = TrainState::new(&self.session, exec, seed)?;
+        let batch = st
+            .entry
+            .meta
+            .get("batch")
+            .and_then(|j| j.as_usize())
+            .unwrap_or(64);
+        let cfg = TrainCfg {
+            steps,
+            batch,
+            schedule: LrSchedule::Cosine { base: lr, total: steps, floor_frac: 0.05 },
+            eval_every: 0,
+            eval_batches: 4,
+            log_every: 0,
+            verbose: false,
+        };
+        let hist = train::run(&mut st, data, &cfg)?;
+        Ok((hist.final_val_acc(), hist.final_val_loss(), st))
+    }
+
+    /// Paper-style lr search (only in full mode; quick mode uses lrs[0]).
+    pub fn best_acc(
+        &self,
+        exec: &str,
+        data: Arc<dyn Dataset>,
+        steps: usize,
+        lrs: &[f32],
+        seed: u64,
+    ) -> Result<(f32, f32)> {
+        let search: &[f32] = if full_mode() { lrs } else { &lrs[..1] };
+        let mut best = (f32::MIN, f32::MAX);
+        for &lr in search {
+            let (acc, loss, _) = self.train_acc(exec, Arc::clone(&data), steps, lr, seed)?;
+            if acc > best.0 {
+                best = (acc, loss);
+            }
+        }
+        Ok(best)
+    }
+}
+
+pub fn full_mode() -> bool {
+    std::env::var("MCNC_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Default step budgets per model family (env-overridable).
+pub fn steps_mlp() -> usize {
+    bench_steps(80, 800)
+}
+
+pub fn steps_vit() -> usize {
+    bench_steps(80, 1500)
+}
+
+pub fn steps_resnet() -> usize {
+    bench_steps(50, 1200)
+}
+
+pub fn steps_lm() -> usize {
+    bench_steps(60, 600)
+}

@@ -1,0 +1,108 @@
+//! Analytic adapter-reconstruction FLOPs — reproduces the paper's Appendix
+//! A.6 accounting exactly, then applies the same formulas to this repo's
+//! scaled models (Table 4's "Generation GFLOPs" column).
+
+use crate::mcnc::GenCfg;
+
+/// NOLA: one generated factor element costs 2·m FLOPs (m-basis combination).
+pub fn nola_factor_flops(rows: usize, cols: usize, bases: usize) -> usize {
+    2 * bases * rows * cols
+}
+
+/// MCNC: generator passes to cover `rows*cols` elements at chunk size d,
+/// plus the per-output β scale (paper counts ceil(r·c/d) full passes).
+pub fn mcnc_factor_flops(rows: usize, cols: usize, gen: &GenCfg) -> usize {
+    let passes = (rows * cols).div_ceil(gen.d);
+    passes * 2 * gen.n_weights() + passes * gen.d
+}
+
+/// LLaMA-2 shape set from A.6: (n_layers, hidden, intermediate, rank).
+pub struct LlamaShape {
+    pub layers: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub rank: usize,
+}
+
+pub const LLAMA_7B: LlamaShape =
+    LlamaShape { layers: 32, hidden: 4096, intermediate: 11008, rank: 8 };
+pub const LLAMA_13B: LlamaShape =
+    LlamaShape { layers: 40, hidden: 5120, intermediate: 13824, rank: 16 };
+
+/// Per the paper: 4 attention matrices [h, h] + 3 MLP matrices [h, i] per
+/// layer; adapters generate factors of size [h, r] (11 of them: 4 attn ×
+/// 2? — the paper counts 11 [h,r] and 3 [i,r] per layer).
+pub fn llama_total_flops(
+    shape: &LlamaShape,
+    per_factor: impl Fn(usize, usize) -> usize,
+) -> usize {
+    shape.layers
+        * (11 * per_factor(shape.hidden, shape.rank)
+            + 3 * per_factor(shape.intermediate, shape.rank))
+}
+
+pub fn paper_nola_7b() -> f64 {
+    llama_total_flops(&LLAMA_7B, |r, c| nola_factor_flops(r, c, 64)) as f64
+}
+
+pub fn paper_mcnc_7b() -> f64 {
+    let gen = GenCfg { k: 5, width: 32, d: 5000, depth: 3, ..GenCfg::default() };
+    llama_total_flops(&LLAMA_7B, |r, c| mcnc_factor_flops(r, c, &gen)) as f64
+}
+
+pub fn paper_nola_13b() -> f64 {
+    llama_total_flops(&LLAMA_13B, |r, c| nola_factor_flops(r, c, 140)) as f64
+}
+
+pub fn paper_mcnc_13b() -> f64 {
+    let gen = GenCfg { k: 5, width: 32, d: 5000, depth: 3, ..GenCfg::default() };
+    llama_total_flops(&LLAMA_13B, |r, c| mcnc_factor_flops(r, c, &gen)) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline efficiency claim, derived (not asserted): MCNC needs
+    /// ~46% fewer generation FLOPs than NOLA at LLaMA-7B shapes.
+    #[test]
+    fn reproduces_appendix_a6_7b() {
+        let nola = paper_nola_7b();
+        let mcnc = paper_mcnc_7b();
+        assert!((nola / 1e9 - 2.56).abs() < 0.02, "NOLA 7B: {} GF", nola / 1e9);
+        assert!((mcnc / 1e9 - 1.37).abs() < 0.02, "MCNC 7B: {} GF", mcnc / 1e9);
+        let saving = 1.0 - mcnc / nola;
+        assert!((saving - 0.46).abs() < 0.03, "saving {saving}");
+    }
+
+    #[test]
+    fn reproduces_appendix_a6_13b() {
+        let nola = paper_nola_13b();
+        let mcnc = paper_mcnc_13b();
+        assert!((nola / 1e9 - 17.53).abs() < 0.2, "NOLA 13B: {} GF", nola / 1e9);
+        assert!((mcnc / 1e9 - 4.22).abs() < 0.1, "MCNC 13B: {} GF", mcnc / 1e9);
+        assert!(nola / mcnc > 4.0, "13B ratio {}", nola / mcnc);
+    }
+
+    #[test]
+    fn single_factor_counts_match_paper() {
+        // A.6 spot values: NOLA F(4096x8)=4.19 MF, F(11008x8)=11.27 MF;
+        // MCNC F(4096x8)=2.29 MF, F(11008x8)=5.89 MF.
+        assert_eq!(nola_factor_flops(4096, 8, 64), 4_194_304);
+        assert_eq!(nola_factor_flops(11008, 8, 64), 11_272_192);
+        let gen = GenCfg { k: 5, width: 32, d: 5000, depth: 3, ..GenCfg::default() };
+        let f1 = mcnc_factor_flops(4096, 8, &gen);
+        let f2 = mcnc_factor_flops(11008, 8, &gen);
+        assert_eq!(f1, 7 * 2 * (5 * 32 + 32 * 32 + 32 * 5000) + 7 * 5000);
+        assert_eq!(f2, 18 * 2 * (5 * 32 + 32 * 32 + 32 * 5000) + 18 * 5000);
+    }
+
+    #[test]
+    fn mcnc_advantage_grows_with_bases() {
+        let gen = GenCfg { k: 5, width: 32, d: 5000, depth: 3, ..GenCfg::default() };
+        let m64 = nola_factor_flops(4096, 8, 64);
+        let m140 = nola_factor_flops(4096, 8, 140);
+        let ours = mcnc_factor_flops(4096, 8, &gen);
+        assert!(m140 as f64 / ours as f64 > m64 as f64 / ours as f64);
+    }
+}

@@ -1,0 +1,23 @@
+//! # MCNC — Manifold-Constrained Reparameterization for Neural Compression
+//!
+//! Rust + JAX + Pallas reproduction of Thrash et al., ICLR 2025.
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1** — Pallas generator kernel (`python/compile/kernels/`), lowered
+//!   into every compressed executable.
+//! * **L2** — jax model/method graphs, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: the coordinator that trains, serves and benchmarks
+//!   compressed models through the PJRT CPU client. Python never runs on
+//!   the request path.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod flops;
+pub mod mcnc;
+pub mod runtime;
+pub mod sphere;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,267 @@
+//! `mcnc` — the leader binary: train, evaluate, serve and inspect
+//! compressed models. Python never runs here; everything executes through
+//! AOT artifacts (`make artifacts`).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use mcnc::coordinator::workload::{open_loop, request_tokens};
+use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg};
+use mcnc::data::{Dataset, MarkovLm, SynthVision};
+use mcnc::mcnc::{Act, GenCfg, Generator};
+use mcnc::runtime::{artifacts_dir, Session};
+use mcnc::train::{self, Checkpoint, LrSchedule, TrainCfg, TrainState};
+use mcnc::util::cli::Args;
+use mcnc::util::config::Config;
+use mcnc::util::prng::Stream;
+
+fn main() {
+    mcnc::util::logging::init_from_env();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => info(args),
+        "train" => train_cmd(args),
+        "eval" => eval_cmd(args),
+        "serve" => serve_cmd(args),
+        "sphere" => sphere_cmd(args),
+        "config" => config_cmd(args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 reproduction)
+
+  info    [--group G]            list artifact executables (+ meta)
+  train   --exec NAME [--steps N --lr F --batch B --seed S --out CK --data synth|c10|c100|lm]
+  eval    --ckpt FILE [--seed S]
+  serve   [--kind K --tasks N --rate HZ --secs S --merged BOOL --zipf S]
+  sphere  [--acts sine,sigmoid,relu --l 1,5,10,100 --width 256]
+  config  --file cfg.toml        config-driven training job
+
+Artifacts come from `make artifacts`; set MCNC_ARTIFACTS to relocate.";
+
+fn info(args: &Args) -> Result<()> {
+    let manifest = mcnc::runtime::Manifest::load(&artifacts_dir())?;
+    let group = args.get("group");
+    let mut names: Vec<_> = manifest.entries.values().collect();
+    names.sort_by(|a, b| (&a.group, &a.name).cmp(&(&b.group, &b.name)));
+    println!("{:<12} {:<34} {:>9} {:>8} {:>12}", "GROUP", "NAME", "RATE", "PARAMS", "RECON-FLOPs");
+    for e in names {
+        if let Some(g) = group {
+            if e.group != g {
+                continue;
+            }
+        }
+        let rate = if e.rate().is_nan() { "-".into() } else { format!("{:.3}%", e.rate() * 100.0) };
+        println!(
+            "{:<12} {:<34} {:>9} {:>8} {:>12}",
+            e.group, e.name, rate, e.trainable_comp(), e.recon_flops()
+        );
+    }
+    Ok(())
+}
+
+fn dataset_for(entry_model: &str, data_flag: &str, seed: u64) -> Arc<dyn Dataset> {
+    match data_flag {
+        "c100" => Arc::new(SynthVision::cifar_like(seed, 100)),
+        "c10" => Arc::new(SynthVision::cifar_like(seed, 10)),
+        "lm" => Arc::new(MarkovLm::base(seed, 128, 32)),
+        _ => {
+            // infer from the model name
+            if entry_model.starts_with("lm") {
+                Arc::new(MarkovLm::base(seed, 128, 32))
+            } else if entry_model.contains("c100") {
+                Arc::new(SynthVision::cifar_like(seed, 100))
+            } else if entry_model.starts_with("resnet") || entry_model.starts_with("vit") {
+                Arc::new(SynthVision::cifar_like(seed, 10))
+            } else {
+                Arc::new(SynthVision::new(seed, 10, 28, 28, 1))
+            }
+        }
+    }
+}
+
+fn train_cmd(args: &Args) -> Result<()> {
+    let exec = args
+        .get("exec")
+        .ok_or_else(|| anyhow!("--exec NAME required (see `mcnc info`)"))?;
+    let train_name =
+        if exec.ends_with("_train") { exec.to_string() } else { format!("{exec}_train") };
+    let sess = Session::open(&artifacts_dir())?;
+    let seed = args.u64_or("seed", 1);
+    let mut state = TrainState::new(&sess, &train_name, seed)?;
+    let entry = state.entry.clone();
+    let model = entry.meta.get("model").and_then(|j| j.as_str()).unwrap_or("mlp");
+    let batch = entry.meta.get("batch").and_then(|j| j.as_usize()).unwrap_or(128);
+    let data = dataset_for(model, &args.str_or("data", "auto"), seed.wrapping_add(1000));
+
+    let steps = args.usize_or("steps", 300);
+    let cfg = TrainCfg {
+        steps,
+        batch: args.usize_or("batch", batch),
+        schedule: LrSchedule::Cosine {
+            base: args.f32_or("lr", 0.05),
+            total: steps,
+            floor_frac: 0.05,
+        },
+        eval_every: args.usize_or("eval-every", (steps / 4).max(1)),
+        eval_batches: args.usize_or("eval-batches", 4),
+        log_every: args.usize_or("log-every", 20),
+        verbose: true,
+    };
+    println!(
+        "training {train_name}: {} compressed params ({:.3}% of model), {} steps",
+        state.compressed_params(),
+        entry.rate() * 100.0,
+        cfg.steps
+    );
+    let hist = train::run(&mut state, data, &cfg)?;
+    println!(
+        "final: val_loss {:.4} val_acc {:.4}",
+        hist.final_val_loss(),
+        hist.final_val_acc()
+    );
+    if let Some(out) = args.get("out") {
+        let ck = Checkpoint::from_state(&state);
+        ck.save(std::path::Path::new(out))?;
+        println!(
+            "checkpoint: {} ({} bytes, {} params)",
+            out,
+            ck.stored_bytes(),
+            ck.stored_params()
+        );
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let path = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt FILE required"))?;
+    let ck = Checkpoint::load(std::path::Path::new(path))?;
+    let sess = Session::open(&artifacts_dir())?;
+    let mut state = TrainState::new(&sess, &ck.entry, ck.seed)?;
+    ck.restore(&mut state)?;
+    let model =
+        state.entry.meta.get("model").and_then(|j| j.as_str()).unwrap_or("mlp").to_string();
+    let batch = state.entry.meta.get("batch").and_then(|j| j.as_usize()).unwrap_or(128);
+    let data = dataset_for(&model, &args.str_or("data", "auto"), ck.seed.wrapping_add(1000));
+    let (loss, acc) =
+        train::evaluate(&state, data.as_ref(), batch, args.usize_or("eval-batches", 8))?;
+    println!("{}: val_loss {:.4} val_acc {:.4} (step {})", ck.entry, loss, acc, ck.step);
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let cfg = ServerCfg {
+        kind: args.str_or("kind", "lm_mcnclora8"),
+        n_tasks: args.usize_or("tasks", 8),
+        policy: BatchPolicy {
+            max_batch: 16,
+            max_delay: std::time::Duration::from_millis(args.u64_or("max-delay-ms", 5)),
+        },
+        mode: if args.bool_or("merged", false) { Mode::Merged } else { Mode::OnTheFly },
+        cache_bytes: args.usize_or("cache-mb", 64) << 20,
+        seed: args.u64_or("seed", 1),
+    };
+    let rate = args.f32_or("rate", 200.0) as f64;
+    let secs = args.f32_or("secs", 5.0) as f64;
+    let zipf_s = args.f32_or("zipf", 1.0) as f64;
+    let n_tasks = cfg.n_tasks;
+
+    println!(
+        "serving {} ({:?}), {} tasks, {:.0} req/s for {:.0}s …",
+        cfg.kind, cfg.mode, n_tasks, rate, secs
+    );
+    let lm = MarkovLm::base(1, 128, 32);
+    let schedule =
+        open_loop(7, rate, std::time::Duration::from_secs_f64(secs), n_tasks, zipf_s);
+    let server = Server::start(artifacts_dir(), cfg);
+    let started = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(schedule.len());
+    for (i, arr) in schedule.iter().enumerate() {
+        if let Some(wait) = arr.at.checked_sub(started.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        receivers.push(server.submit(arr.task, request_tokens(&lm, 9, i as u64)));
+    }
+    let mut ok = 0usize;
+    for rx in receivers {
+        if rx.recv_timeout(std::time::Duration::from_secs(120)).is_ok() {
+            ok += 1;
+        }
+    }
+    let stats = server.stop()?;
+    println!(
+        "answered {ok}/{} | throughput {:.1} req/s | p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
+        schedule.len(),
+        stats.throughput(),
+        stats.latency.percentile(50.0),
+        stats.latency.percentile(99.0),
+        stats.occupancy(),
+        stats.recon_flops as f64 / 1e9,
+    );
+    Ok(())
+}
+
+fn sphere_cmd(args: &Args) -> Result<()> {
+    let acts = args.str_or("acts", "sine,sigmoid,relu");
+    let ls = args.str_or("l", "1,5,10,100");
+    let width = args.usize_or("width", 256);
+    let n = args.usize_or("points", 2048);
+    println!("{:<10} {:>8} {:>12}", "ACT", "L", "UNIFORMITY");
+    for act in acts.split(',') {
+        for l in ls.split(',') {
+            let l: f32 = l.parse().map_err(|_| anyhow!("bad L {l:?}"))?;
+            let cfg = GenCfg {
+                k: 1,
+                d: 3,
+                width,
+                depth: 3,
+                freq: 1.0,
+                act: Act::parse(act)?,
+                normalize: true,
+                ..GenCfg::default()
+            };
+            let gen = Generator::from_seed(cfg, 42);
+            let alpha = Stream::new(7).uniform_f32(n, -l, l);
+            let pts = gen.forward(&alpha, &vec![1.0; n]);
+            let u = mcnc::sphere::uniformity(&pts, 3, 10.0, 11, 64);
+            println!("{:<10} {:>8} {:>12.4}", act, l, u);
+        }
+    }
+    Ok(())
+}
+
+fn config_cmd(args: &Args) -> Result<()> {
+    let path = args.get("file").ok_or_else(|| anyhow!("--file cfg.toml required"))?;
+    let cfg = Config::load(path)?;
+    let exec = cfg.str_or("train.exec", "mlp_mcnc02");
+    let mut forwarded = vec![
+        format!("--exec={exec}"),
+        format!("--steps={}", cfg.usize_or("train.steps", 300)),
+        format!("--lr={}", cfg.f32_or("train.lr", 0.05)),
+        format!("--seed={}", cfg.u64_or("train.seed", 1)),
+        format!("--data={}", cfg.str_or("train.data", "auto")),
+    ];
+    let out = cfg.str_or("train.out", "");
+    if !out.is_empty() {
+        forwarded.push(format!("--out={out}"));
+    }
+    let fargs = Args::parse(forwarded);
+    train_cmd(&fargs)
+}

@@ -1,0 +1,136 @@
+//! Chunk partition math (paper §3.3): the flattened compressed parameter
+//! vector (length Dc) is tiled by chunks of size d; the last chunk's
+//! overflow is generated and discarded. Each chunk owns (α ∈ R^k, β ∈ R),
+//! so the trainable budget is n·(k+1) and the rate ≈ (k+1)/d.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkSpec {
+    pub dc: usize,
+    pub d: usize,
+    pub k: usize,
+}
+
+impl ChunkSpec {
+    pub fn new(dc: usize, d: usize, k: usize) -> ChunkSpec {
+        assert!(d > 0 && dc > 0);
+        ChunkSpec { dc, d, k }
+    }
+
+    /// Number of chunks (covers Dc, last one possibly partial).
+    pub fn n_chunks(&self) -> usize {
+        self.dc.div_ceil(self.d)
+    }
+
+    pub fn trainable_params(&self) -> usize {
+        self.n_chunks() * (self.k + 1)
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.trainable_params() as f64 / self.dc as f64
+    }
+
+    /// Elements generated but discarded from the tail chunk.
+    pub fn waste(&self) -> usize {
+        self.n_chunks() * self.d - self.dc
+    }
+
+    /// Chunk index + inner offset for a flat position.
+    pub fn locate(&self, pos: usize) -> (usize, usize) {
+        assert!(pos < self.dc);
+        (pos / self.d, pos % self.d)
+    }
+
+    /// [start, end) range of chunk i within the flat vector.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        let start = i * self.d;
+        (start, ((i + 1) * self.d).min(self.dc))
+    }
+
+    /// Pick d for a target compression rate (twin of methods.chunk_for_rate).
+    pub fn for_rate(dc: usize, rate: f64, k: usize) -> ChunkSpec {
+        let d = (((k + 1) as f64 / rate).ceil() as usize).max(k + 1);
+        ChunkSpec::new(dc, d, k)
+    }
+
+    /// Pick d for a target trainable budget (twin of specs.gen_for_budget).
+    pub fn for_budget(dc: usize, budget: usize, k: usize) -> ChunkSpec {
+        let n = (budget / (k + 1)).max(1);
+        let d = dc.div_ceil(n);
+        ChunkSpec::new(dc, d, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn paper_mlp_ablation_numbers() {
+        // Paper A.4: MLP 784-256-256-10 compressed to ~0.2%: 54 chunks of
+        // d=5000 with k=9 → 540 trainable params over Dc=268800.
+        let c = ChunkSpec::new(268_800, 5000, 9);
+        assert_eq!(c.n_chunks(), 54);
+        assert_eq!(c.trainable_params(), 540);
+        assert!((c.rate() - 0.00200892).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ranges_tile_exactly_once() {
+        run_prop("chunks_tile", 200, |g| {
+            let dc = g.usize(1, 100_000);
+            let d = g.usize(1, 9_000);
+            let c = ChunkSpec::new(dc, d, 3);
+            let mut pos = 0usize;
+            for i in 0..c.n_chunks() {
+                let (s, e) = c.range(i);
+                prop_assert!(s == pos, "gap before chunk {i}");
+                prop_assert!(e > s, "empty chunk {i}");
+                pos = e;
+            }
+            prop_assert!(pos == dc, "cover ends at {pos}, want {dc}");
+            prop_assert!(c.waste() < d, "waste {} >= d {}", c.waste(), d);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn locate_is_inverse_of_range() {
+        run_prop("locate_inverse", 200, |g| {
+            let dc = g.usize(10, 50_000);
+            let d = g.usize(2, 5_000);
+            let c = ChunkSpec::new(dc, d, 9);
+            let pos = g.usize(0, dc - 1);
+            let (ci, off) = c.locate(pos);
+            let (s, e) = c.range(ci);
+            prop_assert!(s + off == pos && pos < e, "bad locate");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn for_rate_respects_budget() {
+        run_prop("for_rate", 100, |g| {
+            let dc = g.usize(1_000, 10_000_000);
+            let k = g.usize(1, 64);
+            let rate = g.f32(0.001, 0.9) as f64;
+            let c = ChunkSpec::for_rate(dc, rate, k);
+            prop_assert!(c.d >= k + 1, "d too small");
+            // achieved rate is bounded by request (+ tail graininess)
+            let ach = c.rate();
+            prop_assert!(
+                ach <= rate * 2.0 + (k + 1) as f64 / dc as f64,
+                "rate {ach} vs requested {rate}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn for_budget_close() {
+        let c = ChunkSpec::for_budget(268_800, 5000, 9);
+        let got = c.trainable_params();
+        assert!((4500..=5500).contains(&got), "budget 5000 → {got}");
+    }
+}

@@ -1,0 +1,396 @@
+//! The MCNC generator φ : R^k → R^d, native Rust mirror of the Pallas
+//! kernel / jnp reference. Used for (a) cross-layer verification against
+//! the PJRT path, (b) CPU-only reconstruction fallback in the serving
+//! engine, (c) the Fig-2 sphere-coverage analysis, and (d) FLOPs
+//! accounting. Weights come from the same SplitMix64 streams as the
+//! Python twin (`compile/genutil.py`), so a scalar seed fully determines φ.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+use crate::util::prng::{tag, Stream};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Sine,
+    Sigmoid,
+    Relu,
+    LeakyRelu,
+    Elu,
+    Linear,
+}
+
+impl Act {
+    pub fn parse(s: &str) -> Result<Act> {
+        Ok(match s {
+            "sine" => Act::Sine,
+            "sigmoid" => Act::Sigmoid,
+            "relu" => Act::Relu,
+            "lrelu" => Act::LeakyRelu,
+            "elu" => Act::Elu,
+            "linear" => Act::Linear,
+            _ => bail!("unknown activation {s:?}"),
+        })
+    }
+
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Act::Sine => x.sin(),
+            Act::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Act::Relu => x.max(0.0),
+            Act::LeakyRelu => {
+                if x >= 0.0 {
+                    x
+                } else {
+                    0.01 * x
+                }
+            }
+            Act::Elu => {
+                if x >= 0.0 {
+                    x
+                } else {
+                    x.exp() - 1.0
+                }
+            }
+            Act::Linear => x,
+        }
+    }
+}
+
+/// Twin of `python/compile/genutil.GenCfg` (paper Table 10 defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenCfg {
+    pub k: usize,
+    pub d: usize,
+    pub width: usize,
+    pub depth: usize,
+    pub freq: f32,
+    pub act: Act,
+    pub normalize: bool,
+    pub residual: bool,
+    pub init: String,      // "uniform" | "normal"
+    pub init_scale: f32,
+}
+
+impl Default for GenCfg {
+    fn default() -> Self {
+        GenCfg {
+            k: 9,
+            d: 5000,
+            width: 1000,
+            depth: 3,
+            freq: 4.5,
+            act: Act::Sine,
+            normalize: false,
+            residual: false,
+            init: "uniform".into(),
+            init_scale: 1.0,
+        }
+    }
+}
+
+impl GenCfg {
+    /// Parse the `gen` object embedded in manifest metadata / init laws.
+    pub fn from_json(j: &Json) -> Result<GenCfg> {
+        Ok(GenCfg {
+            k: j.get("k").and_then(Json::as_usize).unwrap_or(9),
+            d: j.get("d").and_then(Json::as_usize).unwrap_or(5000),
+            width: j.get("width").and_then(Json::as_usize).unwrap_or(1000),
+            depth: j.get("depth").and_then(Json::as_usize).unwrap_or(3),
+            freq: j.get("freq").and_then(Json::as_f64).unwrap_or(4.5) as f32,
+            act: Act::parse(j.get("act").and_then(Json::as_str).unwrap_or("sine"))?,
+            normalize: j.get("normalize").and_then(Json::as_bool).unwrap_or(false),
+            residual: j.get("residual").and_then(Json::as_bool).unwrap_or(false),
+            init: j.get("init").and_then(Json::as_str).unwrap_or("uniform").to_string(),
+            init_scale: j.get("init_scale").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+        })
+    }
+
+    pub fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        assert!(self.depth >= 2, "generator depth must be >= 2");
+        let mut dims = vec![self.k];
+        dims.extend(std::iter::repeat(self.width).take(self.depth - 1));
+        dims.push(self.d);
+        (0..self.depth).map(|i| (dims[i], dims[i + 1])).collect()
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.layer_shapes().iter().map(|(a, b)| a * b).sum()
+    }
+
+    /// FLOPs to reconstruct one d-chunk — paper Appendix A.6 convention
+    /// (2·Σ fan_in·fan_out matmul FLOPs + d for the β scale).
+    pub fn flops_per_chunk(&self) -> usize {
+        2 * self.n_weights() + self.d
+    }
+
+    /// Frozen weights from a scalar seed; bit-identical to the Python twin.
+    pub fn make_weights(&self, seed: u64) -> Vec<Vec<f32>> {
+        self.layer_shapes()
+            .iter()
+            .enumerate()
+            .map(|(i, &(fan_in, fan_out))| {
+                let mut s = Stream::sub(seed, tag::GEN_LAYER + i as u64);
+                let n = fan_in * fan_out;
+                if self.init == "normal" {
+                    let std = self.init_scale / (3.0f32.sqrt() * fan_in as f32);
+                    s.normal_f32(n, std)
+                } else {
+                    let bound = self.init_scale / fan_in as f32;
+                    s.symmetric_f32(n, bound)
+                }
+            })
+            .collect()
+    }
+}
+
+/// A frozen generator instance: cfg + materialized weights.
+#[derive(Debug, Clone)]
+pub struct Generator {
+    pub cfg: GenCfg,
+    pub ws: Vec<Vec<f32>>, // row-major [fan_in, fan_out]
+}
+
+impl Generator {
+    pub fn from_seed(cfg: GenCfg, seed: u64) -> Generator {
+        let ws = cfg.make_weights(seed);
+        Generator { cfg, ws }
+    }
+
+    pub fn with_weights(cfg: GenCfg, ws: Vec<Vec<f32>>) -> Result<Generator> {
+        let shapes = cfg.layer_shapes();
+        if ws.len() != shapes.len() {
+            bail!("expected {} weight tensors, got {}", shapes.len(), ws.len());
+        }
+        for (w, &(a, b)) in ws.iter().zip(&shapes) {
+            if w.len() != a * b {
+                bail!("weight size {} != {}x{}", w.len(), a, b);
+            }
+        }
+        Ok(Generator { cfg, ws })
+    }
+
+    /// φ for a batch: alpha [n, k] (row-major), beta [n] → out [n, d].
+    pub fn forward(&self, alpha: &[f32], beta: &[f32]) -> Vec<f32> {
+        let n = beta.len();
+        let mut out = vec![0.0f32; n * self.cfg.d];
+        self.forward_into(alpha, beta, &mut out);
+        out
+    }
+
+    /// Allocation-free variant for the serving hot path. Chunks are
+    /// embarrassingly parallel; for batches past a threshold the work is
+    /// split across threads over disjoint output slices (§Perf: ~1.2x on
+    /// the default shape — each thread re-reads the shared W3, so the win
+    /// is bandwidth-capped; see EXPERIMENTS.md §Perf).
+    pub fn forward_into(&self, alpha: &[f32], beta: &[f32], out: &mut [f32]) {
+        let n = beta.len();
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        // below ~4 chunks per thread the spawn cost dominates
+        if n >= 8 && threads > 1 {
+            let per = n.div_ceil(threads.min(n));
+            let k = self.cfg.k;
+            let d = self.cfg.d;
+            std::thread::scope(|scope| {
+                let mut rest = &mut out[..];
+                let mut start = 0usize;
+                while start < n {
+                    let take = per.min(n - start);
+                    let (head, tail) = rest.split_at_mut(take * d);
+                    rest = tail;
+                    let a = &alpha[start * k..(start + take) * k];
+                    let b = &beta[start..start + take];
+                    scope.spawn(move || self.forward_chunks(a, b, head));
+                    start += take;
+                }
+            });
+            return;
+        }
+        self.forward_chunks(alpha, beta, out);
+    }
+
+    /// Single-threaded kernel over a contiguous run of chunks.
+    fn forward_chunks(&self, alpha: &[f32], beta: &[f32], out: &mut [f32]) {
+        let cfg = &self.cfg;
+        let n = beta.len();
+        assert_eq!(alpha.len(), n * cfg.k, "alpha shape mismatch");
+        assert_eq!(out.len(), n * cfg.d, "out shape mismatch");
+        let shapes = cfg.layer_shapes();
+
+        // One chunk at a time keeps the working set in L1/L2.
+        let mut cur = vec![0.0f32; cfg.width.max(cfg.d)];
+        let mut nxt = vec![0.0f32; cfg.width.max(cfg.d)];
+        for i in 0..n {
+            // layer 0: [k] -> [w0], input scaled by freq inside the sin
+            let a = &alpha[i * cfg.k..(i + 1) * cfg.k];
+            let (fi, fo) = shapes[0];
+            matvec_in(a, &self.ws[0], fi, fo, &mut cur);
+            for v in cur[..fo].iter_mut() {
+                *v = cfg.act.apply(cfg.freq * *v);
+            }
+            let mut width = fo;
+            // hidden layers
+            for (li, &(fi, fo)) in shapes.iter().enumerate().skip(1) {
+                matvec_in(&cur[..width], &self.ws[li], fi, fo, &mut nxt);
+                let last = li == shapes.len() - 1;
+                for j in 0..fo {
+                    let mut v = cfg.act.apply(nxt[j]);
+                    if cfg.residual && !last {
+                        v += cur[j];
+                    }
+                    nxt[j] = v;
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+                width = fo;
+            }
+            // normalize + β scale into the output row
+            let row = &mut out[i * cfg.d..(i + 1) * cfg.d];
+            let scale = if cfg.normalize {
+                let nrm = cur[..cfg.d]
+                    .iter()
+                    .map(|v| (*v as f64) * (*v as f64))
+                    .sum::<f64>()
+                    .sqrt() as f32;
+                beta[i] / (nrm + 1e-8)
+            } else {
+                beta[i]
+            };
+            for (o, v) in row.iter_mut().zip(&cur[..cfg.d]) {
+                *o = v * scale;
+            }
+        }
+    }
+
+    /// Reconstruct a Dc-length flat delta (chunks concatenated, tail cut).
+    pub fn reconstruct_delta(&self, alpha: &[f32], beta: &[f32], dc: usize) -> Vec<f32> {
+        let mut full = self.forward(alpha, beta);
+        full.truncate(dc);
+        full
+    }
+}
+
+/// out[..fo] = x[..fi] @ w[fi, fo] (row-major w).
+#[inline]
+fn matvec_in(x: &[f32], w: &[f32], fi: usize, fo: usize, out: &mut [f32]) {
+    out[..fo].fill(0.0);
+    for (i, &xi) in x[..fi].iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * fo..(i + 1) * fo];
+        for (o, &wv) in out[..fo].iter_mut().zip(row) {
+            *o += xi * wv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> GenCfg {
+        GenCfg { k: 3, d: 8, width: 4, depth: 3, ..GenCfg::default() }
+    }
+
+    #[test]
+    fn layer_shapes_and_flops() {
+        let c = GenCfg { k: 5, d: 5000, width: 32, depth: 3, ..GenCfg::default() };
+        assert_eq!(c.layer_shapes(), vec![(5, 32), (32, 32), (32, 5000)]);
+        // paper A.6: 2*(5*32+32*32+32*5000) + 5000
+        assert_eq!(c.flops_per_chunk(), 2 * (5 * 32 + 32 * 32 + 32 * 5000) + 5000);
+    }
+
+    #[test]
+    fn weights_deterministic_and_bounded() {
+        let c = tiny_cfg();
+        let w1 = c.make_weights(7);
+        let w2 = c.make_weights(7);
+        let w3 = c.make_weights(8);
+        assert_eq!(w1, w2);
+        assert_ne!(w1, w3);
+        for (w, (fi, _)) in w1.iter().zip(c.layer_shapes()) {
+            let bound = 1.0 / fi as f32;
+            assert!(w.iter().all(|v| v.abs() <= bound + 1e-7));
+        }
+    }
+
+    #[test]
+    fn zero_alpha_is_zero_output() {
+        let g = Generator::from_seed(tiny_cfg(), 1);
+        let out = g.forward(&[0.0; 6], &[1.0, 1.0]);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn beta_scales_linearly() {
+        let g = Generator::from_seed(tiny_cfg(), 2);
+        let alpha: Vec<f32> = (0..6).map(|i| 0.1 * i as f32).collect();
+        let one = g.forward(&alpha, &[1.0, 1.0]);
+        let three = g.forward(&alpha, &[3.0, 3.0]);
+        for (a, b) in one.iter().zip(&three) {
+            assert!((3.0 * a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn normalized_rows_unit() {
+        let mut cfg = tiny_cfg();
+        cfg.normalize = true;
+        let g = Generator::from_seed(cfg, 3);
+        let alpha: Vec<f32> = (0..6).map(|i| 0.3 * (i as f32) - 0.5).collect();
+        let out = g.forward(&alpha, &[2.0, 0.5]);
+        for (i, b) in [2.0f32, 0.5].iter().enumerate() {
+            let nrm: f32 = out[i * 8..(i + 1) * 8].iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((nrm - b.abs()).abs() < 1e-3, "row {i}: {nrm} vs {b}");
+        }
+    }
+
+    #[test]
+    fn residual_and_depths() {
+        for depth in [2, 3, 4, 5] {
+            for residual in [false, true] {
+                let cfg = GenCfg { depth, residual, ..tiny_cfg() };
+                let g = Generator::from_seed(cfg, 4);
+                let out = g.forward(&[0.5, -0.5, 0.25], &[1.0]);
+                assert_eq!(out.len(), 8);
+                assert!(out.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn all_activations_finite() {
+        for act in ["sine", "sigmoid", "relu", "lrelu", "elu", "linear"] {
+            let cfg = GenCfg { act: Act::parse(act).unwrap(), ..tiny_cfg() };
+            let g = Generator::from_seed(cfg, 5);
+            let out = g.forward(&[1.0, -2.0, 0.5], &[1.5]);
+            assert!(out.iter().all(|v| v.is_finite()), "{act}");
+        }
+    }
+
+    #[test]
+    fn reconstruct_truncates_tail() {
+        let g = Generator::from_seed(tiny_cfg(), 6);
+        let alpha = vec![0.1; 9]; // 3 chunks
+        let beta = vec![1.0; 3];
+        let d = g.reconstruct_delta(&alpha, &beta, 20); // 3*8=24 -> cut to 20
+        assert_eq!(d.len(), 20);
+        let full = g.forward(&alpha, &beta);
+        assert_eq!(&d[..], &full[..20]);
+    }
+
+    #[test]
+    fn cfg_json_roundtrip() {
+        let j = crate::util::json::parse(
+            r#"{"k":5,"d":512,"width":64,"depth":3,"freq":4.5,"act":"sine",
+                "normalize":false,"residual":false,"init":"uniform","init_scale":1.0}"#,
+        )
+        .unwrap();
+        let c = GenCfg::from_json(&j).unwrap();
+        assert_eq!(c.k, 5);
+        assert_eq!(c.d, 512);
+        assert_eq!(c.act, Act::Sine);
+        assert!(!c.normalize);
+    }
+}

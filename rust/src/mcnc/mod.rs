@@ -1,0 +1,8 @@
+//! The paper's core machinery, native side: the frozen random generator φ
+//! (mirror of the Pallas kernel) and the chunk-partition math.
+
+pub mod chunker;
+pub mod generator;
+
+pub use chunker::ChunkSpec;
+pub use generator::{Act, GenCfg, Generator};

@@ -1,0 +1,248 @@
+//! Synthesize initial tensors from manifest init laws + a scalar seed —
+//! the Rust twin of `python/compile/initlib.py` (golden-tested on both
+//! sides). Given an executable's manifest entry and a seed, `init_all`
+//! produces every static + trainable input; opt-state tensors are zeros.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::mcnc::generator::GenCfg;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::prng::{tag, Stream};
+
+use super::manifest::{Entry, IoSpec, RegistryMeta, Role};
+
+fn draw(dist: &str, param: f32, n: usize, stream: u64) -> Result<Vec<f32>> {
+    let mut s = Stream::new(stream);
+    Ok(match dist {
+        "zeros" => vec![0.0; n],
+        "ones" => vec![1.0; n],
+        "sym_uniform" => s.symmetric_f32(n, param),
+        "normal" => s.normal_f32(n, param),
+        _ => bail!("unknown dist {dist:?}"),
+    })
+}
+
+fn lora_rank(init: &Json) -> usize {
+    init.get("rank").and_then(Json::as_usize).unwrap_or(1)
+}
+
+fn lora_a_vec(reg: &RegistryMeta, rank: usize, seed: u64) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for (j, leaf) in reg.lora_targets().enumerate() {
+        let (a, _) = leaf.lora.unwrap();
+        let s = crate::util::prng::substream(seed, tag::LORA + j as u64);
+        out.extend(draw("sym_uniform", 1.0 / (a as f32).sqrt(), a * rank, s)?);
+    }
+    Ok(out)
+}
+
+/// Build one tensor per its init law.
+pub fn init_tensor(
+    init: &Json,
+    shape: &[usize],
+    reg: &RegistryMeta,
+    seed: u64,
+) -> Result<Tensor> {
+    let kind = init
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("init law without kind: {init:?}"))?;
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = match kind {
+        "zeros" => vec![0.0; n],
+        "ones" => vec![1.0; n],
+        "sym_uniform" => {
+            let bound = init.get("bound").and_then(Json::as_f64).unwrap_or(1.0) as f32;
+            let t = init.get("tag").and_then(Json::as_f64).map(|f| f as u64).unwrap_or(tag::COEF);
+            draw("sym_uniform", bound, n, crate::util::prng::substream(seed, t))?
+        }
+        "comp_leaves" => {
+            let mut out = Vec::with_capacity(reg.dc);
+            for (i, leaf) in reg.comp_leaves().enumerate() {
+                let s = crate::util::prng::substream(seed, tag::THETA0 + i as u64);
+                out.extend(draw(&leaf.dist, leaf.param, leaf.size(), s)?);
+            }
+            out
+        }
+        "raw_leaves" => {
+            let mut out = Vec::with_capacity(reg.r);
+            for (i, leaf) in reg.raw_leaves().enumerate() {
+                let s = crate::util::prng::substream(seed, tag::RAW + i as u64);
+                out.extend(draw(&leaf.dist, leaf.param, leaf.size(), s)?);
+            }
+            if out.is_empty() {
+                out.push(0.0); // methods pad empty raw to size 1
+            }
+            out
+        }
+        "gen_layer" => {
+            let cfg = GenCfg::from_json(
+                init.get("gen").ok_or_else(|| anyhow!("gen_layer without gen cfg"))?,
+            )?;
+            let layer = init.get("layer").and_then(Json::as_usize).unwrap_or(0);
+            cfg.make_weights(seed)
+                .into_iter()
+                .nth(layer)
+                .ok_or_else(|| anyhow!("gen layer {layer} out of range"))?
+        }
+        "lora_a" => lora_a_vec(reg, lora_rank(init), seed)?,
+        "lora0" => {
+            let rank = lora_rank(init);
+            let mut out = lora_a_vec(reg, rank, seed)?;
+            let db: usize =
+                reg.lora_targets().map(|l| rank * l.lora.unwrap().1).sum();
+            out.extend(std::iter::repeat(0.0).take(db));
+            out
+        }
+        "nola_basis" => {
+            let m = init.get("m").and_then(Json::as_usize).unwrap_or(1);
+            let rank = lora_rank(init);
+            let side = init.get("side").and_then(Json::as_str).unwrap_or("a");
+            let mut out = Vec::new();
+            for (j, leaf) in reg.lora_targets().enumerate() {
+                let (a, b) = leaf.lora.unwrap();
+                if side == "a" {
+                    let s = crate::util::prng::substream(
+                        seed, tag::NOLA_BASIS + 2 * j as u64);
+                    out.extend(draw("sym_uniform", 1.0 / (a as f32).sqrt(),
+                                    m * a * rank, s)?);
+                } else {
+                    let s = crate::util::prng::substream(
+                        seed, tag::NOLA_BASIS + 2 * j as u64 + 1);
+                    out.extend(draw("sym_uniform", 1.0 / (rank as f32).sqrt(),
+                                    m * rank * b, s)?);
+                }
+            }
+            out
+        }
+        "nola_coef" => {
+            let m = init.get("m").and_then(Json::as_usize).unwrap_or(1);
+            let s = crate::util::prng::substream(seed, tag::COEF);
+            draw("sym_uniform", 1.0 / (m as f32).sqrt(), n, s)?
+        }
+        _ => bail!("unknown init kind {kind:?}"),
+    };
+    if data.len() != n && !shape.is_empty() {
+        bail!("init {kind} produced {} values for shape {:?}", data.len(), shape);
+    }
+    Tensor::from_f32(data, shape)
+}
+
+/// Initial values for every static + trainable input of an entry, plus
+/// zeroed opt-state tensors, in manifest positional order (hyper/data slots
+/// are the caller's).
+pub fn init_inputs(entry: &Entry, seed: u64) -> Result<Vec<(IoSpec, Option<Tensor>)>> {
+    let reg = entry.registry().unwrap_or_default();
+    entry
+        .inputs
+        .iter()
+        .map(|spec| {
+            let t = match spec.role {
+                Role::Static | Role::Trainable => {
+                    let law = spec
+                        .init
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("{}:{} has no init law", entry.name, spec.name))?;
+                    Some(init_tensor(law, &spec.shape, &reg, seed)?)
+                }
+                Role::Opt => Some(Tensor::zeros(&spec.shape)),
+                Role::Hyper | Role::Data => None,
+            };
+            Ok((spec.clone(), t))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LeafMeta;
+    use crate::util::json::parse;
+
+    fn reg() -> RegistryMeta {
+        RegistryMeta {
+            dc: 16,
+            r: 3,
+            leaves: vec![
+                LeafMeta {
+                    name: "w".into(),
+                    shape: vec![4, 4],
+                    compress: true,
+                    dist: "sym_uniform".into(),
+                    param: 0.5,
+                    lora: Some((4, 4)),
+                },
+                LeafMeta {
+                    name: "b".into(),
+                    shape: vec![3],
+                    compress: false,
+                    dist: "zeros".into(),
+                    param: 0.0,
+                    lora: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn comp_leaves_deterministic() {
+        let law = parse(r#"{"kind":"comp_leaves"}"#).unwrap();
+        let a = init_tensor(&law, &[16], &reg(), 5).unwrap();
+        let b = init_tensor(&law, &[16], &reg(), 5).unwrap();
+        let c = init_tensor(&law, &[16], &reg(), 6).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.f32s().unwrap().iter().all(|v| v.abs() <= 0.5));
+    }
+
+    #[test]
+    fn raw_leaves_zero_biases() {
+        let law = parse(r#"{"kind":"raw_leaves"}"#).unwrap();
+        let t = init_tensor(&law, &[3], &reg(), 1).unwrap();
+        assert!(t.f32s().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lora0_a_random_b_zero() {
+        let law = parse(r#"{"kind":"lora0","rank":2}"#).unwrap();
+        let t = init_tensor(&law, &[16], &reg(), 9).unwrap();
+        let v = t.f32s().unwrap();
+        assert!(v[..8].iter().any(|&x| x != 0.0)); // A part: 4*2
+        assert!(v[8..].iter().all(|&x| x == 0.0)); // B part: 2*4
+    }
+
+    #[test]
+    fn nola_basis_sides_differ() {
+        let a = init_tensor(&parse(r#"{"kind":"nola_basis","side":"a","m":2,"rank":2}"#).unwrap(),
+                            &[16], &reg(), 3).unwrap();
+        let b = init_tensor(&parse(r#"{"kind":"nola_basis","side":"b","m":2,"rank":2}"#).unwrap(),
+                            &[16], &reg(), 3).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn gen_layer_matches_generator() {
+        let cfg = GenCfg { k: 3, d: 11, width: 5, depth: 3, ..GenCfg::default() };
+        let law = parse(
+            r#"{"kind":"gen_layer","layer":1,
+                "gen":{"k":3,"d":11,"width":5,"depth":3,"freq":4.5,"act":"sine",
+                       "normalize":false,"residual":false,"init":"uniform","init_scale":1.0}}"#,
+        )
+        .unwrap();
+        let t = init_tensor(&law, &[5, 5], &reg(), 21).unwrap();
+        assert_eq!(t.f32s().unwrap(), &cfg.make_weights(21)[1][..]);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let law = parse(r#"{"kind":"comp_leaves"}"#).unwrap();
+        assert!(init_tensor(&law, &[7], &reg(), 5).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let law = parse(r#"{"kind":"wat"}"#).unwrap();
+        assert!(init_tensor(&law, &[1], &reg(), 0).is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the AOT
+//! compile path (`python/compile/aot.py`) and the Rust runtime. Every
+//! executable's positional inputs/outputs, init laws and experiment
+//! metadata come from here; nothing about tensor layouts is hard-coded.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Static,
+    Trainable,
+    Opt,
+    Hyper,
+    Data,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "static" => Role::Static,
+            "trainable" => Role::Trainable,
+            "opt" => Role::Opt,
+            "hyper" => Role::Hyper,
+            "data" => Role::Data,
+            _ => bail!("unknown role {s:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub role: Role,
+    pub init: Option<Json>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OutSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Per-leaf metadata of the model the executable was built for.
+#[derive(Debug, Clone)]
+pub struct LeafMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub compress: bool,
+    pub dist: String,
+    pub param: f32,
+    pub lora: Option<(usize, usize)>,
+}
+
+impl LeafMeta {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RegistryMeta {
+    pub dc: usize,
+    pub r: usize,
+    pub leaves: Vec<LeafMeta>,
+}
+
+impl RegistryMeta {
+    pub fn comp_leaves(&self) -> impl Iterator<Item = &LeafMeta> {
+        self.leaves.iter().filter(|l| l.compress)
+    }
+
+    pub fn raw_leaves(&self) -> impl Iterator<Item = &LeafMeta> {
+        self.leaves.iter().filter(|l| !l.compress)
+    }
+
+    pub fn lora_targets(&self) -> impl Iterator<Item = &LeafMeta> {
+        self.leaves.iter().filter(|l| l.compress && l.lora.is_some())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub group: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<OutSpec>,
+    pub meta: Json,
+}
+
+impl Entry {
+    pub fn kind(&self) -> &str {
+        self.meta.get("kind").and_then(Json::as_str).unwrap_or("")
+    }
+
+    pub fn count_role(&self, role: Role) -> usize {
+        self.inputs.iter().filter(|s| s.role == role).count()
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn registry(&self) -> Result<RegistryMeta> {
+        let reg = self
+            .meta
+            .get("registry")
+            .ok_or_else(|| anyhow!("{}: no registry in meta", self.name))?;
+        let mut leaves = Vec::new();
+        for l in reg.get("leaves").and_then(Json::as_arr).unwrap_or(&[]) {
+            let lora = match l.get("lora") {
+                Some(Json::Arr(a)) if a.len() == 2 => Some((
+                    a[0].as_usize().unwrap_or(0),
+                    a[1].as_usize().unwrap_or(0),
+                )),
+                _ => None,
+            };
+            leaves.push(LeafMeta {
+                name: l.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                shape: l.get("shape").map(Json::usize_vec).unwrap_or_default(),
+                compress: l.get("compress").and_then(Json::as_bool).unwrap_or(false),
+                dist: l.get("dist").and_then(Json::as_str).unwrap_or("zeros").to_string(),
+                param: l.get("param").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+                lora,
+            });
+        }
+        Ok(RegistryMeta {
+            dc: reg.get("Dc").and_then(Json::as_usize).unwrap_or(0),
+            r: reg.get("R").and_then(Json::as_usize).unwrap_or(0),
+            leaves,
+        })
+    }
+
+    /// Experiment accounting from the compile-time meta.
+    pub fn rate(&self) -> f64 {
+        self.meta.get("rate").and_then(Json::as_f64).unwrap_or(f64::NAN)
+    }
+
+    pub fn trainable_comp(&self) -> usize {
+        self.meta.get("trainable_comp").and_then(Json::as_usize).unwrap_or(0)
+    }
+
+    pub fn recon_flops(&self) -> usize {
+        self.meta.get("recon_flops").and_then(Json::as_usize).unwrap_or(0)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, Entry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} (run `make artifacts` first)", path.display())
+        })?;
+        let j = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut entries = HashMap::new();
+        for (name, e) in j.get("entries").and_then(Json::as_obj).unwrap_or(&[]) {
+            entries.insert(name.clone(), parse_entry(name, e)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("executable {name:?} not in manifest"))
+    }
+
+    pub fn names_in_group(&self, group: &str) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .entries
+            .values()
+            .filter(|e| e.group == group)
+            .map(|e| e.name.as_str())
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+fn parse_entry(name: &str, e: &Json) -> Result<Entry> {
+    let mut inputs = Vec::new();
+    for s in e.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+        inputs.push(IoSpec {
+            name: s.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            shape: s.get("shape").map(Json::usize_vec).unwrap_or_default(),
+            dtype: DType::parse(s.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?,
+            role: Role::parse(s.get("role").and_then(Json::as_str).unwrap_or("static"))?,
+            init: s.get("init").filter(|v| !v.is_null()).cloned(),
+        });
+    }
+    let mut outputs = Vec::new();
+    for s in e.get("outputs").and_then(Json::as_arr).unwrap_or(&[]) {
+        outputs.push(OutSpec {
+            name: s.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            shape: s.get("shape").map(Json::usize_vec).unwrap_or_default(),
+            dtype: DType::parse(s.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?,
+        });
+    }
+    Ok(Entry {
+        name: name.to_string(),
+        file: e
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{name}: no file"))?
+            .to_string(),
+        group: e.get("group").and_then(Json::as_str).unwrap_or("").to_string(),
+        inputs,
+        outputs,
+        meta: e.get("meta").cloned().unwrap_or(Json::Null),
+    })
+}
+
+/// Artifact directory resolution: `MCNC_ARTIFACTS` env or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("MCNC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        json::parse(
+            r#"{"entries": {"x_train": {"file": "x.hlo.txt", "group": "core",
+            "inputs": [
+              {"name":"theta0_c","shape":[10],"dtype":"f32","role":"static","init":{"kind":"comp_leaves"}},
+              {"name":"alpha","shape":[2,3],"dtype":"f32","role":"trainable","init":{"kind":"zeros"}},
+              {"name":"y","shape":[4],"dtype":"i32","role":"data","init":null}],
+            "outputs": [{"name":"loss","shape":[],"dtype":"f32"}],
+            "meta": {"kind":"train_step","rate":0.01,"trainable_comp":8,
+                     "registry":{"Dc":10,"R":2,"leaves":[
+                       {"name":"w","shape":[2,5],"compress":true,"dist":"sym_uniform","param":0.5,"lora":[2,5]},
+                       {"name":"b","shape":[2],"compress":false,"dist":"zeros","param":0.0,"lora":null}]}}}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_entry() {
+        let j = sample();
+        let (name, e) = &j.get("entries").unwrap().as_obj().unwrap()[0];
+        let entry = parse_entry(name, e).unwrap();
+        assert_eq!(entry.kind(), "train_step");
+        assert_eq!(entry.inputs.len(), 3);
+        assert_eq!(entry.inputs[1].shape, vec![2, 3]);
+        assert_eq!(entry.inputs[2].dtype, DType::I32);
+        assert_eq!(entry.count_role(Role::Trainable), 1);
+        assert!(entry.inputs[2].init.is_none());
+        assert_eq!(entry.input_index("alpha"), Some(1));
+        assert!((entry.rate() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_parses() {
+        let j = sample();
+        let (name, e) = &j.get("entries").unwrap().as_obj().unwrap()[0];
+        let reg = parse_entry(name, e).unwrap().registry().unwrap();
+        assert_eq!(reg.dc, 10);
+        assert_eq!(reg.r, 2);
+        assert_eq!(reg.comp_leaves().count(), 1);
+        assert_eq!(reg.lora_targets().next().unwrap().lora, Some((2, 5)));
+        assert_eq!(reg.leaves[0].size(), 10);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.len() > 50, "expected the full catalog");
+        let e = m.get("mlp_mcnc02_train").unwrap();
+        assert_eq!(e.kind(), "train_step");
+        assert!(m.hlo_path(e).exists());
+        let reg = e.registry().unwrap();
+        assert_eq!(reg.dc, 268800);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: manifest-driven artifact loading and execution.
+//!
+//! `Session` wraps the `xla` crate (PJRT C API, CPU client): HLO text →
+//! `HloModuleProto::from_text_file` → compile → execute. `init` synthesizes
+//! every initial tensor from a scalar seed (twin of python `initlib`).
+
+pub mod init;
+pub mod manifest;
+pub mod session;
+
+pub use manifest::{artifacts_dir, Entry, IoSpec, Manifest, RegistryMeta, Role};
+pub use session::Session;

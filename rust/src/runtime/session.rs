@@ -1,0 +1,303 @@
+//! PJRT session: load HLO-text artifacts, compile once, execute many.
+//!
+//! The session is manifest-driven: `run("mlp_mcnc02_train", &inputs)`
+//! validates every tensor against the manifest spec, marshals to XLA
+//! literals, executes on the CPU PJRT client and unpacks the result tuple.
+//! Compiled executables are cached per session (compile happens on first
+//! use, so benches only pay for what they touch).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{Data, Tensor};
+use crate::util::json::Json;
+
+use super::manifest::{Entry, Manifest};
+
+pub struct Session {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    pub stats: Mutex<SessionStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct SessionStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+    pub bytes_to_device: usize,
+}
+
+impl Session {
+    pub fn open(artifacts: &Path) -> Result<Session> {
+        let manifest = Manifest::load(artifacts)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Session {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(SessionStats::default()),
+        })
+    }
+
+    pub fn open_default() -> Result<Session> {
+        Session::open(&super::manifest::artifacts_dir())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch the cached) executable for a manifest entry.
+    pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let entry = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.lock().unwrap().insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Validate + execute: the main entry point for everything above.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.get(name)?;
+        validate_inputs(entry, inputs)?;
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let parts = root.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let out: Vec<Tensor> = parts
+            .into_iter()
+            .map(|l| literal_to_tensor(&l))
+            .collect::<Result<_>>()?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+            st.bytes_to_device += inputs.iter().map(Tensor::size_bytes).sum::<usize>();
+        }
+        if out.len() != entry.outputs.len() {
+            bail!("{name}: manifest declares {} outputs, executable returned {}",
+                  entry.outputs.len(), out.len());
+        }
+        Ok(out)
+    }
+
+    /// Execute with pre-marshaled literals (hot training loop: static
+    /// inputs are converted once and reused across steps — see
+    /// `TrainState`). The caller is responsible for shape correctness.
+    pub fn run_literals(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.get(name)?;
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let parts = root.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let out: Vec<Tensor> = parts
+            .into_iter()
+            .map(|l| literal_to_tensor(&l))
+            .collect::<Result<_>>()?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        if out.len() != entry.outputs.len() {
+            bail!("{name}: manifest declares {} outputs, executable returned {}",
+                  entry.outputs.len(), out.len());
+        }
+        Ok(out)
+    }
+
+    /// Stage inputs as device buffers (used by the transfer benchmark and
+    /// the buffer-resident training loop).
+    pub fn to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let lit = tensor_to_literal(t)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("host->device transfer")?;
+        Ok(buf)
+    }
+
+    /// Execute with device-resident buffers (no host marshaling).
+    pub fn run_buffers(
+        &self,
+        name: &str,
+        inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let mut result = exe
+            .execute_b::<xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing {name} (buffers)"))?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(result.swap_remove(0))
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Per-entry metadata passthrough for bench reporting.
+    pub fn meta(&self, name: &str) -> Json {
+        self.manifest
+            .get(name)
+            .map(|e| e.meta.clone())
+            .unwrap_or(Json::Null)
+    }
+}
+
+fn validate_inputs(entry: &Entry, inputs: &[Tensor]) -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        bail!(
+            "{}: expected {} inputs ({}…), got {}",
+            entry.name,
+            entry.inputs.len(),
+            entry
+                .inputs
+                .iter()
+                .take(4)
+                .map(|s| s.name.as_str())
+                .collect::<Vec<_>>()
+                .join(","),
+            inputs.len()
+        );
+    }
+    for (spec, t) in entry.inputs.iter().zip(inputs) {
+        if t.dims != spec.shape {
+            bail!("{}:{}: shape {:?} != manifest {:?}",
+                  entry.name, spec.name, t.dims, spec.shape);
+        }
+        if t.dtype() != spec.dtype {
+            bail!("{}:{}: dtype mismatch", entry.name, spec.name);
+        }
+    }
+    Ok(())
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
+        Data::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
+        Data::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.dims, bytes)
+        .map_err(|e| anyhow!("literal create: {e:?}"))
+}
+
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.element_type() {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+            Tensor::from_f32(v, &dims)
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+            Tensor::from_i32(v, &dims)
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::artifacts_dir;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(vec![1.0, -2.5, 3.25, 0.0, 9.0, 7.5], &[2, 3]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(vec![1, -2, 3, 4], &[4]).unwrap();
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn run_generator_artifact_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let sess = Session::open(&dir).unwrap();
+        let entry = sess.entry("gen_mlp02_fwd").unwrap().clone();
+        let inputs: Vec<Tensor> = entry
+            .inputs
+            .iter()
+            .map(|s| Tensor::zeros(&s.shape))
+            .collect();
+        let out = sess.run("gen_mlp02_fwd", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, entry.outputs[0].shape);
+        // zero α, zero β ⇒ zero output (φ(0) = 0 for the sine generator)
+        assert_eq!(out[0].f32s().unwrap().iter().filter(|&&x| x != 0.0).count(), 0);
+        assert_eq!(sess.stats().compiles, 1);
+        // second run hits the executable cache
+        sess.run("gen_mlp02_fwd", &inputs).unwrap();
+        assert_eq!(sess.stats().compiles, 1);
+        assert_eq!(sess.stats().executions, 2);
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let sess = Session::open(&dir).unwrap();
+        assert!(sess.run("gen_mlp02_fwd", &[]).is_err());
+        assert!(sess.run("no_such_exec", &[]).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Sphere-coverage analysis (paper §3.1, Fig 2): uniform sphere sampling,
+//! sliced Wasserstein-2 distance between point clouds, and the paper's
+//! uniformity score exp(−τ·W2²).
+
+use crate::util::prng::{tag, Stream};
+
+/// n uniform points on S^{d-1} (normalized Gaussians), row-major [n, d].
+pub fn sample_sphere(seed: u64, n: usize, d: usize) -> Vec<f32> {
+    let mut z = Stream::sub(seed, tag::SPHERE).normal_f32(n * d, 1.0);
+    for row in z.chunks_mut(d) {
+        let nrm = row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt() as f32;
+        if nrm > 0.0 {
+            for v in row.iter_mut() {
+                *v /= nrm;
+            }
+        }
+    }
+    z
+}
+
+/// n random unit projection directions, row-major [p, d].
+pub fn sample_projections(seed: u64, p: usize, d: usize) -> Vec<f32> {
+    sample_sphere(seed ^ tag::PROJ, p, d)
+}
+
+/// Sliced W2² between clouds x, t (both [n, d]) under p projections.
+/// Exact 1-D optimal transport per direction: project, sort, mean sq diff.
+pub fn sw2(x: &[f32], t: &[f32], d: usize, proj: &[f32], p: usize) -> f64 {
+    let n = x.len() / d;
+    let m = t.len() / d;
+    assert_eq!(n, m, "clouds must have equal size for the sorted coupling");
+    assert_eq!(proj.len(), p * d);
+    let mut xs = vec![0.0f32; n];
+    let mut ts = vec![0.0f32; n];
+    let mut total = 0.0f64;
+    for pi in 0..p {
+        let dir = &proj[pi * d..(pi + 1) * d];
+        for i in 0..n {
+            xs[i] = dot(&x[i * d..(i + 1) * d], dir);
+            ts[i] = dot(&t[i * d..(i + 1) * d], dir);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            let diff = (xs[i] - ts[i]) as f64;
+            acc += diff * diff;
+        }
+        total += acc / n as f64;
+    }
+    total / p as f64
+}
+
+/// The paper's Fig-2 uniformity score: exp(−τ·W2²) against a uniform
+/// sphere reference of the same cardinality.
+pub fn uniformity(points: &[f32], d: usize, tau: f64, seed: u64, n_proj: usize) -> f64 {
+    let n = points.len() / d;
+    let target = sample_sphere(seed, n, d);
+    let proj = sample_projections(seed.wrapping_add(1), n_proj, d);
+    let w2sq = sw2(points, &target, d, &proj, n_proj);
+    (-tau * w2sq).exp()
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sphere_samples_are_unit() {
+        let pts = sample_sphere(1, 100, 5);
+        for row in pts.chunks(5) {
+            let nrm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((nrm - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sw2_zero_for_identical() {
+        let x = sample_sphere(2, 64, 3);
+        let proj = sample_projections(3, 16, 3);
+        assert!(sw2(&x, &x, 3, &proj, 16) < 1e-12);
+    }
+
+    #[test]
+    fn sw2_symmetricish() {
+        let x = sample_sphere(4, 64, 3);
+        let t = sample_sphere(5, 64, 3);
+        let proj = sample_projections(6, 16, 3);
+        let a = sw2(&x, &t, 3, &proj, 16);
+        let b = sw2(&t, &x, 3, &proj, 16);
+        assert!((a - b).abs() < 1e-9);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn uniform_cloud_scores_high_collapsed_low() {
+        let uni = sample_sphere(7, 256, 3);
+        let mut collapsed = vec![0.0f32; 256 * 3];
+        for i in 0..256 {
+            collapsed[i * 3] = 1.0; // all mass at one pole
+        }
+        let u_uni = uniformity(&uni, 3, 10.0, 11, 32);
+        let u_col = uniformity(&collapsed, 3, 10.0, 11, 32);
+        assert!(u_uni > 0.9, "uniform cloud scored {u_uni}");
+        assert!(u_col < 0.5 * u_uni, "collapsed {u_col} vs uniform {u_uni}");
+    }
+
+    #[test]
+    fn two_sample_noise_floor_small() {
+        // two independent uniform clouds: SW2 ≈ O(1/n), far below collapse
+        let a = sample_sphere(8, 512, 3);
+        let b = sample_sphere(9, 512, 3);
+        let proj = sample_projections(10, 32, 3);
+        assert!(sw2(&a, &b, 3, &proj, 32) < 0.01);
+    }
+}

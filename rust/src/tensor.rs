@@ -1,0 +1,191 @@
+//! Host-side tensors: the small dense-array substrate everything above the
+//! PJRT boundary uses (training state, data batches, reconstruction math).
+//! Deliberately minimal — shaped `Vec<f32>` / `Vec<i32>` with the handful of
+//! ops the coordinator needs; all heavy math lives in the XLA executables.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn from_f32(data: Vec<f32>, dims: &[usize]) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if data.len() != n {
+            bail!("shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        Ok(Tensor { dims: dims.to_vec(), data: Data::F32(data) })
+    }
+
+    pub fn from_i32(data: Vec<i32>, dims: &[usize]) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if data.len() != n {
+            bail!("shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        Ok(Tensor { dims: dims.to_vec(), data: Data::I32(data) })
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: Data::F32(vec![0.0; n]) }
+    }
+
+    pub fn ones(dims: &[usize]) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: Data::F32(vec![1.0; n]) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { dims: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match &self.data {
+            Data::F32(v) if v.len() == 1 => Ok(v[0]),
+            Data::I32(v) if v.len() == 1 => Ok(v[0] as f32),
+            _ => bail!("tensor of {} elements is not a scalar", self.numel()),
+        }
+    }
+
+    /// Reinterpret shape (numel must match).
+    pub fn reshaped(mut self, dims: &[usize]) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != self.numel() {
+            bail!("cannot reshape {:?} to {:?}", self.dims, dims);
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    /// L2 norm (f32 tensors).
+    pub fn norm(&self) -> f32 {
+        match &self.data {
+            Data::F32(v) => v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt() as f32,
+            Data::I32(_) => 0.0,
+        }
+    }
+}
+
+/// Max |a-b| over two f32 tensors (∞ on shape/type mismatch).
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    match (a.f32s(), b.f32s()) {
+        (Ok(x), Ok(y)) if x.len() == y.len() => x
+            .iter()
+            .zip(y)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f32, f32::max),
+        _ => f32::INFINITY,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::from_f32(vec![1.0; 6], &[2, 3]).is_ok());
+        assert!(Tensor::from_f32(vec![1.0; 5], &[2, 3]).is_err());
+        assert!(Tensor::from_i32(vec![1; 4], &[4]).is_ok());
+    }
+
+    #[test]
+    fn scalar_and_numel() {
+        let t = Tensor::scalar_f32(2.5);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+        assert_eq!(Tensor::zeros(&[3, 4]).numel(), 12);
+        assert!(Tensor::zeros(&[2]).scalar().is_err());
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let t = Tensor::from_i32(vec![1, 2], &[2]).unwrap();
+        assert_eq!(t.dtype(), DType::I32);
+        assert!(t.f32s().is_err());
+        assert_eq!(t.i32s().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::from_f32(vec![0.0; 12], &[3, 4]).unwrap();
+        let r = t.reshaped(&[2, 6]).unwrap();
+        assert_eq!(r.dims, vec![2, 6]);
+        assert!(r.reshaped(&[5]).is_err());
+    }
+
+    #[test]
+    fn diff_and_norm() {
+        let a = Tensor::from_f32(vec![3.0, 4.0], &[2]).unwrap();
+        let b = Tensor::from_f32(vec![3.0, 4.5], &[2]).unwrap();
+        assert!((a.norm() - 5.0).abs() < 1e-6);
+        assert!((max_abs_diff(&a, &b) - 0.5).abs() < 1e-6);
+        let c = Tensor::from_i32(vec![1, 2], &[2]).unwrap();
+        assert_eq!(max_abs_diff(&a, &c), f32::INFINITY);
+    }
+}

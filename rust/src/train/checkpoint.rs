@@ -1,0 +1,202 @@
+//! Compressed checkpoint format (`.mcnc`): what actually ships when a model
+//! is stored or transmitted — the scalar seed (θ0 + generator are
+//! re-derivable) plus the trainable tensors. Layout:
+//!
+//! ```text
+//! magic "MCNC1\n" | u32 header_len | header JSON | f32-LE payload
+//! ```
+//!
+//! The header records entry name, seed, and per-tensor (name, shape,
+//! offset); `stored_bytes` is the paper's "model size" numerator.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 6] = b"MCNC1\n";
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub entry: String,
+    pub seed: u64,
+    pub step: f32,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn stored_bytes(&self) -> usize {
+        MAGIC.len() + 4 + self.header().len()
+            + self.tensors.iter().map(|(_, t)| t.numel() * 4).sum::<usize>()
+    }
+
+    pub fn stored_params(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.numel()).sum()
+    }
+
+    fn header(&self) -> String {
+        let mut offset = 0usize;
+        let tensors: Vec<Json> = self
+            .tensors
+            .iter()
+            .map(|(name, t)| {
+                let j = Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("shape", Json::Arr(t.dims.iter().map(|&d| Json::num(d as f64)).collect())),
+                    ("offset", Json::num(offset as f64)),
+                ]);
+                offset += t.numel();
+                j
+            })
+            .collect();
+        json::to_string(&Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("entry", Json::str(self.entry.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("step", Json::num(self.step as f64)),
+            ("tensors", Json::Arr(tensors)),
+        ]))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let header = self.header();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, t) in &self.tensors {
+            let v = t.f32s().map_err(|_| anyhow!("only f32 tensors are checkpointed"))?;
+            let bytes =
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an .mcnc checkpoint");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        if payload.len() % 4 != 0 {
+            bail!("payload not f32-aligned");
+        }
+        let floats: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut tensors = Vec::new();
+        for t in header.get("tensors").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = t.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+            let shape = t.get("shape").map(Json::usize_vec).unwrap_or_default();
+            let offset = t.get("offset").and_then(Json::as_usize).unwrap_or(0);
+            let n: usize = shape.iter().product();
+            if offset + n > floats.len() {
+                bail!("tensor {name} overruns payload");
+            }
+            tensors.push((name, Tensor::from_f32(floats[offset..offset + n].to_vec(), &shape)?));
+        }
+        Ok(Checkpoint {
+            entry: header.get("entry").and_then(Json::as_str).unwrap_or("").to_string(),
+            seed: header.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            step: header.get("step").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            tensors,
+        })
+    }
+
+    /// Snapshot a training state's compressed representation.
+    pub fn from_state(state: &super::state::TrainState) -> Checkpoint {
+        Checkpoint {
+            entry: state.entry.name.clone(),
+            seed: state.seed,
+            step: state.t,
+            tensors: state
+                .trainables()
+                .into_iter()
+                .map(|(n, t)| (n.to_string(), t.clone()))
+                .collect(),
+        }
+    }
+
+    /// Restore trainables into a state (entry names must match).
+    pub fn restore(&self, state: &mut super::state::TrainState) -> Result<()> {
+        if state.entry.name != self.entry {
+            bail!("checkpoint is for {}, state is {}", self.entry, state.entry.name);
+        }
+        for (name, t) in &self.tensors {
+            state.set(name, t.clone())?;
+        }
+        state.t = self.step;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            entry: "mlp_mcnc02_train".into(),
+            seed: 42,
+            step: 100.0,
+            tensors: vec![
+                ("alpha".into(), Tensor::from_f32((0..54).map(|i| i as f32 * 0.1).collect(), &[6, 9]).unwrap()),
+                ("beta".into(), Tensor::ones(&[6])),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bitwise() {
+        let ck = sample();
+        let dir = std::env::temp_dir().join(format!("mcnc_ck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.mcnc");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.entry, ck.entry);
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.step, 100.0);
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors[0].1, ck.tensors[0].1);
+        assert_eq!(back.tensors[1].1, ck.tensors[1].1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_accounting() {
+        let ck = sample();
+        assert_eq!(ck.stored_params(), 60);
+        let size = ck.stored_bytes();
+        assert!(size > 60 * 4, "payload plus header");
+        assert!(size < 60 * 4 + 1000, "header stays small: {size}");
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let dir = std::env::temp_dir().join(format!("mcnc_ck2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.mcnc");
+        std::fs::write(&path, b"NOTMCNC").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,12 @@
+//! Training orchestration: manifest-generic state, schedules, compressed
+//! checkpoints, and the step-loop driver used by examples and benches.
+
+pub mod checkpoint;
+pub mod runner;
+pub mod schedule;
+pub mod state;
+
+pub use checkpoint::Checkpoint;
+pub use runner::{evaluate, run, History, TrainCfg};
+pub use schedule::{LrSchedule, LrState};
+pub use state::{StepOut, TrainState};

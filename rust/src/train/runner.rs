@@ -1,0 +1,153 @@
+//! The training driver: schedule, prefetching, periodic held-out eval,
+//! metric logging. One `Trainer::run` call regenerates any accuracy cell of
+//! Tables 1-3/5-7/9/13-16 given the right (executable, dataset, budget).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Prefetcher, Split};
+use crate::train::schedule::{LrSchedule, LrState};
+use crate::train::state::TrainState;
+
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub batch: usize,
+    pub schedule: LrSchedule,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 200,
+            batch: 128,
+            schedule: LrSchedule::Const(0.05),
+            eval_every: 0, // 0 = only at the end
+            eval_batches: 4,
+            log_every: 50,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub losses: Vec<f32>,
+    pub evals: Vec<(usize, f32, f32)>, // (step, val_loss, val_acc)
+}
+
+impl History {
+    pub fn final_val_acc(&self) -> f32 {
+        self.evals.last().map(|e| e.2).unwrap_or(f32::NAN)
+    }
+
+    pub fn final_val_loss(&self) -> f32 {
+        self.evals.last().map(|e| e.1).unwrap_or(f32::NAN)
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::from("step,train_loss\n");
+        for (i, l) in self.losses.iter().enumerate() {
+            s += &format!("{i},{l}\n");
+        }
+        s += "step,val_loss,val_acc\n";
+        for (st, l, a) in &self.evals {
+            s += &format!("{st},{l},{a}\n");
+        }
+        s
+    }
+}
+
+/// Evaluate over `n` held-out batches; returns (mean loss, mean acc).
+pub fn evaluate(
+    state: &TrainState,
+    data: &dyn Dataset,
+    batch: usize,
+    n: usize,
+) -> Result<(f32, f32)> {
+    let mut loss = 0.0f32;
+    let mut acc = 0.0f32;
+    for i in 0..n {
+        let (x, y) = data.batch(Split::Val, i as u64, batch);
+        let out = state.eval(x, y)?;
+        loss += out.loss;
+        acc += out.acc;
+    }
+    Ok((loss / n as f32, acc / n as f32))
+}
+
+/// Train `state` on `data` per `cfg`; data generation overlaps the PJRT
+/// step through the prefetcher.
+pub fn run(
+    state: &mut TrainState,
+    data: Arc<dyn Dataset>,
+    cfg: &TrainCfg,
+) -> Result<History> {
+    let mut hist = History::default();
+    let mut lr = LrState::new(cfg.schedule.clone());
+    let d = Arc::clone(&data);
+    let batch = cfg.batch;
+    let pf = Prefetcher::new(move |s| d.batch(Split::Train, s, batch), cfg.steps as u64, 2);
+
+    let mut step = 0usize;
+    for (x, y) in pf {
+        let cur_lr = lr.lr(step, hist.losses.last().copied());
+        let out = state.step(x, y, cur_lr)?;
+        hist.losses.push(out.loss);
+        if cfg.verbose && cfg.log_every > 0 && step % cfg.log_every == 0 {
+            crate::info!(
+                "train",
+                "{} step {:4} loss {:.4} acc {:.3} lr {:.4}",
+                state.entry.name, step, out.loss, out.acc, cur_lr
+            );
+        }
+        step += 1;
+        if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+            let (vl, va) = evaluate(state, data.as_ref(), cfg.batch, cfg.eval_batches)?;
+            hist.evals.push((step, vl, va));
+            if cfg.verbose {
+                crate::info!("train", "  eval @{step}: loss {vl:.4} acc {va:.3}");
+            }
+        }
+    }
+    let (vl, va) = evaluate(state, data.as_ref(), cfg.batch, cfg.eval_batches)?;
+    hist.evals.push((step, vl, va));
+    Ok(hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthVision;
+    use crate::runtime::{artifacts_dir, Session};
+
+    #[test]
+    fn trainer_improves_val_acc() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let sess = Session::open(&dir).unwrap();
+        let mut st = TrainState::new(&sess, "mlp_mcnc02_train", 3).unwrap();
+        let data: Arc<dyn Dataset> = Arc::new(SynthVision::new(7, 10, 28, 28, 1));
+        let before = evaluate(&st, data.as_ref(), 128, 2).unwrap();
+        let cfg = TrainCfg {
+            steps: 40,
+            batch: 128,
+            schedule: LrSchedule::Const(0.05),
+            eval_every: 20,
+            eval_batches: 2,
+            ..TrainCfg::default()
+        };
+        let hist = run(&mut st, data, &cfg).unwrap();
+        assert_eq!(hist.losses.len(), 40);
+        assert_eq!(hist.evals.len(), 3); // 2 periodic + final
+        assert!(hist.final_val_acc() > before.1, "{} -> {}", before.1, hist.final_val_acc());
+        assert!(hist.csv().contains("val_loss"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Learning-rate schedules (the paper uses cosine for ViT, plateau-decay
+//! for ResNets, constant for ablations).
+
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Const(f32),
+    /// Cosine decay from `base` to `base*floor_frac` over `total` steps.
+    Cosine { base: f32, total: usize, floor_frac: f32 },
+    /// Multiply by `factor` when the monitored loss hasn't improved for
+    /// `patience` observations (the paper's ResNet recipe).
+    Plateau { base: f32, factor: f32, patience: usize },
+}
+
+pub struct LrState {
+    pub schedule: LrSchedule,
+    cur: f32,
+    best: f32,
+    stale: usize,
+}
+
+impl LrState {
+    pub fn new(schedule: LrSchedule) -> LrState {
+        let cur = match &schedule {
+            LrSchedule::Const(b) => *b,
+            LrSchedule::Cosine { base, .. } => *base,
+            LrSchedule::Plateau { base, .. } => *base,
+        };
+        LrState { schedule, cur, best: f32::MAX, stale: 0 }
+    }
+
+    /// lr for `step`, fed the latest monitored loss (for plateau).
+    pub fn lr(&mut self, step: usize, monitored_loss: Option<f32>) -> f32 {
+        match &self.schedule {
+            LrSchedule::Const(b) => *b,
+            LrSchedule::Cosine { base, total, floor_frac } => {
+                let t = (step as f32 / (*total).max(1) as f32).min(1.0);
+                let cosine = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                base * (floor_frac + (1.0 - floor_frac) * cosine)
+            }
+            LrSchedule::Plateau { factor, patience, .. } => {
+                if let Some(loss) = monitored_loss {
+                    if loss < self.best - 1e-6 {
+                        self.best = loss;
+                        self.stale = 0;
+                    } else {
+                        self.stale += 1;
+                        if self.stale > *patience {
+                            self.cur *= factor;
+                            self.stale = 0;
+                        }
+                    }
+                }
+                self.cur
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let mut s = LrState::new(LrSchedule::Cosine { base: 1.0, total: 100, floor_frac: 0.1 });
+        let first = s.lr(0, None);
+        let mid = s.lr(50, None);
+        let last = s.lr(100, None);
+        assert!((first - 1.0).abs() < 1e-6);
+        assert!(mid < first && mid > last);
+        assert!((last - 0.1).abs() < 1e-6);
+        assert!((s.lr(1000, None) - 0.1).abs() < 1e-6); // clamped past total
+    }
+
+    #[test]
+    fn plateau_halves_on_stall() {
+        let mut s = LrState::new(LrSchedule::Plateau { base: 0.01, factor: 0.5, patience: 2 });
+        assert_eq!(s.lr(0, Some(1.0)), 0.01);
+        assert_eq!(s.lr(1, Some(0.9)), 0.01); // improving
+        for i in 2..5 {
+            s.lr(i, Some(0.95)); // stalls
+        }
+        assert!((s.lr(5, Some(0.95)) - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let mut s = LrState::new(LrSchedule::Const(0.05));
+        assert_eq!(s.lr(0, None), 0.05);
+        assert_eq!(s.lr(999, Some(123.0)), 0.05);
+    }
+}

@@ -1,0 +1,238 @@
+//! Generic training state over any manifest train-step executable.
+//!
+//! `TrainState` owns the positional input slots (statics, trainables, Adam
+//! moments) exactly as the manifest orders them, seeds them through the
+//! init laws, and advances by running the PJRT step. It knows nothing about
+//! models or methods beyond the manifest — every (model × method × rate)
+//! combination trains through this one struct.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::init::init_inputs;
+use crate::runtime::manifest::{Entry, Role};
+use crate::runtime::session::tensor_to_literal;
+use crate::runtime::Session;
+use crate::tensor::Tensor;
+
+pub struct TrainState<'s> {
+    pub session: &'s Session,
+    pub entry: Entry,
+    pub eval_entry: Option<Entry>,
+    ns: usize,
+    nt: usize,
+    /// statics + trainables + m + v, manifest order.
+    slots: Vec<Tensor>,
+    /// statics pre-marshaled once (they never change between steps) — the
+    /// §Perf fix that removed ~25% of per-step wall time on small models.
+    static_lits: Vec<xla::Literal>,
+    pub t: f32,
+    pub seed: u64,
+    emits_importance: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepOut {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+impl<'s> TrainState<'s> {
+    pub fn new(session: &'s Session, train_name: &str, seed: u64) -> Result<TrainState<'s>> {
+        let entry = session.entry(train_name)?.clone();
+        if entry.kind() != "train_step" {
+            bail!("{train_name} is a {:?}, not a train_step", entry.kind());
+        }
+        let eval_name = train_name.replace("_train", "_eval");
+        let eval_entry = session.entry(&eval_name).ok().cloned();
+        let ns = entry.count_role(Role::Static);
+        let nt = entry.count_role(Role::Trainable);
+        let slots = init_inputs(&entry, seed)?
+            .into_iter()
+            .take(ns + 3 * nt)
+            .map(|(spec, t)| t.ok_or_else(|| anyhow!("uninitialized slot {}", spec.name)))
+            .collect::<Result<Vec<_>>>()?;
+        let emits_importance = entry
+            .outputs
+            .last()
+            .map(|o| o.name == "importance")
+            .unwrap_or(false);
+        let static_lits = slots[..ns]
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { session, entry, eval_entry, ns, nt, slots, static_lits, t: 0.0, seed, emits_importance })
+    }
+
+    pub fn n_trainables(&self) -> usize {
+        self.nt
+    }
+
+    /// One optimizer step; returns (loss, acc) for the pre-update params.
+    pub fn step(&mut self, x: Tensor, y: Tensor, lr: f32) -> Result<StepOut> {
+        let (out, step) = self.step_full(x, y, lr)?;
+        drop(out);
+        Ok(step)
+    }
+
+    /// Step + raw extra outputs (e.g. the dense step's importance vector).
+    pub fn step_full(&mut self, x: Tensor, y: Tensor, lr: f32) -> Result<(Vec<Tensor>, StepOut)> {
+        // statics reuse their cached literals; only the (small) mutable
+        // state + batch get marshaled per step
+        let mut fresh: Vec<xla::Literal> = self.slots[self.ns..]
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        fresh.push(tensor_to_literal(&Tensor::scalar_f32(self.t))?);
+        fresh.push(tensor_to_literal(&Tensor::scalar_f32(lr))?);
+        fresh.push(tensor_to_literal(&x)?);
+        fresh.push(tensor_to_literal(&y)?);
+        let refs: Vec<&xla::Literal> =
+            self.static_lits.iter().chain(fresh.iter()).collect();
+        let mut out = self.session.run_literals(&self.entry.name, &refs)?;
+        // outputs: trainables', m', v', t', loss, acc (, importance)
+        for i in 0..3 * self.nt {
+            self.slots[self.ns + i] = std::mem::replace(&mut out[i], Tensor::zeros(&[]));
+        }
+        self.t = out[3 * self.nt].scalar()?;
+        let step = StepOut {
+            loss: out[3 * self.nt + 1].scalar()?,
+            acc: out[3 * self.nt + 2].scalar()?,
+        };
+        let extra = out.split_off(3 * self.nt + 3);
+        Ok((extra, step))
+    }
+
+    /// Importance vector from the last dense step (pruning substrate).
+    pub fn importance(&mut self, x: Tensor, y: Tensor) -> Result<Vec<f32>> {
+        if !self.emits_importance {
+            bail!("{} does not emit importance", self.entry.name);
+        }
+        let (extra, _) = self.step_full(x, y, 0.0)?;
+        Ok(extra
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("missing importance output"))?
+            .f32s()?
+            .to_vec())
+    }
+
+    /// Held-out evaluation through the paired eval executable.
+    pub fn eval(&self, x: Tensor, y: Tensor) -> Result<StepOut> {
+        let ev = self
+            .eval_entry
+            .as_ref()
+            .ok_or_else(|| anyhow!("no eval executable for {}", self.entry.name))?;
+        let mut inputs: Vec<Tensor> = self.slots[..self.ns + self.nt].to_vec();
+        inputs.push(x);
+        inputs.push(y);
+        let out = self.session.run(&ev.name, &inputs)?;
+        Ok(StepOut { loss: out[0].scalar()?, acc: out[1].scalar()? })
+    }
+
+    // ---- slot access -----------------------------------------------------
+
+    pub fn slot_index(&self, name: &str) -> Option<usize> {
+        self.entry.inputs[..self.ns + 3 * self.nt]
+            .iter()
+            .position(|s| s.name == name)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.slot_index(name)
+            .map(|i| &self.slots[i])
+            .ok_or_else(|| anyhow!("no slot {name}"))
+    }
+
+    /// Replace a static (e.g. the pruning mask, or SWGAN-trained generator
+    /// weights) or a trainable (checkpoint restore).
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let i = self.slot_index(name).ok_or_else(|| anyhow!("no slot {name}"))?;
+        if t.dims != self.entry.inputs[i].shape {
+            bail!("slot {name}: shape {:?} != {:?}", t.dims, self.entry.inputs[i].shape);
+        }
+        if i < self.ns {
+            self.static_lits[i] = tensor_to_literal(&t)?;
+        }
+        self.slots[i] = t;
+        Ok(())
+    }
+
+    /// The trainable tensors (the compressed representation), with names.
+    pub fn trainables(&self) -> Vec<(&str, &Tensor)> {
+        (0..self.nt)
+            .map(|i| {
+                (
+                    self.entry.inputs[self.ns + i].name.as_str(),
+                    &self.slots[self.ns + i],
+                )
+            })
+            .collect()
+    }
+
+    /// Compressed-representation size in parameters (excluding raw leaves,
+    /// matching the paper's accounting).
+    pub fn compressed_params(&self) -> usize {
+        self.entry.trainable_comp()
+    }
+
+    /// Reset the optimizer moments + step counter (used between pruning
+    /// phases, like the paper's finetune-after-prune recipe).
+    pub fn reset_optimizer(&mut self) {
+        for i in self.ns + self.nt..self.ns + 3 * self.nt {
+            self.slots[i] = Tensor::zeros(&self.slots[i].dims.clone());
+        }
+        self.t = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Split, SynthVision};
+    use crate::runtime::artifacts_dir;
+
+    fn session() -> Option<Session> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Session::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn state_trains_and_evals() {
+        let Some(sess) = session() else { return };
+        let mut st = TrainState::new(&sess, "mlp_mcnc02_train", 5).unwrap();
+        let ds = SynthVision::new(1, 10, 28, 28, 1);
+        let (x0, y0) = ds.batch(Split::Val, 0, 128);
+        let before = st.eval(x0.clone(), y0.clone()).unwrap();
+        let mut last = f32::NAN;
+        for step in 0..20 {
+            let (x, y) = ds.batch(Split::Train, step % 4, 128);
+            last = st.step(x, y, 0.05).unwrap().loss;
+        }
+        assert!(last.is_finite());
+        let after = st.eval(x0, y0).unwrap();
+        assert!(after.loss < before.loss, "{} -> {}", before.loss, after.loss);
+        assert_eq!(st.t, 20.0);
+        assert_eq!(st.compressed_params(), 540);
+    }
+
+    #[test]
+    fn set_get_roundtrip_and_shape_check() {
+        let Some(sess) = session() else { return };
+        let mut st = TrainState::new(&sess, "mlp_dense_train", 1).unwrap();
+        let dc = st.get("mask").unwrap().numel();
+        let zeros = Tensor::zeros(&[dc]);
+        st.set("mask", zeros.clone()).unwrap();
+        assert_eq!(st.get("mask").unwrap(), &zeros);
+        assert!(st.set("mask", Tensor::zeros(&[3])).is_err());
+        assert!(st.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn rejects_non_train_entries() {
+        let Some(sess) = session() else { return };
+        assert!(TrainState::new(&sess, "mlp_mcnc02_eval", 1).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Benchmark harness (in-tree substrate; no criterion offline).
+//!
+//! `time_it` measures a closure with warmup + repeated samples and returns
+//! robust statistics; `Table` renders paper-style result tables to stdout
+//! and CSV (EXPERIMENTS.md records the CSV outputs).
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<f64>, // seconds
+}
+
+impl Stats {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / self.samples.len().max(1) as f64)
+            .sqrt()
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `samples` measured runs.
+pub fn time_it(warmup: usize, samples: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Stats { samples: out }
+}
+
+/// Throughput helper: items/sec from a stats object.
+pub fn throughput(items: usize, s: &Stats) -> f64 {
+    items as f64 / s.mean().max(1e-12)
+}
+
+pub fn fmt_si(x: f64) -> String {
+    let a = x.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{:.3}", x)
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.2}s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.1}µs", secs * 1e6)
+    }
+}
+
+/// A paper-style results table: header + rows, markdown to stdout + CSV.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{:w$}", c, w = w))
+            .collect();
+        println!("| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for r in &self.rows {
+            let cells: Vec<String> = r
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{:w$}", c, w = w))
+                .collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",") + "\n";
+        for r in &self.rows {
+            s += &r.join(",");
+            s += "\n";
+        }
+        s
+    }
+
+    /// Write CSV next to the bench outputs (results/<slug>.csv).
+    pub fn save_csv(&self, slug: &str) {
+        let dir = std::path::Path::new("results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{slug}.csv"));
+        if std::fs::write(&path, self.to_csv()).is_ok() {
+            println!("[bench] wrote {}", path.display());
+        }
+    }
+}
+
+/// Env-tunable step counts so quick CI runs and full reproductions share one
+/// binary: `MCNC_BENCH_STEPS` scales everything, `MCNC_BENCH_FULL=1` uses
+/// the paper-fidelity defaults.
+pub fn bench_steps(quick_default: usize, full: usize) -> usize {
+    if std::env::var("MCNC_BENCH_FULL").map(|v| v == "1").unwrap_or(false) {
+        return full;
+    }
+    std::env::var("MCNC_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(quick_default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats { samples: vec![1.0, 2.0, 3.0, 4.0, 5.0] };
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.median() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert!((s.percentile(100.0) - 5.0).abs() < 1e-12);
+        assert!(s.std() > 1.0 && s.std() < 2.0);
+    }
+
+    #[test]
+    fn time_it_runs() {
+        let mut n = 0usize;
+        let s = time_it(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.samples.len(), 5);
+        assert!(throughput(10, &s) > 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_si(2_500_000.0), "2.50M");
+        assert_eq!(fmt_si(1.5e10), "15.00G");
+        assert!(fmt_time(0.002).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_csv() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,x\n");
+        t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser (in-tree substrate; no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    order: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, val) = if let Some((k, v)) = rest.split_once('=') {
+                    (k.to_string(), v.to_string())
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    (rest.to_string(), it.next().unwrap())
+                } else {
+                    (rest.to_string(), "true".to_string())
+                };
+                out.order.push(key.clone());
+                out.flags.insert(key, val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+
+    /// Keys in first-seen order (for help/debug output).
+    pub fn keys(&self) -> &[String] {
+        &self.order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_forms() {
+        // NB: a bare `--flag` greedily consumes a following non-`--` token
+        // as its value; pass `--flag=true` or put bare flags last.
+        let a = args("train extra --steps 100 --lr=0.01 --verbose");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!((a.f32_or("lr", 0.0) - 0.01).abs() < 1e-9);
+        assert!(a.bool_or("verbose", false));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn bare_flag_consumes_next_token() {
+        let a = args("--verbose extra");
+        assert_eq!(a.get("verbose"), Some("extra"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn flag_before_flag_is_bare() {
+        let a = args("--fast --steps 5");
+        assert!(a.bool_or("fast", false));
+        assert_eq!(a.usize_or("steps", 0), 5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("");
+        assert_eq!(a.str_or("name", "dflt"), "dflt");
+        assert_eq!(a.u64_or("seed", 42), 42);
+        assert!(!a.bool_or("x", false));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args("--bias=-0.5");
+        assert!((a.f32_or("bias", 0.0) + 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,240 @@
+//! TOML-subset config parser (in-tree substrate).
+//!
+//! Supports the fragment real deployment configs need: `[table]` and
+//! `[table.sub]` headers, `key = value` with strings, ints, floats, bools
+//! and flat arrays, plus `#` comments. Values land in a flat
+//! `section.key → Value` map with typed accessors and defaults.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    map: HashMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut map = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let h = h
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+                section = h.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            let val = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, v.trim()))?;
+            map.insert(key, val);
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.map.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.map.get(key) {
+            Some(Value::Int(i)) if *i >= 0 => *i as usize,
+            _ => default,
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        match self.map.get(key) {
+            Some(Value::Int(i)) if *i >= 0 => *i as u64,
+            _ => default,
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.map.get(key).and_then(Value::as_f64).map(|f| f as f32).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn f32_list(&self, key: &str) -> Vec<f32> {
+        match self.map.get(key) {
+            Some(Value::Arr(a)) => {
+                a.iter().filter_map(Value::as_f64).map(|f| f as f32).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    pub fn keys(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.map.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    /// Overlay: values in `other` win.
+    pub fn merged(mut self, other: Config) -> Config {
+        self.map.extend(other.map);
+        self
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') {
+        let inner = s
+            .strip_prefix('"')
+            .and_then(|x| x.strip_suffix('"'))
+            .context("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .context("unterminated array")?;
+        let mut out = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if !p.is_empty() {
+                out.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Arr(out));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+name = "mcnc"
+seed = 42
+
+[train]
+steps = 500
+lr = 0.05            # paper: 5-10x dense lr
+rates = [0.5, 0.1, 0.01]
+verbose = true
+
+[server.batcher]
+max_batch = 16
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "mcnc");
+        assert_eq!(c.u64_or("seed", 0), 42);
+        assert_eq!(c.usize_or("train.steps", 0), 500);
+        assert!((c.f32_or("train.lr", 0.0) - 0.05).abs() < 1e-9);
+        assert!(c.bool_or("train.verbose", false));
+        assert_eq!(c.f32_list("train.rates"), vec![0.5, 0.1, 0.01]);
+        assert_eq!(c.usize_or("server.batcher.max_batch", 0), 16);
+    }
+
+    #[test]
+    fn defaults_on_missing_or_wrong_type() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert_eq!(c.usize_or("name", 7), 7); // string, not int
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let c = Config::parse("x = \"a # b\"").unwrap();
+        assert_eq!(c.str_or("x", ""), "a # b");
+    }
+
+    #[test]
+    fn merge_overlays() {
+        let a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3\nz = 4").unwrap();
+        let m = a.merged(b);
+        assert_eq!(m.usize_or("x", 0), 1);
+        assert_eq!(m.usize_or("y", 0), 3);
+        assert_eq!(m.usize_or("z", 0), 4);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Leveled stderr logger (in-tree substrate). `MCNC_LOG=debug|info|warn`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const DEBUG: u8 = 0;
+pub const INFO: u8 = 1;
+pub const WARN: u8 = 2;
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn init_from_env() {
+    let lvl = match std::env::var("MCNC_LOG").as_deref() {
+        Ok("debug") => DEBUG,
+        Ok("warn") => WARN,
+        _ => INFO,
+    };
+    LEVEL.store(lvl, Ordering::Relaxed);
+}
+
+pub fn set_level(l: u8) {
+    LEVEL.store(l, Ordering::Relaxed);
+}
+
+pub fn enabled(l: u8) -> bool {
+    l >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments) {
+    if enabled(level) {
+        let name = match level {
+            DEBUG => "DBG",
+            INFO => "INF",
+            _ => "WRN",
+        };
+        eprintln!("[{name}][{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($tag:expr, $($arg:tt)+) => {
+        $crate::util::logging::log($crate::util::logging::DEBUG, $tag, format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($tag:expr, $($arg:tt)+) => {
+        $crate::util::logging::log($crate::util::logging::INFO, $tag, format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($tag:expr, $($arg:tt)+) => {
+        $crate::util::logging::log($crate::util::logging::WARN, $tag, format_args!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(WARN);
+        assert!(!enabled(INFO));
+        assert!(enabled(WARN));
+        set_level(INFO);
+        assert!(enabled(INFO));
+        crate::info!("test", "hello {}", 1); // smoke
+    }
+}

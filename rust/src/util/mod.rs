@@ -1,0 +1,12 @@
+//! In-tree substrates: this workspace builds fully offline against a small
+//! vendored crate set, so JSON, config parsing, CLI, PRNG, thread pool,
+//! property testing, benchmarking and logging are implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod prop;
+pub mod threadpool;

@@ -1,0 +1,180 @@
+//! SplitMix64 deterministic parameter streams — the Rust twin of
+//! `python/compile/rng.py`. Both sides must produce **bit-identical** f32
+//! streams from the same seed: all θ0 / generator-weight / basis tensors fed
+//! to the PJRT executables are synthesized here, and the Python tests pin
+//! the same constants.
+//!
+//! Output `i` of stream `s` is `mix(s + (i+1)·GAMMA)` — counter-based, so
+//! any range of a stream can be generated independently and in parallel.
+//! f32 uniforms take the top 24 bits (`(x >> 40) * 2^-24`) so the f32 math
+//! is exact across numpy and Rust.
+
+pub const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+pub const TAG_MUL: u64 = 0xBF58_476D_1CE4_E5B9;
+
+/// Well-known stream tags shared with `python/compile/rng.py`. Keep in sync.
+pub mod tag {
+    pub const GEN_LAYER: u64 = 0x4745_4E00; // + layer index
+    pub const THETA0: u64 = 0x5448_0000; // + compressed-leaf index
+    pub const RAW: u64 = 0x5241_5700; // + raw-leaf index
+    pub const LORA: u64 = 0x4C4F_5200; // + lora-target index (A factors)
+    pub const NOLA_BASIS: u64 = 0x4E4F_4C00; // + 2*target (A) / 2*target+1 (B)
+    pub const COEF: u64 = 0x434F_4500;
+    pub const DATA: u64 = 0x4441_5400;
+    pub const SPHERE: u64 = 0x5350_4800;
+    pub const ALPHA: u64 = 0x414C_5000;
+    pub const PROJ: u64 = 0x5052_4A00;
+}
+
+/// The splitmix64 finalizer.
+#[inline]
+pub fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive an independent stream seed for (seed, tag).
+#[inline]
+pub fn substream(seed: u64, tag: u64) -> u64 {
+    mix(seed ^ tag.wrapping_mul(TAG_MUL))
+}
+
+/// The `i`-th raw u64 of stream `seed` (0-based).
+#[inline]
+pub fn raw_at(seed: u64, i: u64) -> u64 {
+    mix(seed.wrapping_add((i + 1).wrapping_mul(GAMMA)))
+}
+
+/// A cheap iterator-style handle over one stream.
+#[derive(Debug, Clone, Copy)]
+pub struct Stream {
+    seed: u64,
+    i: u64,
+}
+
+impl Stream {
+    pub fn new(seed: u64) -> Self {
+        Stream { seed, i: 0 }
+    }
+
+    pub fn sub(seed: u64, t: u64) -> Self {
+        Stream::new(substream(seed, t))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let v = raw_at(self.seed, self.i);
+        self.i += 1;
+        v
+    }
+
+    /// f32 uniform in [0, 1) — bit-identical to the Python twin.
+    #[inline]
+    pub fn next_unit_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    pub fn uniform_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.next_unit_f32() * (hi - lo) + lo).collect()
+    }
+
+    /// f32 uniform in [-bound, bound) — the generator-weight law.
+    pub fn symmetric_f32(&mut self, n: usize, bound: f32) -> Vec<f32> {
+        (0..n).map(|_| (2.0f32 * self.next_unit_f32() - 1.0) * bound).collect()
+    }
+
+    /// Box–Muller normals; matches Python to ~1e-5 (libm sin/cos ulp).
+    pub fn normal_f32(&mut self, n: usize, std: f32) -> Vec<f32> {
+        let m = (n + 1) / 2;
+        let u: Vec<u64> = (0..2 * m).map(|_| self.next_u64()).collect();
+        let mut out = Vec::with_capacity(2 * m);
+        for j in 0..m {
+            let u1 = ((u[j] >> 40) as f64 + 1.0) * (1.0 / 16_777_216.0);
+            let u2 = (u[m + j] >> 40) as f64 * (1.0 / 16_777_216.0);
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            out.push((r * th.cos()) as f32 * std);
+            out.push((r * th.sin()) as f32 * std);
+        }
+        out.truncate(n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_seed0() {
+        // Canonical splitmix64 outputs; same constants live in
+        // python/tests/test_rng.py — if either side changes, both fail.
+        assert_eq!(raw_at(0, 0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(raw_at(0, 1), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(raw_at(0, 2), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn golden_seed42() {
+        assert_eq!(raw_at(42, 0), 0xBDD7_3226_2FEB_6E95);
+        assert_eq!(raw_at(42, 1), 0x28EF_E333_B266_F103);
+    }
+
+    #[test]
+    fn stream_matches_raw_at() {
+        let mut s = Stream::new(7);
+        for i in 0..10 {
+            assert_eq!(s.next_u64(), raw_at(7, i));
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let u = Stream::new(123).uniform_f32(10_000, 0.0, 1.0);
+        assert!(u.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean: f32 = u.iter().sum::<f32>() / u.len() as f32;
+        assert!((mean - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn symmetric_bounds() {
+        let s = Stream::new(9).symmetric_f32(5000, 0.25);
+        assert!(s.iter().all(|&x| x.abs() <= 0.25));
+        assert!(s.iter().cloned().fold(f32::MIN, f32::max) > 0.2);
+        assert!(s.iter().cloned().fold(f32::MAX, f32::min) < -0.2);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let z = Stream::new(11).normal_f32(100_000, 2.0);
+        let mean: f64 = z.iter().map(|&x| x as f64).sum::<f64>() / z.len() as f64;
+        let var: f64 =
+            z.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / z.len() as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var.sqrt() - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn substream_independence() {
+        assert_ne!(substream(7, tag::THETA0), substream(7, tag::THETA0 + 1));
+        assert_eq!(substream(7, tag::THETA0), substream(7, tag::THETA0));
+        assert_ne!(substream(7, tag::THETA0), substream(8, tag::THETA0));
+    }
+
+    #[test]
+    fn prefix_stability() {
+        let mut a = Stream::new(5);
+        let long = a.uniform_f32(1000, 0.0, 1.0);
+        let mut b = Stream::new(5);
+        let short = b.uniform_f32(10, 0.0, 1.0);
+        assert_eq!(&long[..10], &short[..]);
+    }
+
+    #[test]
+    fn normal_odd_lengths() {
+        for n in [0usize, 1, 2, 7] {
+            assert_eq!(Stream::new(3).normal_f32(n, 1.0).len(), n);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Property-based testing harness (in-tree substrate; no proptest offline).
+//!
+//! `run_prop` drives a property over N seeded random cases; on failure it
+//! retries with a simple halving shrink over every generated integer and
+//! reports the failing case's seed so the case is reproducible:
+//!
+//! ```ignore
+//! run_prop("router_routes_once", 200, |g| {
+//!     let n = g.usize(1, 64);
+//!     ...
+//!     ensure!(cond, "message");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::prng::Stream;
+
+/// Per-case generator handle: seeded draws + a trace for shrinking.
+pub struct Gen {
+    s: Stream,
+    pub trace: Vec<u64>,
+    replay: Option<Vec<u64>>,
+    idx: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen { s: Stream::new(seed), trace: Vec::new(), replay: None, idx: 0 }
+    }
+
+    fn replaying(vals: Vec<u64>) -> Gen {
+        Gen { s: Stream::new(0), trace: Vec::new(), replay: Some(vals), idx: 0 }
+    }
+
+    fn draw(&mut self) -> u64 {
+        let v = match &self.replay {
+            Some(vals) => vals.get(self.idx).copied().unwrap_or(0),
+            None => self.s.next_u64(),
+        };
+        self.idx += 1;
+        self.trace.push(v);
+        v
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            // still consume a draw so shrink traces stay aligned
+            let _ = self.draw();
+            return lo;
+        }
+        lo + (self.draw() % (hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.draw() >> 40) as f32 * (1.0 / 16_777_216.0);
+        lo + u * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.draw() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize(0, xs.len() - 1);
+        &xs[i]
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `cases` random cases. Panics (test failure) with the
+/// seed + shrunk trace on the first violated property.
+pub fn run_prop(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x9E3779B9u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(name.bytes().map(|b| b as u64).sum::<u64>());
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            let (trace, final_msg) = shrink(g.trace.clone(), msg, &prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}):\n  {final_msg}\n  shrunk trace: {trace:?}"
+            );
+        }
+    }
+}
+
+/// Halving shrink over every trace position; keeps the failure alive.
+fn shrink(
+    mut trace: Vec<u64>,
+    mut msg: String,
+    prop: &impl Fn(&mut Gen) -> Result<(), String>,
+) -> (Vec<u64>, String) {
+    let mut improved = true;
+    let mut budget = 500;
+    while improved && budget > 0 {
+        improved = false;
+        for i in 0..trace.len() {
+            if trace[i] == 0 {
+                continue;
+            }
+            let mut cand = trace.clone();
+            cand[i] /= 2;
+            let mut g = Gen::replaying(cand.clone());
+            if let Err(m) = prop(&mut g) {
+                trace = cand;
+                msg = m;
+                improved = true;
+            }
+            budget -= 1;
+            if budget == 0 {
+                break;
+            }
+        }
+    }
+    (trace, msg)
+}
+
+/// `ensure!`-style helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run_prop("add_commutes", 100, |g| {
+            let a = g.usize(0, 1000);
+            let b = g.usize(0, 1000);
+            prop_assert!(a + b == b + a, "never");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always_fails")]
+    fn failing_property_panics_with_name() {
+        run_prop("always_fails", 10, |g| {
+            let _ = g.usize(0, 10);
+            Err("always_fails".into())
+        });
+    }
+
+    #[test]
+    fn shrink_reduces_values() {
+        // property fails for any n >= 10; shrinker should find a small trace.
+        let prop = |g: &mut Gen| -> Result<(), String> {
+            let n = g.usize(0, 1_000_000);
+            prop_assert!(n < 10, "n={n}");
+            Ok(())
+        };
+        let mut g = Gen::new(99);
+        // find a failing case first
+        while prop(&mut g).is_ok() {
+            g = Gen::new(g.draw());
+        }
+        let (trace, msg) = shrink(g.trace.clone(), "seed".into(), &prop);
+        let mut rg = Gen::replaying(trace.clone());
+        let n = rg.usize(0, 1_000_000);
+        assert!(n >= 10, "shrunk case must still fail: {msg}");
+        assert!(trace[trace.len() - 1] <= g.trace[g.trace.len() - 1]);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let v = g.usize(3, 7);
+            assert!((3..=7).contains(&v));
+            let f = g.f32(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+        }
+        assert_eq!(g.usize(5, 5), 5);
+    }
+}

@@ -1,0 +1,74 @@
+//! Cross-language golden tests: Rust `runtime::init` must reproduce the
+//! exact tensors Python's `compile.initlib` synthesizes (fixture generated
+//! by the Python twin with seed 123 — see python/tests/goldens_cross.json).
+//! First-4 values compare bitwise for the uniform laws; sums tolerate the
+//! f64-accumulation + Box-Muller libm ulp differences.
+
+use mcnc::runtime::{artifacts_dir, init, Manifest, Role};
+use mcnc::util::json::{self, Json};
+
+fn fixture() -> Option<Json> {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("python/tests/goldens_cross.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(json::parse(&text).unwrap())
+}
+
+#[test]
+fn init_laws_match_python_twin() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let Some(golden) = fixture() else {
+        eprintln!("skipping: no goldens_cross.json fixture");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut checked = 0;
+    for (entry_name, tensors) in golden.as_obj().unwrap() {
+        let entry = manifest.get(entry_name).unwrap();
+        let reg = entry.registry().unwrap();
+        for spec in &entry.inputs {
+            if !matches!(spec.role, Role::Static | Role::Trainable) {
+                continue;
+            }
+            let Some(g) = tensors.get(&spec.name) else { continue };
+            let t = init::init_tensor(spec.init.as_ref().unwrap(), &spec.shape, &reg, 123)
+                .unwrap_or_else(|e| panic!("{entry_name}:{}: {e}", spec.name));
+            let v = t.f32s().unwrap();
+            assert_eq!(
+                v.len(),
+                g.get("numel").unwrap().as_usize().unwrap(),
+                "{entry_name}:{}",
+                spec.name
+            );
+            let first: Vec<f64> = g
+                .get("first")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap())
+                .collect();
+            for (i, want) in first.iter().enumerate() {
+                let got = v[i] as f64;
+                assert!(
+                    (got - want).abs() <= want.abs() * 1e-5 + 1e-7,
+                    "{entry_name}:{}[{i}]: rust {got} vs python {want}",
+                    spec.name
+                );
+            }
+            let sum: f64 = v.iter().map(|&x| x as f64).sum();
+            let want_sum = g.get("sum").unwrap().as_f64().unwrap();
+            let tol = 1e-4 * (v.len() as f64).sqrt() + want_sum.abs() * 1e-5 + 1e-6;
+            assert!(
+                (sum - want_sum).abs() <= tol,
+                "{entry_name}:{}: sum {sum} vs {want_sum} (tol {tol})",
+                spec.name
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 15, "only {checked} tensors verified");
+}

@@ -1,0 +1,181 @@
+//! Cross-layer integration: the PJRT-executed artifacts (L1 Pallas kernel
+//! lowered inside L2 jax graphs) must agree with the native Rust mirror,
+//! and train steps must actually learn through the runtime boundary.
+//!
+//! All tests no-op gracefully when `artifacts/` hasn't been built.
+
+use mcnc::mcnc::{GenCfg, Generator};
+use mcnc::runtime::{artifacts_dir, init, Role, Session};
+use mcnc::tensor::Tensor;
+use mcnc::util::prng::{tag, Stream};
+
+fn session() -> Option<Session> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Session::open(&dir).unwrap())
+}
+
+/// PJRT generator executable == native Rust generator, same weights.
+#[test]
+fn pallas_kernel_matches_native_generator() {
+    let Some(sess) = session() else { return };
+    let entry = sess.entry("gen_mlp02_fwd").unwrap().clone();
+    let gen_meta = entry.meta.get("gen").unwrap();
+    let cfg = GenCfg::from_json(gen_meta).unwrap();
+    let n = entry.meta.get("n_chunks").unwrap().as_usize().unwrap();
+
+    let seed = 42u64;
+    let gen = Generator::from_seed(cfg.clone(), seed);
+    let alpha = Stream::sub(seed, tag::ALPHA).normal_f32(n * cfg.k, 0.5);
+    let beta = Stream::sub(seed, tag::COEF).uniform_f32(n, -1.5, 1.5);
+
+    // positional inputs: alpha, beta, gw0, gw1, gw2
+    let mut inputs = vec![
+        Tensor::from_f32(alpha.clone(), &[n, cfg.k]).unwrap(),
+        Tensor::from_f32(beta.clone(), &[n]).unwrap(),
+    ];
+    for (w, (a, b)) in gen.ws.iter().zip(cfg.layer_shapes()) {
+        inputs.push(Tensor::from_f32(w.clone(), &[a, b]).unwrap());
+    }
+    let out = sess.run("gen_mlp02_fwd", &inputs).unwrap();
+    let xla_out = out[0].f32s().unwrap();
+
+    let native = gen.forward(&alpha, &beta);
+    assert_eq!(xla_out.len(), native.len());
+    let max_diff = xla_out
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "XLA vs native generator diverge: {max_diff}");
+}
+
+/// Init laws + train step: the mlp MCNC executable must learn on a
+/// synthetic linearly-separable task, driven exactly like production.
+#[test]
+fn mcnc_train_step_learns_through_pjrt() {
+    let Some(sess) = session() else { return };
+    let name = "mlp_mcnc02_train";
+    let entry = sess.entry(name).unwrap().clone();
+    let seed = 7u64;
+    let mut slots = init::init_inputs(&entry, seed).unwrap();
+
+    let ns = entry.count_role(Role::Static);
+    let nt = entry.count_role(Role::Trainable);
+    let batch = 128usize;
+    let in_dim = 784usize;
+
+    // deterministic learnable task: y = argmax(x @ W_task)
+    let wtask = Stream::new(99).normal_f32(in_dim * 10, 1.0);
+    let make_batch = |step: u64| -> (Tensor, Tensor) {
+        let x = Stream::sub(seed, tag::DATA + step).normal_f32(batch * in_dim, 1.0);
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            let mut best = (f32::MIN, 0usize);
+            for c in 0..10 {
+                let mut s = 0.0f32;
+                for i in 0..in_dim {
+                    s += x[b * in_dim + i] * wtask[i * 10 + c];
+                }
+                if s > best.0 {
+                    best = (s, c);
+                }
+            }
+            y[b] = best.1 as i32;
+        }
+        (
+            Tensor::from_f32(x, &[batch, in_dim]).unwrap(),
+            Tensor::from_i32(y, &[batch]).unwrap(),
+        )
+    };
+
+    let mut t = 0.0f32;
+    let mut losses = Vec::new();
+    for step in 0..30u64 {
+        let (x, y) = make_batch(step % 4);
+        let mut inputs: Vec<Tensor> = slots[..ns + 3 * nt]
+            .iter()
+            .map(|(_, t)| t.clone().unwrap())
+            .collect();
+        inputs.push(Tensor::scalar_f32(t));
+        inputs.push(Tensor::scalar_f32(0.05));
+        inputs.push(x);
+        inputs.push(y);
+        let out = sess.run(name, &inputs).unwrap();
+        // outputs: trainables', m', v', t', loss, acc
+        for i in 0..3 * nt {
+            slots[ns + i].1 = Some(out[i].clone());
+        }
+        t = out[3 * nt].scalar().unwrap();
+        losses.push(out[3 * nt + 1].scalar().unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let first = losses[0];
+    let last = losses[25..].iter().cloned().fold(f32::MAX, f32::min);
+    assert!(
+        last < first - 0.05,
+        "PJRT mcnc training did not learn: {first} -> {last} ({losses:?})"
+    );
+    assert_eq!(t, 30.0);
+}
+
+/// Reconstruction at the zero init equals θ0 (the paper's zero-init
+/// guarantee through the whole stack).
+#[test]
+fn recon_at_init_equals_theta0() {
+    let Some(sess) = session() else { return };
+    let name = "mlp_mcnc02_recon";
+    let entry = sess.entry(name).unwrap().clone();
+    let seed = 3u64;
+    let slots = init::init_inputs(&entry, seed).unwrap();
+    let inputs: Vec<Tensor> = slots.iter().map(|(_, t)| t.clone().unwrap()).collect();
+    let theta0_idx = entry.input_index("theta0_c").unwrap();
+    let out = sess.run(name, &inputs).unwrap();
+    let diff = mcnc::tensor::max_abs_diff(&out[0], &inputs[theta0_idx]);
+    assert!(diff < 1e-6, "Δθ at zero init is {diff}, want 0");
+}
+
+/// Eval executable agrees with the loss the train step reports.
+#[test]
+fn eval_matches_train_loss() {
+    let Some(sess) = session() else { return };
+    let train = sess.entry("mlp_mcnc02_train").unwrap().clone();
+    let evale = sess.entry("mlp_mcnc02_eval").unwrap().clone();
+    let seed = 11u64;
+    let slots = init::init_inputs(&train, seed).unwrap();
+    let ns = train.count_role(Role::Static);
+    let nt = train.count_role(Role::Trainable);
+
+    let batch = 128;
+    let x = Tensor::from_f32(Stream::new(1).normal_f32(batch * 784, 1.0), &[batch, 784]).unwrap();
+    let y = Tensor::from_i32(
+        Stream::new(2).uniform_f32(batch, 0.0, 10.0).iter().map(|v| *v as i32).collect(),
+        &[batch],
+    )
+    .unwrap();
+
+    // train step with lr=0 reports the current loss and changes nothing
+    let mut tin: Vec<Tensor> =
+        slots[..ns + 3 * nt].iter().map(|(_, t)| t.clone().unwrap()).collect();
+    tin.push(Tensor::scalar_f32(0.0));
+    tin.push(Tensor::scalar_f32(0.0));
+    tin.push(x.clone());
+    tin.push(y.clone());
+    let tout = sess.run("mlp_mcnc02_train", &tin).unwrap();
+    let train_loss = tout[3 * nt + 1].scalar().unwrap();
+
+    let mut ein: Vec<Tensor> =
+        slots[..ns + nt].iter().map(|(_, t)| t.clone().unwrap()).collect();
+    ein.push(x);
+    ein.push(y);
+    let eout = sess.run("mlp_mcnc02_eval", &ein).unwrap();
+    let eval_loss = eout[0].scalar().unwrap();
+    assert!(
+        (train_loss - eval_loss).abs() < 1e-4,
+        "train {train_loss} vs eval {eval_loss}"
+    );
+    assert_eq!(evale.outputs.len(), 2);
+}

@@ -1,0 +1,132 @@
+//! End-to-end serving integration: submit real requests through the full
+//! router → batcher → engine → PJRT predict path and check the invariants
+//! the coordinator promises (every request answered exactly once, both
+//! execution modes agree on predictions, adapters actually differ by task).
+
+use std::time::Duration;
+
+use mcnc::coordinator::workload::request_tokens;
+use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg, ServeStats};
+use mcnc::data::MarkovLm;
+use mcnc::runtime::artifacts_dir;
+
+fn ready() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn run_requests(cfg: ServerCfg, n: usize, n_tasks: usize) -> (Vec<(u64, usize, i32)>, ServeStats) {
+    let lm = MarkovLm::base(1, 128, 32);
+    let server = Server::start(artifacts_dir(), cfg);
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let task = i % n_tasks;
+        let tokens = request_tokens(&lm, 7, i as u64);
+        rxs.push(server.submit(task, tokens));
+    }
+    let mut out = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        out.push((resp.id, resp.task, resp.next_token));
+    }
+    let stats = server.stop().unwrap();
+    (out, stats)
+}
+
+#[test]
+fn serves_all_requests_exactly_once() {
+    if !ready() {
+        return;
+    }
+    let cfg = ServerCfg {
+        kind: "lm_mcnclora8".into(),
+        n_tasks: 4,
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(2) },
+        mode: Mode::OnTheFly,
+        ..ServerCfg::default()
+    };
+    let (resps, stats) = run_requests(cfg, 64, 4);
+    assert_eq!(resps.len(), 64);
+    let ids: std::collections::HashSet<u64> = resps.iter().map(|r| r.0).collect();
+    assert_eq!(ids.len(), 64, "duplicate or dropped responses");
+    assert!(stats.batches >= 4, "expected multiple batches, got {}", stats.batches);
+    assert_eq!(stats.rows, stats.batches * 16);
+    assert!(stats.recon_flops > 0);
+    assert!(resps.iter().all(|r| (0..128).contains(&r.2)));
+}
+
+#[test]
+fn predictions_deterministic_per_task() {
+    if !ready() {
+        return;
+    }
+    let mk = || ServerCfg {
+        kind: "lm_mcnclora8".into(),
+        n_tasks: 2,
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(1) },
+        mode: Mode::OnTheFly,
+        ..ServerCfg::default()
+    };
+    let (a, _) = run_requests(mk(), 32, 2);
+    let (b, _) = run_requests(mk(), 32, 2);
+    assert_eq!(a, b, "same workload + seed must give identical predictions");
+}
+
+#[test]
+fn merged_mode_agrees_with_on_the_fly() {
+    if !ready() {
+        return;
+    }
+    let base = ServerCfg {
+        kind: "lm_mcnclora8".into(),
+        n_tasks: 2,
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(1) },
+        mode: Mode::OnTheFly,
+        ..ServerCfg::default()
+    };
+    let mut merged = base.clone();
+    merged.mode = Mode::Merged;
+    let (fly, fly_stats) = run_requests(base, 48, 2);
+    let (mrg, mrg_stats) = run_requests(merged, 48, 2);
+    // reconstruct-then-dense == in-graph reconstruction, bit-for-bit argmax
+    assert_eq!(fly, mrg);
+    assert!(mrg_stats.cache_hits > 0, "no cache hits in merged mode");
+    assert!(
+        mrg_stats.recon_flops < fly_stats.recon_flops,
+        "merged mode should amortize reconstruction: {} vs {}",
+        mrg_stats.recon_flops,
+        fly_stats.recon_flops
+    );
+}
+
+#[test]
+fn different_adapters_give_different_predictions() {
+    if !ready() {
+        return;
+    }
+    let lm = MarkovLm::base(1, 128, 32);
+    let cfg = ServerCfg {
+        kind: "lm_mcnclora8".into(),
+        n_tasks: 2,
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(1) },
+        mode: Mode::OnTheFly,
+        ..ServerCfg::default()
+    };
+    let server = Server::start(artifacts_dir(), cfg);
+    let mut pairs = Vec::new();
+    for i in 0..16u64 {
+        let tokens = request_tokens(&lm, 3, i);
+        let r0 = server.submit(0, tokens.clone());
+        let r1 = server.submit(1, tokens);
+        pairs.push((r0, r1));
+    }
+    let mut diffs = 0;
+    for (r0, r1) in pairs {
+        let a = r0.recv_timeout(Duration::from_secs(120)).unwrap();
+        let b = r1.recv_timeout(Duration::from_secs(120)).unwrap();
+        if a.next_token != b.next_token {
+            diffs += 1;
+        }
+    }
+    server.stop().unwrap();
+    assert!(diffs > 0, "task adapters appear identical");
+}

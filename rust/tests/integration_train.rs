@@ -1,0 +1,136 @@
+//! Training-stack integration: Trainer + checkpoints + pruning substrate
+//! over real PJRT executables.
+
+use std::sync::Arc;
+
+use mcnc::baselines::{sparsity_for_size, topk_mask, Platon};
+use mcnc::data::{Dataset, Split, SynthVision};
+use mcnc::runtime::{artifacts_dir, Session};
+use mcnc::tensor::Tensor;
+use mcnc::train::{self, Checkpoint, LrSchedule, TrainCfg, TrainState};
+
+fn session() -> Option<Session> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Session::open(&dir).unwrap())
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some(sess) = session() else { return };
+    let mut st = TrainState::new(&sess, "mlp_mcnc02_train", 9).unwrap();
+    let data: Arc<dyn Dataset> = Arc::new(SynthVision::new(4, 10, 28, 28, 1));
+    let cfg = TrainCfg { steps: 15, batch: 128, schedule: LrSchedule::Const(0.05), ..TrainCfg::default() };
+    train::run(&mut st, Arc::clone(&data), &cfg).unwrap();
+    let (x, y) = data.batch(Split::Val, 0, 128);
+    let before = st.eval(x.clone(), y.clone()).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("mcnc_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mlp.mcnc");
+    let ck = Checkpoint::from_state(&st);
+    ck.save(&path).unwrap();
+
+    // checkpoint stores only the compressed representation
+    assert_eq!(ck.stored_params() as f64, 540.0 + st.get("raw").unwrap().numel() as f64);
+    let dense_bytes = 268_800 * 4;
+    assert!(ck.stored_bytes() * 50 < dense_bytes, "checkpoint not compressed");
+
+    // fresh state from the same seed + restore == identical eval
+    let mut st2 = TrainState::new(&sess, "mlp_mcnc02_train", 9).unwrap();
+    Checkpoint::load(&path).unwrap().restore(&mut st2).unwrap();
+    let after = st2.eval(x, y).unwrap();
+    assert_eq!(before.loss.to_bits(), after.loss.to_bits(), "restore is not bitwise");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn magnitude_pruning_pipeline() {
+    let Some(sess) = session() else { return };
+    let mut st = TrainState::new(&sess, "mlp_dense_train", 3).unwrap();
+    let data: Arc<dyn Dataset> = Arc::new(SynthVision::new(4, 10, 28, 28, 1));
+    let cfg = TrainCfg { steps: 25, batch: 128, schedule: LrSchedule::Const(0.005), ..TrainCfg::default() };
+    let dense = train::run(&mut st, Arc::clone(&data), &cfg).unwrap();
+
+    // prune to 10% model size (paper's accounting: 1.5x sparsity)
+    let theta = st.get("theta_c").unwrap().f32s().unwrap().to_vec();
+    let sparsity = sparsity_for_size(0.10);
+    let mask = topk_mask(&theta, sparsity);
+    let kept = mask.iter().filter(|&&m| m == 1.0).count();
+    assert!((kept as f64 / theta.len() as f64 - (1.0 - sparsity as f64)).abs() < 0.01);
+    st.set("mask", Tensor::from_f32(mask, &[theta.len()]).unwrap()).unwrap();
+    st.reset_optimizer();
+
+    // pruned accuracy drops, finetuning recovers some
+    let (x, y) = data.batch(Split::Val, 0, 128);
+    let pruned = st.eval(x.clone(), y.clone()).unwrap();
+    assert!(pruned.acc <= dense.final_val_acc() + 0.02);
+    let ft_cfg = TrainCfg { steps: 15, batch: 128, schedule: LrSchedule::Const(0.002), ..TrainCfg::default() };
+    train::run(&mut st, Arc::clone(&data), &ft_cfg).unwrap();
+    let recovered = st.eval(x, y).unwrap();
+    assert!(
+        recovered.acc >= pruned.acc - 0.02,
+        "finetune made things worse: {} -> {}",
+        pruned.acc,
+        recovered.acc
+    );
+}
+
+#[test]
+fn platon_importance_pipeline() {
+    let Some(sess) = session() else { return };
+    let mut st = TrainState::new(&sess, "mlp_dense_train", 5).unwrap();
+    let data: Arc<dyn Dataset> = Arc::new(SynthVision::new(4, 10, 28, 28, 1));
+    // a few warmup steps so gradients are meaningful
+    for step in 0..5 {
+        let (x, y) = data.batch(Split::Train, step, 128);
+        st.step(x, y, 0.005).unwrap();
+    }
+    let dc = st.get("theta_c").unwrap().numel();
+    let mut platon = Platon::new(dc, 0.85, 0.95);
+    for step in 5..10 {
+        let (x, y) = data.batch(Split::Train, step, 128);
+        let imp = st.importance(x, y).unwrap();
+        platon.update(&imp);
+    }
+    let mask = platon.mask(0.9);
+    assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), (dc as f64 * 0.1).round() as usize);
+    // masked model still runs
+    st.set("mask", Tensor::from_f32(mask, &[dc]).unwrap()).unwrap();
+    let (x, y) = data.batch(Split::Val, 0, 128);
+    let out = st.eval(x, y).unwrap();
+    assert!(out.loss.is_finite());
+}
+
+#[test]
+fn lm_peft_adapters_improve_on_task() {
+    let Some(sess) = session() else { return };
+    use mcnc::data::MarkovLm;
+    // Base LM pretrained briefly on the base chain
+    let base_chain = MarkovLm::base(11, 128, 32);
+    let mut dense = TrainState::new(&sess, "lm_dense_train", 21).unwrap();
+    let base_data: Arc<dyn Dataset> = Arc::new(base_chain.clone());
+    let cfg = TrainCfg { steps: 30, batch: 16, schedule: LrSchedule::Const(0.003), ..TrainCfg::default() };
+    let hist = train::run(&mut dense, Arc::clone(&base_data), &cfg).unwrap();
+    assert!(hist.losses.last().unwrap() < &hist.losses[0]);
+
+    // PEFT on a shifted task: adapter training must beat the frozen base.
+    // (θ0 here is the init-law base, not the pretrained weights — both
+    // adapter and baseline see the same θ0, so the comparison is fair.)
+    let task = MarkovLm::task(&base_chain, 1, 0.8);
+    let task_data: Arc<dyn Dataset> = Arc::new(task);
+    let mut peft = TrainState::new(&sess, "lm_mcnclora8_train", 21).unwrap();
+    let (x, y) = task_data.batch(Split::Val, 0, 16);
+    let frozen = peft.eval(x.clone(), y.clone()).unwrap();
+    let cfg2 = TrainCfg { steps: 40, batch: 16, schedule: LrSchedule::Const(0.02), ..TrainCfg::default() };
+    train::run(&mut peft, Arc::clone(&task_data), &cfg2).unwrap();
+    let tuned = peft.eval(x, y).unwrap();
+    assert!(
+        tuned.loss < frozen.loss - 0.05,
+        "adapter did not adapt: {} -> {}",
+        frozen.loss,
+        tuned.loss
+    );
+}
