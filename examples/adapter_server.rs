@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
             mode: Mode::OnTheFly,
             cache_bytes: 64 << 20,
             seed: 1,
+            ..ServerCfg::default()
         };
         let server = Server::start(artifacts_dir(), cfg);
         let started = Instant::now();

@@ -15,6 +15,7 @@ const TAU: f64 = 10.0;
 const N_PTS: usize = 4096;
 
 fn coverage(gen: &Generator, l: f32) -> f64 {
+    // 4096 tiny chunks batched as [n, w] layer GEMMs by forward()
     let alpha = Stream::new(7).uniform_f32(N_PTS, -l, l);
     let pts = gen.forward(&alpha, &vec![1.0; N_PTS]);
     sphere::uniformity(&pts, 3, TAU, 11, 64)

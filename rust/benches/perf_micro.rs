@@ -15,20 +15,66 @@ use mcnc::util::prng::Stream;
 fn main() {
     let mut table = Table::new("perf micro", &["target", "metric", "value"]);
 
-    // --- native generator reconstruction ---
+    // --- native generator reconstruction: seed matvec path vs GEMM ---
     let cfg = GenCfg { k: 9, d: 5000, width: 256, depth: 3, ..GenCfg::default() };
     let n = 54usize;
     let gen = Generator::from_seed(cfg.clone(), 1);
     let alpha = Stream::new(2).normal_f32(n * cfg.k, 0.5);
     let beta = vec![1.0f32; n];
     let mut out = vec![0.0f32; n * cfg.d];
-    let s = time_it(3, 20, || gen.forward_into(&alpha, &beta, &mut out));
-    let params_per_sec = (n * cfg.d) as f64 / s.median();
-    let flops = (n * cfg.flops_per_chunk()) as f64 / s.median();
+    let rate = |s: &mcnc::util::bench::Stats| {
+        let params = (n * cfg.d) as f64 / s.median();
+        let flops = (n * cfg.flops_per_chunk()) as f64 / s.median();
+        (params, flops, format!("{} | {:.2}", fmt_si(params), flops / 1e9))
+    };
+
+    // (a) retained reference: per-chunk matvecs, single thread
+    let s_st = time_it(3, 20, || gen.forward_naive(&alpha, &beta, &mut out));
+    let (_, _, cell) = rate(&s_st);
     table.row(vec![
-        "native generator (mlp02 shape)".into(),
+        "native gen, naive matvec 1T (mlp02)".into(),
         "params/s | GFLOP/s".into(),
-        format!("{} | {:.2}", fmt_si(params_per_sec), flops / 1e9),
+        cell,
+    ]);
+
+    // (b) the seed hot path: naive matvecs + one OS-thread spawn per call
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let s_seed = time_it(3, 20, || {
+        let per = n.div_ceil(threads.min(n));
+        std::thread::scope(|scope| {
+            let mut rest = &mut out[..];
+            let mut start = 0usize;
+            while start < n {
+                let take = per.min(n - start);
+                let (head, tail) = rest.split_at_mut(take * cfg.d);
+                rest = tail;
+                let a = &alpha[start * cfg.k..(start + take) * cfg.k];
+                let b = &beta[start..start + take];
+                let g = &gen;
+                scope.spawn(move || g.forward_naive(a, b, head));
+                start += take;
+            }
+        });
+    });
+    let (seed_params, _, cell) = rate(&s_seed);
+    table.row(vec![
+        "native gen, seed path (spawn/call)".into(),
+        "params/s | GFLOP/s".into(),
+        cell,
+    ]);
+
+    // (c) blocked-GEMM engine on the persistent pool (the new hot path)
+    let s_gemm = time_it(3, 20, || gen.forward_into(&alpha, &beta, &mut out));
+    let (gemm_params, _, cell) = rate(&s_gemm);
+    table.row(vec![
+        "native gen, blocked GEMM + pool".into(),
+        "params/s | GFLOP/s".into(),
+        cell,
+    ]);
+    table.row(vec![
+        "native gen speedup vs seed path".into(),
+        "x".into(),
+        format!("{:.2}", gemm_params / seed_params),
     ]);
 
     // --- PJRT generator executable ---
@@ -105,4 +151,5 @@ fn main() {
 
     table.print();
     table.save_csv("perf_micro");
+    table.save_json("perf_micro");
 }

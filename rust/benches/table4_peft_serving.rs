@@ -59,6 +59,7 @@ fn main() {
             mode: Mode::OnTheFly,
             cache_bytes: 64 << 20,
             seed: 1,
+            ..ServerCfg::default()
         };
         let server = Server::start(mcnc::runtime::artifacts_dir(), cfg);
         let started = Instant::now();

@@ -1,7 +1,11 @@
 //! Native NOLA reconstruction (Koohpayegani et al. 2024): LoRA factors as
 //! linear combinations of m frozen random bases. The PJRT executables carry
 //! the same math in-graph; this mirror exists for FLOPs-vs-wallclock
-//! micro-benchmarks (Table 4's reconstruction-cost comparison) and tests.
+//! micro-benchmarks (Table 4's reconstruction-cost comparison), tests, and
+//! the serving engine's native Merged-mode fills. The heavy lifting runs on
+//! the same blocked-GEMM kernel as the MCNC generator (`mcnc::kernel`).
+
+use crate::mcnc::kernel;
 
 /// One LoRA target's dimensions.
 #[derive(Debug, Clone, Copy)]
@@ -14,16 +18,7 @@ pub struct TargetDims {
 pub fn combine(coef: &[f32], basis: &[f32], len: usize, out: &mut [f32]) {
     assert_eq!(basis.len(), coef.len() * len);
     assert_eq!(out.len(), len);
-    out.fill(0.0);
-    for (j, &c) in coef.iter().enumerate() {
-        if c == 0.0 {
-            continue;
-        }
-        let row = &basis[j * len..(j + 1) * len];
-        for (o, &b) in out.iter_mut().zip(row) {
-            *o += c * b;
-        }
-    }
+    kernel::gemv(coef, basis, coef.len(), len, out);
 }
 
 /// Full adapter reconstruction: per-target A = Σ cA_j·basisA_j and B
@@ -48,21 +43,12 @@ pub fn reconstruct_deltas(
         combine(&coef_b[l * m..(l + 1) * m], &basis_b[m * bo..m * (bo + blen)], blen, &mut fb);
         ao += alen;
         bo += blen;
-        // ΔW = A [a, r] @ B [r, b]
+        // ΔW = A [a, r] @ B [r, b] through the blocked GEMM; packing B costs
+        // r·b writes against the a·r·b-FLOP product, and the ascending-rank
+        // accumulation keeps results bit-identical to the naive loop
+        let pb = kernel::pack_b(&fb, rank, t.b);
         let mut dw = vec![0.0f32; t.a * t.b];
-        for i in 0..t.a {
-            for r in 0..rank {
-                let av = fa[i * rank + r];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &fb[r * t.b..(r + 1) * t.b];
-                let orow = &mut dw[i * t.b..(i + 1) * t.b];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
+        kernel::gemm(&fa, t.a, &pb, &mut dw);
         out.push(dw);
     }
     out

@@ -84,6 +84,9 @@ pub struct ServeStats {
     pub padded_rows: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Merged cold fills served by the native blocked-GEMM engine (the
+    /// remainder of `cache_misses` went through the PJRT recon executable).
+    pub native_fills: u64,
     pub recon_flops: u64,
     pub wall_secs: f64,
 }

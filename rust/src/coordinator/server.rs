@@ -25,10 +25,12 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::cache::LruCache;
 use crate::coordinator::metrics::ServeStats;
 use crate::coordinator::router::{Batch, BatchPolicy, Request, Router};
+use crate::mcnc::{kernel, GenCfg, Generator};
 use crate::runtime::init::init_inputs;
-use crate::runtime::manifest::Role;
+use crate::runtime::manifest::{Entry, Role};
 use crate::runtime::Session;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -46,6 +48,14 @@ pub struct ServerCfg {
     /// Merged-mode cache capacity in bytes.
     pub cache_bytes: usize,
     pub seed: u64,
+    /// Merged mode: fill cold tasks through the native blocked-GEMM
+    /// reconstruction engine instead of dispatching the `{kind}_recon`
+    /// PJRT executable. Skips a full session round-trip per cold task (and
+    /// is the only Merged path when built without the `pjrt` feature's
+    /// runtime). Off by default: native f32 summation order differs from
+    /// XLA's by ulps, so the strict OnTheFly≡Merged argmax-equality
+    /// guarantee only holds with the PJRT fill.
+    pub native_recon: bool,
 }
 
 impl Default for ServerCfg {
@@ -57,7 +67,154 @@ impl Default for ServerCfg {
             mode: Mode::OnTheFly,
             cache_bytes: 64 << 20,
             seed: 1,
+            native_recon: false,
         }
+    }
+}
+
+/// Per-target LoRA piece inside the flattened compressed vector — twin of
+/// `python/compile/methods.Registry.lora_dims`.
+#[derive(Debug, Clone, Copy)]
+struct LoraPiece {
+    /// Leaf offset into θ_c.
+    off: usize,
+    a: usize,
+    b: usize,
+    /// Offsets into the flattened A / B factor vectors.
+    ao: usize,
+    bo: usize,
+}
+
+#[derive(Debug, Clone)]
+struct LoraAssembly {
+    rank: usize,
+    scale: f32,
+    /// Dl = Da + Db, the generator's target vector length.
+    dl: usize,
+    da: usize,
+    /// Frozen A-random/B-zero base point (`lora0` static).
+    lora0: Vec<f32>,
+    pieces: Vec<LoraPiece>,
+}
+
+/// Native Merged-mode reconstruction: θ_c = θ0_c + Δ(α, β) computed with
+/// the blocked-GEMM generator engine, mirroring the `mcnc` / `mcnc_lora`
+/// reconstruct executables (`python/compile/methods.py`).
+struct NativeRecon {
+    gen: Generator,
+    theta0: Vec<f32>,
+    dc: usize,
+    alpha_ix: usize,
+    beta_ix: usize,
+    /// `Some` for mcnc_lora kinds (factor assembly); `None` for plain mcnc.
+    lora: Option<LoraAssembly>,
+}
+
+impl NativeRecon {
+    /// Inspect the predict entry's metadata + statics; `None` when the
+    /// adapter family has no native twin (e.g. plain LoRA / NOLA kinds).
+    fn build(entry: &Entry, statics: &[Tensor]) -> Option<NativeRecon> {
+        let cfg = GenCfg::from_json(entry.meta.get("gen")?).ok()?;
+        let static_specs: Vec<_> =
+            entry.inputs.iter().filter(|s| s.role == Role::Static).collect();
+        let stat = |name: &str| {
+            static_specs.iter().position(|s| s.name == name).map(|i| &statics[i])
+        };
+        let theta0 = stat("theta0_c")?.f32s().ok()?.to_vec();
+        let ws = (0..cfg.depth)
+            .map(|i| Some(stat(&format!("gw{i}"))?.f32s().ok()?.to_vec()))
+            .collect::<Option<Vec<_>>>()?;
+        let gen = Generator::with_weights(cfg, ws).ok()?;
+        let tr_specs: Vec<_> =
+            entry.inputs.iter().filter(|s| s.role == Role::Trainable).collect();
+        let alpha_ix = tr_specs.iter().position(|s| s.name == "alpha")?;
+        let beta_ix = tr_specs.iter().position(|s| s.name == "beta")?;
+        let reg = entry.registry().ok()?;
+        let dc = reg.dc;
+        if theta0.len() != dc {
+            return None;
+        }
+        let lora = if let Some(dl) = entry.meta.get("lora_dim").and_then(Json::as_usize) {
+            let rank = entry.meta.get("rank").and_then(Json::as_usize)?;
+            let scale = entry.meta.get("scale").and_then(Json::as_f64).unwrap_or(1.0) as f32;
+            let lora0 = stat("lora0")?.f32s().ok()?.to_vec();
+            let mut pieces = Vec::new();
+            let (mut ao, mut bo, mut off) = (0usize, 0usize, 0usize);
+            for leaf in reg.leaves.iter().filter(|l| l.compress) {
+                if let Some((a, b)) = leaf.lora {
+                    pieces.push(LoraPiece { off, a, b, ao, bo });
+                    ao += a * rank;
+                    bo += rank * b;
+                }
+                off += leaf.size();
+            }
+            if ao + bo != dl || off != dc || lora0.len() != dl {
+                return None;
+            }
+            Some(LoraAssembly { rank, scale, dl, da: ao, lora0, pieces })
+        } else if entry.meta.get("n_chunks").is_some() {
+            None // plain mcnc: the generator output is the θ_c delta itself
+        } else {
+            return None;
+        };
+        Some(NativeRecon { gen, theta0, dc, alpha_ix, beta_ix, lora })
+    }
+
+    fn reconstruct(&self, adapter: &[Tensor]) -> Result<Tensor> {
+        let alpha = adapter
+            .get(self.alpha_ix)
+            .ok_or_else(|| anyhow!("adapter missing alpha slot"))?
+            .f32s()?;
+        let beta = adapter
+            .get(self.beta_ix)
+            .ok_or_else(|| anyhow!("adapter missing beta slot"))?
+            .f32s()?;
+        // validate up front: install_adapter accepts arbitrary tensors, and
+        // a short alpha/beta must surface as Err, not a generator panic
+        let target = self.lora.as_ref().map(|l| l.dl).unwrap_or(self.dc);
+        let need = target.div_ceil(self.gen.cfg.d.max(1));
+        if alpha.len() < need * self.gen.cfg.k || beta.len() < need {
+            bail!(
+                "adapter alpha/beta ({}, {}) too small for {} chunks of k={}",
+                alpha.len(),
+                beta.len(),
+                need,
+                self.gen.cfg.k
+            );
+        }
+        let mut theta = self.theta0.clone();
+        match &self.lora {
+            None => {
+                let delta = self.gen.reconstruct_delta(alpha, beta, self.dc);
+                if delta.len() != self.dc {
+                    bail!("adapter generates {} of {} weights", delta.len(), self.dc);
+                }
+                for (t, d) in theta.iter_mut().zip(&delta) {
+                    *t += d;
+                }
+            }
+            Some(l) => {
+                let mut lv = self.gen.reconstruct_delta(alpha, beta, l.dl);
+                if lv.len() != l.dl {
+                    bail!("adapter generates {} of {} LoRA values", lv.len(), l.dl);
+                }
+                for (v, z) in lv.iter_mut().zip(&l.lora0) {
+                    *v += z;
+                }
+                let (a_flat, b_flat) = lv.split_at(l.da);
+                for p in &l.pieces {
+                    let fa = &a_flat[p.ao..p.ao + p.a * l.rank];
+                    let fb = &b_flat[p.bo..p.bo + l.rank * p.b];
+                    let pb = kernel::pack_b(fb, l.rank, p.b);
+                    let mut dw = vec![0.0f32; p.a * p.b];
+                    kernel::gemm(fa, p.a, &pb, &mut dw);
+                    for (t, d) in theta[p.off..p.off + p.a * p.b].iter_mut().zip(&dw) {
+                        *t += d * l.scale;
+                    }
+                }
+            }
+        }
+        Tensor::from_f32(theta, &[self.dc])
     }
 }
 
@@ -83,6 +240,9 @@ pub struct Engine {
     /// Merged mode: reconstructed full θ per task.
     merged_cache: LruCache<usize, Vec<Tensor>>,
     dense_statics: Vec<Tensor>,
+    /// Native GEMM reconstruction twin for Merged cold fills, when the
+    /// adapter family supports it (mcnc / mcnc_lora kinds).
+    native: Option<NativeRecon>,
     batch_size: usize,
     seq: usize,
     pub stats: ServeStats,
@@ -126,8 +286,16 @@ impl Engine {
         }
 
         let recon_flops_per_pass = entry.recon_flops() as u64;
+        // only pay the θ0/weight-copy + panel packing when the native fill
+        // path can actually be taken
+        let native = if cfg.mode == Mode::Merged && cfg.native_recon {
+            NativeRecon::build(&entry, &statics)
+        } else {
+            None
+        };
 
-        // merged-mode plumbing (requires the dense predict + recon paths)
+        // merged-mode plumbing: the dense predict path is always required;
+        // the PJRT recon executable only when native fills can't cover it
         let mut dense_statics = Vec::new();
         if cfg.mode == Mode::Merged {
             let dense = session.entry("lm_dense_predict")?.clone();
@@ -137,7 +305,9 @@ impl Engine {
                 .filter(|(s, _)| s.role == Role::Static)
                 .map(|(_, t)| t.clone().unwrap())
                 .collect();
-            session.entry(&format!("{}_recon", cfg.kind))?; // must exist
+            if !(cfg.native_recon && native.is_some()) {
+                session.entry(&format!("{}_recon", cfg.kind))?; // must exist
+            }
         }
 
         Ok(Engine {
@@ -147,6 +317,7 @@ impl Engine {
             adapters,
             merged_cache: LruCache::new(cfg.cache_bytes),
             dense_statics,
+            native,
             batch_size,
             seq,
             stats: ServeStats::default(),
@@ -206,11 +377,18 @@ impl Engine {
             }
             Mode::Merged => {
                 if self.merged_cache.get(&batch.task).is_none() {
-                    // cold task: reconstruct full weights through PJRT
-                    let recon = format!("{}_recon", self.cfg.kind);
-                    let mut rin = self.statics.clone();
-                    rin.extend(adapter.clone());
-                    let theta = self.session.run(&recon, &rin)?.remove(0);
+                    // cold task: reconstruct full weights — natively via
+                    // the blocked-GEMM engine when built (Engine::new gates
+                    // that on cfg.native_recon), else through the PJRT recon
+                    let theta = if let Some(nr) = &self.native {
+                        self.stats.native_fills += 1;
+                        nr.reconstruct(&adapter)?
+                    } else {
+                        let recon = format!("{}_recon", self.cfg.kind);
+                        let mut rin = self.statics.clone();
+                        rin.extend(adapter.clone());
+                        self.session.run(&recon, &rin)?.remove(0)
+                    };
                     self.stats.recon_flops += self.recon_flops_per_pass;
                     self.stats.cache_misses += 1;
                     // dense trainables = [theta_c, raw]; raw comes from the

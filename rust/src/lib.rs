@@ -10,6 +10,17 @@
 //!   compressed models through the PJRT CPU client. Python never runs on
 //!   the request path.
 
+// The `pjrt` feature swaps `runtime/xla_stub.rs` for the real `xla` crate,
+// whose dependency line is commented out in Cargo.toml (this workspace
+// builds offline). Fail fast with instructions instead of E0433 noise if
+// someone enables the feature (e.g. `--all-features`) without the dep.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature needs the `xla` crate: uncomment its dependency in \
+     Cargo.toml (network + libxla required), then delete this guard in \
+     rust/src/lib.rs"
+);
+
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

@@ -50,7 +50,7 @@ const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 re
   info    [--group G]            list artifact executables (+ meta)
   train   --exec NAME [--steps N --lr F --batch B --seed S --out CK --data synth|c10|c100|lm]
   eval    --ckpt FILE [--seed S]
-  serve   [--kind K --tasks N --rate HZ --secs S --merged BOOL --zipf S]
+  serve   [--kind K --tasks N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S]
   sphere  [--acts sine,sigmoid,relu --l 1,5,10,100 --width 256]
   config  --file cfg.toml        config-driven training job
 
@@ -177,6 +177,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         mode: if args.bool_or("merged", false) { Mode::Merged } else { Mode::OnTheFly },
         cache_bytes: args.usize_or("cache-mb", 64) << 20,
         seed: args.u64_or("seed", 1),
+        native_recon: args.bool_or("native-recon", false),
     };
     let rate = args.f32_or("rate", 200.0) as f64;
     let secs = args.f32_or("secs", 5.0) as f64;

@@ -5,8 +5,11 @@
 //! accounting. Weights come from the same SplitMix64 streams as the
 //! Python twin (`compile/genutil.py`), so a scalar seed fully determines φ.
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 
+use crate::mcnc::kernel::{self, PackedB};
 use crate::util::json::Json;
 use crate::util::prng::{tag, Stream};
 
@@ -145,17 +148,34 @@ impl GenCfg {
     }
 }
 
-/// A frozen generator instance: cfg + materialized weights.
+/// A frozen generator instance: cfg + materialized weights, plus the
+/// per-layer GEMM panels packed once at construction (`mcnc::kernel`).
 #[derive(Debug, Clone)]
 pub struct Generator {
     pub cfg: GenCfg,
     pub ws: Vec<Vec<f32>>, // row-major [fan_in, fan_out]
+    packed: Vec<PackedB>,
 }
+
+// Per-thread layer activations for the batched engine: two ping-pong
+// buffers sized n_rows × max(width, d), grown on demand and reused across
+// calls so the serving hot path never allocates.
+thread_local! {
+    static SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> = const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Raw output pointer that may cross the pool boundary; each worker writes
+/// a disjoint `[start·d, end·d)` row range, so the aliasing is sound.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 impl Generator {
     pub fn from_seed(cfg: GenCfg, seed: u64) -> Generator {
         let ws = cfg.make_weights(seed);
-        Generator { cfg, ws }
+        let packed = pack_layers(&cfg, &ws);
+        Generator { cfg, ws, packed }
     }
 
     pub fn with_weights(cfg: GenCfg, ws: Vec<Vec<f32>>) -> Result<Generator> {
@@ -168,7 +188,8 @@ impl Generator {
                 bail!("weight size {} != {}x{}", w.len(), a, b);
             }
         }
-        Ok(Generator { cfg, ws })
+        let packed = pack_layers(&cfg, &ws);
+        Ok(Generator { cfg, ws, packed })
     }
 
     /// φ for a batch: alpha [n, k] (row-major), beta [n] → out [n, d].
@@ -179,39 +200,104 @@ impl Generator {
         out
     }
 
-    /// Allocation-free variant for the serving hot path. Chunks are
-    /// embarrassingly parallel; for batches past a threshold the work is
-    /// split across threads over disjoint output slices (§Perf: ~1.2x on
-    /// the default shape — each thread re-reads the shared W3, so the win
-    /// is bandwidth-capped; see EXPERIMENTS.md §Perf).
+    /// Allocation-free variant for the serving hot path. The batch runs as
+    /// layer-level blocked GEMMs ([n,k]·[k,w] → act → … → [n,d]) split over
+    /// disjoint row blocks on the persistent `util::threadpool` pool (no
+    /// per-call thread spawn; packed weight panels are shared read-only, so
+    /// the old bandwidth cap on re-reading W_depth is gone — before/after
+    /// numbers live in EXPERIMENTS.md §Perf / `benches/perf_micro.rs`).
+    /// Chunks are independent, so any row split is bit-identical.
     pub fn forward_into(&self, alpha: &[f32], beta: &[f32], out: &mut [f32]) {
         let n = beta.len();
-        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-        // below ~4 chunks per thread the spawn cost dominates
-        if n >= 8 && threads > 1 {
-            let per = n.div_ceil(threads.min(n));
-            let k = self.cfg.k;
-            let d = self.cfg.d;
-            std::thread::scope(|scope| {
-                let mut rest = &mut out[..];
-                let mut start = 0usize;
-                while start < n {
-                    let take = per.min(n - start);
-                    let (head, tail) = rest.split_at_mut(take * d);
-                    rest = tail;
-                    let a = &alpha[start * k..(start + take) * k];
-                    let b = &beta[start..start + take];
-                    scope.spawn(move || self.forward_chunks(a, b, head));
-                    start += take;
-                }
-            });
-            return;
-        }
-        self.forward_chunks(alpha, beta, out);
+        let k = self.cfg.k;
+        let d = self.cfg.d;
+        assert_eq!(alpha.len(), n * k, "alpha shape mismatch");
+        assert_eq!(out.len(), n * d, "out shape mismatch");
+        // don't split below ~128k reconstructed FLOPs per block: dispatch
+        // latency would dominate (tiny generators, e.g. the Fig-2 S² ones,
+        // get large blocks; mlp02-sized ones split per chunk)
+        let min_rows = (131_072 / self.cfg.flops_per_chunk().max(1)).max(1);
+        let ptr = SendPtr(out.as_mut_ptr());
+        crate::util::threadpool::global().parallel_for(n, min_rows, &|s, e| {
+            let rows = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s * d), (e - s) * d) };
+            self.forward_chunks(&alpha[s * k..e * k], &beta[s..e], rows);
+        });
     }
 
-    /// Single-threaded kernel over a contiguous run of chunks.
+    /// Single-threaded batched engine over a contiguous run of chunks:
+    /// one blocked GEMM per layer, activations fused per element.
     fn forward_chunks(&self, alpha: &[f32], beta: &[f32], out: &mut [f32]) {
+        let cfg = &self.cfg;
+        let n = beta.len();
+        assert_eq!(alpha.len(), n * cfg.k, "alpha shape mismatch");
+        assert_eq!(out.len(), n * cfg.d, "out shape mismatch");
+        let shapes = cfg.layer_shapes();
+        let maxw = cfg.width.max(cfg.d);
+        SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            if buf.0.len() < n * maxw {
+                buf.0.resize(n * maxw, 0.0);
+                buf.1.resize(n * maxw, 0.0);
+            }
+            let (a, b) = &mut *buf;
+            let mut cur: &mut [f32] = &mut a[..n * maxw];
+            let mut nxt: &mut [f32] = &mut b[..n * maxw];
+
+            // layer 0: [n, k] -> [n, w0], input scaled by freq inside act
+            let (_, fo0) = shapes[0];
+            kernel::gemm(alpha, n, &self.packed[0], cur);
+            for v in cur[..n * fo0].iter_mut() {
+                *v = cfg.act.apply(cfg.freq * *v);
+            }
+            let mut width = fo0;
+            // hidden + output layers
+            for (li, &(fi, fo)) in shapes.iter().enumerate().skip(1) {
+                debug_assert_eq!(fi, width);
+                kernel::gemm(&cur[..n * fi], n, &self.packed[li], nxt);
+                let last = li == shapes.len() - 1;
+                if cfg.residual && !last {
+                    // hidden layers are width→width, so rows align
+                    for r in 0..n {
+                        let prev = &cur[r * width..r * width + fo];
+                        for (x, &p) in nxt[r * fo..r * fo + fo].iter_mut().zip(prev) {
+                            let mut v = cfg.act.apply(*x);
+                            v += p;
+                            *x = v;
+                        }
+                    }
+                } else {
+                    for v in nxt[..n * fo].iter_mut() {
+                        *v = cfg.act.apply(*v);
+                    }
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+                width = fo;
+            }
+            // normalize + β scale into the output rows (width == d here)
+            for i in 0..n {
+                let vrow = &cur[i * width..i * width + cfg.d];
+                let scale = if cfg.normalize {
+                    let nrm = vrow
+                        .iter()
+                        .map(|v| (*v as f64) * (*v as f64))
+                        .sum::<f64>()
+                        .sqrt() as f32;
+                    beta[i] / (nrm + 1e-8)
+                } else {
+                    beta[i]
+                };
+                for (o, v) in out[i * cfg.d..(i + 1) * cfg.d].iter_mut().zip(vrow) {
+                    *o = v * scale;
+                }
+            }
+        });
+    }
+
+    /// Reference implementation: one chunk at a time via naive matvecs —
+    /// the seed's original hot path, retained as the bit-exactness oracle
+    /// for the blocked-GEMM engine (see `tests/prop_generator_gemm.rs`)
+    /// and as the perf baseline in `benches/perf_micro.rs`.
+    pub fn forward_naive(&self, alpha: &[f32], beta: &[f32], out: &mut [f32]) {
         let cfg = &self.cfg;
         let n = beta.len();
         assert_eq!(alpha.len(), n * cfg.k, "alpha shape mismatch");
@@ -263,14 +349,29 @@ impl Generator {
     }
 
     /// Reconstruct a Dc-length flat delta (chunks concatenated, tail cut).
+    /// Only the ⌈dc/d⌉ chunks that contribute are generated — the seed
+    /// version built all n chunks and truncated, wasting a full generator
+    /// pass whenever the caller's dc ended before the last chunk.
     pub fn reconstruct_delta(&self, alpha: &[f32], beta: &[f32], dc: usize) -> Vec<f32> {
-        let mut full = self.forward(alpha, beta);
-        full.truncate(dc);
-        full
+        let d = self.cfg.d;
+        let k = self.cfg.k;
+        let need = dc.div_ceil(d).min(beta.len());
+        let mut out = vec![0.0f32; need * d];
+        self.forward_into(&alpha[..need * k], &beta[..need], &mut out);
+        out.truncate(dc.min(out.len()));
+        out
     }
 }
 
-/// out[..fo] = x[..fi] @ w[fi, fo] (row-major w).
+fn pack_layers(cfg: &GenCfg, ws: &[Vec<f32>]) -> Vec<PackedB> {
+    cfg.layer_shapes()
+        .iter()
+        .zip(ws)
+        .map(|(&(a, b), w)| kernel::pack_b(w, a, b))
+        .collect()
+}
+
+/// out[..fo] = x[..fi] @ w[fi, fo] (row-major w). Reference kernel only.
 #[inline]
 fn matvec_in(x: &[f32], w: &[f32], fi: usize, fo: usize, out: &mut [f32]) {
     out[..fo].fill(0.0);
@@ -370,6 +471,38 @@ mod tests {
     }
 
     #[test]
+    fn gemm_engine_matches_naive_reference() {
+        // odd batch sizes exercise the MR/NR edge tiles; every config knob
+        // is flipped at least once (the randomized sweep lives in
+        // tests/prop_generator_gemm.rs)
+        for (residual, normalize, depth, n) in
+            [(false, false, 3, 13), (true, false, 4, 7), (false, true, 2, 5), (true, true, 3, 1)]
+        {
+            let cfg = GenCfg {
+                k: 3,
+                d: 19,
+                width: 11,
+                depth,
+                residual,
+                normalize,
+                ..GenCfg::default()
+            };
+            let g = Generator::from_seed(cfg.clone(), 9);
+            let alpha: Vec<f32> = (0..n * 3).map(|i| 0.17 * (i as f32) - 1.0).collect();
+            let beta: Vec<f32> = (0..n).map(|i| 0.5 + 0.25 * i as f32).collect();
+            let fast = g.forward(&alpha, &beta);
+            let mut slow = vec![0.0f32; n * 19];
+            g.forward_naive(&alpha, &beta, &mut slow);
+            for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "res={residual} norm={normalize} depth={depth} n={n} [{i}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn reconstruct_truncates_tail() {
         let g = Generator::from_seed(tiny_cfg(), 6);
         let alpha = vec![0.1; 9]; // 3 chunks
@@ -378,6 +511,21 @@ mod tests {
         assert_eq!(d.len(), 20);
         let full = g.forward(&alpha, &beta);
         assert_eq!(&d[..], &full[..20]);
+    }
+
+    #[test]
+    fn reconstruct_skips_untouched_chunks() {
+        // dc = 9 needs ⌈9/8⌉ = 2 of the 3 chunks; the third must not
+        // change the result (and is not generated at all)
+        let g = Generator::from_seed(tiny_cfg(), 6);
+        let alpha = vec![0.1; 9];
+        let beta = vec![1.0; 3];
+        let d = g.reconstruct_delta(&alpha, &beta, 9);
+        let full = g.forward(&alpha, &beta);
+        assert_eq!(&d[..], &full[..9]);
+        // dc beyond the available chunks clamps instead of panicking
+        let all = g.reconstruct_delta(&alpha, &beta, 100);
+        assert_eq!(all.len(), 24);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Register-tiled, cache-blocked f32 GEMM — the native reconstruction
+//! micro-kernel behind `Generator::forward_into` and the NOLA baseline.
+//!
+//! Layout follows the classic GotoBLAS decomposition: B (the frozen layer
+//! weights, `[K, N]` row-major) is packed once per `Generator` into
+//! NR-wide column panels; the driver loops NC → MC → NR-panel → MR-tile and
+//! the micro-kernel keeps an `MR × NR` accumulator block in registers.
+//!
+//! **Reduction-order contract.** Every output element is accumulated over
+//! the *full* K dimension in ascending order, exactly like the per-chunk
+//! `matvec` reference (`Generator::forward_naive`). That is why there is no
+//! KC blocking: splitting K would reorder the f32 sums and break the
+//! bit-exactness the property tests pin (fan-in is at most `width`, ≤ ~1k
+//! floats per A-row, so the A panel rows fit L1 comfortably anyway). With
+//! ascending-K accumulation from a `+0.0` accumulator, skipping exact-zero
+//! terms (as the naive path does) cannot change any result bit, so the two
+//! paths agree bit-for-bit — see `rust/tests/prop_generator_gemm.rs`.
+
+/// Micro-tile rows (batch/chunk dimension).
+pub const MR: usize = 4;
+/// Micro-tile columns (output-feature dimension); packing granularity.
+pub const NR: usize = 8;
+/// Row block: A panel of MC×K f32 stays in L2 while a B panel streams L1.
+const MC: usize = 64;
+/// Column block, a multiple of NR.
+const NC: usize = 512;
+
+/// `B [K, N]` packed into ⌈N/NR⌉ panels of `K × NR` (k-major inside a
+/// panel); the last panel is zero-padded to NR columns.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    panels: Vec<f32>,
+}
+
+impl PackedB {
+    #[inline]
+    fn panel(&self, idx: usize) -> &[f32] {
+        &self.panels[idx * self.k * NR..(idx + 1) * self.k * NR]
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.panels.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Pack row-major `b [k, n]` into NR-wide column panels.
+pub fn pack_b(b: &[f32], k: usize, n: usize) -> PackedB {
+    assert!(b.len() >= k * n, "B smaller than {k}x{n}");
+    let np = n.div_ceil(NR.max(1)).max(1);
+    let mut panels = vec![0.0f32; np * k * NR];
+    for p in 0..np {
+        let j0 = p * NR;
+        let w = NR.min(n - j0.min(n));
+        let dst = &mut panels[p * k * NR..(p + 1) * k * NR];
+        for kk in 0..k {
+            dst[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+        }
+    }
+    PackedB { k, n, panels }
+}
+
+/// `C[M, N] = A[M, K] · B` (C overwritten, all row-major). Bit-identical to
+/// the ascending-K naive product per the reduction-order contract above.
+pub fn gemm(a: &[f32], m: usize, b: &PackedB, c: &mut [f32]) {
+    let (k, n) = (b.k, b.n);
+    assert!(a.len() >= m * k, "A smaller than {m}x{k}");
+    assert!(c.len() >= m * n, "C smaller than {m}x{n}");
+    if m == 0 || n == 0 {
+        return;
+    }
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for ic in (0..m).step_by(MC) {
+            let mc = MC.min(m - ic);
+            for jr in (0..nc).step_by(NR) {
+                let j = jc + jr;
+                let nr = NR.min(n - j);
+                let panel = b.panel(j / NR);
+                for ir in (0..mc).step_by(MR) {
+                    let i = ic + ir;
+                    let mr = MR.min(m - i);
+                    micro(&a[i * k..], k, mr, panel, &mut c[i * n + j..], n, nr);
+                }
+            }
+        }
+    }
+}
+
+/// One MR×NR tile: `c[r, j] = Σ_p a[r, p] · panel[p, j]`, p ascending.
+/// Padded panel columns are computed but never stored.
+#[inline]
+fn micro(a: &[f32], k: usize, mr: usize, panel: &[f32], c: &mut [f32], ldc: usize, nr: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    if mr == MR {
+        for p in 0..k {
+            let brow: &[f32; NR] = panel[p * NR..p * NR + NR].try_into().unwrap();
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = a[r * k + p];
+                for (x, &bv) in accr.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+    } else {
+        for p in 0..k {
+            let brow: &[f32; NR] = panel[p * NR..p * NR + NR].try_into().unwrap();
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let av = a[r * k + p];
+                for (x, &bv) in accr.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        c[r * ldc..r * ldc + nr].copy_from_slice(&accr[..nr]);
+    }
+}
+
+/// Row-streaming GEMV: `out[N] = x[K] · b[K, N]` (row-major, unpacked).
+/// The M = 1 shape NOLA's basis combination needs — packing would double
+/// the memory traffic, so B streams directly; per-output accumulation is
+/// still ascending-K.
+pub fn gemv(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    assert!(b.len() >= k * n, "basis smaller than {k}x{n}");
+    assert!(out.len() >= n, "out smaller than {n}");
+    out[..n].fill(0.0);
+    for (p, &xv) in x[..k].iter().enumerate() {
+        let row = &b[p * n..(p + 1) * n];
+        for (o, &bv) in out[..n].iter_mut().zip(row) {
+            *o += xv * bv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream;
+
+    /// Ascending-K reference product (the contract both paths honor).
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_bit_identical_to_naive_across_shapes() {
+        // edge coverage: m {<,=,>} MR multiples, n {<,=,>} NR multiples,
+        // plus blocks larger than MC/NC.
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 9, 8), (4, 16, 7), (5, 13, 17), (54, 9, 256), (70, 33, 523)]
+        {
+            let a = Stream::new(1).uniform_f32(m * k, -1.0, 1.0);
+            let b = Stream::new(2).uniform_f32(k * n, -0.5, 0.5);
+            let pb = pack_b(&b, k, n);
+            let mut c = vec![f32::NAN; m * n];
+            gemm(&a, m, &pb, &mut c);
+            let want = naive(&a, &b, m, k, n);
+            for (i, (&got, &w)) in c.iter().zip(&want).enumerate() {
+                assert!(
+                    got.to_bits() == w.to_bits(),
+                    "({m},{k},{n})[{i}]: {got} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_with_exact_zero_inputs_matches_skip_reference() {
+        // the naive matvec path skips x == 0 terms; ascending-K accumulation
+        // from +0.0 must agree bit-for-bit anyway.
+        let (m, k, n) = (6, 10, 12);
+        let mut a = Stream::new(3).uniform_f32(m * k, -1.0, 1.0);
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let b = Stream::new(4).uniform_f32(k * n, -1.0, 1.0);
+        let mut skip = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    skip[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        gemm(&a, m, &pack_b(&b, k, n), &mut c);
+        assert!(c.iter().zip(&skip).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn gemv_matches_naive_row() {
+        let (k, n) = (7, 29);
+        let x = Stream::new(5).uniform_f32(k, -2.0, 2.0);
+        let b = Stream::new(6).uniform_f32(k * n, -1.0, 1.0);
+        let mut out = vec![f32::NAN; n];
+        gemv(&x, &b, k, n, &mut out);
+        let want = naive(&x, &b, 1, k, n);
+        assert!(out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn pack_pads_last_panel_with_zeros() {
+        let (k, n) = (3, NR + 2); // one full panel + a 2-wide tail
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 + 1.0).collect();
+        let pb = pack_b(&b, k, n);
+        assert_eq!(pb.size_bytes(), 2 * k * NR * 4);
+        let tail = pb.panel(1);
+        for kk in 0..k {
+            assert_eq!(tail[kk * NR], b[kk * n + NR]);
+            assert_eq!(tail[kk * NR + 1], b[kk * n + NR + 1]);
+            assert!(tail[kk * NR + 2..(kk + 1) * NR].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_safe() {
+        let pb = pack_b(&[], 0, 0);
+        gemm(&[], 0, &pb, &mut []);
+        let pb = pack_b(&[1.0, 2.0], 2, 1);
+        let mut c = [0.0f32];
+        gemm(&[3.0, 4.0], 1, &pb, &mut c);
+        assert_eq!(c[0], 3.0 * 1.0 + 4.0 * 2.0);
+    }
+}

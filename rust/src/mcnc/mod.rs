@@ -1,8 +1,10 @@
 //! The paper's core machinery, native side: the frozen random generator φ
-//! (mirror of the Pallas kernel) and the chunk-partition math.
+//! (mirror of the Pallas kernel), the blocked-GEMM reconstruction kernel
+//! behind it, and the chunk-partition math.
 
 pub mod chunker;
 pub mod generator;
+pub mod kernel;
 
 pub use chunker::ChunkSpec;
 pub use generator::{Act, GenCfg, Generator};

@@ -7,6 +7,8 @@
 pub mod init;
 pub mod manifest;
 pub mod session;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_stub;
 
 pub use manifest::{artifacts_dir, Entry, IoSpec, Manifest, RegistryMeta, Role};
 pub use session::Session;

@@ -16,6 +16,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::tensor::{Data, Tensor};
 use crate::util::json::Json;
 
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 use super::manifest::{Entry, Manifest};
 
 pub struct Session {
@@ -245,7 +248,9 @@ fn bytemuck_i32(v: &[i32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
-#[cfg(test)]
+// Literal round-trips need a real XLA; without `pjrt` the stub errors by
+// design, so these tests only build when the feature is on.
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::runtime::manifest::artifacts_dir;

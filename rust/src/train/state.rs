@@ -8,6 +8,9 @@
 
 use anyhow::{anyhow, bail, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::xla_stub as xla;
+
 use crate::runtime::init::init_inputs;
 use crate::runtime::manifest::{Entry, Role};
 use crate::runtime::session::tensor_to_literal;

@@ -150,6 +150,33 @@ impl Table {
             println!("[bench] wrote {}", path.display());
         }
     }
+
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{self, Json};
+        let cols = Json::Arr(self.columns.iter().map(|c| Json::str(c.clone())).collect());
+        let rows = Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| Json::Arr(r.iter().map(|c| Json::str(c.clone())).collect()))
+                .collect(),
+        );
+        json::to_string(&Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("columns", cols),
+            ("rows", rows),
+        ]))
+    }
+
+    /// Machine-readable bench trajectory: BENCH_<slug>.json at the repo
+    /// root, so successive PRs can diff perf without parsing stdout/CSV.
+    pub fn save_json(&self, slug: &str) {
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{slug}.json"));
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => println!("[bench] wrote {}", path.display()),
+            Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+        }
+    }
 }
 
 /// Env-tunable step counts so quick CI runs and full reproductions share one
@@ -202,6 +229,17 @@ mod tests {
         t.row(vec!["1".into(), "x".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,x\n");
         t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    fn table_json_roundtrips() {
+        let mut t = Table::new("perf", &["target", "value"]);
+        t.row(vec!["gen \"fast\"".into(), "1.5M".into()]);
+        let j = crate::util::json::parse(&t.to_json()).unwrap();
+        assert_eq!(j.get("title").unwrap().as_str().unwrap(), "perf");
+        assert_eq!(j.get("columns").unwrap().as_arr().unwrap().len(), 2);
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].as_arr().unwrap()[0].as_str().unwrap(), "gen \"fast\"");
     }
 
     #[test]

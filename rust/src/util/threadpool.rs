@@ -1,9 +1,26 @@
 //! Fixed-size thread pool over std::sync::mpsc (in-tree substrate; no tokio
-//! offline). Used by the coordinator's server loop and the data prefetcher.
+//! offline), plus a lazily-initialized process-wide pool with a scoped
+//! `parallel_for` — the substrate under the generator's blocked-GEMM
+//! reconstruction hot path (no per-call thread spawns).
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide pool, built on first use with one worker per core
+/// (`MCNC_THREADS` overrides the size).
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| {
+        let n = std::env::var("MCNC_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n: &usize| n > 0)
+            .unwrap_or_else(|| thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+        ThreadPool::new(n)
+    })
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -67,6 +84,61 @@ impl ThreadPool {
         out.into_iter().map(|o| o.expect("worker panicked")).collect()
     }
 
+    /// Scoped data-parallel loop: split `[0, n)` into contiguous blocks of
+    /// at least `min_block` items (at most one block per worker), run
+    /// `f(start, end)` on the pool, and return once every block completes.
+    /// Degenerates to an inline call when one block suffices, so callers
+    /// can use it unconditionally on tiny inputs.
+    ///
+    /// Blocks until completion, which is what makes the lifetime erasure
+    /// below sound: no worker can touch `f` (or anything it borrows) after
+    /// this function returns.
+    pub fn parallel_for(&self, n: usize, min_block: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let blocks = (n / min_block.max(1)).clamp(1, self.len().max(1));
+        if blocks <= 1 {
+            f(0, n);
+            return;
+        }
+        let per = n.div_ceil(blocks);
+        // SAFETY: jobs only run while this call blocks on the completion
+        // channel, so extending the borrow to 'static never outlives `f`.
+        let f_static: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        // a panic in `f` is caught on the worker (keeping the pool intact)
+        // and resumed on the caller with its original payload
+        let (tx, rx) = mpsc::channel::<std::thread::Result<()>>();
+        let mut sent = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + per).min(n);
+            let tx = tx.clone();
+            self.execute(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f_static(start, end)
+                }));
+                let _ = tx.send(r);
+            });
+            sent += 1;
+            start = end;
+        }
+        drop(tx);
+        let mut done = 0usize;
+        let mut first_panic = None;
+        for r in rx {
+            done += 1;
+            if let Err(p) = r {
+                first_panic.get_or_insert(p);
+            }
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+        assert_eq!(done, sent, "parallel_for: lost a completion signal");
+    }
+
     pub fn len(&self) -> usize {
         self.workers.len()
     }
@@ -121,5 +193,80 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(20)));
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ThreadPool::new(4);
+        for n in [0usize, 1, 7, 64, 100] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for(n, 1, &|s, e| {
+                assert!(s < e && e <= n);
+                for h in &hits[s..e] {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_respects_min_block_inline() {
+        let pool = ThreadPool::new(4);
+        // one block: must run inline on the calling thread
+        let me = std::thread::current().id();
+        let ran = AtomicUsize::new(0);
+        pool.parallel_for(5, 100, &|s, e| {
+            assert_eq!((s, e), (0, 5));
+            assert_eq!(std::thread::current().id(), me);
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallel_for_borrows_caller_state() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<usize> = (0..1000).collect();
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(data.len(), 10, &|s, e| {
+            let part: usize = data[s..e].iter().sum();
+            sum.fetch_add(part, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn parallel_for_propagates_panics_and_keeps_workers() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(8, 1, &|s, _| {
+                if s == 0 {
+                    panic!("boom in block");
+                }
+            });
+        }));
+        let payload = caught.unwrap_err();
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom in block", "original payload must survive");
+        // the pool must still be fully operational afterwards
+        let total = AtomicUsize::new(0);
+        pool.parallel_for(16, 1, &|s, e| {
+            total.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_parallelizes() {
+        let a = global() as *const ThreadPool;
+        let b = global() as *const ThreadPool;
+        assert_eq!(a, b);
+        assert!(!global().is_empty());
+        let total = AtomicUsize::new(0);
+        global().parallel_for(128, 1, &|s, e| {
+            total.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 128);
     }
 }

@@ -99,6 +99,44 @@ fn merged_mode_agrees_with_on_the_fly() {
 }
 
 #[test]
+fn merged_native_recon_fills_cold_tasks() {
+    if !ready() {
+        return;
+    }
+    // cold tasks filled by the native blocked-GEMM engine (no PJRT recon
+    // dispatch); warm traffic must hit the cache exactly as before
+    let base = ServerCfg {
+        kind: "lm_mcnclora8".into(),
+        n_tasks: 2,
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(1) },
+        mode: Mode::OnTheFly,
+        ..ServerCfg::default()
+    };
+    let mut native = base.clone();
+    native.mode = Mode::Merged;
+    native.native_recon = true;
+    let (fly, _) = run_requests(base, 48, 2);
+    let (resps, stats) = run_requests(native, 48, 2);
+    assert_eq!(resps.len(), 48);
+    assert_eq!(
+        stats.native_fills, stats.cache_misses,
+        "every cold fill should be native for an mcnc_lora kind"
+    );
+    assert!(stats.native_fills >= 2, "both tasks start cold");
+    assert!(stats.cache_hits > 0);
+    assert!(resps.iter().all(|r| (0..128).contains(&r.2)));
+    // native θ differs from the in-graph reconstruction only by f32
+    // summation order (ulps), so argmaxes must agree except on rare
+    // near-ties; a wrong LoRA assembly would drop agreement to ~1/|V|
+    let agree = fly.iter().zip(&resps).filter(|(a, b)| a.2 == b.2).count();
+    assert!(
+        agree * 10 >= resps.len() * 9,
+        "native recon diverges from OnTheFly: {agree}/{} agree",
+        resps.len()
+    );
+}
+
+#[test]
 fn different_adapters_give_different_predictions() {
     if !ready() {
         return;

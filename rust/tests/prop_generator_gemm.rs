@@ -1,0 +1,130 @@
+//! Randomized bit-exactness properties for the blocked-GEMM reconstruction
+//! engine (`mcnc::kernel`): the batched `Generator::forward` must agree
+//! bit-for-bit with the retained per-chunk matvec reference
+//! (`forward_naive`) across the whole config space, and the NOLA
+//! reconstruction must agree with a naive triple loop. This is the
+//! contract that lets the serving engine swap kernels without revalidating
+//! any downstream numerics.
+
+use mcnc::baselines::nola::{reconstruct_deltas, TargetDims};
+use mcnc::mcnc::{Act, GenCfg, Generator};
+use mcnc::prop_assert;
+use mcnc::util::prop::run_prop;
+
+const ACTS: [Act; 6] =
+    [Act::Sine, Act::Sigmoid, Act::Relu, Act::LeakyRelu, Act::Elu, Act::Linear];
+
+#[test]
+fn blocked_gemm_forward_bit_identical_to_naive() {
+    run_prop("gemm_vs_naive_forward", 60, |g| {
+        let cfg = GenCfg {
+            k: g.usize(1, 16),
+            d: g.usize(1, 200),
+            width: g.usize(2, 48),
+            depth: g.usize(2, 4),
+            act: *g.pick(&ACTS),
+            residual: g.bool(),
+            normalize: g.bool(),
+            freq: g.f32(0.5, 6.0),
+            ..GenCfg::default()
+        };
+        let n = g.usize(1, 33); // crosses the MR=4 tile edges
+        let seed = g.usize(0, 1 << 20) as u64;
+        let gen = Generator::from_seed(cfg.clone(), seed);
+        let alpha = g.vec_f32(n * cfg.k, -2.0, 2.0);
+        let beta = g.vec_f32(n, -1.5, 1.5);
+
+        let fast = gen.forward(&alpha, &beta);
+        let mut slow = vec![0.0f32; n * cfg.d];
+        gen.forward_naive(&alpha, &beta, &mut slow);
+        for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "cfg {cfg:?} n={n} out[{i}]: gemm {a:e} vs naive {b:e}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reconstruct_delta_is_a_forward_prefix() {
+    run_prop("reconstruct_prefix", 40, |g| {
+        let cfg = GenCfg {
+            k: g.usize(1, 8),
+            d: g.usize(1, 64),
+            width: g.usize(2, 16),
+            depth: 3,
+            ..GenCfg::default()
+        };
+        let n = g.usize(1, 9);
+        let dc = g.usize(1, n * cfg.d);
+        let gen = Generator::from_seed(cfg.clone(), 7);
+        let alpha = g.vec_f32(n * cfg.k, -1.0, 1.0);
+        let beta = g.vec_f32(n, -1.0, 1.0);
+        let full = gen.forward(&alpha, &beta);
+        let delta = gen.reconstruct_delta(&alpha, &beta, dc);
+        prop_assert!(delta.len() == dc, "len {} != dc {dc}", delta.len());
+        for (i, (a, b)) in delta.iter().zip(&full).enumerate() {
+            prop_assert!(a.to_bits() == b.to_bits(), "delta[{i}] {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nola_gemm_matches_naive_triple_loop() {
+    run_prop("nola_gemm_vs_naive", 40, |g| {
+        let n_targets = g.usize(1, 3);
+        let rank = g.usize(1, 6);
+        let m = g.usize(1, 5);
+        let dims: Vec<TargetDims> = (0..n_targets)
+            .map(|_| TargetDims { a: g.usize(1, 12), b: g.usize(1, 19) })
+            .collect();
+        let na: usize = dims.iter().map(|t| t.a * rank).sum();
+        let nb: usize = dims.iter().map(|t| rank * t.b).sum();
+        let coef_a = g.vec_f32(n_targets * m, -1.0, 1.0);
+        let coef_b = g.vec_f32(n_targets * m, -1.0, 1.0);
+        let basis_a = g.vec_f32(m * na, -1.0, 1.0);
+        let basis_b = g.vec_f32(m * nb, -1.0, 1.0);
+
+        let got = reconstruct_deltas(&dims, rank, &coef_a, &coef_b, &basis_a, &basis_b, m);
+
+        // naive reference: ascending-index accumulation everywhere
+        let (mut ao, mut bo) = (0usize, 0usize);
+        for (l, t) in dims.iter().enumerate() {
+            let alen = t.a * rank;
+            let blen = rank * t.b;
+            let mut fa = vec![0.0f32; alen];
+            let mut fb = vec![0.0f32; blen];
+            for j in 0..m {
+                let ca = coef_a[l * m + j];
+                let cb = coef_b[l * m + j];
+                for (x, &v) in fa.iter_mut().zip(&basis_a[m * ao + j * alen..]) {
+                    *x += ca * v;
+                }
+                for (x, &v) in fb.iter_mut().zip(&basis_b[m * bo + j * blen..]) {
+                    *x += cb * v;
+                }
+            }
+            let mut dw = vec![0.0f32; t.a * t.b];
+            for i in 0..t.a {
+                for r in 0..rank {
+                    let av = fa[i * rank + r];
+                    for j in 0..t.b {
+                        dw[i * t.b + j] += av * fb[r * t.b + j];
+                    }
+                }
+            }
+            for (i, (a, b)) in got[l].iter().zip(&dw).enumerate() {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "target {l} dw[{i}]: {a} vs {b}"
+                );
+            }
+            ao += alen;
+            bo += blen;
+        }
+        Ok(())
+    });
+}
