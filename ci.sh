@@ -16,4 +16,7 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== serving coordinator (mock-engine tests; no artifacts needed) =="
+cargo test -q --test integration_server
+
 echo "CI OK"

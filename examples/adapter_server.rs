@@ -1,13 +1,13 @@
 //! Multi-task adapter serving (the paper's Table-4 scenario): N tasks, each
-//! with its own compressed adapter, served under an open-loop Zipf workload.
-//! Compares MCNC-LoRA vs NOLA vs LoRA on throughput / latency / on-the-fly
-//! reconstruction cost.
+//! with its own compressed adapter, served under an open-loop Zipf workload
+//! by a sharded engine coordinator. Compares MCNC-LoRA vs NOLA vs LoRA on
+//! throughput / latency / on-the-fly reconstruction cost.
 //!
-//!     cargo run --release --example adapter_server -- [--rate 100 --secs 3]
+//!     cargo run --release --example adapter_server -- [--rate 100 --secs 3 --shards 2]
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use mcnc::coordinator::workload::{open_loop, request_tokens};
+use mcnc::coordinator::workload::{open_loop, replay};
 use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg};
 use mcnc::data::MarkovLm;
 use mcnc::runtime::artifacts_dir;
@@ -19,20 +19,29 @@ fn main() -> anyhow::Result<()> {
     let rate = args.f32_or("rate", 100.0) as f64;
     let secs = args.f32_or("secs", 3.0) as f64;
     let n_tasks = args.usize_or("tasks", 8);
+    let n_shards = args.usize_or("shards", 1);
 
     let lm = MarkovLm::base(1, 128, 32);
     let schedule = open_loop(7, rate, Duration::from_secs_f64(secs), n_tasks, 1.0);
-    println!("{} requests over {:.0}s, {} tasks (zipf 1.0)\n", schedule.len(), secs, n_tasks);
+    println!(
+        "{} requests over {:.0}s, {} tasks (zipf 1.0), {} shard(s)\n",
+        schedule.len(),
+        secs,
+        n_tasks,
+        n_shards
+    );
 
     let mut table = Table::new(
         "Adapter serving (Table 4 analog)",
-        &["method", "answered", "throughput req/s", "p50", "p99", "recon GFLOPs"],
+        &["method", "ok", "rejected/failed", "throughput req/s", "p50", "p99", "queue p99",
+          "recon GFLOPs"],
     );
 
     for kind in ["lm_lora8", "lm_nola8", "lm_mcnclora8"] {
         let cfg = ServerCfg {
             kind: kind.into(),
             n_tasks,
+            n_shards,
             policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(5) },
             mode: Mode::OnTheFly,
             cache_bytes: 64 << 20,
@@ -40,23 +49,16 @@ fn main() -> anyhow::Result<()> {
             ..ServerCfg::default()
         };
         let server = Server::start(artifacts_dir(), cfg);
-        let started = Instant::now();
-        let mut rxs = Vec::with_capacity(schedule.len());
-        for (i, arr) in schedule.iter().enumerate() {
-            if let Some(wait) = arr.at.checked_sub(started.elapsed()) {
-                std::thread::sleep(wait);
-            }
-            rxs.push(server.submit(arr.task, request_tokens(&lm, 9, i as u64)));
-        }
-        let answered =
-            rxs.into_iter().filter(|rx| rx.recv_timeout(Duration::from_secs(120)).is_ok()).count();
+        let rep = replay(&server, &lm, 9, &schedule);
         let stats = server.stop()?;
         table.row(vec![
             kind.into(),
-            format!("{answered}/{}", schedule.len()),
+            format!("{}/{}", rep.ok, schedule.len()),
+            format!("{}/{}", rep.rejected, rep.failed),
             format!("{:.1}", stats.throughput()),
             format!("{:?}", stats.latency.percentile(50.0)),
             format!("{:?}", stats.latency.percentile(99.0)),
+            format!("{:?}", stats.queue_wait.percentile(99.0)),
             format!("{:.3}", stats.recon_flops as f64 / 1e9),
         ]);
     }

@@ -1,13 +1,16 @@
 //! Table 4: instruction-finetuning + serving — LoRA vs NOLA vs MCNC on the
 //! LM analog. Reports trainable params, task quality (train/val loss +
-//! next-token acc, the MMLU stand-in), serving throughput under a
-//! multi-task workload, and on-the-fly reconstruction GFLOPs (measured
-//! here + the paper's LLaMA-shape numbers from the analytic model).
+//! next-token acc, the MMLU stand-in), serving throughput + queue wait
+//! under a multi-task workload, and on-the-fly reconstruction GFLOPs
+//! (measured here + the paper's LLaMA-shape numbers from the analytic
+//! model). A second table sweeps the coordinator's shard count
+//! (n_shards ∈ {1, 2, 4}) on the MCNC kind and writes the scaling
+//! trajectory to `BENCH_table4_serving.json`.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use mcnc::coordinator::workload::{open_loop, request_tokens};
+use mcnc::coordinator::workload::{open_loop, replay};
 use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg};
 use mcnc::data::{Dataset, MarkovLm, Split};
 use mcnc::exp::{steps_lm, Ctx};
@@ -25,7 +28,7 @@ fn main() {
     let mut table = Table::new(
         "Table 4 — PEFT quality + serving (LM analog of LLaMA-2)",
         &["method", "trainable", "task acc", "train loss", "val loss",
-          "throughput req/s", "recon GFLOPs/pass"],
+          "throughput req/s", "queue p50/p99", "recon GFLOPs/pass"],
     );
 
     // serving workload shared across methods
@@ -62,17 +65,8 @@ fn main() {
             ..ServerCfg::default()
         };
         let server = Server::start(mcnc::runtime::artifacts_dir(), cfg);
-        let started = Instant::now();
-        let mut rxs = Vec::new();
-        for (i, arr) in schedule.iter().enumerate() {
-            if let Some(wait) = arr.at.checked_sub(started.elapsed()) {
-                std::thread::sleep(wait);
-            }
-            rxs.push(server.submit(arr.task, request_tokens(&base_chain, 9, i as u64)));
-        }
-        for rx in rxs {
-            let _ = rx.recv_timeout(Duration::from_secs(120));
-        }
+        let rep = replay(&server, &base_chain, 9, &schedule);
+        assert_eq!(rep.dropped, 0, "{kind}: receivers dropped without a response");
         let stats = server.stop().unwrap();
 
         let entry = ctx.session.entry(&format!("{kind}_predict")).unwrap();
@@ -83,11 +77,52 @@ fn main() {
             format!("{train_loss:.3}"),
             format!("{:.3}", ev.loss),
             format!("{:.1}", stats.throughput()),
+            format!(
+                "{:?}/{:?}",
+                stats.queue_wait.percentile(50.0),
+                stats.queue_wait.percentile(99.0)
+            ),
             format!("{:.4}", entry.recon_flops() as f64 / 1e9),
         ]);
     }
     table.print();
     table.save_csv("table4_peft_serving");
+
+    // --- shard-scaling sweep: same workload, N engine shards ---
+    let mut sweep = Table::new(
+        "Table 4b — coordinator shard scaling (lm_mcnclora8, OnTheFly)",
+        &["n_shards", "ok", "rejected", "errors", "throughput req/s", "p50", "p99",
+          "queue p50", "queue p99"],
+    );
+    for n_shards in [1usize, 2, 4] {
+        let cfg = ServerCfg {
+            kind: "lm_mcnclora8".into(),
+            n_tasks,
+            n_shards,
+            policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(5) },
+            mode: Mode::OnTheFly,
+            cache_bytes: 64 << 20,
+            seed: 1,
+            ..ServerCfg::default()
+        };
+        let server = Server::start(mcnc::runtime::artifacts_dir(), cfg);
+        let rep = replay(&server, &base_chain, 9, &schedule);
+        let stats = server.stop().unwrap();
+        sweep.row(vec![
+            n_shards.to_string(),
+            format!("{}/{}", rep.ok, schedule.len()),
+            stats.rejected.to_string(),
+            stats.errors.to_string(),
+            format!("{:.1}", stats.throughput()),
+            format!("{:?}", stats.latency.percentile(50.0)),
+            format!("{:?}", stats.latency.percentile(99.0)),
+            format!("{:?}", stats.queue_wait.percentile(50.0)),
+            format!("{:?}", stats.queue_wait.percentile(99.0)),
+        ]);
+    }
+    sweep.print();
+    sweep.save_csv("table4_shard_scaling");
+    sweep.save_json("table4_serving");
 
     // paper's A.6 numbers from the analytic FLOPs model
     println!("\nAppendix A.6 (paper shapes, analytic):");
@@ -99,5 +134,6 @@ fn main() {
              flops::paper_nola_13b() / flops::paper_mcnc_13b());
     println!("\npaper shape: MCNC ≈ NOLA quality at equal params, higher serving \
               throughput from cheaper on-the-fly reconstruction; LoRA needs 10-100x \
-              more trainable params.");
+              more trainable params. Shards scale throughput until the XLA CPU \
+              executor saturates; queue wait is the backpressure signal.");
 }

@@ -99,4 +99,21 @@ fn main() {
         "CPU-measured rows above are expansion-bound at this model scale; \
          the bytes-moved ratio (the transferable quantity) matches the paper's 100x."
     );
+
+    // Sharded-serving corollary (the coordinator's n_shards sweep): every
+    // engine shard stages its own replica of the model statics, so the
+    // bytes staged grow ×N for a dense ship but stay tiny when each shard
+    // ships (α, β) and expands locally — the same cheap-reconstruction
+    // argument, multiplied by the shard count.
+    println!("\nshard replication (ViT-S @100x shapes, bytes staged per replica set):");
+    for n_shards in [1usize, 2, 4] {
+        let dense = dense_mb * n_shards as f64;
+        let comp = dense_mb / 100.0 * n_shards as f64;
+        println!(
+            "  n_shards={n_shards}: dense {:.1} MB vs MCNC (α,β) {:.2} MB ({:.0}x less staged)",
+            dense / 1e6,
+            comp / 1e6,
+            dense / comp
+        );
+    }
 }

@@ -21,6 +21,15 @@ impl<T: Weigh> Weigh for Vec<T> {
     }
 }
 
+/// Shared-ref entries (the serving engine caches `Arc<Vec<Tensor>>` so a
+/// hit never deep-copies θ): weight is the *inner* value's bytes, not the
+/// size of the `Arc` handle — the cache bounds payload memory.
+impl<T: Weigh + ?Sized> Weigh for std::sync::Arc<T> {
+    fn weight(&self) -> usize {
+        (**self).weight()
+    }
+}
+
 pub struct LruCache<K: Eq + Hash + Clone, V: Weigh> {
     capacity_bytes: usize,
     used_bytes: usize,
@@ -88,6 +97,18 @@ impl<K: Eq + Hash + Clone, V: Weigh> LruCache<K, V> {
         self.tick += 1;
         self.used_bytes += w;
         self.map.insert(k, (v, self.tick));
+    }
+
+    /// Drop an entry (e.g. when a task's adapter is reinstalled and the
+    /// cached merged θ goes stale). Not counted as an eviction.
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        match self.map.remove(k) {
+            Some((v, _)) => {
+                self.used_bytes -= v.weight();
+                Some(v)
+            }
+            None => None,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -162,6 +183,49 @@ mod tests {
         c.put(1, Blob(10));
         assert_eq!(c.used_bytes(), 10);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn remove_updates_bytes() {
+        let mut c: LruCache<u32, Blob> = LruCache::new(100);
+        c.put(1, Blob(40));
+        c.put(2, Blob(10));
+        assert_eq!(c.remove(&1), Some(Blob(40)));
+        assert_eq!(c.remove(&1), None);
+        assert_eq!(c.used_bytes(), 10);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.evictions, 0, "remove is not an eviction");
+    }
+
+    #[test]
+    fn arc_entries_weigh_inner_bytes() {
+        use std::sync::Arc;
+        // 3 × 10-byte payloads fit a 30-byte cap exactly; if Arc weighed
+        // as a pointer (or as 0), a 4th insert would not evict
+        let mut c: LruCache<u32, Arc<Blob>> = LruCache::new(30);
+        c.put(1, Arc::new(Blob(10)));
+        c.put(2, Arc::new(Blob(10)));
+        c.put(3, Arc::new(Blob(10)));
+        assert_eq!(c.used_bytes(), 30);
+        let held = c.get(&1).map(Arc::clone).unwrap(); // 1 is now MRU
+        c.put(4, Arc::new(Blob(10))); // must evict 2 (LRU)
+        assert!(c.contains(&1));
+        assert!(!c.contains(&2));
+        assert!(c.contains(&3) && c.contains(&4));
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.used_bytes(), 30);
+        // an outstanding shared ref does not distort the accounting
+        assert_eq!(held.weight(), 10);
+        // oversized payload still rejected by inner weight
+        c.put(5, Arc::new(Blob(31)));
+        assert!(!c.contains(&5));
+    }
+
+    #[test]
+    fn arc_vec_weighs_payload_sum() {
+        use std::sync::Arc;
+        let v = Arc::new(vec![Blob(3), Blob(4)]);
+        assert_eq!(v.weight(), 7);
     }
 
     #[test]

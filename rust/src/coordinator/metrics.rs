@@ -74,10 +74,13 @@ impl Histogram {
     }
 }
 
-/// Aggregate serving counters.
+/// Aggregate serving counters. Each shard keeps its own; `merge` folds
+/// them into the server-wide totals on stop.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Submit → response time of completed (Ok) requests.
     pub latency: Histogram,
+    /// Submit → batch-formation time of every dispatched request.
     pub queue_wait: Histogram,
     pub batches: u64,
     pub rows: u64,
@@ -88,6 +91,15 @@ pub struct ServeStats {
     /// remainder of `cache_misses` went through the PJRT recon executable).
     pub native_fills: u64,
     pub recon_flops: u64,
+    /// Requests answered with an error Response (malformed tokens, unknown
+    /// task, batch execution failure) instead of a prediction.
+    pub errors: u64,
+    /// Requests bounced at admission (shard queue full) — counted by the
+    /// front-end dispatcher, folded in on stop.
+    pub rejected: u64,
+    /// Engine-loop iterations; at zero load this tracks the heartbeat rate
+    /// (the loop blocks between batches instead of spinning).
+    pub wakeups: u64,
     pub wall_secs: f64,
 }
 
@@ -101,6 +113,25 @@ impl ServeStats {
             return 0.0;
         }
         1.0 - self.padded_rows as f64 / self.rows.max(1) as f64
+    }
+
+    /// Fold another shard's stats into this one: counters sum, histograms
+    /// merge bucket-wise, and wall-clock is the longest shard's (shards
+    /// run concurrently, so summing would overstate the serving window).
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.latency.merge(&other.latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.batches += other.batches;
+        self.rows += other.rows;
+        self.padded_rows += other.padded_rows;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.native_fills += other.native_fills;
+        self.recon_flops += other.recon_flops;
+        self.errors += other.errors;
+        self.rejected += other.rejected;
+        self.wakeups += other.wakeups;
+        self.wall_secs = self.wall_secs.max(other.wall_secs);
     }
 }
 
@@ -140,6 +171,44 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!(a.max() >= Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn stats_merge_sums_counters_and_merges_histograms() {
+        let mut a = ServeStats::default();
+        a.latency.record(Duration::from_micros(100));
+        a.queue_wait.record(Duration::from_micros(10));
+        a.batches = 2;
+        a.rows = 32;
+        a.padded_rows = 3;
+        a.cache_hits = 5;
+        a.cache_misses = 1;
+        a.errors = 1;
+        a.wakeups = 10;
+        a.wall_secs = 1.5;
+        let mut b = ServeStats::default();
+        b.latency.record(Duration::from_micros(200));
+        b.latency.record(Duration::from_micros(300));
+        b.batches = 1;
+        b.rows = 16;
+        b.cache_misses = 2;
+        b.rejected = 4;
+        b.recon_flops = 7;
+        b.wall_secs = 2.0;
+        a.merge(&b);
+        assert_eq!(a.latency.count(), 3);
+        assert_eq!(a.queue_wait.count(), 1);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.rows, 48);
+        assert_eq!(a.padded_rows, 3);
+        assert_eq!(a.cache_hits, 5);
+        assert_eq!(a.cache_misses, 3);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.rejected, 4);
+        assert_eq!(a.wakeups, 10);
+        assert_eq!(a.recon_flops, 7);
+        // concurrent shards: wall-clock is the max, not the sum
+        assert!((a.wall_secs - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,16 +1,20 @@
 //! L3 — the serving coordinator: request router, dynamic batcher, adapter
-//! cache, single-threaded PJRT engine, workload generators and metrics.
-//! This is where the paper's multi-task adapter-serving claim (Table 4)
-//! and the transfer claim (Table 8) are exercised.
+//! cache, sharded PJRT engine workers behind a dispatching front-end,
+//! workload generators and metrics. This is where the paper's multi-task
+//! adapter-serving claim (Table 4) and the transfer claim (Table 8) are
+//! exercised: requests fan out to `n_shards` engine threads by task
+//! affinity, faults stay per-request, and overload is rejected explicitly.
 
 pub mod cache;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod shard;
 pub mod workload;
 
 pub use cache::LruCache;
 pub use metrics::{Histogram, ServeStats};
 pub use router::{Batch, BatchPolicy, Request, Router};
-pub use server::{Engine, Mode, Response, Server, ServerCfg};
-pub use workload::{open_loop, Arrival, Zipf};
+pub use server::{Engine, Mode, Response, ServeError, Server, ServerCfg};
+pub use shard::EngineCore;
+pub use workload::{open_loop, replay, Arrival, ReplayReport, Zipf};

@@ -71,6 +71,19 @@ impl Router {
             .max()
     }
 
+    /// Earliest instant at which a queued partial batch must flush under
+    /// `policy`; `None` when nothing is queued. Full batches dispatch
+    /// immediately via `next_batch`, so after a dispatch sweep this is
+    /// exactly how long the engine loop may sleep without missing a
+    /// deadline (the shard loop caps it with a coarse heartbeat).
+    pub fn next_deadline(&self, policy: BatchPolicy) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|r| r.enqueued + policy.max_delay)
+            .min()
+    }
+
     /// Pop the next ready batch under `policy`, scanning tasks round-robin
     /// from the fairness cursor. `drain` forces flushing partial batches.
     pub fn next_batch(&mut self, policy: BatchPolicy, now: Instant, drain: bool) -> Option<Batch> {
@@ -166,6 +179,21 @@ mod tests {
         let b1 = r.next_batch(p, now, false).unwrap();
         let b2 = r.next_batch(p, now, false).unwrap();
         assert_ne!(b1.task, b2.task, "consecutive batches must alternate tasks");
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_head() {
+        let mut r = Router::default();
+        let p = BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(5) };
+        assert!(r.next_deadline(p).is_none(), "empty router has no deadline");
+        let t0 = Instant::now();
+        r.push(req(0, 1, t0 + Duration::from_millis(3)));
+        r.push(req(1, 2, t0)); // older head on another task queue
+        assert_eq!(r.next_deadline(p), Some(t0 + Duration::from_millis(5)));
+        // draining the older queue moves the deadline to the younger head
+        let b = r.next_batch(p, t0 + Duration::from_millis(6), false).unwrap();
+        assert_eq!(b.task, 2);
+        assert_eq!(r.next_deadline(p), Some(t0 + Duration::from_millis(8)));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The adapter-serving engine + server loop — the L3 systems contribution.
+//! The adapter-serving engine + sharded coordinator — the L3 systems
+//! contribution.
 //!
 //! Multi-task serving with per-task adapters stored compressed (the MCNC
 //! (α, β) representation or baselines). Two execution modes mirror the
@@ -11,23 +12,31 @@
 //!   (fast per batch, but memory scales with task count and cold tasks pay
 //!   a large reconstruction + transfer cost).
 //!
-//! `PjRtClient` is not `Send`, so the whole engine lives on one dedicated
-//! thread; submission/response travel over channels. XLA parallelizes
-//! inside ops, so a single execution thread saturates the CPU.
+//! Execution is horizontally sharded: the front-end `Server` dispatches
+//! each request to one of `n_shards` engine worker threads by task
+//! affinity (`task % n_shards`), so requests for a task always hit the
+//! same Session, adapter slice and merged LRU (see `shard.rs`).
+//! `PjRtClient` is not `Send`, so each shard constructs its Session on its
+//! own thread; admission is a bounded channel per shard and overload is
+//! answered immediately with a rejected `Response` instead of queueing
+//! without bound. Per-request faults (malformed tokens, unknown task,
+//! batch execution errors) are answered with error Responses — a bad
+//! request never kills a shard or strands its neighbours.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
-use std::thread;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::cache::LruCache;
 use crate::coordinator::metrics::ServeStats;
-use crate::coordinator::router::{Batch, BatchPolicy, Request, Router};
+use crate::coordinator::router::{Batch, BatchPolicy, Request};
+use crate::coordinator::shard::{error_response, EngineCore, Msg, Shard};
 use crate::mcnc::{kernel, GenCfg, Generator};
 use crate::runtime::init::init_inputs;
-use crate::runtime::manifest::{Entry, Role};
+use crate::runtime::manifest::{Entry, IoSpec, Role};
 use crate::runtime::Session;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -43,9 +52,11 @@ pub struct ServerCfg {
     /// Adapter family prefix, e.g. "lm_mcnclora8" / "lm_nola8" / "lm_lora8".
     pub kind: String,
     pub n_tasks: usize,
+    /// Engine worker threads; task t is owned by shard `t % n_shards`.
+    pub n_shards: usize,
     pub policy: BatchPolicy,
     pub mode: Mode,
-    /// Merged-mode cache capacity in bytes.
+    /// Merged-mode cache capacity in bytes, split evenly across shards.
     pub cache_bytes: usize,
     pub seed: u64,
     /// Merged mode: fill cold tasks through the native blocked-GEMM
@@ -56,6 +67,12 @@ pub struct ServerCfg {
     /// XLA's by ulps, so the strict OnTheFly≡Merged argmax-equality
     /// guarantee only holds with the PJRT fill.
     pub native_recon: bool,
+    /// Bounded per-shard admission queue; a full queue rejects instead of
+    /// buffering without bound (explicit backpressure).
+    pub queue_cap: usize,
+    /// Idle wake-up period of each shard loop. Shards otherwise sleep
+    /// until the router's next flush deadline or a new message.
+    pub heartbeat: Duration,
 }
 
 impl Default for ServerCfg {
@@ -63,11 +80,14 @@ impl Default for ServerCfg {
         ServerCfg {
             kind: "lm_mcnclora8".into(),
             n_tasks: 8,
+            n_shards: 1,
             policy: BatchPolicy::default(),
             mode: Mode::OnTheFly,
             cache_bytes: 64 << 20,
             seed: 1,
             native_recon: false,
+            queue_cap: 1024,
+            heartbeat: Duration::from_millis(50),
         }
     }
 }
@@ -218,27 +238,90 @@ impl NativeRecon {
     }
 }
 
+/// Why a request did not produce a prediction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Bounced at admission (shard queue full or shard down) — the request
+    /// was never queued; explicit backpressure, retry later.
+    Rejected(String),
+    /// Accepted but failed validation or execution inside the engine.
+    Failed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected(m) => write!(f, "rejected: {m}"),
+            ServeError::Failed(m) => write!(f, "failed: {m}"),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub task: usize,
     /// Next-token prediction for the sequence's last position (proof the
-    /// batch really ran through the model).
-    pub next_token: i32,
+    /// batch really ran through the model), or why there is none. Every
+    /// submitted request receives exactly one Response — errors included.
+    pub result: Result<i32, ServeError>,
     pub latency: Duration,
     pub batch_rows: usize,
 }
 
-/// The engine: everything that touches PJRT. Single-threaded by design.
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+
+    pub fn next_token(&self) -> Option<i32> {
+        self.result.as_ref().ok().copied()
+    }
+}
+
+/// Validate adapter tensors against the executable's trainable specs —
+/// `install_adapter` must reject malformed checkpoints up front so the
+/// serving path never panics on a bad slot count or shape.
+fn validate_adapter(specs: &[IoSpec], trainables: &[Tensor]) -> Result<()> {
+    if trainables.is_empty() {
+        bail!("adapter has no trainable tensors");
+    }
+    if trainables.len() != specs.len() {
+        bail!(
+            "adapter has {} trainable slots, manifest wants {} ({})",
+            trainables.len(),
+            specs.len(),
+            specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(",")
+        );
+    }
+    for (spec, t) in specs.iter().zip(trainables) {
+        if t.dims != spec.shape {
+            bail!("adapter slot {}: shape {:?} != manifest {:?}", spec.name, t.dims, spec.shape);
+        }
+        if t.dtype() != spec.dtype {
+            bail!("adapter slot {}: dtype mismatch", spec.name);
+        }
+    }
+    Ok(())
+}
+
+/// One shard's engine: everything that touches PJRT. Single-threaded by
+/// design (one engine per shard thread); the `Server` front-end fans
+/// requests out across engines.
 pub struct Engine {
     session: Session,
     cfg: ServerCfg,
+    /// This engine's shard index; it owns tasks `t % n_shards == shard`.
+    shard: usize,
     predict: String,
     statics: Vec<Tensor>,
+    /// Trainable input specs of the predict executable (adapter layout).
+    trainable_specs: Vec<IoSpec>,
     /// Per-task compressed adapter state (trainables, manifest order).
     adapters: HashMap<usize, Vec<Tensor>>,
-    /// Merged mode: reconstructed full θ per task.
-    merged_cache: LruCache<usize, Vec<Tensor>>,
+    /// Merged mode: reconstructed full θ per task, shared by ref so serving
+    /// a cached task never deep-copies the full weight vector.
+    merged_cache: LruCache<usize, Arc<Vec<Tensor>>>,
     dense_statics: Vec<Tensor>,
     /// Native GEMM reconstruction twin for Merged cold fills, when the
     /// adapter family supports it (mcnc / mcnc_lora kinds).
@@ -250,11 +333,29 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(session: Session, cfg: ServerCfg) -> Result<Engine> {
+    /// Build an unsharded engine owning every task (a 1-shard server).
+    pub fn new(session: Session, mut cfg: ServerCfg) -> Result<Engine> {
+        cfg.n_shards = 1;
+        Engine::new_sharded(session, cfg, 0)
+    }
+
+    /// Build the engine for one shard: it synthesizes adapters only for
+    /// tasks it owns (`task % cfg.n_shards == shard`) and gets an even
+    /// split of the merged-cache byte budget.
+    pub fn new_sharded(session: Session, cfg: ServerCfg, shard: usize) -> Result<Engine> {
+        let n_shards = cfg.n_shards.max(1);
         let predict = format!("{}_predict", cfg.kind);
         let entry = session.entry(&predict)?.clone();
         let x_spec = entry.inputs.last().unwrap();
         let (batch_size, seq) = (x_spec.shape[0], x_spec.shape[1]);
+        // an oversized router batch would index past build_x's buffer and
+        // panic the shard thread — reject the misconfiguration up front
+        if cfg.policy.max_batch > batch_size {
+            bail!(
+                "policy.max_batch {} exceeds {predict}'s compiled batch size {batch_size}",
+                cfg.policy.max_batch
+            );
+        }
 
         // shared statics (θ0, generator weights / bases) from the base seed
         let slots = init_inputs(&entry, cfg.seed)?;
@@ -263,11 +364,18 @@ impl Engine {
             .filter(|(s, _)| s.role == Role::Static)
             .map(|(_, t)| t.clone().unwrap())
             .collect();
+        let trainable_specs: Vec<IoSpec> = entry
+            .inputs
+            .iter()
+            .filter(|s| s.role == Role::Trainable)
+            .cloned()
+            .collect();
 
         // per-task adapters: synthesized from task-specific seeds (replaced
-        // by fine-tuned checkpoints via `install_adapter`)
+        // by fine-tuned checkpoints via `install_adapter`), restricted to
+        // the tasks this shard owns
         let mut adapters = HashMap::new();
-        for task in 0..cfg.n_tasks {
+        for task in (0..cfg.n_tasks).filter(|t| t % n_shards == shard) {
             let tslots = init_inputs(&entry, cfg.seed ^ (0xAD00 + task as u64))?;
             let mut tr: Vec<Tensor> = tslots
                 .into_iter()
@@ -310,12 +418,15 @@ impl Engine {
             }
         }
 
+        let cache_bytes = (cfg.cache_bytes / n_shards).max(1);
         Ok(Engine {
             session,
+            shard,
             predict,
             statics,
+            trainable_specs,
             adapters,
-            merged_cache: LruCache::new(cfg.cache_bytes),
+            merged_cache: LruCache::new(cache_bytes),
             dense_statics,
             native,
             batch_size,
@@ -334,9 +445,35 @@ impl Engine {
         self.seq
     }
 
-    /// Install fine-tuned adapter weights for a task.
-    pub fn install_adapter(&mut self, task: usize, trainables: Vec<Tensor>) {
+    pub fn has_task(&self, task: usize) -> bool {
+        self.adapters.contains_key(&task)
+    }
+
+    /// Compile the hot executables off the latency path.
+    pub fn warm(&self) -> Result<()> {
+        self.session.load(&self.predict)?;
+        if self.cfg.mode == Mode::Merged {
+            self.session.load("lm_dense_predict")?;
+            if self.native.is_none() {
+                // cold fills will dispatch the PJRT recon executable
+                self.session.load(&format!("{}_recon", self.cfg.kind))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Install fine-tuned adapter weights for a task. Validates the slot
+    /// count/shapes against the manifest's trainable specs and drops any
+    /// stale merged θ cached for the task.
+    pub fn install_adapter(&mut self, task: usize, trainables: Vec<Tensor>) -> Result<()> {
+        let n_shards = self.cfg.n_shards.max(1);
+        if task % n_shards != self.shard {
+            bail!("task {task} belongs to shard {}, not {}", task % n_shards, self.shard);
+        }
+        validate_adapter(&self.trainable_specs, &trainables)?;
+        self.merged_cache.remove(&task);
         self.adapters.insert(task, trainables);
+        Ok(())
     }
 
     fn build_x(&self, batch: &Batch) -> Result<(Tensor, usize)> {
@@ -358,51 +495,67 @@ impl Engine {
         Ok((Tensor::from_i32(x, &[b, t])?, padded))
     }
 
-    /// Run one batch; returns per-request next-token predictions.
+    /// Run one batch; returns per-request next-token predictions. Errors
+    /// are per-batch: the caller (shard loop) answers the batch's requests
+    /// with error Responses and keeps serving.
     pub fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
         let (x, padded) = self.build_x(batch)?;
         let adapter = self
             .adapters
             .get(&batch.task)
-            .ok_or_else(|| anyhow!("unknown task {}", batch.task))?
-            .clone();
+            .ok_or_else(|| anyhow!("unknown task {}", batch.task))?;
 
         let logits = match self.cfg.mode {
             Mode::OnTheFly => {
-                let mut inputs = self.statics.clone();
-                inputs.extend(adapter);
-                inputs.push(x);
+                let mut inputs: Vec<&Tensor> =
+                    Vec::with_capacity(self.statics.len() + adapter.len() + 1);
+                inputs.extend(self.statics.iter());
+                inputs.extend(adapter.iter());
+                inputs.push(&x);
                 self.stats.recon_flops += self.recon_flops_per_pass;
-                self.session.run(&self.predict, &inputs)?.remove(0)
+                self.session.run_refs(&self.predict, &inputs)?.remove(0)
             }
             Mode::Merged => {
-                if self.merged_cache.get(&batch.task).is_none() {
-                    // cold task: reconstruct full weights — natively via
-                    // the blocked-GEMM engine when built (Engine::new gates
-                    // that on cfg.native_recon), else through the PJRT recon
-                    let theta = if let Some(nr) = &self.native {
-                        self.stats.native_fills += 1;
-                        nr.reconstruct(&adapter)?
+                let dense_tr: Arc<Vec<Tensor>> =
+                    if let Some(v) = self.merged_cache.get(&batch.task) {
+                        self.stats.cache_hits += 1;
+                        Arc::clone(v)
                     } else {
-                        let recon = format!("{}_recon", self.cfg.kind);
-                        let mut rin = self.statics.clone();
-                        rin.extend(adapter.clone());
-                        self.session.run(&recon, &rin)?.remove(0)
+                        // cold task: reconstruct full weights — natively via
+                        // the blocked-GEMM engine when built (new_sharded
+                        // gates that on cfg.native_recon), else through the
+                        // PJRT recon executable
+                        let theta = if let Some(nr) = &self.native {
+                            self.stats.native_fills += 1;
+                            nr.reconstruct(adapter)?
+                        } else {
+                            let recon = format!("{}_recon", self.cfg.kind);
+                            let mut rin: Vec<&Tensor> = self.statics.iter().collect();
+                            rin.extend(adapter.iter());
+                            self.session.run_refs(&recon, &rin)?.remove(0)
+                        };
+                        self.stats.recon_flops += self.recon_flops_per_pass;
+                        self.stats.cache_misses += 1;
+                        // dense trainables = [theta_c, raw]; raw comes from
+                        // the adapter state (last trainable by convention)
+                        let raw = adapter
+                            .last()
+                            .ok_or_else(|| {
+                                anyhow!("task {}: adapter has no trainable tensors", batch.task)
+                            })?
+                            .clone();
+                        let v = Arc::new(vec![theta, raw]);
+                        // an entry larger than this shard's cache slice is
+                        // rejected by put — still serve it, just uncached
+                        self.merged_cache.put(batch.task, Arc::clone(&v));
+                        v
                     };
-                    self.stats.recon_flops += self.recon_flops_per_pass;
-                    self.stats.cache_misses += 1;
-                    // dense trainables = [theta_c, raw]; raw comes from the
-                    // adapter state (last trainable by convention)
-                    let raw = adapter.last().unwrap().clone();
-                    self.merged_cache.put(batch.task, vec![theta, raw]);
-                } else {
-                    self.stats.cache_hits += 1;
-                }
-                let dense_tr = self.merged_cache.get(&batch.task).unwrap().clone();
-                let mut inputs = self.dense_statics.clone();
-                inputs.extend(dense_tr);
-                inputs.push(x);
-                self.session.run("lm_dense_predict", &inputs)?.remove(0)
+                let mut inputs: Vec<&Tensor> =
+                    Vec::with_capacity(self.dense_statics.len() + dense_tr.len() + 1);
+                inputs.extend(self.dense_statics.iter());
+                inputs.extend(dense_tr.iter());
+                inputs.push(&x);
+                self.session.run_refs("lm_dense_predict", &inputs)?.remove(0)
             }
         };
 
@@ -430,100 +583,216 @@ impl Engine {
     }
 }
 
-enum Msg {
-    Req(Request, mpsc::Sender<Response>),
-    Stop,
+impl EngineCore for Engine {
+    // `Engine::x` paths resolve to the inherent methods (inherent items
+    // take precedence over trait items), so these are pure delegation
+    fn seq(&self) -> usize {
+        Engine::seq(self)
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        Engine::has_task(self, task)
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        Engine::run_batch(self, batch)
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
 }
 
-/// Handle to a running server (engine thread owns the Session).
+/// Front-end handle to a running sharded server: routes each request to
+/// the shard owning its task, applies admission control, and merges
+/// per-shard stats on stop.
 pub struct Server {
-    tx: mpsc::Sender<Msg>,
-    handle: Option<thread::JoinHandle<Result<ServeStats>>>,
-    next_id: std::sync::atomic::AtomicU64,
+    shards: Vec<Shard>,
+    next_id: AtomicU64,
+    rejected: AtomicU64,
 }
 
 impl Server {
-    /// Spawn the engine thread. The Session is created inside the thread
-    /// (PjRtClient is not Send).
+    /// Spawn `cfg.n_shards` PJRT engine shards. Each Session is created
+    /// inside its shard thread (PjRtClient is not Send).
     pub fn start(artifacts: std::path::PathBuf, cfg: ServerCfg) -> Server {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = thread::Builder::new()
-            .name("mcnc-engine".into())
-            .spawn(move || -> Result<ServeStats> {
-                let session = Session::open(&artifacts).context("opening session")?;
-                let mut engine = Engine::new(session, cfg.clone())?;
-                // warm the compile cache off the latency path
-                engine.session.load(&engine.predict)?;
-                let mut router = Router::default();
-                let mut pending: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
-                let started = Instant::now();
-                let mut stopping = false;
-                loop {
-                    // 1) ingest
-                    match rx.recv_timeout(Duration::from_micros(200)) {
-                        Ok(Msg::Req(r, reply)) => {
-                            pending.insert(r.id, reply);
-                            router.push(r);
-                        }
-                        Ok(Msg::Stop) => stopping = true,
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
-                        Err(mpsc::RecvTimeoutError::Disconnected) => stopping = true,
-                    }
-                    // 2) dispatch ready batches
-                    let now = Instant::now();
-                    while let Some(batch) = router.next_batch(cfg.policy, now, stopping) {
-                        let preds = engine.run_batch(&batch)?;
-                        let rows = batch.requests.len();
-                        let done = Instant::now();
-                        for (req, tok) in batch.requests.iter().zip(preds) {
-                            engine.stats.latency.record(done.duration_since(req.enqueued));
-                            if let Some(reply) = pending.remove(&req.id) {
-                                let _ = reply.send(Response {
-                                    id: req.id,
-                                    task: req.task,
-                                    next_token: tok,
-                                    latency: done.duration_since(req.enqueued),
-                                    batch_rows: rows,
-                                });
-                            }
-                        }
-                    }
-                    if stopping && router.is_empty() {
-                        break;
-                    }
-                }
-                engine.stats.wall_secs = started.elapsed().as_secs_f64();
-                Ok(engine.stats)
-            })
-            .expect("spawn engine");
-        Server { tx, handle: Some(handle), next_id: std::sync::atomic::AtomicU64::new(0) }
+        let engine_cfg = cfg.clone();
+        Server::start_with(&cfg, move |shard| {
+            let session = Session::open(&artifacts).context("opening session")?;
+            let engine = Engine::new_sharded(session, engine_cfg.clone(), shard)?;
+            engine.warm()?;
+            Ok(engine)
+        })
     }
 
-    /// Submit a request; the returned channel yields the response.
+    /// Spawn shards around a custom engine factory (called once per shard,
+    /// on the shard's own thread). This is how non-PJRT engines — test
+    /// doubles, native-only backends — reuse the coordinator: routing,
+    /// batching, admission control and fault isolation are identical.
+    pub fn start_with<E, F>(cfg: &ServerCfg, factory: F) -> Server
+    where
+        E: EngineCore,
+        F: Fn(usize) -> Result<E> + Send + Clone + 'static,
+    {
+        let n = cfg.n_shards.max(1);
+        let shards = (0..n)
+            .map(|ix| {
+                let f = factory.clone();
+                Shard::spawn(ix, cfg.policy, cfg.queue_cap, cfg.heartbeat, move || f(ix))
+            })
+            .collect();
+        Server { shards, next_id: AtomicU64::new(0), rejected: AtomicU64::new(0) }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Submit a request; the returned channel yields exactly one Response
+    /// (a prediction, or an error/rejected outcome — never a hang).
     pub fn submit(&self, task: usize, tokens: Vec<i32>) -> mpsc::Receiver<Response> {
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
         let req = Request { id, task, tokens, enqueued: Instant::now() };
-        let _ = self.tx.send(Msg::Req(req, rtx));
+        let shard = task % self.shards.len();
+        let (bounced, err) = match self.shards[shard].tx.try_send(Msg::Req(req, rtx)) {
+            Ok(()) => return rrx,
+            Err(mpsc::TrySendError::Full(msg)) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                (msg, ServeError::Rejected(format!("shard {shard} admission queue full")))
+            }
+            Err(mpsc::TrySendError::Disconnected(msg)) => {
+                (msg, ServeError::Failed(format!("shard {shard} unavailable")))
+            }
+        };
+        if let Msg::Req(req, rtx) = bounced {
+            let _ = rtx.send(error_response(&req, err));
+        }
         rrx
     }
 
-    /// Stop after draining; returns the engine's serving stats.
+    /// Stop after draining every shard; joins all shard threads and merges
+    /// their ServeStats (counters sum, histograms merge, wall-clock is the
+    /// longest shard's). The first shard error, if any, is returned.
     pub fn stop(mut self) -> Result<ServeStats> {
-        let _ = self.tx.send(Msg::Stop);
-        self.handle
-            .take()
-            .unwrap()
-            .join()
-            .map_err(|_| anyhow!("engine thread panicked"))?
+        let shards = std::mem::take(&mut self.shards);
+        for s in &shards {
+            let _ = s.tx.send(Msg::Stop);
+        }
+        let mut total = ServeStats::default();
+        let mut first_err: Option<anyhow::Error> = None;
+        for s in shards {
+            match s.handle.join() {
+                Ok(Ok(st)) => total.merge(&st),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("shard thread panicked"));
+                    }
+                }
+            }
+        }
+        total.rejected += self.rejected.load(Ordering::Relaxed);
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(total),
+        }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Stop);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        let shards = std::mem::take(&mut self.shards);
+        for s in &shards {
+            let _ = s.tx.send(Msg::Stop);
         }
+        for s in shards {
+            let _ = s.handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    fn spec(name: &str, shape: &[usize]) -> IoSpec {
+        IoSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            role: Role::Trainable,
+            init: None,
+        }
+    }
+
+    fn t(shape: &[usize]) -> Tensor {
+        Tensor::zeros(shape)
+    }
+
+    #[test]
+    fn validate_adapter_rejects_empty() {
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        let err = validate_adapter(&specs, &[]).unwrap_err();
+        assert!(err.to_string().contains("no trainable"), "{err}");
+    }
+
+    #[test]
+    fn validate_adapter_rejects_wrong_slot_count() {
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        let err = validate_adapter(&specs, &[t(&[2, 3])]).unwrap_err();
+        assert!(err.to_string().contains("trainable slots"), "{err}");
+    }
+
+    #[test]
+    fn validate_adapter_rejects_wrong_shape() {
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        let err = validate_adapter(&specs, &[t(&[2, 3]), t(&[4])]).unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn validate_adapter_accepts_matching() {
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        validate_adapter(&specs, &[t(&[2, 3]), t(&[3])]).unwrap();
+    }
+
+    #[test]
+    fn serve_error_display() {
+        let r = ServeError::Rejected("queue full".into());
+        let f = ServeError::Failed("bad tokens".into());
+        assert!(r.to_string().contains("rejected"));
+        assert!(f.to_string().contains("failed"));
+    }
+
+    #[test]
+    fn response_accessors() {
+        let ok = Response {
+            id: 1,
+            task: 0,
+            result: Ok(7),
+            latency: Duration::from_millis(1),
+            batch_rows: 4,
+        };
+        let err = Response {
+            id: 2,
+            task: 0,
+            result: Err(ServeError::Failed("x".into())),
+            latency: Duration::ZERO,
+            batch_rows: 0,
+        };
+        assert!(ok.is_ok());
+        assert_eq!(ok.next_token(), Some(7));
+        assert!(!err.is_ok());
+        assert_eq!(err.next_token(), None);
     }
 }

@@ -1,0 +1,224 @@
+//! One engine shard: the worker loop behind the sharded serving
+//! coordinator. Each shard owns its execution engine (Session, adapter
+//! slice, merged LRU) on a dedicated thread — `PjRtClient` is not `Send`,
+//! so engines are constructed *inside* the thread via a factory — and
+//! drains a bounded admission channel into its own `Router`.
+//!
+//! Fault isolation is the shard loop's contract: a malformed request is
+//! answered with an error `Response` at ingest, a failing batch produces
+//! error Responses for exactly that batch's requests, and the loop itself
+//! never `?`-aborts on per-request work. The loop also never busy-waits:
+//! between batches it blocks on the channel until the router's next flush
+//! deadline (or a coarse heartbeat when idle).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::ServeStats;
+use crate::coordinator::router::{Batch, BatchPolicy, Request, Router};
+use crate::coordinator::server::{Response, ServeError};
+
+/// Messages from the dispatcher to a shard.
+pub(crate) enum Msg {
+    Req(Request, mpsc::Sender<Response>),
+    Stop,
+}
+
+/// The execution engine a shard drives. `server::Engine` (the PJRT-backed
+/// engine) is the production implementation; tests and non-PJRT harnesses
+/// can plug in their own (see `Server::start_with`).
+pub trait EngineCore {
+    /// Token-sequence length the compiled executable expects.
+    fn seq(&self) -> usize;
+    /// Whether this engine owns an adapter for `task`.
+    fn has_task(&self, task: usize) -> bool;
+    /// Run one single-task batch; one prediction per (non-padding) request.
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>>;
+    fn stats_mut(&mut self) -> &mut ServeStats;
+    fn into_stats(self) -> ServeStats
+    where
+        Self: Sized;
+}
+
+/// Handle to one running shard thread.
+pub(crate) struct Shard {
+    pub tx: mpsc::SyncSender<Msg>,
+    pub handle: thread::JoinHandle<Result<ServeStats>>,
+}
+
+impl Shard {
+    /// Spawn a shard worker. `factory` builds the engine on the shard
+    /// thread (the engine need not be `Send`); a factory error terminates
+    /// the shard, surfaced by `Server::stop`.
+    pub fn spawn<E, F>(
+        ix: usize,
+        policy: BatchPolicy,
+        queue_cap: usize,
+        heartbeat: Duration,
+        factory: F,
+    ) -> Shard
+    where
+        E: EngineCore,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel(queue_cap.max(1));
+        let handle = thread::Builder::new()
+            .name(format!("mcnc-shard-{ix}"))
+            .spawn(move || -> Result<ServeStats> {
+                let engine = factory()?;
+                run_loop(engine, rx, policy, heartbeat)
+            })
+            .expect("spawn shard");
+        Shard { tx, handle }
+    }
+}
+
+pub(crate) fn error_response(req: &Request, err: ServeError) -> Response {
+    Response {
+        id: req.id,
+        task: req.task,
+        result: Err(err),
+        latency: req.enqueued.elapsed(),
+        batch_rows: 0,
+    }
+}
+
+/// Ingest one message: validate the request (wrong token count / unknown
+/// task answer immediately with an error Response — they must never poison
+/// a batch) or queue it for batching.
+fn ingest<E: EngineCore>(
+    msg: Msg,
+    engine: &mut E,
+    router: &mut Router,
+    pending: &mut HashMap<u64, mpsc::Sender<Response>>,
+    stopping: &mut bool,
+) {
+    match msg {
+        Msg::Stop => *stopping = true,
+        Msg::Req(req, reply) => {
+            let seq = engine.seq();
+            if req.tokens.len() != seq {
+                engine.stats_mut().errors += 1;
+                let _ = reply.send(error_response(
+                    &req,
+                    ServeError::Failed(format!(
+                        "request {} has {} tokens, executable wants {seq}",
+                        req.id,
+                        req.tokens.len()
+                    )),
+                ));
+            } else if !engine.has_task(req.task) {
+                engine.stats_mut().errors += 1;
+                let _ = reply.send(error_response(
+                    &req,
+                    ServeError::Failed(format!("unknown task {}", req.task)),
+                ));
+            } else {
+                pending.insert(req.id, reply);
+                router.push(req);
+            }
+        }
+    }
+}
+
+/// The shard worker loop. Returns the engine's final stats when drained.
+pub(crate) fn run_loop<E: EngineCore>(
+    mut engine: E,
+    rx: mpsc::Receiver<Msg>,
+    policy: BatchPolicy,
+    heartbeat: Duration,
+) -> Result<ServeStats> {
+    let mut router = Router::default();
+    let mut pending: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
+    let started = Instant::now();
+    let mut stopping = false;
+    loop {
+        engine.stats_mut().wakeups += 1;
+        // 1) ingest everything already queued, without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => ingest(msg, &mut engine, &mut router, &mut pending, &mut stopping),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
+            }
+        }
+        // 2) dispatch every ready batch; batch failures answer that batch's
+        //    requests with errors and the loop keeps serving
+        loop {
+            let now = Instant::now();
+            let Some(batch) = router.next_batch(policy, now, stopping) else {
+                break;
+            };
+            for req in &batch.requests {
+                engine.stats_mut().queue_wait.record(now.duration_since(req.enqueued));
+            }
+            let rows = batch.requests.len();
+            // a short prediction vector would strand the unmatched
+            // requests' reply channels below — surface it as a batch error
+            let outcome = engine.run_batch(&batch).and_then(|preds| {
+                if preds.len() != rows {
+                    bail!("engine returned {} predictions for {rows} requests", preds.len());
+                }
+                Ok(preds)
+            });
+            match outcome {
+                Ok(preds) => {
+                    let done = Instant::now();
+                    for (req, tok) in batch.requests.iter().zip(preds) {
+                        let latency = done.duration_since(req.enqueued);
+                        engine.stats_mut().latency.record(latency);
+                        if let Some(reply) = pending.remove(&req.id) {
+                            let _ = reply.send(Response {
+                                id: req.id,
+                                task: req.task,
+                                result: Ok(tok),
+                                latency,
+                                batch_rows: rows,
+                            });
+                        }
+                    }
+                }
+                Err(e) => {
+                    let done = Instant::now();
+                    let msg = format!("batch failed: {e:#}");
+                    for req in &batch.requests {
+                        engine.stats_mut().errors += 1;
+                        if let Some(reply) = pending.remove(&req.id) {
+                            let _ = reply.send(Response {
+                                id: req.id,
+                                task: req.task,
+                                result: Err(ServeError::Failed(msg.clone())),
+                                latency: done.duration_since(req.enqueued),
+                                batch_rows: rows,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        if stopping && router.is_empty() {
+            break;
+        }
+        // 3) block until the next router flush deadline (or the heartbeat
+        //    when idle) — no 200µs spin; new messages wake us immediately
+        let now = Instant::now();
+        let wait = match router.next_deadline(policy) {
+            Some(d) => d.saturating_duration_since(now).min(heartbeat),
+            None => heartbeat,
+        };
+        match rx.recv_timeout(wait) {
+            Ok(msg) => ingest(msg, &mut engine, &mut router, &mut pending, &mut stopping),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => stopping = true,
+        }
+    }
+    engine.stats_mut().wall_secs = started.elapsed().as_secs_f64();
+    Ok(engine.into_stats())
+}

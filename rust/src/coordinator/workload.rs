@@ -65,6 +65,60 @@ pub fn request_tokens(lm: &crate::data::MarkovLm, seed: u64, id: u64) -> Vec<i32
     x.i32s().unwrap().to_vec()
 }
 
+/// What came back from replaying one schedule (`replay`).
+#[derive(Debug, Default)]
+pub struct ReplayReport {
+    /// One entry per *answered* request, in submission order (dropped or
+    /// timed-out receivers leave no entry, so don't index this against
+    /// the schedule — match on `Response.id`).
+    pub responses: Vec<crate::coordinator::server::Response>,
+    pub ok: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    /// Receivers that closed without any Response (a dead shard).
+    pub dropped: usize,
+    /// Receivers still pending after the 120s collection timeout (shard
+    /// alive but backlogged; the late Response is discarded).
+    pub timed_out: usize,
+}
+
+/// Replay `schedule` against a running server open-loop: sleep to each
+/// arrival time, submit, then collect every response. This is the shared
+/// driver of the serve CLI, the adapter_server example and the Table-4
+/// bench, so all three exercise the coordinator identically.
+pub fn replay(
+    server: &crate::coordinator::server::Server,
+    lm: &crate::data::MarkovLm,
+    token_seed: u64,
+    schedule: &[Arrival],
+) -> ReplayReport {
+    use crate::coordinator::server::ServeError;
+    let started = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(schedule.len());
+    for (i, arr) in schedule.iter().enumerate() {
+        if let Some(wait) = arr.at.checked_sub(started.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        rxs.push(server.submit(arr.task, request_tokens(lm, token_seed, i as u64)));
+    }
+    let mut rep = ReplayReport::default();
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(resp) => {
+                match &resp.result {
+                    Ok(_) => rep.ok += 1,
+                    Err(ServeError::Rejected(_)) => rep.rejected += 1,
+                    Err(ServeError::Failed(_)) => rep.failed += 1,
+                }
+                rep.responses.push(resp);
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => rep.timed_out += 1,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => rep.dropped += 1,
+        }
+    }
+    rep
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

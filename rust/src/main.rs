@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use mcnc::coordinator::workload::{open_loop, request_tokens};
+use mcnc::coordinator::workload::{open_loop, replay};
 use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg};
 use mcnc::data::{Dataset, MarkovLm, SynthVision};
 use mcnc::mcnc::{Act, GenCfg, Generator};
@@ -50,7 +50,7 @@ const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 re
   info    [--group G]            list artifact executables (+ meta)
   train   --exec NAME [--steps N --lr F --batch B --seed S --out CK --data synth|c10|c100|lm]
   eval    --ckpt FILE [--seed S]
-  serve   [--kind K --tasks N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S]
+  serve   [--kind K --tasks N --shards N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S --queue-cap N]
   sphere  [--acts sine,sigmoid,relu --l 1,5,10,100 --width 256]
   config  --file cfg.toml        config-driven training job
 
@@ -170,6 +170,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let cfg = ServerCfg {
         kind: args.str_or("kind", "lm_mcnclora8"),
         n_tasks: args.usize_or("tasks", 8),
+        n_shards: args.usize_or("shards", 1),
         policy: BatchPolicy {
             max_batch: 16,
             max_delay: std::time::Duration::from_millis(args.u64_or("max-delay-ms", 5)),
@@ -178,6 +179,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
         cache_bytes: args.usize_or("cache-mb", 64) << 20,
         seed: args.u64_or("seed", 1),
         native_recon: args.bool_or("native-recon", false),
+        queue_cap: args.usize_or("queue-cap", 1024),
+        ..ServerCfg::default()
     };
     let rate = args.f32_or("rate", 200.0) as f64;
     let secs = args.f32_or("secs", 5.0) as f64;
@@ -185,34 +188,28 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let n_tasks = cfg.n_tasks;
 
     println!(
-        "serving {} ({:?}), {} tasks, {:.0} req/s for {:.0}s …",
-        cfg.kind, cfg.mode, n_tasks, rate, secs
+        "serving {} ({:?}), {} tasks on {} shard(s), {:.0} req/s for {:.0}s …",
+        cfg.kind, cfg.mode, n_tasks, cfg.n_shards, rate, secs
     );
     let lm = MarkovLm::base(1, 128, 32);
     let schedule =
         open_loop(7, rate, std::time::Duration::from_secs_f64(secs), n_tasks, zipf_s);
     let server = Server::start(artifacts_dir(), cfg);
-    let started = std::time::Instant::now();
-    let mut receivers = Vec::with_capacity(schedule.len());
-    for (i, arr) in schedule.iter().enumerate() {
-        if let Some(wait) = arr.at.checked_sub(started.elapsed()) {
-            std::thread::sleep(wait);
-        }
-        receivers.push(server.submit(arr.task, request_tokens(&lm, 9, i as u64)));
-    }
-    let mut ok = 0usize;
-    for rx in receivers {
-        if rx.recv_timeout(std::time::Duration::from_secs(120)).is_ok() {
-            ok += 1;
-        }
-    }
+    let rep = replay(&server, &lm, 9, &schedule);
     let stats = server.stop()?;
     println!(
-        "answered {ok}/{} | throughput {:.1} req/s | p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
+        "ok {}/{} (rejected {} failed {} dropped {} timed-out {}) | throughput {:.1} req/s | p50 {:?} p99 {:?} | queue p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
+        rep.ok,
         schedule.len(),
+        rep.rejected,
+        rep.failed,
+        rep.dropped,
+        rep.timed_out,
         stats.throughput(),
         stats.latency.percentile(50.0),
         stats.latency.percentile(99.0),
+        stats.queue_wait.percentile(50.0),
+        stats.queue_wait.percentile(99.0),
         stats.occupancy(),
         stats.recon_flops as f64 / 1e9,
     );

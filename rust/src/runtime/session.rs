@@ -84,11 +84,20 @@ impl Session {
 
     /// Validate + execute: the main entry point for everything above.
     pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(name, &refs)
+    }
+
+    /// `run` over borrowed inputs: callers that assemble a batch from
+    /// long-lived tensors (the serving engine's statics + cached merged θ)
+    /// marshal straight from the originals instead of deep-copying every
+    /// input into an owned `Vec<Tensor>` per call.
+    pub fn run_refs(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let entry = self.manifest.get(name)?;
         validate_inputs(entry, inputs)?;
         let exe = self.load(name)?;
         let literals: Vec<xla::Literal> =
-            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+            inputs.iter().map(|&t| tensor_to_literal(t)).collect::<Result<_>>()?;
         let t0 = Instant::now();
         let result = exe
             .execute::<xla::Literal>(&literals)
@@ -105,7 +114,7 @@ impl Session {
             let mut st = self.stats.lock().unwrap();
             st.executions += 1;
             st.execute_secs += t0.elapsed().as_secs_f64();
-            st.bytes_to_device += inputs.iter().map(Tensor::size_bytes).sum::<usize>();
+            st.bytes_to_device += inputs.iter().map(|t| t.size_bytes()).sum::<usize>();
         }
         if out.len() != entry.outputs.len() {
             bail!("{name}: manifest declares {} outputs, executable returned {}",
@@ -187,7 +196,7 @@ impl Session {
     }
 }
 
-fn validate_inputs(entry: &Entry, inputs: &[Tensor]) -> Result<()> {
+fn validate_inputs(entry: &Entry, inputs: &[&Tensor]) -> Result<()> {
     if inputs.len() != entry.inputs.len() {
         bail!(
             "{}: expected {} inputs ({}…), got {}",

@@ -1,14 +1,324 @@
-//! End-to-end serving integration: submit real requests through the full
-//! router → batcher → engine → PJRT predict path and check the invariants
-//! the coordinator promises (every request answered exactly once, both
-//! execution modes agree on predictions, adapters actually differ by task).
+//! End-to-end serving integration, in two tiers:
+//!
+//! * **Coordinator tests (always run)** — a mock engine plugged into
+//!   `Server::start_with` exercises the sharded dispatcher itself: task
+//!   affinity, per-request fault isolation, admission-control
+//!   backpressure, idle heartbeat behaviour and per-shard stats merging.
+//!   No PJRT artifacts needed.
+//! * **Engine tests (artifact-gated)** — real requests through the full
+//!   router → batcher → PJRT predict path, checking the invariants the
+//!   coordinator promises (every request answered exactly once, both
+//!   execution modes agree on predictions, sharding preserves
+//!   predictions, a malformed request never takes a shard down).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use anyhow::Result;
 use mcnc::coordinator::workload::request_tokens;
-use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg, ServeStats};
+use mcnc::coordinator::{
+    Batch, BatchPolicy, EngineCore, Mode, Response, ServeError, ServeStats, Server, ServerCfg,
+};
 use mcnc::data::MarkovLm;
 use mcnc::runtime::artifacts_dir;
+use mcnc::util::prop::run_prop;
+use mcnc::prop_assert;
+
+// ---------------------------------------------------------------------------
+// Mock-engine coordinator tests (no artifacts required)
+// ---------------------------------------------------------------------------
+
+/// Deterministic stand-in engine: predicts `shard * 1000 + task` so tests
+/// can verify which shard served a request. Optional failure injection and
+/// a gate the test can hold shut to keep the shard busy mid-batch.
+struct MockEngine {
+    shard: usize,
+    n_tasks: usize,
+    seq: usize,
+    batch_size: usize,
+    fail_task: Option<usize>,
+    gate: Option<Arc<Mutex<()>>>,
+    entered: Arc<AtomicUsize>,
+    stats: ServeStats,
+}
+
+#[derive(Clone)]
+struct MockCfg {
+    n_tasks: usize,
+    seq: usize,
+    batch_size: usize,
+    fail_task: Option<usize>,
+    gate: Option<Arc<Mutex<()>>>,
+    entered: Arc<AtomicUsize>,
+}
+
+impl MockCfg {
+    fn new(n_tasks: usize, seq: usize, batch_size: usize) -> MockCfg {
+        MockCfg {
+            n_tasks,
+            seq,
+            batch_size,
+            fail_task: None,
+            gate: None,
+            entered: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    fn server(&self, cfg: &ServerCfg) -> Server {
+        let mock = self.clone();
+        Server::start_with(cfg, move |shard| -> Result<MockEngine> {
+            Ok(MockEngine {
+                shard,
+                n_tasks: mock.n_tasks,
+                seq: mock.seq,
+                batch_size: mock.batch_size,
+                fail_task: mock.fail_task,
+                gate: mock.gate.clone(),
+                entered: Arc::clone(&mock.entered),
+                stats: ServeStats::default(),
+            })
+        })
+    }
+}
+
+impl EngineCore for MockEngine {
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        task < self.n_tasks
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        if let Some(gate) = &self.gate {
+            drop(gate.lock().unwrap());
+        }
+        if self.fail_task == Some(batch.task) {
+            anyhow::bail!("injected failure for task {}", batch.task);
+        }
+        self.stats.batches += 1;
+        self.stats.rows += self.batch_size as u64;
+        self.stats.padded_rows += (self.batch_size - batch.requests.len()) as u64;
+        Ok(batch
+            .requests
+            .iter()
+            .map(|r| (self.shard * 1000 + r.task) as i32)
+            .collect())
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+}
+
+fn mock_server_cfg(n_shards: usize, max_batch: usize) -> ServerCfg {
+    ServerCfg {
+        n_shards,
+        policy: BatchPolicy { max_batch, max_delay: Duration::from_millis(1) },
+        heartbeat: Duration::from_millis(10),
+        ..ServerCfg::default()
+    }
+}
+
+fn recv(rx: std::sync::mpsc::Receiver<Response>) -> Response {
+    rx.recv_timeout(Duration::from_secs(30)).expect("response")
+}
+
+#[test]
+fn mock_malformed_request_isolated_then_valid_completes() {
+    let mock = MockCfg::new(8, 8, 4);
+    let server = mock.server(&mock_server_cfg(4, 4));
+    // regression: a malformed request (wrong token count) must produce an
+    // error Response for itself only — the shard keeps serving
+    let bad = server.submit(1, vec![0; 3]);
+    let unknown = server.submit(99, vec![0; 8]); // 99 >= n_tasks, valid length
+    let good = server.submit(1, vec![0; 8]);
+    let r_bad = recv(bad);
+    assert!(matches!(r_bad.result, Err(ServeError::Failed(_))), "{:?}", r_bad.result);
+    let r_unknown = recv(unknown);
+    assert!(matches!(r_unknown.result, Err(ServeError::Failed(_))), "{:?}", r_unknown.result);
+    let r_good = recv(good);
+    assert_eq!(r_good.next_token(), Some(1001), "shard 1 owns task 1");
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.errors, 2);
+    assert_eq!(stats.latency.count(), 1, "only the valid request completed");
+    assert_eq!(stats.rejected, 0);
+}
+
+#[test]
+fn mock_batch_failure_does_not_kill_the_shard() {
+    let mut mock = MockCfg::new(8, 8, 4);
+    mock.fail_task = Some(2);
+    let server = mock.server(&mock_server_cfg(2, 4));
+    // tasks 2 (failing, shard 0) and 1/3 (healthy, shard 1), interleaved
+    let mut rxs = Vec::new();
+    for i in 0..24 {
+        rxs.push(server.submit(1 + (i % 3), vec![0; 8]));
+    }
+    let mut failed = 0;
+    let mut ok = 0;
+    for rx in rxs {
+        let r = recv(rx);
+        match &r.result {
+            Ok(tok) => {
+                ok += 1;
+                assert_eq!(*tok, (1000 * (r.task % 2) + r.task) as i32);
+            }
+            Err(ServeError::Failed(m)) => {
+                failed += 1;
+                assert_eq!(r.task, 2, "only task 2 batches fail");
+                assert!(m.contains("injected failure"), "{m}");
+            }
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+    }
+    assert_eq!(failed, 8);
+    assert_eq!(ok, 16);
+    // the shard that owned the failing task still serves: task 0 → shard 0
+    let late = recv(server.submit(0, vec![0; 8]));
+    assert_eq!(late.next_token(), Some(0));
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.errors, 8);
+    assert_eq!(stats.latency.count(), 17);
+}
+
+#[test]
+fn mock_backpressure_rejects_when_admission_queue_full() {
+    let gate = Arc::new(Mutex::new(()));
+    let mut mock = MockCfg::new(4, 8, 1);
+    mock.gate = Some(Arc::clone(&gate));
+    let cfg = ServerCfg {
+        n_shards: 1,
+        queue_cap: 2,
+        policy: BatchPolicy { max_batch: 1, max_delay: Duration::ZERO },
+        heartbeat: Duration::from_millis(10),
+        ..ServerCfg::default()
+    };
+    let server = mock.server(&cfg);
+
+    // hold the gate shut, then park the shard inside run_batch
+    let guard = gate.lock().unwrap();
+    let first = server.submit(0, vec![0; 8]);
+    let t0 = std::time::Instant::now();
+    while mock.entered.load(Ordering::SeqCst) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "shard never started the batch");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // the shard is now blocked mid-batch: the admission queue (cap 2) must
+    // overflow deterministically
+    let mut rxs = Vec::new();
+    for _ in 0..40 {
+        rxs.push(server.submit(0, vec![0; 8]));
+    }
+    drop(guard);
+
+    let mut ok = 1; // the parked request
+    let mut rejected = 0;
+    assert!(recv(first).is_ok());
+    for rx in rxs {
+        let r = recv(rx);
+        match &r.result {
+            Ok(_) => ok += 1,
+            Err(ServeError::Rejected(_)) => rejected += 1,
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+    }
+    assert_eq!(ok, 3, "exactly the parked request + queue_cap complete");
+    assert_eq!(rejected, 38);
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.rejected, 38, "dispatcher folds rejects into merged stats");
+    assert_eq!(stats.latency.count(), 3);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn mock_idle_server_heartbeats_instead_of_spinning() {
+    let mock = MockCfg::new(4, 8, 4);
+    let cfg = ServerCfg {
+        n_shards: 1,
+        heartbeat: Duration::from_millis(50),
+        ..ServerCfg::default()
+    };
+    let server = mock.server(&cfg);
+    std::thread::sleep(Duration::from_millis(500));
+    let stats = server.stop().unwrap();
+    // the seed engine woke every 200µs (~2500 iterations in 500ms); the
+    // shard loop must block on the heartbeat instead
+    assert!(
+        stats.wakeups <= 40,
+        "idle loop iterated {} times in 500ms — busy-waiting",
+        stats.wakeups
+    );
+    assert!(stats.wakeups >= 2, "loop never woke at all");
+    assert_eq!(stats.batches, 0);
+}
+
+#[test]
+fn mock_shard_affinity_and_exactly_once_property() {
+    run_prop("shard_affinity", 20, |g| {
+        let n_shards = g.usize(1, 4);
+        let n_tasks = g.usize(1, 8);
+        let nreq = g.usize(1, 40);
+        let max_batch = g.usize(1, 8);
+        let mock = MockCfg::new(n_tasks, 8, max_batch);
+        let server = mock.server(&mock_server_cfg(n_shards, max_batch));
+        let mut rxs = Vec::new();
+        for i in 0..nreq {
+            rxs.push((i % n_tasks, server.submit(i % n_tasks, vec![0; 8])));
+        }
+        let mut ids = std::collections::HashSet::new();
+        for (task, rx) in rxs {
+            let r = rx
+                .recv_timeout(Duration::from_secs(30))
+                .map_err(|e| format!("no response: {e}"))?;
+            prop_assert!(r.task == task, "response for task {} on task {task}", r.task);
+            let tok = match r.result {
+                Ok(t) => t,
+                Err(e) => return Err(format!("unexpected error: {e}")),
+            };
+            // the prediction encodes the serving shard: must be the owner
+            let owner = (task % n_shards) as i32;
+            prop_assert!(
+                tok == owner * 1000 + task as i32,
+                "task {task} served by shard {} not {owner}",
+                tok / 1000
+            );
+            prop_assert!(ids.insert(r.id), "request {} answered twice", r.id);
+        }
+        prop_assert!(ids.len() == nreq, "answered {} of {nreq}", ids.len());
+        let stats = server.stop().map_err(|e| e.to_string())?;
+        // per-shard stats merge to exactly the submitted totals
+        prop_assert!(
+            stats.latency.count() == nreq as u64,
+            "latency count {} != {nreq}",
+            stats.latency.count()
+        );
+        prop_assert!(
+            stats.queue_wait.count() == nreq as u64,
+            "queue_wait count {} != {nreq}",
+            stats.queue_wait.count()
+        );
+        prop_assert!(
+            stats.rows - stats.padded_rows == nreq as u64,
+            "rows {} padded {} != {nreq}",
+            stats.rows,
+            stats.padded_rows
+        );
+        prop_assert!(stats.errors == 0 && stats.rejected == 0, "spurious errors/rejects");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-backed engine tests (skip when artifacts are absent)
+// ---------------------------------------------------------------------------
 
 fn ready() -> bool {
     artifacts_dir().join("manifest.json").exists()
@@ -26,7 +336,8 @@ fn run_requests(cfg: ServerCfg, n: usize, n_tasks: usize) -> (Vec<(u64, usize, i
     let mut out = Vec::new();
     for rx in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
-        out.push((resp.id, resp.task, resp.next_token));
+        let tok = resp.next_token().unwrap_or_else(|| panic!("error response: {:?}", resp.result));
+        out.push((resp.id, resp.task, tok));
     }
     let stats = server.stop().unwrap();
     (out, stats)
@@ -50,6 +361,7 @@ fn serves_all_requests_exactly_once() {
     assert_eq!(ids.len(), 64, "duplicate or dropped responses");
     assert!(stats.batches >= 4, "expected multiple batches, got {}", stats.batches);
     assert_eq!(stats.rows, stats.batches * 16);
+    assert_eq!(stats.queue_wait.count(), 64, "queue wait recorded per dispatched request");
     assert!(stats.recon_flops > 0);
     assert!(resps.iter().all(|r| (0..128).contains(&r.2)));
 }
@@ -69,6 +381,72 @@ fn predictions_deterministic_per_task() {
     let (a, _) = run_requests(mk(), 32, 2);
     let (b, _) = run_requests(mk(), 32, 2);
     assert_eq!(a, b, "same workload + seed must give identical predictions");
+}
+
+#[test]
+fn sharding_preserves_predictions() {
+    if !ready() {
+        return;
+    }
+    // task t is seeded identically regardless of which shard owns it, so a
+    // 4-shard server must predict exactly what the single engine predicts
+    let mk = |n_shards| ServerCfg {
+        kind: "lm_mcnclora8".into(),
+        n_tasks: 4,
+        n_shards,
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(1) },
+        mode: Mode::OnTheFly,
+        ..ServerCfg::default()
+    };
+    let (one, _) = run_requests(mk(1), 32, 4);
+    let (four, stats) = run_requests(mk(4), 32, 4);
+    assert_eq!(one, four, "sharding changed predictions");
+    assert_eq!(stats.latency.count(), 32);
+}
+
+#[test]
+fn fault_isolation_on_4shard_server() {
+    if !ready() {
+        return;
+    }
+    // the acceptance scenario: malformed + unknown-task requests yield
+    // error Responses while concurrent valid traffic on all shards
+    // completes, and per-shard stats merge to the submitted totals
+    let lm = MarkovLm::base(1, 128, 32);
+    let cfg = ServerCfg {
+        kind: "lm_mcnclora8".into(),
+        n_tasks: 4,
+        n_shards: 4,
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(1) },
+        mode: Mode::Merged,
+        native_recon: true,
+        ..ServerCfg::default()
+    };
+    let server = Server::start(artifacts_dir(), cfg);
+    let wrong_len = server.submit(0, vec![1, 2, 3]);
+    let unknown = server.submit(100, request_tokens(&lm, 7, 0));
+    let mut valid = Vec::new();
+    for i in 0..32u64 {
+        valid.push(server.submit((i % 4) as usize, request_tokens(&lm, 7, i)));
+    }
+    let r = wrong_len.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(matches!(r.result, Err(ServeError::Failed(_))), "{:?}", r.result);
+    let r = unknown.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(matches!(r.result, Err(ServeError::Failed(_))), "{:?}", r.result);
+    for rx in valid {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.is_ok(), "valid request failed: {:?}", r.result);
+    }
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.errors, 2);
+    assert_eq!(stats.latency.count(), 32, "one latency sample per valid request");
+    assert_eq!(stats.queue_wait.count(), 32);
+    assert_eq!(
+        stats.cache_hits + stats.cache_misses,
+        stats.batches,
+        "every merged batch is a hit or a miss"
+    );
+    assert!(stats.cache_misses >= 4, "each shard's task starts cold");
 }
 
 #[test]
@@ -161,7 +539,7 @@ fn different_adapters_give_different_predictions() {
     for (r0, r1) in pairs {
         let a = r0.recv_timeout(Duration::from_secs(120)).unwrap();
         let b = r1.recv_timeout(Duration::from_secs(120)).unwrap();
-        if a.next_token != b.next_token {
+        if a.next_token() != b.next_token() {
             diffs += 1;
         }
     }
