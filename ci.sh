@@ -19,4 +19,7 @@ cargo test -q
 echo "== serving coordinator (mock-engine tests; no artifacts needed) =="
 cargo test -q --test integration_server
 
+echo "== codec property tests (corruption handling must fail tier-1) =="
+cargo test -q -p mcnc --test prop_codec
+
 echo "CI OK"

@@ -1,16 +1,147 @@
-//! Table 8: host→device transfer of a compressed vs uncompressed model.
-//! Measures (a) bytes moved, (b) wall-clock to stage + expand on the CPU
-//! PJRT device, and (c) a PCIe-gen4 analytic projection (16 GB/s link +
-//! measured expansion), since the CPU "device" hides the link cost.
+//! Table 8: shipping a compressed vs uncompressed model.
+//!
+//! Two parts:
+//!
+//! 1. **Wire format** (runs everywhere, no artifacts needed): raw-f32
+//!    MCNC1 checkpoints vs the MCNC2 codec (lossless byte-plane rANS,
+//!    int8/int4 block-quantized + rANS) on checkpoint fixtures — wire
+//!    bytes, compression ratio, and encode/decode throughput. Emitted to
+//!    `BENCH_table8_transfer.json` (+ `results/table8_transfer_wire.csv`)
+//!    so the transfer trajectory is diffable across PRs.
+//! 2. **Host→device staging** (needs artifacts + `--features pjrt`): the
+//!    original measured + PCIe-projected comparison of dense weights vs
+//!    (α, β)+expand, and the shard-replication analytic.
 
+use mcnc::codec::Codec;
 use mcnc::exp::Ctx;
 use mcnc::runtime::{init, Role};
 use mcnc::tensor::Tensor;
+use mcnc::train::Checkpoint;
 use mcnc::util::bench::{fmt_time, time_it, Table};
+use mcnc::util::prng::Stream;
 
 const PCIE_GBPS: f64 = 16.0e9;
 
 fn main() {
+    codec_wire_table();
+    pjrt_staging();
+}
+
+// ---------------------------------------------------------------------------
+// Part 1 — wire format (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+fn fixtures() -> Vec<(&'static str, Checkpoint)> {
+    // Trained-like tensors: N(0, σ) weights have the skewed exponent-byte
+    // structure the lossless plane coder exploits (the ZipNN observation).
+    let mut s = Stream::new(7);
+    let mlp = Checkpoint {
+        entry: "mlp_mcnc02_train".into(),
+        seed: 42,
+        step: 100.0,
+        tensors: vec![
+            ("alpha".into(), Tensor::from_f32(s.normal_f32(486, 0.05), &[54, 9]).unwrap()),
+            ("beta".into(), Tensor::ones(&[54])),
+        ],
+    };
+    let vit = Checkpoint {
+        entry: "vit_lora8_train".into(),
+        seed: 42,
+        step: 100.0,
+        tensors: vec![
+            ("alpha".into(), Tensor::from_f32(s.normal_f32(131_072, 0.05), &[512, 256]).unwrap()),
+            ("beta".into(), Tensor::from_f32(s.normal_f32(512, 0.02), &[512]).unwrap()),
+            ("head".into(), Tensor::from_f32(s.normal_f32(131_072, 0.02), &[128, 1024]).unwrap()),
+        ],
+    };
+    vec![("mlp02-αβ (540 p)", mlp), ("vit-lora (262k p)", vit)]
+}
+
+fn mbps(payload_bytes: usize, secs: f64) -> String {
+    format!("{:.1}", payload_bytes as f64 / secs.max(1e-12) / 1e6)
+}
+
+fn codec_wire_table() {
+    let mut table = Table::new(
+        "Table 8a — wire format: MCNC1 raw f32 vs MCNC2 codec (checkpoint fixtures)",
+        &["fixture", "format", "wire bytes", "ratio vs MCNC1", "encode", "decode", "enc MB/s",
+            "dec MB/s"],
+    );
+    let dir = std::env::temp_dir().join(format!("mcnc_table8_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for (name, ck) in fixtures() {
+        let payload = ck.stored_params() * 4;
+        let p1 = dir.join("fixture.mcnc");
+        ck.save(&p1).unwrap();
+        let v1_bytes = std::fs::metadata(&p1).unwrap().len() as usize;
+
+        // MCNC1 must keep reading byte-for-byte identically.
+        let back = Checkpoint::load(&p1).unwrap();
+        assert_eq!(back.tensors, ck.tensors, "MCNC1 read changed");
+        assert_eq!(back.seed, ck.seed);
+
+        let enc1 = time_it(1, 5, || ck.save(&p1).unwrap());
+        let dec1 = time_it(1, 5, || {
+            let _ = Checkpoint::load(&p1).unwrap();
+        });
+        table.row(vec![
+            name.into(),
+            "MCNC1 raw f32".into(),
+            format!("{v1_bytes}"),
+            "1.00x".into(),
+            fmt_time(enc1.median()),
+            fmt_time(dec1.median()),
+            mbps(payload, enc1.median()),
+            mbps(payload, dec1.median()),
+        ]);
+
+        for codec in [Codec::Lossless, Codec::Int8 { block: 64 }, Codec::Int4 { block: 64 }] {
+            let p2 = dir.join("fixture.mcnc2");
+            let wire = ck.save_v2(&p2, codec).unwrap();
+            let back = Checkpoint::load(&p2).unwrap();
+            assert_eq!(back.tensors.len(), ck.tensors.len());
+            if codec.is_lossless() {
+                assert_eq!(back.tensors, ck.tensors, "lossless roundtrip drifted");
+                assert!(
+                    wire < v1_bytes,
+                    "{name}: MCNC2 lossless ({wire} B) not smaller than MCNC1 ({v1_bytes} B)"
+                );
+            }
+            let enc2 = time_it(1, 5, || {
+                ck.save_v2(&p2, codec).unwrap();
+            });
+            let dec2 = time_it(1, 5, || {
+                let _ = Checkpoint::load(&p2).unwrap();
+            });
+            table.row(vec![
+                name.into(),
+                format!("MCNC2 {}", codec.name()),
+                format!("{wire}"),
+                format!("{:.2}x", v1_bytes as f64 / wire as f64),
+                fmt_time(enc2.median()),
+                fmt_time(dec2.median()),
+                mbps(payload, enc2.median()),
+                mbps(payload, dec2.median()),
+            ]);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    table.print();
+    println!(
+        "(encode/decode include file IO; MCNC2 lossless is checked bit-exact and \
+         strictly smaller than MCNC1 on every fixture)"
+    );
+    table.save_csv("table8_transfer_wire");
+    table.save_json("table8_transfer");
+}
+
+// ---------------------------------------------------------------------------
+// Part 2 — host→device staging (artifacts + pjrt feature)
+// ---------------------------------------------------------------------------
+
+fn pjrt_staging() {
     let Some(ctx) = Ctx::open() else { return };
     let mut table = Table::new(
         "Table 8 — ship compressed vs dense (CPU measured + PCIe model)",

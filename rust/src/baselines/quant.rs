@@ -3,19 +3,17 @@
 //! executables. Stands in for the paper's 4-bit base model (DESIGN.md §7).
 
 /// Quantize-dequantize `w` in place: per `block`-sized group, symmetric
-/// absmax scaling to `bits`-wide signed integers.
+/// absmax scaling to `bits`-wide signed integers. Delegates to the real
+/// encode/decode pair in `codec::quantizer` so the block layout math lives
+/// in one place (the wire format and this simulation cannot drift apart).
 pub fn fake_quant(w: &mut [f32], bits: u32, block: usize) {
-    assert!((2..=8).contains(&bits));
-    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
-    for chunk in w.chunks_mut(block.max(1)) {
-        let absmax = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        if absmax == 0.0 {
-            continue;
-        }
-        let scale = absmax / qmax;
-        for v in chunk.iter_mut() {
-            let q = (*v / scale).round().clamp(-qmax - 1.0, qmax);
-            *v = q * scale;
+    use crate::codec::quantizer::{dequantize, quantize};
+    let deq = dequantize(&quantize(w, bits, block));
+    for (v, d) in w.iter_mut().zip(deq) {
+        // the wire codec maps NaN symbols to 0; the in-place simulation
+        // keeps propagating NaN so a diverged run stays visibly diverged
+        if !v.is_nan() {
+            *v = d;
         }
     }
 }
@@ -77,6 +75,14 @@ mod tests {
         let mut w = vec![0.0f32; 64];
         fake_quant(&mut w, 4, 32);
         assert!(w.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn nan_propagates() {
+        let mut w = vec![0.5f32, f32::NAN, -0.25, 0.125];
+        fake_quant(&mut w, 8, 4);
+        assert!(w[1].is_nan(), "NaN must stay NaN through fake-quant");
+        assert!(w[0].is_finite() && w[2].is_finite() && w[3].is_finite());
     }
 
     #[test]

@@ -1,0 +1,521 @@
+//! MCNC2 container plumbing: varints, CRC-32, the container header, and
+//! the per-tensor frame codec. Wire layout:
+//!
+//! ```text
+//! magic "MCNC2\n"
+//! varint hlen | header JSON | u32 crc32(header)
+//! frames*:  varint body_len | body | u32 crc32(body)
+//! end:      varint 0
+//! ```
+//!
+//! A frame body is `varint name_len | name | varint ndims | dims… | codec
+//! tag (u8) | payload`. Payloads:
+//!
+//! * lossless (tag 0): the four little-endian f32 byte planes, each as a
+//!   symbol section — trained-weight exponent planes are highly skewed
+//!   (the ZipNN observation), mantissa planes fall back to raw;
+//! * int8/int4 (tag 1/2): `varint block | f32-LE scales | symbol section`
+//!   over the biased quantized symbols.
+//!
+//! A symbol section is `flag (u8)` + either an rANS blob (`1`, when entropy
+//! coding beats bit-packing) or bit-packed raw symbols (`0`), so a frame
+//! never pays for entropy coding that does not win. Every structural field
+//! a decoder allocates from is bounded, and the CRC is checked before any
+//! payload parsing — corruption surfaces as an error, never a panic or a
+//! silent mis-decode.
+
+use anyhow::{anyhow, bail, Result};
+use std::io::Read;
+
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+use super::{quantizer, rans, Codec};
+
+pub const MAGIC_V2: &[u8; 6] = b"MCNC2\n";
+/// Header JSON length bound: a corrupt length must not drive a giant
+/// allocation (also applied to legacy MCNC1 headers by `Checkpoint::load`).
+pub const MAX_HEADER: usize = 1 << 20;
+/// Per-tensor frame length bound.
+pub const MAX_FRAME: usize = 1 << 30;
+/// Decode-side cap on tensor elements (1 GiB of f32).
+const MAX_ELEMS: usize = 1 << 28;
+const MAX_DIMS: usize = 8;
+const MAX_NAME: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// varints + CRC-32
+// ---------------------------------------------------------------------------
+
+/// Append a LEB128 varint.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read a LEB128 varint from `buf` at `*pos`, advancing it.
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).ok_or_else(|| anyhow!("varint truncated"))?;
+        *pos += 1;
+        if shift == 63 && (b & 0x7f) > 1 {
+            bail!("varint overflows u64");
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            bail!("varint too long");
+        }
+    }
+}
+
+/// Read a LEB128 varint from a reader (the streaming decode path).
+pub fn read_varint(r: &mut impl Read) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let mut byte = [0u8; 1];
+        r.read_exact(&mut byte).map_err(|_| anyhow!("varint truncated"))?;
+        let b = byte[0];
+        if shift == 63 && (b & 0x7f) > 1 {
+            bail!("varint overflows u64");
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            bail!("varint too long");
+        }
+    }
+}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3, reflected) — the per-frame integrity check.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Container header
+// ---------------------------------------------------------------------------
+
+/// Decoded MCNC2 container header. The seed is serialized as a decimal
+/// *string*: JSON numbers are f64, which silently loses u64 precision for
+/// seeds ≥ 2^53.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainerHeader {
+    pub entry: String,
+    pub seed: u64,
+    pub step: f32,
+    /// Expected frame count, when the producer knows it up front. The
+    /// decoder checks it at the end marker, so a corrupted frame-length
+    /// field cannot silently truncate the stream (a flipped length byte
+    /// can read as the end marker; the CRC-protected count catches it).
+    pub n_tensors: Option<usize>,
+}
+
+impl ContainerHeader {
+    pub fn to_json(&self) -> String {
+        let mut pairs = vec![
+            ("version", Json::num(2.0)),
+            ("entry", Json::str(self.entry.clone())),
+            ("seed", Json::str(self.seed.to_string())),
+            ("step", Json::num(self.step as f64)),
+        ];
+        if let Some(n) = self.n_tensors {
+            pairs.push(("n_tensors", Json::num(n as f64)));
+        }
+        json::to_string(&Json::obj(pairs))
+    }
+
+    pub fn parse(text: &str) -> Result<ContainerHeader> {
+        let j = json::parse(text).map_err(|e| anyhow!("container header: {e}"))?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 2 {
+            bail!("container header version {version}, want 2");
+        }
+        let seed = match j.get("seed") {
+            Some(s) => seed_from_json(s)?,
+            None => 0,
+        };
+        Ok(ContainerHeader {
+            entry: j.get("entry").and_then(Json::as_str).unwrap_or("").to_string(),
+            seed,
+            step: j.get("step").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            n_tensors: j.get("n_tensors").and_then(Json::as_usize),
+        })
+    }
+}
+
+/// Seeds round-trip as decimal strings (u64-exact); legacy MCNC1 headers
+/// hold JSON numbers. Accept both spellings on read.
+pub fn seed_from_json(j: &Json) -> Result<u64> {
+    match j {
+        Json::Str(s) => s.parse::<u64>().map_err(|_| anyhow!("bad seed string {s:?}")),
+        Json::Num(n) if *n >= 0.0 && n.is_finite() => Ok(*n as u64),
+        _ => bail!("seed must be a decimal string or non-negative number"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Symbol sections (shared by lossless planes and quantized payloads)
+// ---------------------------------------------------------------------------
+
+fn pack_bits(symbols: &[u8], bits: u32) -> Vec<u8> {
+    if bits == 8 {
+        return symbols.to_vec();
+    }
+    debug_assert_eq!(bits, 4);
+    let mut out = vec![0u8; symbols.len().div_ceil(2)];
+    for (i, &s) in symbols.iter().enumerate() {
+        out[i / 2] |= (s & 0x0f) << ((i % 2) * 4);
+    }
+    out
+}
+
+fn unpack_bits(bytes: &[u8], n: usize, bits: u32) -> Vec<u8> {
+    if bits == 8 {
+        return bytes.to_vec();
+    }
+    debug_assert_eq!(bits, 4);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push((bytes[i / 2] >> ((i % 2) * 4)) & 0x0f);
+    }
+    out
+}
+
+/// Write one symbol section: rANS blob when it beats bit-packing, else
+/// bit-packed raw (worst case costs 1 flag byte over raw).
+fn put_symbols(out: &mut Vec<u8>, symbols: &[u8], bits: u32) {
+    let blob = rans::encode(symbols, 1usize << bits);
+    let packed_len = (symbols.len() * bits as usize).div_ceil(8);
+    let mut framed = Vec::new();
+    put_varint(&mut framed, blob.len() as u64);
+    if framed.len() + blob.len() < packed_len {
+        out.push(1);
+        out.extend_from_slice(&framed);
+        out.extend_from_slice(&blob);
+    } else {
+        out.push(0);
+        out.extend_from_slice(&pack_bits(symbols, bits));
+    }
+}
+
+/// Read one symbol section of exactly `n` symbols.
+fn get_symbols(buf: &[u8], pos: &mut usize, n: usize, bits: u32) -> Result<Vec<u8>> {
+    let flag = *buf.get(*pos).ok_or_else(|| anyhow!("symbol section truncated"))?;
+    *pos += 1;
+    match flag {
+        1 => {
+            let len = get_varint(buf, pos)? as usize;
+            let end = pos
+                .checked_add(len)
+                .filter(|&e| e <= buf.len())
+                .ok_or_else(|| anyhow!("rans section overruns frame"))?;
+            let syms = rans::decode(&buf[*pos..end], n, 1usize << bits)?;
+            *pos = end;
+            Ok(syms)
+        }
+        0 => {
+            let plen = (n * bits as usize).div_ceil(8);
+            let end = pos
+                .checked_add(plen)
+                .filter(|&e| e <= buf.len())
+                .ok_or_else(|| anyhow!("raw section overruns frame"))?;
+            let syms = unpack_bits(&buf[*pos..end], n, bits);
+            *pos = end;
+            Ok(syms)
+        }
+        f => bail!("bad symbol-section flag {f}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor frames
+// ---------------------------------------------------------------------------
+
+/// Serialize one tensor frame body. The stream layer wraps it in
+/// `varint len | body | crc32(body)`.
+pub fn encode_frame(name: &str, t: &Tensor, codec: Codec) -> Result<Vec<u8>> {
+    let w = t
+        .f32s()
+        .map_err(|_| anyhow!("only f32 tensors are encoded (tensor {name:?})"))?;
+    if name.len() > MAX_NAME {
+        bail!("tensor name of {} bytes exceeds frame bound", name.len());
+    }
+    let mut b = Vec::new();
+    put_varint(&mut b, name.len() as u64);
+    b.extend_from_slice(name.as_bytes());
+    put_varint(&mut b, t.dims.len() as u64);
+    for &d in &t.dims {
+        put_varint(&mut b, d as u64);
+    }
+    match codec {
+        Codec::Lossless => {
+            b.push(0);
+            for plane in 0..4 {
+                let bytes: Vec<u8> = w.iter().map(|v| v.to_le_bytes()[plane]).collect();
+                put_symbols(&mut b, &bytes, 8);
+            }
+        }
+        Codec::Int8 { block } | Codec::Int4 { block } => {
+            let bits = if matches!(codec, Codec::Int8 { .. }) { 8 } else { 4 };
+            b.push(if bits == 8 { 1 } else { 2 });
+            let q = quantizer::quantize(w, bits, block);
+            put_varint(&mut b, q.block as u64);
+            for s in &q.scales {
+                b.extend_from_slice(&s.to_le_bytes());
+            }
+            put_symbols(&mut b, &q.symbols, bits);
+        }
+    }
+    Ok(b)
+}
+
+/// Parse one CRC-verified frame body back into a named tensor. Structural
+/// bounds (name/dims/element counts) are enforced before any allocation is
+/// sized from untrusted fields.
+pub fn decode_frame(b: &[u8]) -> Result<(String, Tensor, Codec)> {
+    let mut pos = 0usize;
+    let nlen = get_varint(b, &mut pos)? as usize;
+    if nlen > MAX_NAME {
+        bail!("frame name length {nlen} unreasonable");
+    }
+    let nend = pos
+        .checked_add(nlen)
+        .filter(|&e| e <= b.len())
+        .ok_or_else(|| anyhow!("frame name overruns body"))?;
+    let name = std::str::from_utf8(&b[pos..nend])
+        .map_err(|_| anyhow!("frame name is not utf-8"))?
+        .to_string();
+    pos = nend;
+
+    let ndims = get_varint(b, &mut pos)? as usize;
+    if ndims > MAX_DIMS {
+        bail!("frame has {ndims} dims");
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    let mut numel = 1usize;
+    for _ in 0..ndims {
+        let d = get_varint(b, &mut pos)? as usize;
+        numel = numel
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_ELEMS)
+            .ok_or_else(|| anyhow!("frame {name:?} element count overflows"))?;
+        dims.push(d);
+    }
+
+    let tag = *b.get(pos).ok_or_else(|| anyhow!("frame codec tag missing"))?;
+    pos += 1;
+    let (w, codec) = match tag {
+        0 => {
+            let mut planes = Vec::with_capacity(4);
+            for _ in 0..4 {
+                planes.push(get_symbols(b, &mut pos, numel, 8)?);
+            }
+            let mut w = Vec::with_capacity(numel);
+            for i in 0..numel {
+                w.push(f32::from_le_bytes([
+                    planes[0][i],
+                    planes[1][i],
+                    planes[2][i],
+                    planes[3][i],
+                ]));
+            }
+            (w, Codec::Lossless)
+        }
+        1 | 2 => {
+            let bits: u32 = if tag == 1 { 8 } else { 4 };
+            let block = get_varint(b, &mut pos)? as usize;
+            if block == 0 {
+                bail!("frame {name:?} has zero quantization block");
+            }
+            let n_scales = numel.div_ceil(block);
+            let send = n_scales
+                .checked_mul(4)
+                .and_then(|sb| pos.checked_add(sb))
+                .filter(|&e| e <= b.len())
+                .ok_or_else(|| anyhow!("frame {name:?} scales overrun body"))?;
+            let scales: Vec<f32> = b[pos..send]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            pos = send;
+            let symbols = get_symbols(b, &mut pos, numel, bits)?;
+            let q = quantizer::Quantized { bits, block, scales, symbols };
+            let codec =
+                if bits == 8 { Codec::Int8 { block } } else { Codec::Int4 { block } };
+            (quantizer::dequantize(&q), codec)
+        }
+        t => bail!("unknown codec tag {t}"),
+    };
+    if pos != b.len() {
+        bail!("frame {name:?} has {} trailing bytes", b.len() - pos);
+    }
+    Ok((name, Tensor::from_f32(w, &dims)?, codec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream;
+
+    #[test]
+    fn varint_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+            let mut r: &[u8] = &buf;
+            assert_eq!(read_varint(&mut r).unwrap(), v);
+        }
+        // truncated + overlong
+        let mut pos = 0;
+        assert!(get_varint(&[0x80], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(get_varint(&[0xff; 11], &mut pos).is_err());
+        let mut pos = 0;
+        // 10th byte would shift a >1 payload past bit 63
+        assert!(get_varint(&[0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x02], &mut pos)
+            .is_err());
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn header_seed_string_roundtrip() {
+        let h = ContainerHeader {
+            entry: "mlp_mcnc02_train".into(),
+            seed: u64::MAX,
+            step: 7.5,
+            n_tensors: Some(3),
+        };
+        let j = h.to_json();
+        assert!(j.contains("\"18446744073709551615\""), "{j}");
+        let back = ContainerHeader::parse(&j).unwrap();
+        assert_eq!(back, h);
+        // numeric seeds still accepted
+        let legacy = r#"{"version":2,"entry":"e","seed":42,"step":0}"#;
+        assert_eq!(ContainerHeader::parse(legacy).unwrap().seed, 42);
+        // wrong version rejected
+        assert!(ContainerHeader::parse(r#"{"version":1,"entry":"e"}"#).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_lossless_and_quantized() {
+        let vals = Stream::new(3).normal_f32(200, 0.05);
+        let t = Tensor::from_f32(vals.clone(), &[20, 10]).unwrap();
+        for codec in [Codec::Lossless, Codec::Int8 { block: 64 }, Codec::Int4 { block: 32 }] {
+            let body = encode_frame("alpha", &t, codec).unwrap();
+            let (name, back, c) = decode_frame(&body).unwrap();
+            assert_eq!(name, "alpha");
+            assert_eq!(c, codec);
+            assert_eq!(back.dims, t.dims);
+            let bf = back.f32s().unwrap();
+            if codec.is_lossless() {
+                for (a, b) in vals.iter().zip(bf) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            } else {
+                let mut fq = vals.clone();
+                let (bits, block) = match codec {
+                    Codec::Int8 { block } => (8, block),
+                    Codec::Int4 { block } => (4, block),
+                    Codec::Lossless => unreachable!(),
+                };
+                crate::baselines::quant::fake_quant(&mut fq, bits, block);
+                for (a, b) in fq.iter().zip(bf) {
+                    assert!(a == b, "{a:e} vs {b:e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frame_handles_empty_and_scalar() {
+        let empty = Tensor::from_f32(vec![], &[0, 4]).unwrap();
+        let body = encode_frame("e", &empty, Codec::Lossless).unwrap();
+        let (_, back, _) = decode_frame(&body).unwrap();
+        assert_eq!(back.dims, vec![0, 4]);
+        assert_eq!(back.numel(), 0);
+
+        let scalar = Tensor::scalar_f32(-2.5);
+        let body = encode_frame("s", &scalar, Codec::Int8 { block: 64 }).unwrap();
+        let (_, back, _) = decode_frame(&body).unwrap();
+        assert_eq!(back.numel(), 1);
+        assert!((back.f32s().unwrap()[0] + 2.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn frame_rejects_i32_and_garbage() {
+        let t = Tensor::from_i32(vec![1, 2], &[2]).unwrap();
+        assert!(encode_frame("x", &t, Codec::Lossless).is_err());
+        assert!(decode_frame(&[]).is_err());
+        // huge claimed dims must not allocate
+        let mut b = Vec::new();
+        put_varint(&mut b, 1);
+        b.push(b'x');
+        put_varint(&mut b, 2);
+        put_varint(&mut b, u32::MAX as u64);
+        put_varint(&mut b, u32::MAX as u64);
+        assert!(decode_frame(&b).is_err());
+    }
+
+    #[test]
+    fn lossless_compresses_trained_like_weights() {
+        // N(0, 0.05) weights: exponent byte plane is highly skewed.
+        let vals = Stream::new(8).normal_f32(16384, 0.05);
+        let t = Tensor::from_f32(vals, &[16384]).unwrap();
+        let body = encode_frame("w", &t, Codec::Lossless).unwrap();
+        assert!(
+            body.len() < 16384 * 4,
+            "lossless frame {} vs raw {}",
+            body.len(),
+            16384 * 4
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! `codec` — the MCNC2 compressed artifact container.
+//!
+//! The paper's premise is that *storing and transmitting* models is the
+//! bottleneck, yet the original `.mcnc` checkpoint ships raw f32-LE with no
+//! integrity checking: 4 bytes/param over the wire. This subsystem turns
+//! the Table-8 "compress and ship" scenario into a real wire format:
+//!
+//! * [`quantizer`] — block-wise absmax int8/int4 quantization as a true
+//!   encode/decode pair (same layout math as `baselines::quant`, which now
+//!   delegates its fake-quant to this module);
+//! * [`rans`] — an order-0 rANS entropy coder over the quantized symbols
+//!   (and over f32 byte planes in lossless mode — the ZipNN observation
+//!   that exponent bytes of trained weights are highly compressible);
+//! * [`container`] — the `MCNC2` frame format: varint-framed per-tensor
+//!   frames, each CRC32-protected, carrying a codec tag + shape + payload;
+//! * [`stream`] — `io::Read`/`io::Write` encoder/decoder adapters so a
+//!   receiver can decode tensor-by-tensor without materializing the whole
+//!   payload.
+//!
+//! Codec choice is per tensor, so bit-exactness stays selectable per tensor
+//! role: `Lossless` round-trips every f32 bit pattern exactly, while
+//! `Int8`/`Int4` trade the absmax quantization error bound of
+//! `baselines::quant::worst_rel_error` for a much smaller wire size.
+//! Corrupt streams (truncations, bit flips) fail decoding with an error —
+//! never a panic, never a silent mis-decode (CRC32 catches all single-bit
+//! and burst-≤32 errors in frame bodies).
+
+pub mod container;
+pub mod quantizer;
+pub mod rans;
+pub mod stream;
+
+use anyhow::{bail, Result};
+
+pub use container::{ContainerHeader, MAGIC_V2};
+pub use stream::{Decoder, Encoder};
+
+/// Per-tensor payload encoding inside an MCNC2 container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// f32 passthrough: byte-plane split + entropy coding, bit-exact.
+    Lossless,
+    /// Block-wise absmax 8-bit quantization + entropy-coded symbols.
+    Int8 { block: usize },
+    /// Block-wise absmax 4-bit quantization + entropy-coded symbols.
+    Int4 { block: usize },
+}
+
+impl Codec {
+    /// Parse a CLI/config spelling; `block` applies to the quantized modes.
+    pub fn parse(s: &str, block: usize) -> Result<Codec> {
+        match s {
+            "lossless" | "f32" => Ok(Codec::Lossless),
+            "int8" => Ok(Codec::Int8 { block }),
+            "int4" => Ok(Codec::Int4 { block }),
+            _ => bail!("unknown codec {s:?} (expected lossless|int8|int4)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::Lossless => "lossless",
+            Codec::Int8 { .. } => "int8",
+            Codec::Int4 { .. } => "int4",
+        }
+    }
+
+    /// Whether decode(encode(t)) is bit-identical to `t`.
+    pub fn is_lossless(&self) -> bool {
+        matches!(self, Codec::Lossless)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(Codec::parse("lossless", 64).unwrap(), Codec::Lossless);
+        assert_eq!(Codec::parse("f32", 64).unwrap(), Codec::Lossless);
+        assert_eq!(Codec::parse("int8", 32).unwrap(), Codec::Int8 { block: 32 });
+        assert_eq!(Codec::parse("int4", 64).unwrap(), Codec::Int4 { block: 64 });
+        assert!(Codec::parse("zstd", 64).is_err());
+    }
+
+    #[test]
+    fn names_and_lossless_flag() {
+        assert_eq!(Codec::Lossless.name(), "lossless");
+        assert_eq!(Codec::Int8 { block: 64 }.name(), "int8");
+        assert_eq!(Codec::Int4 { block: 64 }.name(), "int4");
+        assert!(Codec::Lossless.is_lossless());
+        assert!(!Codec::Int8 { block: 64 }.is_lossless());
+    }
+}

@@ -1,0 +1,132 @@
+//! Block-wise absmax int-N quantization as a real encode/decode pair.
+//!
+//! The layout is the QLoRA-style scheme `baselines::quant` has always
+//! simulated (per `block`-sized group: symmetric absmax scaling to
+//! `bits`-wide signed integers) — but here the quantized symbols and
+//! per-block scales are materialized so they can be entropy-coded and
+//! shipped. `dequantize(quantize(w))` reproduces `baselines::quant::
+//! fake_quant(w)` exactly; `fake_quant` now delegates here so the layout
+//! math lives in one place.
+//!
+//! Symbols are stored biased to unsigned: `q ∈ [-2^(bits-1), 2^(bits-1)-1]`
+//! maps to `q + 2^(bits-1) ∈ [0, 2^bits)`, a dense alphabet for the rANS
+//! stage.
+
+/// A quantized f32 slice: per-block scales + biased symbols.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    pub bits: u32,
+    pub block: usize,
+    /// `numel.div_ceil(block)` scales; 0.0 marks an all-zero block.
+    pub scales: Vec<f32>,
+    /// One biased symbol per element, each `< 2^bits`.
+    pub symbols: Vec<u8>,
+}
+
+impl Quantized {
+    /// Alphabet size of the symbol stream.
+    pub fn alphabet(&self) -> usize {
+        1usize << self.bits
+    }
+}
+
+/// Quantize `w` per `block`-sized group with symmetric absmax scaling.
+/// `bits` must be in 2..=8.
+pub fn quantize(w: &[f32], bits: u32, block: usize) -> Quantized {
+    assert!((2..=8).contains(&bits));
+    let block = block.max(1);
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let bias = 1i32 << (bits - 1);
+    let mut scales = Vec::with_capacity(w.len().div_ceil(block));
+    let mut symbols = Vec::with_capacity(w.len());
+    for chunk in w.chunks(block) {
+        let absmax = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if absmax == 0.0 {
+            scales.push(0.0);
+            for _ in chunk {
+                symbols.push(bias as u8);
+            }
+            continue;
+        }
+        let scale = absmax / qmax;
+        scales.push(scale);
+        for v in chunk {
+            let q = (*v / scale).round().clamp(-qmax - 1.0, qmax) as i32;
+            symbols.push((q + bias) as u8);
+        }
+    }
+    Quantized { bits, block, scales, symbols }
+}
+
+/// Reconstruct the f32 values. Inverse of [`quantize`] up to the absmax
+/// quantization error (`baselines::quant::worst_rel_error` bounds it).
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    let bias = 1i32 << (q.bits - 1);
+    let block = q.block.max(1);
+    let mut out = Vec::with_capacity(q.symbols.len());
+    for (ci, chunk) in q.symbols.chunks(block).enumerate() {
+        let scale = q.scales.get(ci).copied().unwrap_or(0.0);
+        for &s in chunk {
+            out.push((s as i32 - bias) as f32 * scale);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream;
+
+    #[test]
+    fn matches_fake_quant_exactly() {
+        for (seed, bits, block) in [(1u64, 8u32, 64usize), (2, 4, 32), (3, 4, 7), (4, 8, 1)] {
+            let w = Stream::new(seed).normal_f32(1000, 0.05);
+            let mut fq = w.clone();
+            crate::baselines::quant::fake_quant(&mut fq, bits, block);
+            let deq = dequantize(&quantize(&w, bits, block));
+            assert_eq!(deq.len(), w.len());
+            for (i, (a, b)) in deq.iter().zip(&fq).enumerate() {
+                assert!(a == b, "bits={bits} block={block} [{i}]: {a:e} vs {b:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn symbols_within_alphabet() {
+        let w = Stream::new(7).normal_f32(513, 1.0);
+        for bits in [2u32, 4, 8] {
+            let q = quantize(&w, bits, 64);
+            assert!(q.symbols.iter().all(|&s| (s as usize) < q.alphabet()));
+            assert_eq!(q.scales.len(), w.len().div_ceil(64));
+            assert_eq!(q.symbols.len(), w.len());
+        }
+    }
+
+    #[test]
+    fn zero_blocks_are_exact() {
+        let mut w = vec![0.0f32; 100];
+        w[70] = 0.5; // second block (of 64) non-zero
+        let q = quantize(&w, 4, 64);
+        assert_eq!(q.scales[0], 0.0);
+        assert!(q.scales[1] > 0.0);
+        let deq = dequantize(&q);
+        assert!(deq[..64].iter().all(|&v| v == 0.0));
+        assert!((deq[70] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_bounded_per_block() {
+        let w = Stream::new(12).normal_f32(4096, 0.3);
+        for bits in [4u32, 8] {
+            let deq = dequantize(&quantize(&w, bits, 64));
+            let bound = crate::baselines::quant::worst_rel_error(bits) * 1.01;
+            for (orig, back) in w.chunks(64).zip(deq.chunks(64)) {
+                let absmax = orig.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                for (a, b) in orig.iter().zip(back) {
+                    assert!((a - b).abs() <= absmax * bound, "{a} vs {b} (absmax {absmax})");
+                }
+            }
+        }
+    }
+}

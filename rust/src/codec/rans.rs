@@ -1,0 +1,273 @@
+//! Order-0 rANS entropy coder over small-alphabet byte symbols.
+//!
+//! Classic 32-bit range asymmetric numeral system with byte-wise
+//! renormalization: the coder state lives in `[2^23, 2^31)`, symbol
+//! frequencies are normalized to a 12-bit total and serialized sparsely as
+//! `(symbol, freq)` pairs ahead of the byte stream, so an `encode` blob is
+//! self-contained given the symbol count and alphabet size. The decoder
+//! validates the table (sum, bounds, duplicates) before building its slot
+//! lookup and fails — never panics — on truncated or inconsistent streams,
+//! including a final-state check so a corrupt stream cannot silently decode
+//! to plausible-looking symbols.
+//!
+//! This is the payload stage of the MCNC2 container: quantized weight
+//! symbols (alphabet 2^bits) and lossless f32 byte planes (alphabet 256)
+//! both go through it.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::container::{get_varint, put_varint};
+
+/// log2 of the normalized frequency total.
+pub const SCALE_BITS: u32 = 12;
+const M: u32 = 1 << SCALE_BITS;
+/// Lower bound of the coder state interval `[L, 256·L)`.
+const RANS_L: u32 = 1 << 23;
+
+/// Scale raw counts so they sum to exactly `M`, keeping every present
+/// symbol at frequency ≥ 1 (a present symbol must stay encodable).
+fn normalize(counts: &[u64]) -> Vec<u32> {
+    let total: u64 = counts.iter().sum();
+    let mut freqs = vec![0u32; counts.len()];
+    if total == 0 {
+        return freqs;
+    }
+    let mut sum: i64 = 0;
+    for (f, &c) in freqs.iter_mut().zip(counts) {
+        if c > 0 {
+            *f = ((c as u128 * M as u128 / total as u128) as u32).max(1);
+            sum += *f as i64;
+        }
+    }
+    // Fix rounding drift on the largest adjustable entries. The drift is
+    // bounded by the alphabet size (≤ 256 < M), so when sum > M some entry
+    // is ≥ 2 by pigeonhole and the loop always terminates.
+    while sum != M as i64 {
+        let step: i64 = if sum > M as i64 { -1 } else { 1 };
+        let mut best = usize::MAX;
+        for (s, &f) in freqs.iter().enumerate() {
+            if f == 0 || (step < 0 && f <= 1) {
+                continue;
+            }
+            if best == usize::MAX || f > freqs[best] {
+                best = s;
+            }
+        }
+        freqs[best] = (freqs[best] as i64 + step) as u32;
+        sum += step;
+    }
+    freqs
+}
+
+/// Entropy-encode `symbols` (each `< alphabet`, alphabet ≤ 256) into a
+/// self-contained blob: sparse frequency table, then the rANS byte stream
+/// (initial decoder state first).
+pub fn encode(symbols: &[u8], alphabet: usize) -> Vec<u8> {
+    debug_assert!((1..=256).contains(&alphabet));
+    let mut counts = vec![0u64; alphabet];
+    for &s in symbols {
+        counts[s as usize] += 1;
+    }
+    let freqs = normalize(&counts);
+
+    let mut out = Vec::new();
+    let present: Vec<usize> = (0..alphabet).filter(|&s| freqs[s] > 0).collect();
+    put_varint(&mut out, present.len() as u64);
+    for &s in &present {
+        out.push(s as u8);
+        put_varint(&mut out, freqs[s] as u64);
+    }
+    if symbols.is_empty() {
+        return out;
+    }
+
+    let mut cums = vec![0u32; alphabet + 1];
+    for s in 0..alphabet {
+        cums[s + 1] = cums[s] + freqs[s];
+    }
+
+    // Encode in reverse so the decoder emits symbols forward; renorm bytes
+    // land in emission order and the whole body is reversed at the end,
+    // which also leaves the final state first (big-endian) for the decoder.
+    let mut body: Vec<u8> = Vec::new();
+    let mut x: u32 = RANS_L;
+    for &s in symbols.iter().rev() {
+        let f = freqs[s as usize];
+        let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+        while x >= x_max {
+            body.push((x & 0xff) as u8);
+            x >>= 8;
+        }
+        x = (x / f) * M + (x % f) + cums[s as usize];
+    }
+    body.extend_from_slice(&x.to_le_bytes());
+    body.reverse();
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode exactly `n` symbols from an [`encode`] blob. Every failure mode
+/// of a corrupt blob (bad table, truncation, trailing bytes, inconsistent
+/// final state) is an `Err`, never a panic.
+pub fn decode(blob: &[u8], n: usize, alphabet: usize) -> Result<Vec<u8>> {
+    if !(1..=256).contains(&alphabet) {
+        bail!("rans alphabet {alphabet} out of range");
+    }
+    let mut pos = 0usize;
+    let n_present = get_varint(blob, &mut pos)? as usize;
+    if n_present > alphabet {
+        bail!("rans table has {n_present} entries for alphabet {alphabet}");
+    }
+    let mut freqs = vec![0u32; alphabet];
+    let mut sum = 0u64;
+    for _ in 0..n_present {
+        let s = *blob.get(pos).ok_or_else(|| anyhow!("rans table truncated"))? as usize;
+        pos += 1;
+        let f = get_varint(blob, &mut pos)?;
+        if s >= alphabet || freqs[s] != 0 || f == 0 || f > M as u64 {
+            bail!("rans table entry (sym {s}, freq {f}) invalid");
+        }
+        freqs[s] = f as u32;
+        sum += f;
+    }
+    if n == 0 {
+        if pos != blob.len() {
+            bail!("rans blob has {} trailing bytes", blob.len() - pos);
+        }
+        return Ok(Vec::new());
+    }
+    if sum != M as u64 {
+        bail!("rans table sums to {sum}, want {M}");
+    }
+
+    let mut cums = vec![0u32; alphabet + 1];
+    for s in 0..alphabet {
+        cums[s + 1] = cums[s] + freqs[s];
+    }
+    let mut slot_sym = vec![0u8; M as usize];
+    for s in 0..alphabet {
+        for slot in cums[s]..cums[s + 1] {
+            slot_sym[slot as usize] = s as u8;
+        }
+    }
+
+    if blob.len() < pos + 4 {
+        bail!("rans stream truncated (no state)");
+    }
+    let mut x = u32::from_be_bytes([blob[pos], blob[pos + 1], blob[pos + 2], blob[pos + 3]]);
+    pos += 4;
+    if x < RANS_L {
+        bail!("rans initial state {x:#x} below interval");
+    }
+
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let slot = x & (M - 1);
+        let s = slot_sym[slot as usize];
+        out.push(s);
+        x = freqs[s as usize] * (x >> SCALE_BITS) + slot - cums[s as usize];
+        while x < RANS_L {
+            let b = *blob.get(pos).ok_or_else(|| anyhow!("rans stream truncated"))?;
+            pos += 1;
+            x = (x << 8) | b as u32;
+        }
+    }
+    if x != RANS_L {
+        bail!("rans stream corrupt (final state {x:#x})");
+    }
+    if pos != blob.len() {
+        bail!("rans blob has {} trailing bytes", blob.len() - pos);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream;
+
+    fn roundtrip(symbols: &[u8], alphabet: usize) {
+        let blob = encode(symbols, alphabet);
+        let back = decode(&blob, symbols.len(), alphabet).unwrap();
+        assert_eq!(back, symbols, "alphabet {alphabet}, n {}", symbols.len());
+    }
+
+    #[test]
+    fn roundtrip_empty_single_uniform() {
+        roundtrip(&[], 256);
+        roundtrip(&[7], 16);
+        roundtrip(&[3; 1000], 16); // single-symbol alphabet: freq = M
+        let mut s = Stream::new(5);
+        let syms: Vec<u8> = (0..4096).map(|_| (s.next_u64() & 0xff) as u8).collect();
+        roundtrip(&syms, 256);
+    }
+
+    #[test]
+    fn roundtrip_skewed_and_compresses() {
+        // Geometric-ish distribution over a 16-symbol alphabet.
+        let mut s = Stream::new(9);
+        let syms: Vec<u8> = (0..8192)
+            .map(|_| {
+                let a = (s.next_u64() & 0x0f) as u8;
+                let b = (s.next_u64() & 0x0f) as u8;
+                a.min(b)
+            })
+            .collect();
+        let blob = encode(&syms, 16);
+        let back = decode(&blob, syms.len(), 16).unwrap();
+        assert_eq!(back, syms);
+        // Entropy ≈ 3.2 bits/sym < 4, so the blob beats 4-bit packing.
+        assert!(blob.len() < syms.len() / 2, "blob {} vs packed {}", blob.len(), syms.len() / 2);
+    }
+
+    #[test]
+    fn corrupt_streams_error_not_panic() {
+        let mut s = Stream::new(11);
+        let syms: Vec<u8> = (0..500).map(|_| (s.next_u64() % 7) as u8).collect();
+        let blob = encode(&syms, 8);
+        // truncation at every prefix length
+        for cut in 0..blob.len() {
+            assert!(decode(&blob[..cut], syms.len(), 8).is_err(), "cut at {cut}");
+        }
+        // wrong symbol count
+        assert!(decode(&blob, syms.len() + 1, 8).is_err());
+        // trailing garbage
+        let mut long = blob.clone();
+        long.push(0xAA);
+        assert!(decode(&long, syms.len(), 8).is_err());
+    }
+
+    #[test]
+    fn bad_tables_rejected() {
+        // table claiming more entries than the alphabet
+        let mut blob = Vec::new();
+        put_varint(&mut blob, 300);
+        assert!(decode(&blob, 4, 256).is_err());
+        // duplicate symbol entries
+        let mut blob = Vec::new();
+        put_varint(&mut blob, 2);
+        blob.push(1);
+        put_varint(&mut blob, 2048);
+        blob.push(1);
+        put_varint(&mut blob, 2048);
+        assert!(decode(&blob, 4, 16).is_err());
+        // sum != M
+        let mut blob = Vec::new();
+        put_varint(&mut blob, 1);
+        blob.push(0);
+        put_varint(&mut blob, 17);
+        blob.extend_from_slice(&(RANS_L).to_be_bytes());
+        assert!(decode(&blob, 4, 16).is_err());
+    }
+
+    #[test]
+    fn normalize_sums_to_m() {
+        let counts = vec![1u64, 0, 100, 3, 0, 999_999];
+        let freqs = normalize(&counts);
+        assert_eq!(freqs.iter().sum::<u32>(), M);
+        for (f, c) in freqs.iter().zip(&counts) {
+            assert_eq!(*f > 0, *c > 0);
+        }
+        assert!(normalize(&[0, 0, 0]).iter().all(|&f| f == 0));
+    }
+}

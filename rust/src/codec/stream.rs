@@ -1,0 +1,277 @@
+//! Streaming `io::Read`/`io::Write` adapters over the MCNC2 container.
+//!
+//! The encoder writes `magic | header | frame* | end-marker` incrementally;
+//! the decoder yields tensors one frame at a time, so a receiver (e.g. a
+//! serving shard ingesting a cold adapter) never materializes the whole
+//! payload. Frame bodies are CRC-verified *before* any payload parsing, and
+//! length fields are bounded, so truncated or bit-flipped streams fail with
+//! an error — never a panic, never a silently wrong tensor.
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+use super::container::{
+    crc32, encode_frame, read_varint, ContainerHeader, MAGIC_V2, MAX_FRAME, MAX_HEADER,
+};
+use super::{container, Codec};
+use crate::tensor::Tensor;
+
+/// Streaming MCNC2 writer. Call [`Encoder::finish`] to terminate the
+/// stream; a dropped encoder leaves it truncated (which decoders reject).
+pub struct Encoder<W: Write> {
+    w: W,
+    wire_bytes: usize,
+    written: usize,
+    declared: Option<usize>,
+}
+
+impl<W: Write> Encoder<W> {
+    pub fn new(mut w: W, header: &ContainerHeader) -> Result<Encoder<W>> {
+        let hj = header.to_json();
+        if hj.len() > MAX_HEADER {
+            bail!("container header of {} bytes exceeds bound", hj.len());
+        }
+        let mut pre = Vec::new();
+        pre.extend_from_slice(MAGIC_V2);
+        container::put_varint(&mut pre, hj.len() as u64);
+        pre.extend_from_slice(hj.as_bytes());
+        pre.extend_from_slice(&crc32(hj.as_bytes()).to_le_bytes());
+        w.write_all(&pre)?;
+        Ok(Encoder { w, wire_bytes: pre.len(), written: 0, declared: header.n_tensors })
+    }
+
+    /// Encode and append one tensor frame; returns its wire size.
+    pub fn write_tensor(&mut self, name: &str, t: &Tensor, codec: Codec) -> Result<usize> {
+        let body = encode_frame(name, t, codec)?;
+        if body.len() > MAX_FRAME {
+            bail!("frame {name:?} of {} bytes exceeds bound", body.len());
+        }
+        let mut len = Vec::new();
+        container::put_varint(&mut len, body.len() as u64);
+        self.w.write_all(&len)?;
+        self.w.write_all(&body)?;
+        self.w.write_all(&crc32(&body).to_le_bytes())?;
+        let frame = len.len() + body.len() + 4;
+        self.wire_bytes += frame;
+        self.written += 1;
+        Ok(frame)
+    }
+
+    /// Total bytes written so far (header + frames).
+    pub fn wire_bytes(&self) -> usize {
+        self.wire_bytes
+    }
+
+    /// Write the end marker and flush; returns the writer and the total
+    /// wire size. Fails at the producer — not at some remote decoder — if
+    /// fewer/more frames were written than the header declared.
+    pub fn finish(mut self) -> Result<(W, usize)> {
+        if let Some(n) = self.declared {
+            if self.written != n {
+                bail!("container wrote {} of {n} declared tensors", self.written);
+            }
+        }
+        self.w.write_all(&[0u8])?; // varint 0 = end of frames
+        self.w.flush()?;
+        self.wire_bytes += 1;
+        Ok((self.w, self.wire_bytes))
+    }
+}
+
+/// Streaming MCNC2 reader: header up front, then one tensor per
+/// [`Decoder::next_tensor`] call.
+pub struct Decoder<R: Read> {
+    r: R,
+    header: ContainerHeader,
+    seen: usize,
+    done: bool,
+}
+
+impl<R: Read> Decoder<R> {
+    /// Read and check the magic, then the header.
+    pub fn new(mut r: R) -> Result<Decoder<R>> {
+        let mut magic = [0u8; 6];
+        r.read_exact(&mut magic)
+            .map_err(|_| anyhow!("stream too short for MCNC2 magic"))?;
+        if &magic != MAGIC_V2 {
+            bail!("not an MCNC2 stream");
+        }
+        Decoder::after_magic(r)
+    }
+
+    /// Continue past an already-consumed magic (the checkpoint loader
+    /// sniffs the magic itself to dispatch between MCNC1 and MCNC2).
+    pub fn after_magic(mut r: R) -> Result<Decoder<R>> {
+        let hlen = read_varint(&mut r)? as usize;
+        if hlen > MAX_HEADER {
+            bail!("container header length {hlen} unreasonable");
+        }
+        let hbuf = read_exactly(&mut r, hlen).map_err(|_| anyhow!("container header truncated"))?;
+        let mut crc = [0u8; 4];
+        r.read_exact(&mut crc).map_err(|_| anyhow!("container header CRC missing"))?;
+        if crc32(&hbuf) != u32::from_le_bytes(crc) {
+            bail!("container header CRC mismatch");
+        }
+        let header = ContainerHeader::parse(
+            std::str::from_utf8(&hbuf).map_err(|_| anyhow!("container header not utf-8"))?,
+        )?;
+        Ok(Decoder { r, header, seen: 0, done: false })
+    }
+
+    pub fn header(&self) -> &ContainerHeader {
+        &self.header
+    }
+
+    /// Decode the next frame, or `None` past the end marker. Errors are
+    /// sticky only in the sense that callers should stop on the first one.
+    pub fn next_tensor(&mut self) -> Result<Option<(String, Tensor, Codec)>> {
+        if self.done {
+            return Ok(None);
+        }
+        let len = read_varint(&mut self.r).map_err(|_| anyhow!("stream truncated (no frame)"))?
+            as usize;
+        if len == 0 {
+            if let Some(n) = self.header.n_tensors {
+                if self.seen != n {
+                    bail!("stream ended after {} of {n} tensors", self.seen);
+                }
+            }
+            self.done = true;
+            return Ok(None);
+        }
+        if len > MAX_FRAME {
+            bail!("frame length {len} unreasonable");
+        }
+        let body = read_exactly(&mut self.r, len).map_err(|_| anyhow!("frame truncated"))?;
+        let mut crc = [0u8; 4];
+        self.r.read_exact(&mut crc).map_err(|_| anyhow!("frame CRC missing"))?;
+        if crc32(&body) != u32::from_le_bytes(crc) {
+            bail!("frame CRC mismatch");
+        }
+        let frame = container::decode_frame(&body)?;
+        self.seen += 1;
+        Ok(Some(frame))
+    }
+}
+
+/// Read exactly `n` bytes via a bounded incremental read, so a corrupt
+/// length cannot drive a giant up-front allocation: the buffer only grows
+/// as real bytes arrive.
+fn read_exactly(r: &mut impl Read, n: usize) -> std::io::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    r.take(n as u64).read_to_end(&mut buf)?;
+    if buf.len() != n {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("wanted {n} bytes, got {}", buf.len()),
+        ));
+    }
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream as Prng;
+
+    fn sample_tensors() -> Vec<(String, Tensor)> {
+        let mut s = Prng::new(21);
+        vec![
+            ("alpha".to_string(), Tensor::from_f32(s.normal_f32(486, 0.05), &[54, 9]).unwrap()),
+            ("beta".to_string(), Tensor::ones(&[54])),
+        ]
+    }
+
+    fn encode_all(codec: Codec) -> Vec<u8> {
+        let header = ContainerHeader {
+            entry: "mlp_mcnc02_train".into(),
+            seed: 42,
+            step: 10.0,
+            n_tensors: Some(2),
+        };
+        let mut enc = Encoder::new(Vec::new(), &header).unwrap();
+        for (name, t) in sample_tensors() {
+            enc.write_tensor(&name, &t, codec).unwrap();
+        }
+        let (bytes, total) = enc.finish().unwrap();
+        assert_eq!(bytes.len(), total);
+        bytes
+    }
+
+    #[test]
+    fn stream_roundtrip_per_tensor() {
+        let bytes = encode_all(Codec::Lossless);
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        assert_eq!(dec.header().entry, "mlp_mcnc02_train");
+        assert_eq!(dec.header().seed, 42);
+        let orig = sample_tensors();
+        let mut n = 0;
+        while let Some((name, t, codec)) = dec.next_tensor().unwrap() {
+            assert_eq!(name, orig[n].0);
+            assert_eq!(codec, Codec::Lossless);
+            let a = t.f32s().unwrap();
+            let b = orig[n].1.f32s().unwrap();
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+            n += 1;
+        }
+        assert_eq!(n, 2);
+        // past the end marker it stays None
+        assert!(dec.next_tensor().unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_always_errors() {
+        let bytes = encode_all(Codec::Int8 { block: 64 });
+        for cut in 0..bytes.len() {
+            let r = drain(&bytes[..cut]);
+            assert!(r.is_err(), "prefix of {cut} bytes decoded cleanly");
+        }
+        assert!(drain(&bytes).is_ok());
+    }
+
+    #[test]
+    fn bit_flips_always_error() {
+        let bytes = encode_all(Codec::Int4 { block: 32 });
+        // flip one bit at a spread of positions incl. magic, header, CRCs
+        for ix in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[ix] ^= 1 << (ix % 8);
+            assert!(drain(&bad).is_err(), "bit flip at byte {ix} decoded cleanly");
+        }
+    }
+
+    fn drain(bytes: &[u8]) -> Result<usize> {
+        let mut dec = Decoder::new(bytes)?;
+        let mut n = 0;
+        while let Some(_t) = dec.next_tensor()? {
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn encoder_enforces_declared_count() {
+        let header = ContainerHeader { entry: "e".into(), seed: 1, step: 0.0, n_tensors: Some(2) };
+        let mut enc = Encoder::new(Vec::new(), &header).unwrap();
+        enc.write_tensor("only", &Tensor::ones(&[3]), Codec::Lossless).unwrap();
+        let err = enc.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("1 of 2"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_huge_claimed_lengths_cheaply() {
+        // MCNC2 magic + varint claiming a ~1 EiB header
+        let mut bytes = MAGIC_V2.to_vec();
+        container::put_varint(&mut bytes, 1 << 60);
+        assert!(Decoder::new(&bytes[..]).is_err());
+
+        // valid header, then a frame claiming more than MAX_FRAME
+        let header = ContainerHeader { entry: "e".into(), seed: 1, step: 0.0, n_tensors: None };
+        let enc = Encoder::new(Vec::new(), &header).unwrap();
+        let (mut bytes, _) = enc.finish().unwrap();
+        bytes.pop(); // drop end marker
+        container::put_varint(&mut bytes, (MAX_FRAME as u64) + 1);
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        assert!(dec.next_tensor().is_err());
+    }
+}

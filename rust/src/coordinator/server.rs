@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::codec;
 use crate::coordinator::cache::LruCache;
 use crate::coordinator::metrics::ServeStats;
 use crate::coordinator::router::{Batch, BatchPolicy, Request};
@@ -279,6 +280,46 @@ impl Response {
     }
 }
 
+/// Decode an MCNC2-encoded adapter stream into the manifest's trainable
+/// slot order (frames may arrive in any order; names must match specs
+/// exactly). This is the wire side of a Merged-mode cold fill: the
+/// coordinator can ingest the encoded bytes a trainer shipped without an
+/// intermediate checkpoint file, decoding tensor-by-tensor as they stream
+/// in. The container's entry must belong to `kind` — the wire twin of
+/// `Checkpoint::restore`'s entry check, so an adapter trained for a
+/// different family with coincidentally matching slot shapes is rejected
+/// instead of silently serving the wrong weights.
+fn decode_adapter(
+    kind: &str,
+    specs: &[IoSpec],
+    reader: impl std::io::Read,
+) -> Result<Vec<Tensor>> {
+    let mut dec = codec::Decoder::new(reader).context("decoding adapter stream")?;
+    if !dec.header().entry.starts_with(kind) {
+        bail!(
+            "encoded adapter is for entry {:?}, this engine serves kind {kind:?}",
+            dec.header().entry
+        );
+    }
+    let mut frames: Vec<(String, Tensor)> = Vec::new();
+    while let Some((name, t, _codec)) = dec.next_tensor()? {
+        frames.push((name, t));
+    }
+    let mut out = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let ix = frames
+            .iter()
+            .position(|(n, _)| n == &spec.name)
+            .ok_or_else(|| anyhow!("encoded adapter is missing tensor {:?}", spec.name))?;
+        out.push(frames.swap_remove(ix).1);
+    }
+    if !frames.is_empty() {
+        let extra: Vec<&str> = frames.iter().map(|(n, _)| n.as_str()).collect();
+        bail!("encoded adapter has unknown tensors: {}", extra.join(", "));
+    }
+    Ok(out)
+}
+
 /// Validate adapter tensors against the executable's trainable specs —
 /// `install_adapter` must reject malformed checkpoints up front so the
 /// serving path never panics on a bad slot count or shape.
@@ -474,6 +515,22 @@ impl Engine {
         self.merged_cache.remove(&task);
         self.adapters.insert(task, trainables);
         Ok(())
+    }
+
+    /// Install a task's adapter directly from an encoded MCNC2 stream (the
+    /// wire format `Checkpoint::save_v2` / the codec `Encoder` produce), so
+    /// a Merged-mode cold fill can ingest what came off the network without
+    /// first materializing a checkpoint file. Decoding is streaming and
+    /// CRC-checked per frame, the container's entry must belong to this
+    /// engine's adapter family, and the decoded slots go through the same
+    /// manifest validation as [`Engine::install_adapter`].
+    pub fn install_adapter_encoded(
+        &mut self,
+        task: usize,
+        reader: impl std::io::Read,
+    ) -> Result<()> {
+        let trainables = decode_adapter(&self.cfg.kind, &self.trainable_specs, reader)?;
+        self.install_adapter(task, trainables)
     }
 
     fn build_x(&self, batch: &Batch) -> Result<(Tensor, usize)> {
@@ -764,6 +821,67 @@ mod tests {
     fn validate_adapter_accepts_matching() {
         let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
         validate_adapter(&specs, &[t(&[2, 3]), t(&[3])]).unwrap();
+    }
+
+    fn encoded_adapter(tensors: &[(&str, Tensor)]) -> Vec<u8> {
+        let header = codec::ContainerHeader {
+            entry: "lm_mcnclora8_predict".into(),
+            seed: 1,
+            step: 0.0,
+            n_tensors: Some(tensors.len()),
+        };
+        let mut enc = codec::Encoder::new(Vec::new(), &header).unwrap();
+        for (name, t) in tensors {
+            enc.write_tensor(name, t, codec::Codec::Lossless).unwrap();
+        }
+        enc.finish().unwrap().0
+    }
+
+    #[test]
+    fn decode_adapter_orders_by_spec() {
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        // frames arrive in the opposite order; decode must return spec order
+        let bytes = encoded_adapter(&[("beta", t(&[3])), ("alpha", t(&[2, 3]))]);
+        let tr = decode_adapter("lm_mcnclora8", &specs, &bytes[..]).unwrap();
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr[0].dims, vec![2, 3]);
+        assert_eq!(tr[1].dims, vec![3]);
+        validate_adapter(&specs, &tr).unwrap();
+    }
+
+    #[test]
+    fn decode_adapter_rejects_missing_and_unknown() {
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        let bytes = encoded_adapter(&[("alpha", t(&[2, 3]))]);
+        let err = decode_adapter("lm_mcnclora8", &specs, &bytes[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("missing tensor"), "{err:#}");
+
+        let bytes = encoded_adapter(&[
+            ("alpha", t(&[2, 3])),
+            ("beta", t(&[3])),
+            ("gamma", t(&[1])),
+        ]);
+        let err = decode_adapter("lm_mcnclora8", &specs, &bytes[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown tensors"), "{err:#}");
+    }
+
+    #[test]
+    fn decode_adapter_rejects_wrong_family() {
+        // same slot names/shapes, different adapter family: must not install
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        let bytes = encoded_adapter(&[("alpha", t(&[2, 3])), ("beta", t(&[3]))]);
+        let err = decode_adapter("lm_nola8", &specs, &bytes[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("serves kind"), "{err:#}");
+    }
+
+    #[test]
+    fn decode_adapter_rejects_corrupt_stream() {
+        let specs = vec![spec("alpha", &[2, 3])];
+        let mut bytes = encoded_adapter(&[("alpha", t(&[2, 3]))]);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        assert!(decode_adapter("lm_mcnclora8", &specs, &bytes[..]).is_err());
+        assert!(decode_adapter("lm_mcnclora8", &specs, &bytes[..4]).is_err());
     }
 
     #[test]

@@ -22,6 +22,7 @@ compile_error!(
 );
 
 pub mod baselines;
+pub mod codec;
 pub mod coordinator;
 pub mod data;
 pub mod exp;

@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use mcnc::codec::Codec;
 use mcnc::coordinator::workload::{open_loop, replay};
 use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg};
 use mcnc::data::{Dataset, MarkovLm, SynthVision};
@@ -38,6 +39,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "serve" => serve_cmd(args),
         "sphere" => sphere_cmd(args),
         "config" => config_cmd(args),
+        "pack" => pack_cmd(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -48,11 +50,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 reproduction)
 
   info    [--group G]            list artifact executables (+ meta)
-  train   --exec NAME [--steps N --lr F --batch B --seed S --out CK --data synth|c10|c100|lm]
+  train   --exec NAME [--steps N --lr F --batch B --seed S --out CK --codec lossless|int8|int4 --block N --data synth|c10|c100|lm]
   eval    --ckpt FILE [--seed S]
   serve   [--kind K --tasks N --shards N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S --queue-cap N]
   sphere  [--acts sine,sigmoid,relu --l 1,5,10,100 --width 256]
   config  --file cfg.toml        config-driven training job
+  pack    --ckpt FILE --out FILE [--codec lossless|int8|int4 --block N]
+                                 re-encode a checkpoint as an MCNC2 container
 
 Artifacts come from `make artifacts`; set MCNC_ARTIFACTS to relocate.";
 
@@ -98,9 +102,7 @@ fn dataset_for(entry_model: &str, data_flag: &str, seed: u64) -> Arc<dyn Dataset
 }
 
 fn train_cmd(args: &Args) -> Result<()> {
-    let exec = args
-        .get("exec")
-        .ok_or_else(|| anyhow!("--exec NAME required (see `mcnc info`)"))?;
+    let exec = args.require("exec")?;
     let train_name =
         if exec.ends_with("_train") { exec.to_string() } else { format!("{exec}_train") };
     let sess = Session::open(&artifacts_dir())?;
@@ -139,19 +141,21 @@ fn train_cmd(args: &Args) -> Result<()> {
     );
     if let Some(out) = args.get("out") {
         let ck = Checkpoint::from_state(&state);
-        ck.save(std::path::Path::new(out))?;
-        println!(
-            "checkpoint: {} ({} bytes, {} params)",
-            out,
-            ck.stored_bytes(),
-            ck.stored_params()
-        );
+        let bytes = if let Some(codec) = args.get("codec") {
+            // MCNC2: compressed container (auto-detected by `eval`/`load`)
+            let codec = Codec::parse(codec, args.usize_or("block", 64))?;
+            ck.save_v2(std::path::Path::new(out), codec)?
+        } else {
+            ck.save(std::path::Path::new(out))?;
+            ck.stored_bytes()
+        };
+        println!("checkpoint: {} ({} bytes, {} params)", out, bytes, ck.stored_params());
     }
     Ok(())
 }
 
 fn eval_cmd(args: &Args) -> Result<()> {
-    let path = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt FILE required"))?;
+    let path = args.require("ckpt")?;
     let ck = Checkpoint::load(std::path::Path::new(path))?;
     let sess = Session::open(&artifacts_dir())?;
     let mut state = TrainState::new(&sess, &ck.entry, ck.seed)?;
@@ -245,8 +249,30 @@ fn sphere_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn pack_cmd(args: &Args) -> Result<()> {
+    let inp = args.require("ckpt")?;
+    let out = args.require("out")?;
+    let codec = Codec::parse(&args.str_or("codec", "lossless"), args.usize_or("block", 64))?;
+    let ck = Checkpoint::load(std::path::Path::new(inp))?;
+    let wire = ck.save_v2(std::path::Path::new(out), codec)?;
+    let in_bytes = std::fs::metadata(inp)?.len();
+    println!(
+        "{inp} → {out} [{}]: {in_bytes} → {wire} bytes ({:.2}x smaller, {} tensors)",
+        codec.name(),
+        in_bytes as f64 / wire.max(1) as f64,
+        ck.tensors.len()
+    );
+    if !codec.is_lossless() {
+        println!(
+            "note: {} is lossy (absmax-bounded); keep the original for bit-exact restores",
+            codec.name()
+        );
+    }
+    Ok(())
+}
+
 fn config_cmd(args: &Args) -> Result<()> {
-    let path = args.get("file").ok_or_else(|| anyhow!("--file cfg.toml required"))?;
+    let path = args.require("file")?;
     let cfg = Config::load(path)?;
     let exec = cfg.str_or("train.exec", "mlp_mcnc02");
     let mut forwarded = vec![

@@ -1,19 +1,27 @@
-//! Compressed checkpoint format (`.mcnc`): what actually ships when a model
-//! is stored or transmitted — the scalar seed (θ0 + generator are
-//! re-derivable) plus the trainable tensors. Layout:
+//! Compressed checkpoint formats (`.mcnc`): what actually ships when a
+//! model is stored or transmitted — the scalar seed (θ0 + generator are
+//! re-derivable) plus the trainable tensors.
+//!
+//! Two on-disk layouts share the extension and are auto-detected by magic:
 //!
 //! ```text
-//! magic "MCNC1\n" | u32 header_len | header JSON | f32-LE payload
+//! MCNC1: magic "MCNC1\n" | u32 header_len | header JSON | f32-LE payload
+//! MCNC2: the codec::container streaming format (quantized and/or
+//!        entropy-coded per-tensor frames, CRC-protected)
 //! ```
 //!
-//! The header records entry name, seed, and per-tensor (name, shape,
-//! offset); `stored_bytes` is the paper's "model size" numerator.
+//! [`Checkpoint::save`] keeps writing MCNC1 byte-for-byte as before;
+//! [`Checkpoint::save_v2`] writes the compressed MCNC2 container, with the
+//! codec selectable per tensor via [`Checkpoint::save_v2_with`] (e.g.
+//! lossless for (α, β), int8 for a raw head). `stored_bytes` is the
+//! paper's "model size" numerator for the MCNC1 layout.
 
-use std::io::{Read, Write};
+use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::codec::{self, Codec, ContainerHeader};
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 
@@ -77,17 +85,60 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Write the checkpoint as a streaming MCNC2 container with one codec
+    /// for every tensor. Returns the wire size in bytes.
+    pub fn save_v2(&self, path: &Path, codec: Codec) -> Result<usize> {
+        self.save_v2_with(path, |_, _| codec)
+    }
+
+    /// MCNC2 save with a per-tensor codec choice (`codec_for(name, t)`), so
+    /// bit-exactness stays selectable per tensor role — e.g. lossless for
+    /// the (α, β) manifold coordinates, int8 for a raw dense head.
+    pub fn save_v2_with(
+        &self,
+        path: &Path,
+        codec_for: impl Fn(&str, &Tensor) -> Codec,
+    ) -> Result<usize> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let header = ContainerHeader {
+            entry: self.entry.clone(),
+            seed: self.seed,
+            step: self.step,
+            n_tensors: Some(self.tensors.len()),
+        };
+        let mut enc = codec::Encoder::new(BufWriter::new(f), &header)?;
+        for (name, t) in &self.tensors {
+            enc.write_tensor(name, t, codec_for(name, t))?;
+        }
+        let (_, wire) = enc.finish()?;
+        Ok(wire)
+    }
+
+    /// Load either checkpoint format, auto-detected by magic. MCNC1 files
+    /// read byte-for-byte exactly as they always have.
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
         let mut magic = [0u8; 6];
         f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        if &magic == MAGIC {
+            Checkpoint::load_v1(f)
+        } else if &magic == codec::MAGIC_V2 {
+            Checkpoint::load_v2(f)
+        } else {
             bail!("not an .mcnc checkpoint");
         }
+    }
+
+    fn load_v1(mut f: std::fs::File) -> Result<Checkpoint> {
         let mut len4 = [0u8; 4];
         f.read_exact(&mut len4)?;
         let hlen = u32::from_le_bytes(len4) as usize;
+        // a corrupt header length must not drive an unchecked allocation
+        if hlen > codec::container::MAX_HEADER {
+            bail!("checkpoint header length {hlen} unreasonable");
+        }
         let mut hbuf = vec![0u8; hlen];
         f.read_exact(&mut hbuf)?;
         let header = json::parse(std::str::from_utf8(&hbuf)?)
@@ -103,6 +154,7 @@ impl Checkpoint {
             .collect();
 
         let mut tensors = Vec::new();
+        let mut ranges: Vec<(usize, usize, String)> = Vec::new();
         for t in header.get("tensors").and_then(Json::as_arr).unwrap_or(&[]) {
             let name = t.get("name").and_then(Json::as_str).unwrap_or("").to_string();
             let shape = t.get("shape").map(Json::usize_vec).unwrap_or_default();
@@ -111,14 +163,40 @@ impl Checkpoint {
             if offset + n > floats.len() {
                 bail!("tensor {name} overruns payload");
             }
+            if n > 0 {
+                ranges.push((offset, offset + n, name.clone()));
+            }
             tensors.push((name, Tensor::from_f32(floats[offset..offset + n].to_vec(), &shape)?));
         }
+        // overlapping tensor ranges mean a corrupt (or adversarial) header
+        ranges.sort();
+        for pair in ranges.windows(2) {
+            if pair[1].0 < pair[0].1 {
+                bail!("tensors {} and {} overlap in the payload", pair[0].2, pair[1].2);
+            }
+        }
+        let seed = match header.get("seed") {
+            // written as a number by `save`, but accept the MCNC2 decimal
+            // string spelling too (u64-exact for seeds ≥ 2^53)
+            Some(j) => codec::container::seed_from_json(j)?,
+            None => 0,
+        };
         Ok(Checkpoint {
             entry: header.get("entry").and_then(Json::as_str).unwrap_or("").to_string(),
-            seed: header.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            seed,
             step: header.get("step").and_then(Json::as_f64).unwrap_or(0.0) as f32,
             tensors,
         })
+    }
+
+    fn load_v2(f: std::fs::File) -> Result<Checkpoint> {
+        let mut dec = codec::Decoder::after_magic(std::io::BufReader::new(f))?;
+        let mut tensors = Vec::new();
+        while let Some((name, t, _codec)) = dec.next_tensor()? {
+            tensors.push((name, t));
+        }
+        let h = dec.header();
+        Ok(Checkpoint { entry: h.entry.clone(), seed: h.seed, step: h.step, tensors })
     }
 
     /// Snapshot a training state's compressed representation.
@@ -197,6 +275,98 @@ mod tests {
         let path = dir.join("bad.mcnc");
         std::fs::write(&path, b"NOTMCNC").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("mcnc_ck_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn v2_lossless_roundtrip_u64_seed() {
+        let mut ck = sample();
+        ck.seed = u64::MAX; // only representable via the string spelling
+        let dir = tmp("v2");
+        let p1 = dir.join("a.mcnc");
+        let p2 = dir.join("a2.mcnc");
+        ck.save(&p1).unwrap();
+        let wire = ck.save_v2(&p2, Codec::Lossless).unwrap();
+        assert_eq!(wire as u64, std::fs::metadata(&p2).unwrap().len());
+
+        let back = Checkpoint::load(&p2).unwrap();
+        assert_eq!(back.entry, ck.entry);
+        assert_eq!(back.seed, u64::MAX, "seed must round-trip u64-exactly");
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.tensors.len(), ck.tensors.len());
+        for ((an, at), (bn, bt)) in back.tensors.iter().zip(&ck.tensors) {
+            assert_eq!(an, bn);
+            assert_eq!(at, bt);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_per_role_codec() {
+        let ck = sample();
+        let dir = tmp("role");
+        let path = dir.join("mixed.mcnc");
+        ck.save_v2_with(&path, |name, _| {
+            if name == "alpha" {
+                Codec::Int8 { block: 32 }
+            } else {
+                Codec::Lossless
+            }
+        })
+        .unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        // beta (lossless) is bit-exact; alpha (int8) within the absmax bound
+        assert_eq!(back.tensors[1].1, ck.tensors[1].1);
+        let a = back.tensors[0].1.f32s().unwrap();
+        let b = ck.tensors[0].1.f32s().unwrap();
+        let bound = crate::baselines::quant::worst_rel_error(8) * 6.0; // absmax ≈ 5.3 per block
+        assert!(a.iter().zip(b).all(|(x, y)| (x - y).abs() <= bound));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_rejects_huge_header_len() {
+        let dir = tmp("hlen");
+        let path = dir.join("huge.mcnc");
+        let mut bytes = b"MCNC1\n".to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("unreasonable"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_rejects_overlapping_offsets() {
+        let dir = tmp("overlap");
+        let path = dir.join("overlap.mcnc");
+        let header = r#"{"version":1,"entry":"e","seed":1,"step":0,"tensors":[{"name":"a","shape":[4],"offset":0},{"name":"b","shape":[4],"offset":2}]}"#;
+        let mut bytes = b"MCNC1\n".to_vec();
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 6 * 4]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("overlap"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_accepts_string_seed() {
+        let dir = tmp("seedstr");
+        let path = dir.join("s.mcnc");
+        let header = r#"{"version":1,"entry":"e","seed":"18446744073709551615","step":0,"tensors":[]}"#;
+        let mut bytes = b"MCNC1\n".to_vec();
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().seed, u64::MAX);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

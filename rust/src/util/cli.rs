@@ -4,6 +4,8 @@
 
 use std::collections::HashMap;
 
+use anyhow::{anyhow, Result};
+
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
@@ -17,10 +19,12 @@ impl Args {
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(rest) = a.strip_prefix("--") {
+                // `next_if` both peeks and consumes, so a flag at the end
+                // of the line can never hit a panicking `next().unwrap()`
                 let (key, val) = if let Some((k, v)) = rest.split_once('=') {
                     (k.to_string(), v.to_string())
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    (rest.to_string(), it.next().unwrap())
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                    (rest.to_string(), v)
                 } else {
                     (rest.to_string(), "true".to_string())
                 };
@@ -43,6 +47,12 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Value of `--key`, or an error naming the missing flag — commands
+    /// with mandatory flags should use this instead of panicking accessors.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -121,5 +131,20 @@ mod tests {
     fn negative_numbers_as_values() {
         let a = args("--bias=-0.5");
         assert!((a.f32_or("bias", 0.0) + 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trailing_bare_flag_never_panics() {
+        let a = args("run --steps 5 --verbose");
+        assert_eq!(a.usize_or("steps", 0), 5);
+        assert!(a.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn require_names_the_flag() {
+        let a = args("--exec mlp");
+        assert_eq!(a.require("exec").unwrap(), "mlp");
+        let err = a.require("ckpt").unwrap_err();
+        assert!(err.to_string().contains("--ckpt"), "{err}");
     }
 }

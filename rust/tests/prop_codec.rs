@@ -1,0 +1,231 @@
+//! Randomized properties of the MCNC2 codec subsystem: lossless mode is
+//! bit-exact for arbitrary f32 bit patterns (NaNs, infinities, denormals
+//! included), quantized modes reproduce `fake_quant` exactly and stay
+//! within the absmax error bound, the rANS coder round-trips any symbol
+//! stream, and corrupted containers — truncations and single-bit flips
+//! anywhere in the stream — always fail with an error: never a panic,
+//! never a silent mis-decode.
+
+use mcnc::codec::{container, rans, Codec, ContainerHeader, Decoder, Encoder};
+use mcnc::prop_assert;
+use mcnc::tensor::Tensor;
+use mcnc::train::Checkpoint;
+use mcnc::util::prop::{run_prop, Gen};
+
+/// anyhow → property-error adapter.
+fn e<T>(r: anyhow::Result<T>) -> Result<T, String> {
+    r.map_err(|x| format!("{x:#}"))
+}
+
+/// Fully decode a container, counting tensors.
+fn drain(bytes: &[u8]) -> anyhow::Result<usize> {
+    let mut dec = Decoder::new(bytes)?;
+    let mut n = 0;
+    while let Some(_frame) = dec.next_tensor()? {
+        n += 1;
+    }
+    Ok(n)
+}
+
+/// A random multi-tensor container (random shapes, values, codecs) that is
+/// checked to decode cleanly before being returned.
+fn random_container(g: &mut Gen) -> Result<Vec<u8>, String> {
+    let n_t = g.usize(1, 4);
+    let mut tensors = Vec::new();
+    for i in 0..n_t {
+        let rows = g.usize(1, 12);
+        let cols = g.usize(1, 12);
+        let vals = g.vec_f32(rows * cols, -1.0, 1.0);
+        tensors.push((format!("t{i}"), Tensor::from_f32(vals, &[rows, cols]).unwrap()));
+    }
+    let header =
+        ContainerHeader { entry: "prop".into(), seed: 7, step: 0.0, n_tensors: Some(n_t) };
+    let mut enc = e(Encoder::new(Vec::new(), &header))?;
+    for (name, t) in &tensors {
+        let codec = *g.pick(&[Codec::Lossless, Codec::Int8 { block: 16 }, Codec::Int4 { block: 8 }]);
+        e(enc.write_tensor(name, t, codec))?;
+    }
+    let (bytes, _total) = e(enc.finish())?;
+    match drain(&bytes) {
+        Ok(n) if n == n_t => Ok(bytes),
+        Ok(n) => Err(format!("pristine container decoded {n} of {n_t} tensors")),
+        Err(err) => Err(format!("pristine container failed to decode: {err:#}")),
+    }
+}
+
+#[test]
+fn rans_roundtrips_any_stream() {
+    run_prop("rans_roundtrip", 120, |g| {
+        let bits = *g.pick(&[1usize, 4, 8]);
+        let alphabet = 1usize << bits;
+        let n = g.usize(0, 1500);
+        let skew = g.bool();
+        let mut syms = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = g.usize(0, alphabet - 1);
+            let b = g.usize(0, alphabet - 1);
+            syms.push(if skew { a.min(b) } else { a } as u8);
+        }
+        let blob = rans::encode(&syms, alphabet);
+        let back = e(rans::decode(&blob, n, alphabet))?;
+        prop_assert!(back == syms, "rans roundtrip mismatch (n={n}, alphabet={alphabet})");
+        Ok(())
+    });
+}
+
+#[test]
+fn lossless_roundtrip_is_bit_exact() {
+    run_prop("codec_lossless_bits", 60, |g| {
+        let n = g.usize(0, 600);
+        let vals: Vec<f32> = (0..n)
+            .map(|_| {
+                if g.bool() {
+                    // arbitrary bit patterns: NaNs, ±inf, denormals, -0.0
+                    f32::from_bits(g.usize(0, u32::MAX as usize) as u32)
+                } else {
+                    g.f32(-2.0, 2.0)
+                }
+            })
+            .collect();
+        let t = Tensor::from_f32(vals.clone(), &[n]).unwrap();
+        let seed = ((g.usize(0, u32::MAX as usize) as u64) << 32)
+            | g.usize(0, u32::MAX as usize) as u64;
+        let header =
+            ContainerHeader { entry: "p".into(), seed, step: 1.0, n_tensors: Some(1) };
+        let mut enc = e(Encoder::new(Vec::new(), &header))?;
+        e(enc.write_tensor("w", &t, Codec::Lossless))?;
+        let (bytes, total) = e(enc.finish())?;
+        prop_assert!(bytes.len() == total, "wire accounting drifted");
+
+        let mut dec = e(Decoder::new(&bytes[..]))?;
+        prop_assert!(dec.header().seed == seed, "seed drifted through the header");
+        let (name, back, codec) =
+            e(dec.next_tensor())?.ok_or_else(|| "no tensor decoded".to_string())?;
+        prop_assert!(name == "w", "name drifted: {name:?}");
+        prop_assert!(codec == Codec::Lossless, "codec tag drifted");
+        let bw = back.f32s().unwrap();
+        for (i, (a, b)) in vals.iter().zip(bw).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "bit drift at {i}: {:#010x} vs {:#010x}",
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+        prop_assert!(e(dec.next_tensor())?.is_none(), "phantom extra tensor");
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_roundtrip_matches_fake_quant_and_bound() {
+    run_prop("codec_quant_bound", 60, |g| {
+        let n = g.usize(0, 800);
+        let block = g.usize(1, 128);
+        let codec = if g.bool() { Codec::Int8 { block } } else { Codec::Int4 { block } };
+        let bits = if matches!(codec, Codec::Int8 { .. }) { 8u32 } else { 4 };
+        let vals = g.vec_f32(n, -3.0, 3.0);
+        let t = Tensor::from_f32(vals.clone(), &[n]).unwrap();
+
+        let body = e(container::encode_frame("q", &t, codec))?;
+        let (_, back, c) = e(container::decode_frame(&body))?;
+        prop_assert!(c == codec, "codec tag drifted");
+        let bw = back.f32s().unwrap();
+        prop_assert!(bw.len() == n, "length drifted");
+
+        // exact agreement with the fake-quant simulation…
+        let mut expect = vals.clone();
+        mcnc::baselines::quant::fake_quant(&mut expect, bits, block);
+        for i in 0..n {
+            prop_assert!(
+                bw[i] == expect[i],
+                "bits={bits} block={block} [{i}]: {:e} vs fake_quant {:e}",
+                bw[i],
+                expect[i]
+            );
+        }
+        // …and within the absmax bound per block
+        let bound = mcnc::baselines::quant::worst_rel_error(bits) * 1.01;
+        for (orig, dq) in vals.chunks(block).zip(bw.chunks(block)) {
+            let absmax = orig.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            for (a, b) in orig.iter().zip(dq) {
+                prop_assert!(
+                    (a - b).abs() <= absmax * bound,
+                    "error {:e} above bound {:e}",
+                    (a - b).abs(),
+                    absmax * bound
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_streams_always_error() {
+    run_prop("codec_truncation", 40, |g| {
+        let bytes = random_container(g)?;
+        let cut = g.usize(0, bytes.len() - 1);
+        match drain(&bytes[..cut]) {
+            Err(_) => Ok(()),
+            Ok(n) => Err(format!("prefix {cut}/{} decoded cleanly ({n} tensors)", bytes.len())),
+        }
+    });
+}
+
+#[test]
+fn bit_flipped_streams_always_error() {
+    run_prop("codec_bitflip", 60, |g| {
+        let bytes = random_container(g)?;
+        let ix = g.usize(0, bytes.len() - 1);
+        let bit = g.usize(0, 7);
+        let mut bad = bytes;
+        bad[ix] ^= 1 << bit;
+        match drain(&bad) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("bit flip at byte {ix} bit {bit} decoded cleanly")),
+        }
+    });
+}
+
+#[test]
+fn checkpoint_v2_roundtrips_through_files() {
+    let dir = std::env::temp_dir().join(format!("mcnc_prop_codec_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    run_prop("ckpt_v2_roundtrip", 20, |g| {
+        let seed = ((g.usize(0, u32::MAX as usize) as u64) << 32)
+            | g.usize(0, u32::MAX as usize) as u64;
+        let n_t = g.usize(1, 3);
+        let mut tensors = Vec::new();
+        for i in 0..n_t {
+            let rows = g.usize(1, 16);
+            let cols = g.usize(1, 16);
+            let vals = g.vec_f32(rows * cols, -2.0, 2.0);
+            tensors.push((format!("t{i}"), Tensor::from_f32(vals, &[rows, cols]).unwrap()));
+        }
+        let ck = Checkpoint {
+            entry: format!("entry{}", g.usize(0, 99)),
+            seed,
+            step: g.f32(0.0, 1e4),
+            tensors,
+        };
+        let path = dir.join(format!("case{seed:016x}.mcnc"));
+        e(ck.save_v2(&path, Codec::Lossless))?;
+        let back = e(Checkpoint::load(&path))?;
+        std::fs::remove_file(&path).ok();
+        prop_assert!(back.entry == ck.entry, "entry drifted");
+        prop_assert!(back.seed == ck.seed, "seed {seed} drifted to {}", back.seed);
+        prop_assert!(back.step == ck.step, "step drifted");
+        prop_assert!(back.tensors.len() == ck.tensors.len(), "tensor count drifted");
+        for ((an, at), (bn, bt)) in back.tensors.iter().zip(&ck.tensors) {
+            prop_assert!(an == bn, "name drifted");
+            let (af, bf) = (at.f32s().unwrap(), bt.f32s().unwrap());
+            prop_assert!(
+                af.iter().zip(bf).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "tensor {an} drifted"
+            );
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
