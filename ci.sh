@@ -10,6 +10,10 @@ cargo fmt --all -- --check
 echo "== cargo clippy (-D warnings) =="
 cargo clippy --workspace --all-targets -- -D warnings
 
+echo "== cargo doc (-D warnings; rustdoc headers + intra-doc links) =="
+# -p mcnc: the vendored anyhow twin is not held to the doc gate
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p mcnc
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 

@@ -4,8 +4,10 @@
 
 use std::time::Instant;
 
+use mcnc::codec::quantizer;
 use mcnc::coordinator::{BatchPolicy, Request, Router};
 use mcnc::exp::Ctx;
+use mcnc::mcnc::kernel::{self, Isa};
 use mcnc::mcnc::{GenCfg, Generator};
 use mcnc::runtime::init;
 use mcnc::tensor::Tensor;
@@ -75,6 +77,70 @@ fn main() {
         "native gen speedup vs seed path".into(),
         "x".into(),
         format!("{:.2}", gemm_params / seed_params),
+    ]);
+
+    // --- raw kernel: scalar vs dispatched SIMD microkernel ---
+    // single-threaded single GEMM (no pool, no generator) so the two rows
+    // isolate the microkernel itself; methodology in EXPERIMENTS.md
+    // §Kernels. MCNC_SIMD=scalar forces the dispatched row to match the
+    // scalar one.
+    table.row(vec![
+        "kernel dispatch".into(),
+        "isa".into(),
+        kernel::active().name().into(),
+    ]);
+    let (km, kk, kn) = (192usize, 512usize, 768usize);
+    let ka = Stream::new(11).uniform_f32(km * kk, -1.0, 1.0);
+    let kb = Stream::new(12).uniform_f32(kk * kn, -1.0, 1.0);
+    let mut kc = vec![0.0f32; km * kn];
+    let kflops = 2.0 * (km * kk * kn) as f64;
+    let pb_scalar = kernel::pack_b_for(Isa::Scalar, &kb, kk, kn);
+    let s = time_it(3, 15, || kernel::gemm(&ka, km, &pb_scalar, &mut kc));
+    let scalar_gflops = kflops / s.median() / 1e9;
+    table.row(vec![
+        "kernel gemm 192x512x768, scalar".into(),
+        "GFLOP/s".into(),
+        format!("{scalar_gflops:.2}"),
+    ]);
+    let pb_simd = kernel::pack_b(&kb, kk, kn);
+    let s = time_it(3, 15, || kernel::gemm(&ka, km, &pb_simd, &mut kc));
+    let simd_gflops = kflops / s.median() / 1e9;
+    table.row(vec![
+        format!("kernel gemm 192x512x768, {}", pb_simd.isa().name()),
+        "GFLOP/s".into(),
+        format!("{simd_gflops:.2}"),
+    ]);
+    table.row(vec![
+        "kernel gemm simd speedup vs scalar".into(),
+        "x".into(),
+        format!("{:.2}", simd_gflops / scalar_gflops),
+    ]);
+
+    // --- quantizer scans (MCNC2 encode hot path): scalar vs SIMD ---
+    let qw = Stream::new(13).normal_f32(1 << 21, 0.05);
+    let qgb = (qw.len() * std::mem::size_of::<f32>()) as f64 / 1e9;
+    let s = time_it(2, 10, || {
+        let _ = quantizer::quantize_with(Isa::Scalar, &qw, 8, 64);
+    });
+    let scalar_gbs = qgb / s.median();
+    table.row(vec![
+        "quantize int8/64 scan, scalar".into(),
+        "GB/s".into(),
+        format!("{scalar_gbs:.2}"),
+    ]);
+    let s = time_it(2, 10, || {
+        let _ = quantizer::quantize_with(kernel::active(), &qw, 8, 64);
+    });
+    let simd_gbs = qgb / s.median();
+    table.row(vec![
+        format!("quantize int8/64 scan, {}", kernel::active().name()),
+        "GB/s".into(),
+        format!("{simd_gbs:.2}"),
+    ]);
+    table.row(vec![
+        "quantize simd speedup vs scalar".into(),
+        "x".into(),
+        format!("{:.2}", simd_gbs / scalar_gbs),
     ]);
 
     // --- PJRT generator executable ---

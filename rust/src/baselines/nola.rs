@@ -3,7 +3,9 @@
 //! the same math in-graph; this mirror exists for FLOPs-vs-wallclock
 //! micro-benchmarks (Table 4's reconstruction-cost comparison), tests, and
 //! the serving engine's native Merged-mode fills. The heavy lifting runs on
-//! the same blocked-GEMM kernel as the MCNC generator (`mcnc::kernel`).
+//! the same blocked-GEMM kernel as the MCNC generator (`mcnc::kernel`), so
+//! the basis combination (GEMV) and the A·B product both pick up the
+//! ISA-dispatched microkernels (AVX2+FMA / NEON / scalar) automatically.
 
 use crate::mcnc::kernel;
 
@@ -14,7 +16,8 @@ pub struct TargetDims {
     pub b: usize,
 }
 
-/// Reconstruct one factor: coef [m] × basis [m, rows*cols] → [rows*cols].
+/// Reconstruct one factor: `coef [m]` × `basis [m, rows*cols]` →
+/// `[rows*cols]`.
 pub fn combine(coef: &[f32], basis: &[f32], len: usize, out: &mut [f32]) {
     assert_eq!(basis.len(), coef.len() * len);
     assert_eq!(out.len(), len);

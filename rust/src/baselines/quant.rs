@@ -1,6 +1,6 @@
 //! Simulated weight quantization (QLoRA-style frozen base): per-block
 //! absmax int-N quantize→dequantize of θ0 before it is fed to the PEFT
-//! executables. Stands in for the paper's 4-bit base model (DESIGN.md §7).
+//! executables. Stands in for the paper's 4-bit base model.
 
 /// Quantize-dequantize `w` in place: per `block`-sized group, symmetric
 /// absmax scaling to `bits`-wide signed integers. Delegates to the real

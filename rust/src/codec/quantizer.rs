@@ -11,6 +11,15 @@
 //! Symbols are stored biased to unsigned: `q ∈ [-2^(bits-1), 2^(bits-1)-1]`
 //! maps to `q + 2^(bits-1) ∈ [0, 2^bits)`, a dense alphabet for the rANS
 //! stage.
+//!
+//! The two hot scans — the per-block absmax reduction and the
+//! divide/round/clamp encode loop — run on `mcnc::kernel`'s dispatched
+//! SIMD microkernels. Every ISA is bit-identical to the scalar formula
+//! (enforced by the kernel's parity tests), so a checkpoint encodes to the
+//! same bytes on every host; [`quantize_with`] pins the ISA explicitly for
+//! tests and benches.
+
+use crate::mcnc::kernel::{self, Isa};
 
 /// A quantized f32 slice: per-block scales + biased symbols.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,8 +40,15 @@ impl Quantized {
 }
 
 /// Quantize `w` per `block`-sized group with symmetric absmax scaling.
-/// `bits` must be in 2..=8.
+/// `bits` must be in 2..=8. Scans run on the process-wide kernel ISA.
 pub fn quantize(w: &[f32], bits: u32, block: usize) -> Quantized {
+    quantize_with(kernel::active(), w, bits, block)
+}
+
+/// [`quantize`] with the kernel ISA pinned per call — the dispatch
+/// override hook for parity tests and scalar-vs-SIMD benches. Results are
+/// bit-identical across ISAs.
+pub fn quantize_with(isa: Isa, w: &[f32], bits: u32, block: usize) -> Quantized {
     assert!((2..=8).contains(&bits));
     let block = block.max(1);
     let qmax = ((1i32 << (bits - 1)) - 1) as f32;
@@ -40,7 +56,7 @@ pub fn quantize(w: &[f32], bits: u32, block: usize) -> Quantized {
     let mut scales = Vec::with_capacity(w.len().div_ceil(block));
     let mut symbols = Vec::with_capacity(w.len());
     for chunk in w.chunks(block) {
-        let absmax = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let absmax = kernel::absmax_for(isa, chunk);
         if absmax == 0.0 {
             scales.push(0.0);
             for _ in chunk {
@@ -50,10 +66,7 @@ pub fn quantize(w: &[f32], bits: u32, block: usize) -> Quantized {
         }
         let scale = absmax / qmax;
         scales.push(scale);
-        for v in chunk {
-            let q = (*v / scale).round().clamp(-qmax - 1.0, qmax) as i32;
-            symbols.push((q + bias) as u8);
-        }
+        kernel::quantize_block_for(isa, chunk, scale, bits, &mut symbols);
     }
     Quantized { bits, block, scales, symbols }
 }
@@ -113,6 +126,25 @@ mod tests {
         let deq = dequantize(&q);
         assert!(deq[..64].iter().all(|&v| v == 0.0));
         assert!((deq[70] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn simd_and_scalar_quantize_identically() {
+        // the wire format must not depend on the encoding host's ISA:
+        // scales AND symbols bit-identical, across block sizes that leave
+        // SIMD remainders and data with ties / NaN / inf / denormals.
+        let mut w = Stream::new(21).normal_f32(2053, 0.05);
+        w[0] = f32::NAN;
+        w[100] = f32::INFINITY;
+        w[200] = f32::NEG_INFINITY;
+        w[300] = 1.0e-42;
+        w[400] = 0.5 * w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (bits, block) in [(8u32, 64usize), (4, 33), (2, 7), (8, 1), (4, 4096)] {
+            let scalar = quantize_with(kernel::Isa::Scalar, &w, bits, block);
+            let active = quantize_with(kernel::active(), &w, bits, block);
+            assert_eq!(scalar, active, "bits={bits} block={block}");
+            assert_eq!(quantize(&w, bits, block), scalar);
+        }
     }
 
     #[test]

@@ -226,6 +226,9 @@ impl NativeRecon {
                 for p in &l.pieces {
                     let fa = &a_flat[p.ao..p.ao + p.a * l.rank];
                     let fb = &b_flat[p.bo..p.bo + l.rank * p.b];
+                    // ΔW = A·B on the ISA-dispatched microkernel — Merged
+                    // cold fills ride the same AVX2/NEON path as the
+                    // generator GEMMs (pack_b picks the probed layout)
                     let pb = kernel::pack_b(fb, l.rank, p.b);
                     let mut dw = vec![0.0f32; p.a * p.b];
                     kernel::gemm(fa, p.a, &pb, &mut dw);

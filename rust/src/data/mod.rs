@@ -1,4 +1,4 @@
-//! Deterministic synthetic datasets (DESIGN.md §7): the paper's claims are
+//! Deterministic synthetic datasets: the paper's claims are
 //! relative (method A vs B at equal parameter budget), so learnable
 //! synthetic tasks with matched shapes/class counts expose the same
 //! capacity-vs-compression trade-offs while staying CPU-trainable.

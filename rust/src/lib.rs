@@ -1,14 +1,31 @@
 //! # MCNC — Manifold-Constrained Reparameterization for Neural Compression
 //!
-//! Rust + JAX + Pallas reproduction of Thrash et al., ICLR 2025.
+//! Rust + JAX + Pallas reproduction of Thrash et al., ICLR 2025 — see
+//! README.md for the quickstart and ARCHITECTURE.md for the dataflow.
 //!
-//! Three layers (see DESIGN.md):
+//! Three layers:
 //! * **L1** — Pallas generator kernel (`python/compile/kernels/`), lowered
 //!   into every compressed executable.
 //! * **L2** — jax model/method graphs, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3** — this crate: the coordinator that trains, serves and benchmarks
 //!   compressed models through the PJRT CPU client. Python never runs on
 //!   the request path.
+//!
+//! Native-side module map (each module's own header goes deeper):
+//!
+//! * [`mcnc`] — the paper's core: generator φ, chunk partitioning, and the
+//!   SIMD-dispatched GEMM microkernel layer ([`mcnc::kernel`]).
+//! * [`coordinator`] — sharded multi-task adapter serving: router, dynamic
+//!   batcher, engine shards with per-request fault isolation, caches.
+//! * [`codec`] — the MCNC2 compressed checkpoint wire format (quantizer,
+//!   rANS, framed container, streaming adapters).
+//! * [`train`] / [`runtime`] — training orchestration and the PJRT
+//!   boundary (stubbed offline behind the `pjrt` feature).
+//! * [`baselines`], [`sphere`], [`flops`], [`data`] — paper comparisons
+//!   and analyses.
+//! * [`util`] — in-tree substrates: JSON, CLI, config, PRNG, thread pool
+//!   ([`util::threadpool`], sized by `--threads` / `MCNC_THREADS`),
+//!   property testing, bench harness.
 
 // The `pjrt` feature swaps `runtime/xla_stub.rs` for the real `xla` crate,
 // whose dependency line is commented out in Cargo.toml (this workspace

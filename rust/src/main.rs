@@ -16,6 +16,7 @@ use mcnc::train::{self, Checkpoint, LrSchedule, TrainCfg, TrainState};
 use mcnc::util::cli::Args;
 use mcnc::util::config::Config;
 use mcnc::util::prng::Stream;
+use mcnc::util::threadpool;
 
 fn main() {
     mcnc::util::logging::init_from_env();
@@ -32,6 +33,18 @@ fn main() {
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| anyhow!("--threads expects a positive integer, got {t:?}"))?;
+        // must win the race with the first reconstruction call; at the top
+        // of run() nothing has touched the pool yet
+        if !threadpool::configure_global(n) {
+            eprintln!("warning: --threads {n} ignored (pool already started)");
+        }
+    }
     match cmd {
         "info" => info(args),
         "train" => train_cmd(args),
@@ -57,6 +70,13 @@ const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 re
   config  --file cfg.toml        config-driven training job
   pack    --ckpt FILE --out FILE [--codec lossless|int8|int4 --block N]
                                  re-encode a checkpoint as an MCNC2 container
+
+Global flags / env:
+  --threads N     pin the reconstruction thread pool (same as MCNC_THREADS=N);
+                  makes bench and serve runs reproducible across hosts
+  MCNC_SIMD=x     pin the reconstruction microkernel ISA: scalar|avx2|neon|auto
+                  (default auto probes the host; unavailable ISAs fall back
+                  to scalar)
 
 Artifacts come from `make artifacts`; set MCNC_ARTIFACTS to relocate.";
 

@@ -192,7 +192,7 @@ impl Generator {
         Ok(Generator { cfg, ws, packed })
     }
 
-    /// φ for a batch: alpha [n, k] (row-major), beta [n] → out [n, d].
+    /// φ for a batch: `alpha [n, k]` (row-major), `beta [n]` → `out [n, d]`.
     pub fn forward(&self, alpha: &[f32], beta: &[f32]) -> Vec<f32> {
         let n = beta.len();
         let mut out = vec![0.0f32; n * self.cfg.d];
@@ -201,12 +201,16 @@ impl Generator {
     }
 
     /// Allocation-free variant for the serving hot path. The batch runs as
-    /// layer-level blocked GEMMs ([n,k]·[k,w] → act → … → [n,d]) split over
-    /// disjoint row blocks on the persistent `util::threadpool` pool (no
-    /// per-call thread spawn; packed weight panels are shared read-only, so
-    /// the old bandwidth cap on re-reading W_depth is gone — before/after
-    /// numbers live in EXPERIMENTS.md §Perf / `benches/perf_micro.rs`).
-    /// Chunks are independent, so any row split is bit-identical.
+    /// layer-level blocked GEMMs (`[n,k]·[k,w]` → act → … → `[n,d]`) split
+    /// over disjoint row blocks on the persistent `util::threadpool` pool
+    /// (no per-call thread spawn; packed weight panels are shared
+    /// read-only, so the old bandwidth cap on re-reading W_depth is gone —
+    /// before/after numbers live in EXPERIMENTS.md §Perf+§Kernels /
+    /// `benches/perf_micro.rs`). The GEMMs run on the microkernel
+    /// `mcnc::kernel` dispatched at startup (AVX2+FMA / NEON / scalar, see
+    /// `kernel::dispatch`); the layers were packed for that same ISA at
+    /// construction. Chunks are independent, so any row split is
+    /// bit-identical for a fixed kernel.
     pub fn forward_into(&self, alpha: &[f32], beta: &[f32], out: &mut [f32]) {
         let n = beta.len();
         let k = self.cfg.k;
@@ -294,9 +298,11 @@ impl Generator {
     }
 
     /// Reference implementation: one chunk at a time via naive matvecs —
-    /// the seed's original hot path, retained as the bit-exactness oracle
-    /// for the blocked-GEMM engine (see `tests/prop_generator_gemm.rs`)
-    /// and as the perf baseline in `benches/perf_micro.rs`.
+    /// the seed's original hot path, retained as the oracle for the
+    /// blocked-GEMM engine (bit-exact against the scalar kernel,
+    /// ulp-bounded against the SIMD kernels — see
+    /// `tests/prop_generator_gemm.rs`) and as the perf baseline in
+    /// `benches/perf_micro.rs`.
     pub fn forward_naive(&self, alpha: &[f32], beta: &[f32], out: &mut [f32]) {
         let cfg = &self.cfg;
         let n = beta.len();
@@ -474,7 +480,11 @@ mod tests {
     fn gemm_engine_matches_naive_reference() {
         // odd batch sizes exercise the MR/NR edge tiles; every config knob
         // is flipped at least once (the randomized sweep lives in
-        // tests/prop_generator_gemm.rs)
+        // tests/prop_generator_gemm.rs). With the scalar kernel active the
+        // engine is bit-identical to the matvec reference; with a SIMD
+        // kernel each GEMM term is fused, so last-ulp noise (amplified
+        // through the depth-bounded layer stack) is tolerated instead.
+        let scalar = kernel::active() == kernel::Isa::Scalar;
         for (residual, normalize, depth, n) in
             [(false, false, 3, 13), (true, false, 4, 7), (false, true, 2, 5), (true, true, 3, 1)]
         {
@@ -494,8 +504,13 @@ mod tests {
             let mut slow = vec![0.0f32; n * 19];
             g.forward_naive(&alpha, &beta, &mut slow);
             for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                let ok = if scalar {
+                    a.to_bits() == b.to_bits()
+                } else {
+                    (a - b).abs() <= 2e-3 * (1.0 + b.abs())
+                };
                 assert!(
-                    a.to_bits() == b.to_bits(),
+                    ok,
                     "res={residual} norm={normalize} depth={depth} n={n} [{i}]: {a} vs {b}"
                 );
             }

@@ -1,0 +1,147 @@
+//! One-time ISA probe and kernel selection.
+//!
+//! The decision is made once per process (first kernel call) and cached:
+//! `MCNC_SIMD=auto` (the default) probes the host — AVX2+FMA on x86-64 via
+//! `is_x86_feature_detected!`, NEON on aarch64 (architecturally always
+//! present) — and anything else falls back to the scalar reference path.
+//! `MCNC_SIMD=scalar|avx2|neon` pins the choice; a pinned ISA the host
+//! cannot run degrades to scalar instead of faulting, so the variable is
+//! safe to export unconditionally in CI matrices.
+//!
+//! Tests and benches that need *both* paths in one process bypass the
+//! cached probe through the explicit `*_for` entry points in the parent
+//! module (`pack_b_for`, `gemv_for`, …) — that is the dispatch override
+//! hook, and it keeps the seam exercised even on scalar-only hosts.
+
+use std::sync::OnceLock;
+
+/// Which microkernel family executes a call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable reference path — byte-for-byte the PR-1 register-tiled
+    /// kernel, and the bit-exactness oracle for everything else.
+    Scalar,
+    /// AVX2 + FMA (x86-64), 6×16 micro-tile.
+    Avx2,
+    /// NEON (aarch64), 8×8 micro-tile.
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse one ISA name; `None` means the string is not a known ISA.
+    /// Callers decide what that means — [`active`] treats `auto` as
+    /// "probe the host" and anything else unknown as "warn and pin
+    /// scalar", so a typo of a pin request can never silently select a
+    /// SIMD kernel the user tried to opt out of.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" | "off" | "none" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Can this host actually execute `isa`'s kernels?
+pub fn available(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => true,
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => false,
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => false,
+    }
+}
+
+/// Degrade a requested ISA to one the host can run (scalar if not).
+pub fn clamp(isa: Isa) -> Isa {
+    if available(isa) {
+        isa
+    } else {
+        Isa::Scalar
+    }
+}
+
+fn probe() -> Isa {
+    if available(Isa::Avx2) {
+        return Isa::Avx2;
+    }
+    if available(Isa::Neon) {
+        return Isa::Neon;
+    }
+    Isa::Scalar
+}
+
+static ACTIVE: OnceLock<Isa> = OnceLock::new();
+
+/// The process-wide kernel choice: `MCNC_SIMD` override (clamped to what
+/// the host supports), else the probe. Resolved once, then a plain load.
+/// An unrecognized `MCNC_SIMD` value warns and pins scalar — the
+/// conservative reading of "the user tried to pin something".
+pub fn active() -> Isa {
+    *ACTIVE.get_or_init(|| {
+        let var = std::env::var("MCNC_SIMD").unwrap_or_default();
+        let req = var.trim().to_ascii_lowercase();
+        match req.as_str() {
+            "" | "auto" => probe(),
+            other => match Isa::parse(other) {
+                Some(isa) => clamp(isa),
+                None => {
+                    eprintln!(
+                        "warning: unknown MCNC_SIMD={other:?}; using the scalar kernel \
+                         (valid: scalar|avx2|neon|auto)"
+                    );
+                    Isa::Scalar
+                }
+            },
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_isas_and_rejects_unknown() {
+        assert_eq!(Isa::parse("scalar"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse(" neon "), Some(Isa::Neon));
+        assert_eq!(Isa::parse("auto"), None);
+        assert_eq!(Isa::parse("avx512"), None);
+        assert_eq!(Isa::parse(""), None);
+    }
+
+    #[test]
+    fn active_is_stable_and_available() {
+        let a = active();
+        assert_eq!(a, active(), "probe must be cached");
+        assert!(available(a), "active ISA must be executable");
+    }
+
+    #[test]
+    fn clamp_never_returns_an_unavailable_isa() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert!(available(clamp(isa)), "{:?} clamped to unavailable", isa);
+        }
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(available(Isa::Scalar));
+        assert_eq!(clamp(Isa::Scalar), Isa::Scalar);
+    }
+}

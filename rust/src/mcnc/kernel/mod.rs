@@ -1,0 +1,447 @@
+//! Register-tiled, cache-blocked f32 GEMM with runtime ISA dispatch — the
+//! native reconstruction microkernel layer behind `Generator::forward_into`,
+//! the NOLA baseline, the coordinator's Merged-mode cold fills, and the
+//! MCNC2 quantizer scans.
+//!
+//! Layout follows the classic GotoBLAS decomposition: B (the frozen layer
+//! weights, `[K, N]` row-major) is packed once per `Generator` into
+//! NR-wide column panels; the driver loops NC → MC → NR-panel → MR-tile and
+//! the microkernel keeps an `MR × NR` accumulator block in registers.
+//!
+//! The microkernel itself is selected once per process by [`dispatch`]:
+//!
+//! * `scalar` — the portable MR=4 × NR=8 reference, byte-for-byte the
+//!   PR-1 kernel and the bit-exactness oracle for the naive matvec path;
+//! * `x86` — AVX2+FMA, MR=6 × NR=16 (two ymm columns per row);
+//! * `neon` — aarch64 NEON, MR=8 × NR=8 (two q columns per row).
+//!
+//! Because the panel width NR differs per ISA, a [`PackedB`] remembers the
+//! layout it was packed with and [`gemm`] always runs the matching kernel —
+//! packing and compute can never disagree. `MCNC_SIMD=scalar|avx2|neon`
+//! pins the process-wide choice (unavailable ISAs degrade to scalar); the
+//! `*_for` entry points pin it per call, which is how tests compare both
+//! paths inside one process.
+//!
+//! **Reduction-order contract.** Every output element is accumulated over
+//! the *full* K dimension in ascending order, exactly like the per-chunk
+//! `matvec` reference (`Generator::forward_naive`); there is no KC split.
+//! The scalar path is bit-identical to that reference. The SIMD paths keep
+//! the same order but fuse each multiply-add (one rounding per term), so
+//! they agree with scalar to a K-scaled ulp bound — pinned by the parity
+//! properties in `rust/tests/prop_generator_gemm.rs`.
+
+pub mod dispatch;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use dispatch::{active, available, Isa};
+
+/// `B [K, N]` packed into ⌈N/NR⌉ panels of `K × NR` (k-major inside a
+/// panel); the last panel is zero-padded to NR columns. NR is the packing
+/// ISA's microtile width, so the struct pins which kernel consumes it.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    nr: usize,
+    isa: Isa,
+    panels: Vec<f32>,
+}
+
+impl PackedB {
+    /// The ISA whose panel layout (and therefore kernel) this B uses.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Panel width (microtile NR) of the packing ISA.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    #[cfg(test)]
+    fn panel(&self, idx: usize) -> &[f32] {
+        &self.panels[idx * self.k * self.nr..(idx + 1) * self.k * self.nr]
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.panels.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Pack row-major `b [k, n]` into column panels for the process-wide ISA.
+pub fn pack_b(b: &[f32], k: usize, n: usize) -> PackedB {
+    pack_b_for(dispatch::active(), b, k, n)
+}
+
+/// Pack for an explicit ISA (the dispatch override hook used by tests and
+/// benches). Unavailable ISAs degrade to scalar — check `.isa()` on the
+/// result to see what was actually used.
+pub fn pack_b_for(isa: Isa, b: &[f32], k: usize, n: usize) -> PackedB {
+    assert!(b.len() >= k * n, "B smaller than {k}x{n}");
+    let isa = dispatch::clamp(isa);
+    let (nr, panels) = match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => (x86::NR, x86::pack(b, k, n)),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => (neon::NR, neon::pack(b, k, n)),
+        _ => (scalar::NR, pack_panels(b, k, n, scalar::NR)),
+    };
+    PackedB { k, n, nr, isa, panels }
+}
+
+// Per-thread packed-A scratch for the SIMD drivers, grown on demand and
+// reused across calls so the serving hot path never allocates (mirrors
+// `Generator`'s SCRATCH).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+thread_local! {
+    static APACK: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Repack `a [m, k]` into ⌈m/MR⌉ panels of `MR × k` (k-major inside a
+/// panel, missing rows zero-filled) — shared by the SIMD drivers, whose
+/// microkernels compute padded rows but never store them.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn pack_a(a: &[f32], m: usize, k: usize, mr: usize, buf: &mut Vec<f32>) {
+    let tiles = m.div_ceil(mr).max(1);
+    buf.clear();
+    buf.resize(tiles * k * mr, 0.0);
+    for t in 0..tiles {
+        let i0 = t * mr;
+        let rows = mr.min(m - i0.min(m));
+        let dst = &mut buf[t * k * mr..(t + 1) * k * mr];
+        for r in 0..rows {
+            let src = &a[(i0 + r) * k..(i0 + r) * k + k];
+            for (p, &v) in src.iter().enumerate() {
+                dst[p * mr + r] = v;
+            }
+        }
+    }
+}
+
+/// Generic panel packer (the scalar layout routine, parameterized by NR).
+fn pack_panels(b: &[f32], k: usize, n: usize, nr: usize) -> Vec<f32> {
+    let np = n.div_ceil(nr).max(1);
+    let mut panels = vec![0.0f32; np * k * nr];
+    for p in 0..np {
+        let j0 = p * nr;
+        let w = nr.min(n - j0.min(n));
+        let dst = &mut panels[p * k * nr..(p + 1) * k * nr];
+        for kk in 0..k {
+            dst[kk * nr..kk * nr + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+        }
+    }
+    panels
+}
+
+/// `C[M, N] = A[M, K] · B` (C overwritten, all row-major), on the kernel
+/// matching `b`'s packed layout. Scalar-packed B is bit-identical to the
+/// ascending-K naive product; SIMD-packed B matches it to the fused-term
+/// bound documented in the module header.
+pub fn gemm(a: &[f32], m: usize, b: &PackedB, c: &mut [f32]) {
+    let (k, n) = (b.k, b.n);
+    assert!(a.len() >= m * k, "A smaller than {m}x{k}");
+    assert!(c.len() >= m * n, "C smaller than {m}x{n}");
+    if m == 0 || n == 0 {
+        return;
+    }
+    match b.isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::gemm(a, m, k, n, &b.panels, c),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::gemm(a, m, k, n, &b.panels, c),
+        _ => scalar::gemm(a, m, k, n, &b.panels, c),
+    }
+}
+
+/// Row-streaming GEMV: `out[N] = x[K] · b[K, N]` (row-major, unpacked).
+/// The M = 1 shape NOLA's basis combination needs — packing would double
+/// the memory traffic, so B streams directly; per-output accumulation is
+/// still ascending-K. Dispatched to the process-wide ISA.
+pub fn gemv(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    gemv_for(dispatch::active(), x, b, k, n, out);
+}
+
+/// [`gemv`] pinned to an explicit ISA (degrades to scalar if unavailable).
+pub fn gemv_for(isa: Isa, x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    assert!(x.len() >= k, "x smaller than {k}");
+    assert!(b.len() >= k * n, "basis smaller than {k}x{n}");
+    assert!(out.len() >= n, "out smaller than {n}");
+    match dispatch::clamp(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::gemv(x, b, k, n, out),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::gemv(x, b, k, n, out),
+        _ => scalar::gemv(x, b, k, n, out),
+    }
+}
+
+/// Largest `|x|` in the slice, NaN-ignoring — the quantizer's block scan.
+/// All ISAs return bit-identical results (max never rounds), so encodings
+/// are reproducible across hosts.
+pub fn absmax(xs: &[f32]) -> f32 {
+    absmax_for(dispatch::active(), xs)
+}
+
+/// [`absmax`] pinned to an explicit ISA (degrades to scalar if unavailable).
+pub fn absmax_for(isa: Isa, xs: &[f32]) -> f32 {
+    match dispatch::clamp(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::absmax(xs),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::absmax(xs),
+        _ => scalar::absmax(xs),
+    }
+}
+
+/// Absmax-quantize one block: `round(v/scale)` (ties away from zero)
+/// clamped to `[-2^(bits-1), 2^(bits-1)-1]`, biased to unsigned, appended
+/// to `out`. All ISAs are bit-identical (the SIMD paths reconstruct the
+/// scalar formula exactly, including tie, NaN and ±inf handling), so wire
+/// encodings do not depend on the encoding host.
+pub fn quantize_block(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    quantize_block_for(dispatch::active(), chunk, scale, bits, out);
+}
+
+/// [`quantize_block`] pinned to an explicit ISA (degrades to scalar if
+/// unavailable).
+pub fn quantize_block_for(isa: Isa, chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    match dispatch::clamp(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::quantize_block(chunk, scale, bits, out),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::quantize_block(chunk, scale, bits, out),
+        _ => scalar::quantize_block(chunk, scale, bits, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream;
+
+    /// Ascending-K reference product (the contract every path honors).
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    /// SIMD-vs-scalar closeness: fused accumulation differs from unfused
+    /// by at most ~1 ulp of the running magnitude per term, so bound the
+    /// difference by `2(K+1)·eps·Σ|a·b|` plus denormal slop. NaN/inf
+    /// classification must agree exactly.
+    fn assert_gemm_close(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        got: &[f32],
+        want: &[f32],
+    ) {
+        let eps = f32::EPSILON as f64;
+        for i in 0..m {
+            for j in 0..n {
+                let (g, w) = (got[i * n + j], want[i * n + j]);
+                if w.is_nan() {
+                    assert!(g.is_nan(), "({m},{k},{n})[{i},{j}]: {g} vs NaN");
+                    continue;
+                }
+                if w.is_infinite() {
+                    assert_eq!(g, w, "({m},{k},{n})[{i},{j}]");
+                    continue;
+                }
+                let mag: f64 = (0..k)
+                    .map(|p| (a[i * k + p] as f64 * b[p * n + j] as f64).abs())
+                    .sum();
+                let tol = 2.0 * (k + 1) as f64 * eps * mag + 2.0 * f32::MIN_POSITIVE as f64;
+                let diff = (g as f64 - w as f64).abs();
+                assert!(
+                    diff <= tol,
+                    "({m},{k},{n})[{i},{j}]: {g} vs {w} (diff {diff:e} > tol {tol:e})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_gemm_bit_identical_to_naive_across_shapes() {
+        // edge coverage: m {<,=,>} MR multiples, n {<,=,>} NR multiples,
+        // plus blocks larger than MC/NC.
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 9, 8), (4, 16, 7), (5, 13, 17), (54, 9, 256), (70, 33, 523)]
+        {
+            let a = Stream::new(1).uniform_f32(m * k, -1.0, 1.0);
+            let b = Stream::new(2).uniform_f32(k * n, -0.5, 0.5);
+            let pb = pack_b_for(Isa::Scalar, &b, k, n);
+            let mut c = vec![f32::NAN; m * n];
+            gemm(&a, m, &pb, &mut c);
+            let want = naive(&a, &b, m, k, n);
+            for (i, (&got, &w)) in c.iter().zip(&want).enumerate() {
+                assert!(
+                    got.to_bits() == w.to_bits(),
+                    "({m},{k},{n})[{i}]: {got} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_gemm_matches_scalar_within_bound() {
+        // remainder-tile sweep for every microtile in the tree (MR ∈
+        // {4, 6, 8}, NR ∈ {8, 16}) plus shapes beyond one MC/NC block.
+        for &(m, k, n) in
+            &[(5, 7, 15), (6, 9, 16), (7, 16, 17), (8, 13, 31), (13, 40, 50), (97, 33, 523)]
+        {
+            let a = Stream::new(3).uniform_f32(m * k, -2.0, 2.0);
+            let b = Stream::new(4).uniform_f32(k * n, -1.0, 1.0);
+            let ps = pack_b_for(Isa::Scalar, &b, k, n);
+            let pd = pack_b(&b, k, n);
+            let mut cs = vec![f32::NAN; m * n];
+            let mut cd = vec![f32::NAN; m * n];
+            gemm(&a, m, &ps, &mut cs);
+            gemm(&a, m, &pd, &mut cd);
+            assert_gemm_close(&a, &b, m, k, n, &cd, &cs);
+            if active() == Isa::Scalar {
+                assert!(cs.iter().zip(&cd).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_pack_layout_matches_generic_packer() {
+        for &(k, n) in &[(1, 1), (3, 15), (4, 16), (5, 17), (7, 40), (2, 523)] {
+            let b = Stream::new(5).uniform_f32(k * n, -1.0, 1.0);
+            let pb = pack_b(&b, k, n);
+            assert_eq!(pb.panels, pack_panels(&b, k, n, pb.nr()), "k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn scalar_gemm_with_exact_zero_inputs_matches_skip_reference() {
+        // the naive matvec path skips x == 0 terms; ascending-K accumulation
+        // from +0.0 must agree bit-for-bit anyway.
+        let (m, k, n) = (6, 10, 12);
+        let mut a = Stream::new(3).uniform_f32(m * k, -1.0, 1.0);
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let b = Stream::new(4).uniform_f32(k * n, -1.0, 1.0);
+        let mut skip = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    skip[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        gemm(&a, m, &pack_b_for(Isa::Scalar, &b, k, n), &mut c);
+        assert!(c.iter().zip(&skip).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn gemv_scalar_matches_naive_row_and_dispatch_is_close() {
+        let (k, n) = (7, 29);
+        let x = Stream::new(5).uniform_f32(k, -2.0, 2.0);
+        let b = Stream::new(6).uniform_f32(k * n, -1.0, 1.0);
+        let mut out = vec![f32::NAN; n];
+        gemv_for(Isa::Scalar, &x, &b, k, n, &mut out);
+        let want = naive(&x, &b, 1, k, n);
+        assert!(out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let mut disp = vec![f32::NAN; n];
+        gemv(&x, &b, k, n, &mut disp);
+        assert_gemm_close(&x, &b, 1, k, n, &disp, &out);
+    }
+
+    #[test]
+    fn pack_pads_last_panel_with_zeros() {
+        // scalar layout (NR = 8): one full panel + a 2-wide tail
+        let (k, n) = (3, 10);
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 + 1.0).collect();
+        let pb = pack_b_for(Isa::Scalar, &b, k, n);
+        assert_eq!(pb.nr(), 8);
+        assert_eq!(pb.size_bytes(), 2 * k * 8 * 4);
+        let tail = pb.panel(1);
+        for kk in 0..k {
+            assert_eq!(tail[kk * 8], b[kk * n + 8]);
+            assert_eq!(tail[kk * 8 + 1], b[kk * n + 9]);
+            assert!(tail[kk * 8 + 2..(kk + 1) * 8].iter().all(|&v| v == 0.0));
+        }
+        // dispatched layout: tail panel is padded to its own NR too
+        let pd = pack_b(&b, k, n);
+        let nr = pd.nr();
+        let last = pd.panel(n.div_ceil(nr) - 1);
+        let w = n % nr;
+        if w > 0 {
+            for kk in 0..k {
+                assert!(last[kk * nr + w..(kk + 1) * nr].iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_safe_on_every_path() {
+        for isa in [Isa::Scalar, active()] {
+            let pb = pack_b_for(isa, &[], 0, 0);
+            gemm(&[], 0, &pb, &mut []);
+            let pb = pack_b_for(isa, &[1.0, 2.0], 2, 1);
+            let mut c = [0.0f32];
+            gemm(&[3.0, 4.0], 1, &pb, &mut c);
+            // exact: tiny integer-valued inputs round identically fused
+            assert_eq!(c[0], 3.0 * 1.0 + 4.0 * 2.0, "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn absmax_is_bit_identical_across_paths() {
+        let mut xs = Stream::new(7).normal_f32(1027, 0.3);
+        xs[13] = f32::NAN; // NaN is ignored, not propagated
+        xs[100] = -4.5;
+        xs[1020] = 1.0e-41; // denormal
+        let want = xs.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for isa in [Isa::Scalar, active()] {
+            assert_eq!(absmax_for(isa, &xs).to_bits(), want.to_bits(), "{isa:?}");
+        }
+        assert_eq!(absmax(&xs).to_bits(), want.to_bits());
+        assert_eq!(absmax(&[]), 0.0);
+        assert_eq!(absmax(&[f32::NAN]), 0.0);
+    }
+
+    #[test]
+    fn quantize_block_is_bit_identical_across_paths() {
+        // adversarial lane values: exact .5 ties in both directions (RTE
+        // disagrees with ties-away on half of these), NaN, ±inf, denormals,
+        // near-tie neighbors, and the clamp boundaries.
+        let mut chunk = vec![0.5f32, -0.5, 2.5, -2.5, 3.5, -3.5, 126.5, -127.5];
+        chunk.extend([f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0e-42, -1.0e-42]);
+        chunk.extend([0.499_999_97, -0.499_999_97, 127.499_99, -128.6, 0.0, -0.0]);
+        chunk.extend(Stream::new(8).normal_f32(211, 17.0));
+        for bits in [2u32, 4, 8] {
+            for scale in [1.0f32, 0.3, 7.5e-3, 1.0e-40] {
+                let mut want = Vec::new();
+                quantize_block_for(Isa::Scalar, &chunk, scale, bits, &mut want);
+                let mut got = Vec::new();
+                quantize_block(&chunk, scale, bits, &mut got);
+                assert_eq!(got, want, "bits={bits} scale={scale:e}");
+            }
+        }
+    }
+}

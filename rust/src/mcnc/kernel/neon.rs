@@ -1,0 +1,200 @@
+//! NEON microkernels (aarch64): 8×8 register tile (16 of 32 q-register
+//! accumulators + 2 B vectors + 1 broadcast), packed A panels, and
+//! vectorized quantizer scans. Same ascending-K reduction order as the
+//! scalar reference with fused multiply-adds; parity is bounded by the
+//! properties in `rust/tests/prop_generator_gemm.rs`.
+//!
+//! NEON is architecturally mandatory on aarch64, so `dispatch` enables
+//! this path unconditionally there.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::*;
+
+/// Micro-tile rows; A is repacked into MR-row panels (zero-padded).
+const MR: usize = 8;
+/// Micro-tile columns = two q vectors; packing granularity.
+pub(super) const NR: usize = 8;
+/// Row block kept hot while a B panel streams.
+const MC: usize = 64;
+/// Column block.
+const NC: usize = 512;
+
+// the driver's `(i / MR)` tile lookup and `(j / NR)` panel lookup are only
+// exact because every MC/NC block boundary lands on a tile boundary
+const _: () = assert!(MC % MR == 0 && NC % NR == 0);
+
+/// Pack row-major `b [k, n]` into NR=8 column panels (k-major inside a
+/// panel, last panel zero-padded). Row copies are `copy_from_slice`
+/// (memcpy lowers to q-register moves on aarch64).
+pub(super) fn pack(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    super::pack_panels(b, k, n, NR)
+}
+
+/// `C[M, N] = A[M, K] · B-panels` over the NR=8 layout from [`pack`];
+/// A goes through the shared `super::pack_a` MR-row repack first.
+pub(super) fn gemm(a: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &mut [f32]) {
+    super::APACK.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        super::pack_a(a, m, k, MR, &mut buf);
+        unsafe { gemm_inner(&buf, m, k, n, panels, c) };
+    });
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_inner(ap: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &mut [f32]) {
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for ic in (0..m).step_by(MC) {
+            let mc = MC.min(m - ic);
+            for jr in (0..nc).step_by(NR) {
+                let j = jc + jr;
+                let nr = NR.min(n - j);
+                let panel = panels.as_ptr().add((j / NR) * k * NR);
+                for ir in (0..mc).step_by(MR) {
+                    let i = ic + ir;
+                    let mr = MR.min(m - i);
+                    let tile = ap.as_ptr().add((i / MR) * k * MR);
+                    micro(tile, panel, k, c.as_mut_ptr().add(i * n + j), n, mr, nr);
+                }
+            }
+        }
+    }
+}
+
+/// One 8×8 tile: `c[r, j] = Σ_p ap[p, r] · panel[p, j]`, p ascending,
+/// each term fused. Padded rows/columns are computed but never stored.
+#[target_feature(enable = "neon")]
+unsafe fn micro(
+    ap: *const f32,
+    bp: *const f32,
+    k: usize,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let z = vdupq_n_f32(0.0);
+    let mut acc = [[z; 2]; MR];
+    for p in 0..k {
+        let b0 = vld1q_f32(bp.add(p * NR));
+        let b1 = vld1q_f32(bp.add(p * NR + 4));
+        let arow = ap.add(p * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f32(*arow.add(r));
+            accr[0] = vfmaq_f32(accr[0], av, b0);
+            accr[1] = vfmaq_f32(accr[1], av, b1);
+        }
+    }
+    if mr == MR && nr == NR {
+        for (r, accr) in acc.iter().enumerate() {
+            vst1q_f32(c.add(r * ldc), accr[0]);
+            vst1q_f32(c.add(r * ldc + 4), accr[1]);
+        }
+    } else {
+        let mut buf = [0.0f32; NR];
+        for (r, accr) in acc.iter().enumerate().take(mr) {
+            vst1q_f32(buf.as_mut_ptr(), accr[0]);
+            vst1q_f32(buf.as_mut_ptr().add(4), accr[1]);
+            std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(r * ldc), nr);
+        }
+    }
+}
+
+/// Fused row-streaming GEMV: `out[N] = x[K] · b[K, N]`, 16 columns of
+/// register accumulators at a time, ascending-K per output.
+pub(super) fn gemv(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    unsafe { gemv_inner(x, b, k, n, out) };
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemv_inner(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    let mut j = 0usize;
+    while j + 16 <= n {
+        let z = vdupq_n_f32(0.0);
+        let mut acc = [z; 4];
+        for p in 0..k {
+            let xv = vdupq_n_f32(*x.get_unchecked(p));
+            let base = b.as_ptr().add(p * n + j);
+            for (q, accq) in acc.iter_mut().enumerate() {
+                *accq = vfmaq_f32(*accq, xv, vld1q_f32(base.add(q * 4)));
+            }
+        }
+        for (q, accq) in acc.iter().enumerate() {
+            vst1q_f32(out.as_mut_ptr().add(j + q * 4), *accq);
+        }
+        j += 16;
+    }
+    while j + 4 <= n {
+        let mut acc = vdupq_n_f32(0.0);
+        for p in 0..k {
+            let xv = vdupq_n_f32(*x.get_unchecked(p));
+            acc = vfmaq_f32(acc, xv, vld1q_f32(b.as_ptr().add(p * n + j)));
+        }
+        vst1q_f32(out.as_mut_ptr().add(j), acc);
+        j += 4;
+    }
+    for jj in j..n {
+        let mut acc = 0.0f32;
+        for p in 0..k {
+            acc = x[p].mul_add(b[p * n + jj], acc);
+        }
+        out[jj] = acc;
+    }
+}
+
+/// Vectorized NaN-ignoring absmax scan — `FMAXNM` implements IEEE maxNum
+/// (returns the non-NaN operand), matching the scalar `f32::max` fold
+/// bit-for-bit.
+pub(super) fn absmax(xs: &[f32]) -> f32 {
+    unsafe { absmax_inner(xs) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn absmax_inner(xs: &[f32]) -> f32 {
+    let mut acc = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 4 <= xs.len() {
+        let v = vld1q_f32(xs.as_ptr().add(i));
+        acc = vmaxnmq_f32(acc, vabsq_f32(v));
+        i += 4;
+    }
+    let mut lanes = [0.0f32; 4];
+    vst1q_f32(lanes.as_mut_ptr(), acc);
+    let mut m = lanes.iter().fold(0.0f32, |m, &v| m.max(v));
+    for v in &xs[i..] {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Vectorized quantizer encode scan, bit-identical to the scalar formula:
+/// `FCVTAS` (`vcvtaq_s32_f32`) natively rounds to nearest with ties away
+/// from zero — exactly `f32::round` — converts NaN to 0 (matching
+/// `NaN as i32`) and saturates ±inf, which the integer clamp then maps to
+/// the same bounds the scalar float clamp produces.
+pub(super) fn quantize_block(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    unsafe { quantize_inner(chunk, scale, bits, out) };
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn quantize_inner(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    let qmax = (1i32 << (bits - 1)) - 1;
+    let bias = 1i32 << (bits - 1);
+    let sv = vdupq_n_f32(scale);
+    let lov = vdupq_n_s32(-qmax - 1);
+    let hiv = vdupq_n_s32(qmax);
+    let biasv = vdupq_n_s32(bias);
+    let mut qs = [0i32; 4];
+    let mut i = 0usize;
+    while i + 4 <= chunk.len() {
+        let x = vdivq_f32(vld1q_f32(chunk.as_ptr().add(i)), sv);
+        let q = vminq_s32(vmaxq_s32(vcvtaq_s32_f32(x), lov), hiv);
+        vst1q_s32(qs.as_mut_ptr(), vaddq_s32(q, biasv));
+        for &qv in &qs {
+            out.push(qv as u8);
+        }
+        i += 4;
+    }
+    super::scalar::quantize_block(&chunk[i..], scale, bits, out);
+}

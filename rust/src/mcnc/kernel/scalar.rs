@@ -1,0 +1,113 @@
+//! Portable reference microkernels — byte-for-byte the PR-1 register-tiled
+//! scalar GEMM. This path is the bit-exactness oracle: every SIMD kernel is
+//! property-tested against it (`rust/tests/prop_generator_gemm.rs`), and it
+//! is what `dispatch` falls back to on hosts without AVX2/NEON.
+//!
+//! **Reduction-order contract.** Every output element is accumulated over
+//! the *full* K dimension in ascending order, exactly like the per-chunk
+//! `matvec` reference (`Generator::forward_naive`). That is why there is no
+//! KC blocking: splitting K would reorder the f32 sums and break the
+//! bit-exactness the property tests pin (fan-in is at most `width`, ≤ ~1k
+//! floats per A-row, so the A panel rows fit L1 comfortably anyway). With
+//! ascending-K accumulation from a `+0.0` accumulator, skipping exact-zero
+//! terms (as the naive path does) cannot change any result bit, so the two
+//! paths agree bit-for-bit. The SIMD kernels keep the same ascending-K
+//! order but fuse each multiply-add (FMA, one rounding instead of two), so
+//! they match this path to a K-scaled ulp bound rather than exactly.
+
+/// Micro-tile rows (batch/chunk dimension).
+pub(super) const MR: usize = 4;
+/// Micro-tile columns (output-feature dimension); packing granularity.
+pub(super) const NR: usize = 8;
+/// Row block: A panel of MC×K f32 stays in L2 while a B panel streams L1.
+const MC: usize = 64;
+/// Column block, a multiple of NR.
+const NC: usize = 512;
+
+/// `C[M, N] = A[M, K] · B-panels` (C overwritten, all row-major). `panels`
+/// is the NR=8 layout from `super::pack_panels`. Bit-identical to the
+/// ascending-K naive product per the reduction-order contract above.
+pub(super) fn gemm(a: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &mut [f32]) {
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for ic in (0..m).step_by(MC) {
+            let mc = MC.min(m - ic);
+            for jr in (0..nc).step_by(NR) {
+                let j = jc + jr;
+                let nr = NR.min(n - j);
+                let panel = &panels[(j / NR) * k * NR..(j / NR + 1) * k * NR];
+                for ir in (0..mc).step_by(MR) {
+                    let i = ic + ir;
+                    let mr = MR.min(m - i);
+                    micro(&a[i * k..], k, mr, panel, &mut c[i * n + j..], n, nr);
+                }
+            }
+        }
+    }
+}
+
+/// One MR×NR tile: `c[r, j] = Σ_p a[r, p] · panel[p, j]`, p ascending.
+/// Padded panel columns are computed but never stored.
+#[inline]
+fn micro(a: &[f32], k: usize, mr: usize, panel: &[f32], c: &mut [f32], ldc: usize, nr: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    if mr == MR {
+        for p in 0..k {
+            let brow: &[f32; NR] = panel[p * NR..p * NR + NR].try_into().unwrap();
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = a[r * k + p];
+                for (x, &bv) in accr.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+    } else {
+        for p in 0..k {
+            let brow: &[f32; NR] = panel[p * NR..p * NR + NR].try_into().unwrap();
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let av = a[r * k + p];
+                for (x, &bv) in accr.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        c[r * ldc..r * ldc + nr].copy_from_slice(&accr[..nr]);
+    }
+}
+
+/// Row-streaming GEMV: `out[N] = x[K] · b[K, N]` (row-major, unpacked).
+/// The M = 1 shape NOLA's basis combination needs — packing would double
+/// the memory traffic, so B streams directly; per-output accumulation is
+/// still ascending-K.
+pub(super) fn gemv(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    out[..n].fill(0.0);
+    for (p, &xv) in x[..k].iter().enumerate() {
+        let row = &b[p * n..(p + 1) * n];
+        for (o, &bv) in out[..n].iter_mut().zip(row) {
+            *o += xv * bv;
+        }
+    }
+}
+
+/// Largest `|x|` in the slice, ignoring NaN (the fold `m.max(v.abs())`
+/// the quantizer has always used). Every SIMD variant must reproduce this
+/// bit-for-bit — max never rounds, so that is achievable and enforced.
+pub(super) fn absmax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Absmax-quantize one block: `q = round(v/scale)` (ties away from zero),
+/// clamped to `[-qmax-1, qmax]`, stored biased by `2^(bits-1)`. This is
+/// the exact per-element formula `codec::quantizer` shipped with; SIMD
+/// variants are property-tested to match it bit-for-bit, including the
+/// tie, NaN (→ bias symbol) and ±inf (→ clamp) edge cases.
+pub(super) fn quantize_block(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let bias = 1i32 << (bits - 1);
+    for v in chunk {
+        let q = (*v / scale).round().clamp(-qmax - 1.0, qmax) as i32;
+        out.push((q + bias) as u8);
+    }
+}

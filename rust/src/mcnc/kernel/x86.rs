@@ -1,0 +1,243 @@
+//! AVX2 + FMA microkernels (x86-64): 6×16 register tile (12 ymm
+//! accumulators + 2 B vectors + 1 broadcast = 15 of 16 registers), packed
+//! A panels so edge tiles never need a masked kernel, and vectorized
+//! quantizer scans. Reduction order per output element is the same
+//! ascending-K walk as the scalar reference; the only numeric difference
+//! is the fused multiply-add (one rounding per term instead of two), which
+//! the parity properties in `rust/tests/prop_generator_gemm.rs` bound.
+//!
+//! Everything here is only reachable through `dispatch` after
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+//! passed, so the `#[target_feature]` functions are sound to call.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+
+/// Micro-tile rows; A is repacked into MR-row panels (zero-padded).
+const MR: usize = 6;
+/// Micro-tile columns = two ymm vectors; packing granularity.
+pub(super) const NR: usize = 16;
+/// Row block kept hot while a B panel streams.
+const MC: usize = 96;
+/// Column block.
+const NC: usize = 512;
+
+// the driver's `(i / MR)` tile lookup and `(j / NR)` panel lookup are only
+// exact because every MC/NC block boundary lands on a tile boundary
+const _: () = assert!(MC % MR == 0 && NC % NR == 0);
+
+/// Pack row-major `b [k, n]` into NR=16 column panels (k-major inside a
+/// panel, last panel zero-padded) — same layout contract as the scalar
+/// packer, two ymm copies per full row.
+pub(super) fn pack(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let np = n.div_ceil(NR).max(1);
+    let mut panels = vec![0.0f32; np * k * NR];
+    unsafe { pack_inner(b, k, n, &mut panels) };
+    panels
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn pack_inner(b: &[f32], k: usize, n: usize, panels: &mut [f32]) {
+    let full = n / NR;
+    for p in 0..full {
+        let j0 = p * NR;
+        let dst = panels.as_mut_ptr().add(p * k * NR);
+        for kk in 0..k {
+            let src = b.as_ptr().add(kk * n + j0);
+            _mm256_storeu_ps(dst.add(kk * NR), _mm256_loadu_ps(src));
+            _mm256_storeu_ps(dst.add(kk * NR + 8), _mm256_loadu_ps(src.add(8)));
+        }
+    }
+    let w = n - full * NR;
+    if w > 0 {
+        let j0 = full * NR;
+        let dst = &mut panels[full * k * NR..(full + 1) * k * NR];
+        for kk in 0..k {
+            dst[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+        }
+    }
+}
+
+/// `C[M, N] = A[M, K] · B-panels` over the NR=16 layout from [`pack`];
+/// A goes through the shared `super::pack_a` MR-row repack first.
+pub(super) fn gemm(a: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &mut [f32]) {
+    super::APACK.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        super::pack_a(a, m, k, MR, &mut buf);
+        unsafe { gemm_inner(&buf, m, k, n, panels, c) };
+    });
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_inner(ap: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &mut [f32]) {
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for ic in (0..m).step_by(MC) {
+            let mc = MC.min(m - ic);
+            for jr in (0..nc).step_by(NR) {
+                let j = jc + jr;
+                let nr = NR.min(n - j);
+                let panel = panels.as_ptr().add((j / NR) * k * NR);
+                for ir in (0..mc).step_by(MR) {
+                    let i = ic + ir;
+                    let mr = MR.min(m - i);
+                    let tile = ap.as_ptr().add((i / MR) * k * MR);
+                    micro(tile, panel, k, c.as_mut_ptr().add(i * n + j), n, mr, nr);
+                }
+            }
+        }
+    }
+}
+
+/// One 6×16 tile: `c[r, j] = Σ_p ap[p, r] · panel[p, j]`, p ascending,
+/// each term fused. Padded rows/columns are computed but never stored.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn micro(
+    ap: *const f32,
+    bp: *const f32,
+    k: usize,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let z = _mm256_setzero_ps();
+    let mut acc = [[z; 2]; MR];
+    for p in 0..k {
+        let b0 = _mm256_loadu_ps(bp.add(p * NR));
+        let b1 = _mm256_loadu_ps(bp.add(p * NR + 8));
+        let arow = ap.add(p * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*arow.add(r));
+            accr[0] = _mm256_fmadd_ps(av, b0, accr[0]);
+            accr[1] = _mm256_fmadd_ps(av, b1, accr[1]);
+        }
+    }
+    if mr == MR && nr == NR {
+        for (r, accr) in acc.iter().enumerate() {
+            _mm256_storeu_ps(c.add(r * ldc), accr[0]);
+            _mm256_storeu_ps(c.add(r * ldc + 8), accr[1]);
+        }
+    } else {
+        let mut buf = [0.0f32; NR];
+        for (r, accr) in acc.iter().enumerate().take(mr) {
+            _mm256_storeu_ps(buf.as_mut_ptr(), accr[0]);
+            _mm256_storeu_ps(buf.as_mut_ptr().add(8), accr[1]);
+            std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(r * ldc), nr);
+        }
+    }
+}
+
+/// Fused row-streaming GEMV: `out[N] = x[K] · b[K, N]`, 32 columns of
+/// register accumulators at a time, ascending-K per output.
+pub(super) fn gemv(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    unsafe { gemv_inner(x, b, k, n, out) };
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemv_inner(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    let mut j = 0usize;
+    while j + 32 <= n {
+        let z = _mm256_setzero_ps();
+        let mut acc = [z; 4];
+        for p in 0..k {
+            let xv = _mm256_set1_ps(*x.get_unchecked(p));
+            let base = b.as_ptr().add(p * n + j);
+            for (q, accq) in acc.iter_mut().enumerate() {
+                *accq = _mm256_fmadd_ps(xv, _mm256_loadu_ps(base.add(q * 8)), *accq);
+            }
+        }
+        for (q, accq) in acc.iter().enumerate() {
+            _mm256_storeu_ps(out.as_mut_ptr().add(j + q * 8), *accq);
+        }
+        j += 32;
+    }
+    while j + 8 <= n {
+        let mut acc = _mm256_setzero_ps();
+        for p in 0..k {
+            let xv = _mm256_set1_ps(*x.get_unchecked(p));
+            acc = _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(p * n + j)), acc);
+        }
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), acc);
+        j += 8;
+    }
+    for jj in j..n {
+        let mut acc = 0.0f32;
+        for p in 0..k {
+            acc = x[p].mul_add(b[p * n + jj], acc);
+        }
+        out[jj] = acc;
+    }
+}
+
+/// Vectorized NaN-ignoring absmax scan — bit-identical to the scalar fold
+/// (max never rounds; `max_ps(|v|, acc)` returns `acc` when `|v|` is NaN,
+/// same as `f32::max`).
+pub(super) fn absmax(xs: &[f32]) -> f32 {
+    unsafe { absmax_inner(xs) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn absmax_inner(xs: &[f32]) -> f32 {
+    let sign = _mm256_set1_ps(-0.0);
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= xs.len() {
+        let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+        acc = _mm256_max_ps(_mm256_andnot_ps(sign, v), acc);
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut m = lanes.iter().fold(0.0f32, |m, &v| m.max(v));
+    for v in &xs[i..] {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Vectorized quantizer encode scan, bit-identical to the scalar formula
+/// `(v/scale).round().clamp(-qmax-1, qmax) as i32 + bias`:
+/// * division is IEEE correctly-rounded in both paths;
+/// * `round` (ties away from zero) is rebuilt from the RTE `roundps` plus
+///   an exact tie fixup — RTE disagrees with ties-away only when
+///   `x - rte(x)` equals ±0.5 exactly, and that subtraction is exact for
+///   every float (the difference is a multiple of ulp(x) no larger than
+///   0.5, or zero once ulp(x) > 0.5);
+/// * NaN lanes are zeroed before the clamp to match `NaN as i32 == 0`.
+pub(super) fn quantize_block(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    unsafe { quantize_inner(chunk, scale, bits, out) };
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn quantize_inner(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let bias = 1i32 << (bits - 1);
+    let sv = _mm256_set1_ps(scale);
+    let sign = _mm256_set1_ps(-0.0);
+    let halfv = _mm256_set1_ps(0.5);
+    let onev = _mm256_set1_ps(1.0);
+    let lov = _mm256_set1_ps(-qmax - 1.0);
+    let hiv = _mm256_set1_ps(qmax);
+    let biasv = _mm256_set1_epi32(bias);
+    let mut qs = [0i32; 8];
+    let mut i = 0usize;
+    while i + 8 <= chunk.len() {
+        let x = _mm256_div_ps(_mm256_loadu_ps(chunk.as_ptr().add(i)), sv);
+        let sx = _mm256_and_ps(x, sign);
+        let r0 = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x);
+        let tie = _mm256_cmp_ps::<_CMP_EQ_OQ>(_mm256_sub_ps(x, r0), _mm256_or_ps(halfv, sx));
+        let r = _mm256_add_ps(r0, _mm256_and_ps(tie, _mm256_or_ps(onev, sx)));
+        let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+        let r = _mm256_blendv_ps(r, _mm256_setzero_ps(), nan);
+        let r = _mm256_min_ps(_mm256_max_ps(r, lov), hiv);
+        let q = _mm256_add_epi32(_mm256_cvtps_epi32(r), biasv);
+        _mm256_storeu_si256(qs.as_mut_ptr() as *mut __m256i, q);
+        for &qv in &qs {
+            out.push(qv as u8);
+        }
+        i += 8;
+    }
+    super::scalar::quantize_block(&chunk[i..], scale, bits, out);
+}

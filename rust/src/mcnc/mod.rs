@@ -1,6 +1,8 @@
 //! The paper's core machinery, native side: the frozen random generator φ
-//! (mirror of the Pallas kernel), the blocked-GEMM reconstruction kernel
-//! behind it, and the chunk-partition math.
+//! (mirror of the Pallas kernel), the SIMD-dispatched blocked-GEMM
+//! reconstruction kernel behind it (`kernel` — AVX2+FMA / NEON microtiles
+//! probed once at startup, scalar reference fallback), and the
+//! chunk-partition math.
 
 pub mod chunker;
 pub mod generator;

@@ -141,7 +141,7 @@ impl Table {
         s
     }
 
-    /// Write CSV next to the bench outputs (results/<slug>.csv).
+    /// Write CSV next to the bench outputs (`results/<slug>.csv`).
     pub fn save_csv(&self, slug: &str) {
         let dir = std::path::Path::new("results");
         let _ = std::fs::create_dir_all(dir);
@@ -167,7 +167,7 @@ impl Table {
         ]))
     }
 
-    /// Machine-readable bench trajectory: BENCH_<slug>.json at the repo
+    /// Machine-readable bench trajectory: `BENCH_<slug>.json` at the repo
     /// root, so successive PRs can diff perf without parsing stdout/CSV.
     pub fn save_json(&self, slug: &str) {
         let path =

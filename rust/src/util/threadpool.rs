@@ -10,7 +10,8 @@ use std::thread;
 static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
 
 /// The process-wide pool, built on first use with one worker per core
-/// (`MCNC_THREADS` overrides the size).
+/// (`MCNC_THREADS` overrides the size; [`configure_global`] overrides both
+/// if it runs before first use).
 pub fn global() -> &'static ThreadPool {
     GLOBAL.get_or_init(|| {
         let n = std::env::var("MCNC_THREADS")
@@ -20,6 +21,17 @@ pub fn global() -> &'static ThreadPool {
             .unwrap_or_else(|| thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
         ThreadPool::new(n)
     })
+}
+
+/// Explicitly size the global pool (the `--threads` flag). Must run before
+/// the first [`global`] call; returns `false` (and changes nothing) if the
+/// pool was already built — callers should warn, since a pinned bench run
+/// that silently used core-count workers is not reproducible.
+pub fn configure_global(n: usize) -> bool {
+    if GLOBAL.get().is_some() {
+        return false;
+    }
+    GLOBAL.set(ThreadPool::new(n.max(1))).is_ok()
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -268,5 +280,15 @@ mod tests {
             total.fetch_add(e - s, Ordering::SeqCst);
         });
         assert_eq!(total.load(Ordering::SeqCst), 128);
+    }
+
+    #[test]
+    fn configure_global_after_first_use_is_refused() {
+        // force the pool into existence first so the test is deterministic
+        // under parallel test scheduling, then the late override must be
+        // rejected and the pool size must stay put
+        let before = global().len();
+        assert!(!configure_global(before + 3));
+        assert_eq!(global().len(), before);
     }
 }
