@@ -26,4 +26,13 @@ cargo test -q --test integration_server
 echo "== codec property tests (corruption handling must fail tier-1) =="
 cargo test -q -p mcnc --test prop_codec
 
+echo "== parallel decode determinism + docs/FORMAT.md worked example =="
+cargo test -q -p mcnc --test prop_parallel_decode
+
+echo "== doctests (Encoder/Decoder, Server examples must stay runnable) =="
+cargo test -q -p mcnc --doc
+
+echo "== decode pipeline smoke (table8 bench, tiny fixtures, no JSON) =="
+cargo bench --bench table8_transfer -- --smoke
+
 echo "CI OK"

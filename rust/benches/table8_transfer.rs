@@ -1,6 +1,6 @@
 //! Table 8: shipping a compressed vs uncompressed model.
 //!
-//! Two parts:
+//! Three parts:
 //!
 //! 1. **Wire format** (runs everywhere, no artifacts needed): raw-f32
 //!    MCNC1 checkpoints vs the MCNC2 codec (lossless byte-plane rANS,
@@ -8,23 +8,56 @@
 //!    bytes, compression ratio, and encode/decode throughput. Emitted to
 //!    `BENCH_table8_transfer.json` (+ `results/table8_transfer_wire.csv`)
 //!    so the transfer trajectory is diffable across PRs.
-//! 2. **Host→device staging** (needs artifacts + `--features pjrt`): the
+//! 2. **Parallel decode + warm start** (runs everywhere): in-memory decode
+//!    throughput of `Decoder::decode_all_with` at {1, 2, 4, 8} pool
+//!    threads per codec (checked bit-identical to the serial path), the
+//!    fused decode→`PackedB` path vs decode-then-pack, and the warm-start
+//!    decode+group wall-clock on a multi-task artifact. Rows land in the
+//!    same table/JSON, labeled `∥ N threads`.
+//! 3. **Host→device staging** (needs artifacts + `--features pjrt`): the
 //!    original measured + PCIe-projected comparison of dense weights vs
 //!    (α, β)+expand, and the shard-replication analytic.
+//!
+//! `-- --smoke` shrinks the fixtures to CI scale, runs single samples, and
+//! skips the JSON/CSV outputs so a quick gate run never clobbers a full
+//! run's recorded trajectory.
 
-use mcnc::codec::Codec;
+use mcnc::codec::{Codec, ContainerHeader, Decoder, Encoder};
+use mcnc::coordinator::warm;
 use mcnc::exp::Ctx;
-use mcnc::runtime::{init, Role};
-use mcnc::tensor::Tensor;
+use mcnc::mcnc::kernel;
+use mcnc::runtime::{init, IoSpec, Role};
+use mcnc::tensor::{DType, Tensor};
 use mcnc::train::Checkpoint;
 use mcnc::util::bench::{fmt_time, time_it, Table};
 use mcnc::util::prng::Stream;
+use mcnc::util::threadpool::ThreadPool;
 
 const PCIE_GBPS: f64 = 16.0e9;
 
 fn main() {
-    codec_wire_table();
-    pjrt_staging();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut table = Table::new(
+        "Table 8a — wire format: MCNC1 raw f32 vs MCNC2 codec (checkpoint fixtures)",
+        &["fixture", "format", "wire bytes", "ratio vs MCNC1", "encode", "decode", "enc MB/s",
+            "dec MB/s"],
+    );
+    codec_wire_table(&mut table, smoke);
+    parallel_decode_rows(&mut table, smoke);
+    warm_start_rows(&mut table, smoke);
+    table.print();
+    println!(
+        "(encode/decode include file IO; MCNC2 lossless is checked bit-exact and \
+         strictly smaller than MCNC1 on every fixture; ∥-rows decode in-memory \
+         and are checked bit-identical to the serial decoder)"
+    );
+    if smoke {
+        println!("[bench] --smoke: skipping JSON/CSV outputs (tiny fixtures)");
+    } else {
+        table.save_csv("table8_transfer_wire");
+        table.save_json("table8_transfer");
+        pjrt_staging();
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -61,12 +94,8 @@ fn mbps(payload_bytes: usize, secs: f64) -> String {
     format!("{:.1}", payload_bytes as f64 / secs.max(1e-12) / 1e6)
 }
 
-fn codec_wire_table() {
-    let mut table = Table::new(
-        "Table 8a — wire format: MCNC1 raw f32 vs MCNC2 codec (checkpoint fixtures)",
-        &["fixture", "format", "wire bytes", "ratio vs MCNC1", "encode", "decode", "enc MB/s",
-            "dec MB/s"],
-    );
+fn codec_wire_table(table: &mut Table, smoke: bool) {
+    let samples = if smoke { 1 } else { 5 };
     let dir = std::env::temp_dir().join(format!("mcnc_table8_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
 
@@ -81,8 +110,8 @@ fn codec_wire_table() {
         assert_eq!(back.tensors, ck.tensors, "MCNC1 read changed");
         assert_eq!(back.seed, ck.seed);
 
-        let enc1 = time_it(1, 5, || ck.save(&p1).unwrap());
-        let dec1 = time_it(1, 5, || {
+        let enc1 = time_it(1, samples, || ck.save(&p1).unwrap());
+        let dec1 = time_it(1, samples, || {
             let _ = Checkpoint::load(&p1).unwrap();
         });
         table.row(vec![
@@ -108,10 +137,10 @@ fn codec_wire_table() {
                     "{name}: MCNC2 lossless ({wire} B) not smaller than MCNC1 ({v1_bytes} B)"
                 );
             }
-            let enc2 = time_it(1, 5, || {
+            let enc2 = time_it(1, samples, || {
                 ck.save_v2(&p2, codec).unwrap();
             });
-            let dec2 = time_it(1, 5, || {
+            let dec2 = time_it(1, samples, || {
                 let _ = Checkpoint::load(&p2).unwrap();
             });
             table.row(vec![
@@ -127,18 +156,190 @@ fn codec_wire_table() {
         }
     }
     std::fs::remove_dir_all(&dir).ok();
-
-    table.print();
-    println!(
-        "(encode/decode include file IO; MCNC2 lossless is checked bit-exact and \
-         strictly smaller than MCNC1 on every fixture)"
-    );
-    table.save_csv("table8_transfer_wire");
-    table.save_json("table8_transfer");
 }
 
 // ---------------------------------------------------------------------------
-// Part 2 — host→device staging (artifacts + pjrt feature)
+// Part 2 — parallel decode throughput + warm-start wall-clock (no artifacts)
+// ---------------------------------------------------------------------------
+
+/// A multi-tensor "fleet" checkpoint encoded in memory: big enough that
+/// entropy decode dominates and the per-frame fan-out has work to split.
+fn fleet_container(n_tensors: usize, per: usize, codec: Codec) -> (Vec<u8>, usize) {
+    let header = ContainerHeader {
+        entry: "fleet_bench".into(),
+        seed: 7,
+        step: 0.0,
+        n_tensors: Some(n_tensors),
+    };
+    let mut enc = Encoder::new(Vec::new(), &header).unwrap();
+    let cols = 64usize;
+    for i in 0..n_tensors {
+        let vals = Stream::new(100 + i as u64).normal_f32(per, 0.05);
+        let t = Tensor::from_f32(vals, &[per / cols, cols]).unwrap();
+        enc.write_tensor(&format!("w{i}"), &t, codec).unwrap();
+    }
+    let (bytes, _) = enc.finish().unwrap();
+    (bytes, n_tensors * per * 4)
+}
+
+fn parallel_decode_rows(table: &mut Table, smoke: bool) {
+    let (n_tensors, per) = if smoke { (4, 2_048) } else { (16, 131_072) };
+    let threads: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let samples = if smoke { 1 } else { 5 };
+    let fixture = format!("fleet ({n_tensors}x{per} p)");
+
+    for codec in [Codec::Lossless, Codec::Int8 { block: 64 }, Codec::Int4 { block: 64 }] {
+        let (bytes, payload) = fleet_container(n_tensors, per, codec);
+
+        // serial reference decode, used for the bit-identity check below
+        let mut serial = Vec::new();
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        while let Some(f) = dec.next_tensor().unwrap() {
+            serial.push(f);
+        }
+
+        for &t in threads {
+            let pool = ThreadPool::new(t);
+            let out = Decoder::new(&bytes[..]).unwrap().decode_all_with(&pool).unwrap();
+            assert_eq!(out.len(), serial.len());
+            for ((an, at, ac), (bn, bt, bc)) in out.iter().zip(&serial) {
+                assert_eq!((an, ac), (bn, bc), "parallel decode drifted");
+                let (af, bf) = (at.f32s().unwrap(), bt.f32s().unwrap());
+                assert!(
+                    af.iter().zip(bf).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "parallel decode not bit-identical ({} threads)",
+                    t
+                );
+            }
+            let stats = time_it(1, samples, || {
+                let out = Decoder::new(&bytes[..]).unwrap().decode_all_with(&pool).unwrap();
+                assert_eq!(out.len(), n_tensors);
+            });
+            // best-of-N: thread scaling is the signal, scheduler noise isn't
+            let best = stats.min();
+            table.row(vec![
+                fixture.clone(),
+                format!("MCNC2 {} ∥ {t} threads", codec.name()),
+                format!("{}", bytes.len()),
+                format!("{:.2}x", payload as f64 / bytes.len() as f64),
+                "-".into(),
+                fmt_time(best),
+                "-".into(),
+                mbps(payload, best),
+            ]);
+        }
+
+        // fused decode→PackedB vs decode-then-pack (serial, per-frame)
+        let (cols, rows) = (64usize, per / 64);
+        let fused = time_it(1, samples, || {
+            let mut dec = Decoder::new(&bytes[..]).unwrap();
+            let mut n = 0;
+            while let Some((_, pb, _)) = dec.next_packed(kernel::active()).unwrap() {
+                assert_eq!((pb.k, pb.n), (rows, cols));
+                n += 1;
+            }
+            assert_eq!(n, n_tensors);
+        });
+        let two_pass = time_it(1, samples, || {
+            let mut dec = Decoder::new(&bytes[..]).unwrap();
+            let mut n = 0;
+            while let Some((_, t, _)) = dec.next_tensor().unwrap() {
+                let pb = kernel::pack_b(t.f32s().unwrap(), rows, cols);
+                assert_eq!(pb.n, cols);
+                n += 1;
+            }
+            assert_eq!(n, n_tensors);
+        });
+        for (label, stats) in
+            [("fused decode→PackedB", &fused), ("decode, then pack_b", &two_pass)]
+        {
+            table.row(vec![
+                fixture.clone(),
+                format!("MCNC2 {} {label}", codec.name()),
+                format!("{}", bytes.len()),
+                format!("{:.2}x", payload as f64 / bytes.len() as f64),
+                "-".into(),
+                fmt_time(stats.min()),
+                "-".into(),
+                mbps(payload, stats.min()),
+            ]);
+        }
+    }
+}
+
+/// Warm-start ingest cost: decode a multi-task `task{t}/{slot}` artifact
+/// and group it into per-task adapters (the shard-side `warm_from_artifact`
+/// pipeline minus engine installation, so it runs without PJRT artifacts).
+fn warm_start_rows(table: &mut Table, smoke: bool) {
+    let (n_tasks, a_rows, a_cols) = if smoke { (2, 32, 16) } else { (8, 512, 256) };
+    let threads: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let samples = if smoke { 1 } else { 5 };
+
+    let specs = vec![
+        IoSpec {
+            name: "alpha".into(),
+            shape: vec![a_rows, a_cols],
+            dtype: DType::F32,
+            role: Role::Trainable,
+            init: None,
+        },
+        IoSpec {
+            name: "beta".into(),
+            shape: vec![a_rows],
+            dtype: DType::F32,
+            role: Role::Trainable,
+            init: None,
+        },
+    ];
+    let adapters: Vec<(usize, Vec<(String, Tensor)>)> = (0..n_tasks)
+        .map(|t| {
+            let mut s = Stream::new(200 + t as u64);
+            (
+                t,
+                vec![
+                    (
+                        "alpha".to_string(),
+                        Tensor::from_f32(s.normal_f32(a_rows * a_cols, 0.05), &[a_rows, a_cols])
+                            .unwrap(),
+                    ),
+                    (
+                        "beta".to_string(),
+                        Tensor::from_f32(s.normal_f32(a_rows, 0.02), &[a_rows]).unwrap(),
+                    ),
+                ],
+            )
+        })
+        .collect();
+    let payload = n_tasks * (a_rows * a_cols + a_rows) * 4;
+
+    for codec in [Codec::Lossless, Codec::Int8 { block: 64 }, Codec::Int4 { block: 64 }] {
+        let mut bytes = Vec::new();
+        warm::write_artifact(&mut bytes, "lm_mcnclora8", 7, codec, &adapters).unwrap();
+        for &t in threads {
+            let pool = ThreadPool::new(t);
+            let stats = time_it(1, samples, || {
+                let frames =
+                    Decoder::new(&bytes[..]).unwrap().decode_all_with(&pool).unwrap();
+                let (owned, skipped) = warm::group_for_shard(frames, &specs, 0, 1).unwrap();
+                assert_eq!(owned.len(), n_tasks);
+                assert_eq!(skipped, 0);
+            });
+            table.row(vec![
+                format!("warm artifact ({n_tasks} tasks)"),
+                format!("warm-start {} ∥ {t} threads", codec.name()),
+                format!("{}", bytes.len()),
+                format!("{:.2}x", payload as f64 / bytes.len() as f64),
+                "-".into(),
+                fmt_time(stats.min()),
+                "-".into(),
+                mbps(payload, stats.min()),
+            ]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Part 3 — host→device staging (artifacts + pjrt feature)
 // ---------------------------------------------------------------------------
 
 fn pjrt_staging() {

@@ -27,11 +27,14 @@
 use anyhow::{anyhow, bail, Result};
 use std::io::Read;
 
+use crate::mcnc::kernel::{Isa, PackedB, PackedBBuilder};
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 
 use super::{quantizer, rans, Codec};
 
+/// Stream magic of the MCNC2 container (`docs/FORMAT.md` is the byte-level
+/// specification of everything that follows it).
 pub const MAGIC_V2: &[u8; 6] = b"MCNC2\n";
 /// Header JSON length bound: a corrupt length must not drive a giant
 /// allocation (also applied to legacy MCNC1 headers by `Checkpoint::load`).
@@ -139,8 +142,11 @@ pub fn crc32(data: &[u8]) -> u32 {
 /// seeds ≥ 2^53.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ContainerHeader {
+    /// Manifest entry the payload belongs to (e.g. `mlp_mcnc02_train`).
     pub entry: String,
+    /// Base seed the receiver re-derives θ0 and the generator from.
     pub seed: u64,
+    /// Training step the payload was snapshotted at.
     pub step: f32,
     /// Expected frame count, when the producer knows it up front. The
     /// decoder checks it at the end marker, so a corrupted frame-length
@@ -150,6 +156,7 @@ pub struct ContainerHeader {
 }
 
 impl ContainerHeader {
+    /// Serialize to the wire's JSON spelling (seed as a decimal string).
     pub fn to_json(&self) -> String {
         let mut pairs = vec![
             ("version", Json::num(2.0)),
@@ -163,6 +170,8 @@ impl ContainerHeader {
         json::to_string(&Json::obj(pairs))
     }
 
+    /// Parse the wire JSON; rejects any version other than 2 and accepts
+    /// both seed spellings (decimal string, legacy number).
     pub fn parse(text: &str) -> Result<ContainerHeader> {
         let j = json::parse(text).map_err(|e| anyhow!("container header: {e}"))?;
         let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
@@ -308,32 +317,28 @@ pub fn encode_frame(name: &str, t: &Tensor, codec: Codec) -> Result<Vec<u8>> {
     Ok(b)
 }
 
-/// Parse one CRC-verified frame body back into a named tensor. Structural
-/// bounds (name/dims/element counts) are enforced before any allocation is
-/// sized from untrusted fields.
-pub fn decode_frame(b: &[u8]) -> Result<(String, Tensor, Codec)> {
-    let mut pos = 0usize;
-    let nlen = get_varint(b, &mut pos)? as usize;
-    if nlen > MAX_NAME {
-        bail!("frame name length {nlen} unreasonable");
-    }
-    let nend = pos
-        .checked_add(nlen)
-        .filter(|&e| e <= b.len())
-        .ok_or_else(|| anyhow!("frame name overruns body"))?;
-    let name = std::str::from_utf8(&b[pos..nend])
-        .map_err(|_| anyhow!("frame name is not utf-8"))?
-        .to_string();
-    pos = nend;
+/// Parsed frame preamble: everything ahead of the payload bytes.
+struct FrameMeta {
+    name: String,
+    dims: Vec<usize>,
+    numel: usize,
+    tag: u8,
+}
 
-    let ndims = get_varint(b, &mut pos)? as usize;
+/// Parse name, shape and codec tag, advancing `*pos` to the payload.
+/// Structural bounds (name/dims/element counts) are enforced before any
+/// allocation is sized from untrusted fields.
+fn parse_frame_meta(b: &[u8], pos: &mut usize) -> Result<FrameMeta> {
+    let name = parse_name(b, pos)?;
+
+    let ndims = get_varint(b, pos)? as usize;
     if ndims > MAX_DIMS {
         bail!("frame has {ndims} dims");
     }
     let mut dims = Vec::with_capacity(ndims);
     let mut numel = 1usize;
     for _ in 0..ndims {
-        let d = get_varint(b, &mut pos)? as usize;
+        let d = get_varint(b, pos)? as usize;
         numel = numel
             .checked_mul(d)
             .filter(|&n| n <= MAX_ELEMS)
@@ -341,8 +346,72 @@ pub fn decode_frame(b: &[u8]) -> Result<(String, Tensor, Codec)> {
         dims.push(d);
     }
 
-    let tag = *b.get(pos).ok_or_else(|| anyhow!("frame codec tag missing"))?;
-    pos += 1;
+    let tag = *b.get(*pos).ok_or_else(|| anyhow!("frame codec tag missing"))?;
+    *pos += 1;
+    Ok(FrameMeta { name, dims, numel, tag })
+}
+
+/// Parse the quantized payload fields shared by tag 1/2: block size, the
+/// per-block scale array, and the biased symbol section.
+fn parse_quantized_payload(
+    b: &[u8],
+    pos: &mut usize,
+    name: &str,
+    numel: usize,
+    bits: u32,
+) -> Result<(usize, Vec<f32>, Vec<u8>)> {
+    let block = get_varint(b, pos)? as usize;
+    if block == 0 {
+        bail!("frame {name:?} has zero quantization block");
+    }
+    let n_scales = numel.div_ceil(block);
+    let send = n_scales
+        .checked_mul(4)
+        .and_then(|sb| pos.checked_add(sb))
+        .filter(|&e| e <= b.len())
+        .ok_or_else(|| anyhow!("frame {name:?} scales overrun body"))?;
+    let scales: Vec<f32> = b[*pos..send]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    *pos = send;
+    let symbols = get_symbols(b, pos, numel, bits)?;
+    Ok((block, scales, symbols))
+}
+
+/// Parse the name field at the head of a frame body, advancing `*pos` —
+/// the one implementation behind both the full preamble parse and the
+/// cheap name peek, so the two paths can never disagree on name framing.
+fn parse_name(b: &[u8], pos: &mut usize) -> Result<String> {
+    let nlen = get_varint(b, pos)? as usize;
+    if nlen > MAX_NAME {
+        bail!("frame name length {nlen} unreasonable");
+    }
+    let nend = pos
+        .checked_add(nlen)
+        .filter(|&e| e <= b.len())
+        .ok_or_else(|| anyhow!("frame name overruns body"))?;
+    let name = std::str::from_utf8(&b[*pos..nend])
+        .map_err(|_| anyhow!("frame name is not utf-8"))?
+        .to_string();
+    *pos = nend;
+    Ok(name)
+}
+
+/// Read just the tensor name off a frame body — the cheap peek the
+/// filtered parallel decode uses to skip entropy-decoding frames a
+/// consumer does not want (e.g. another shard's warm-start tasks). Call
+/// only on CRC-verified bodies: the name bytes are trusted like any other
+/// frame field.
+pub fn peek_frame_name(b: &[u8]) -> Result<String> {
+    parse_name(b, &mut 0)
+}
+
+/// Parse one CRC-verified frame body back into a named tensor.
+pub fn decode_frame(b: &[u8]) -> Result<(String, Tensor, Codec)> {
+    let mut pos = 0usize;
+    let meta = parse_frame_meta(b, &mut pos)?;
+    let FrameMeta { name, dims, numel, tag } = meta;
     let (w, codec) = match tag {
         0 => {
             let mut planes = Vec::with_capacity(4);
@@ -362,22 +431,8 @@ pub fn decode_frame(b: &[u8]) -> Result<(String, Tensor, Codec)> {
         }
         1 | 2 => {
             let bits: u32 = if tag == 1 { 8 } else { 4 };
-            let block = get_varint(b, &mut pos)? as usize;
-            if block == 0 {
-                bail!("frame {name:?} has zero quantization block");
-            }
-            let n_scales = numel.div_ceil(block);
-            let send = n_scales
-                .checked_mul(4)
-                .and_then(|sb| pos.checked_add(sb))
-                .filter(|&e| e <= b.len())
-                .ok_or_else(|| anyhow!("frame {name:?} scales overrun body"))?;
-            let scales: Vec<f32> = b[pos..send]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            pos = send;
-            let symbols = get_symbols(b, &mut pos, numel, bits)?;
+            let (block, scales, symbols) =
+                parse_quantized_payload(b, &mut pos, &name, numel, bits)?;
             let q = quantizer::Quantized { bits, block, scales, symbols };
             let codec =
                 if bits == 8 { Codec::Int8 { block } } else { Codec::Int4 { block } };
@@ -389,6 +444,77 @@ pub fn decode_frame(b: &[u8]) -> Result<(String, Tensor, Codec)> {
         bail!("frame {name:?} has {} trailing bytes", b.len() - pos);
     }
     Ok((name, Tensor::from_f32(w, &dims)?, codec))
+}
+
+/// Fused decode→pack: parse a CRC-verified 2-D `[k, n]` weight frame
+/// straight into the kernel layer's [`PackedB`] panel layout for `isa`
+/// (degrading to scalar if unavailable), so a warm-start or cold-fill
+/// consumer that feeds the dispatched GEMMs skips the intermediate
+/// row-major `Tensor` entirely. Dequantization is element-for-element the
+/// [`quantizer::dequantize`] formula, so the packed values are bit-identical
+/// to packing the output of [`decode_frame`].
+///
+/// Packed-A panels are deliberately *not* produced here: A is per-GEMM-call
+/// scratch repacked from the activations of the moment, not a decodable
+/// artifact.
+pub fn decode_frame_into_packed(b: &[u8], isa: Isa) -> Result<(String, PackedB, Codec)> {
+    let mut pos = 0usize;
+    let meta = parse_frame_meta(b, &mut pos)?;
+    let FrameMeta { name, dims, numel, tag } = meta;
+    if dims.len() != 2 {
+        bail!("frame {name:?} is {}-D; packed decode needs a 2-D [k, n] weight", dims.len());
+    }
+    // the panel buffer is k × ⌈n/NR⌉·NR floats — NR-padding can blow a
+    // skinny-but-legal frame (huge k, n = 1) far past the MAX_ELEMS cap
+    // the plain decode path enforces, so bound the *padded* size before
+    // allocating (16 = the widest microtile NR across ISAs; see
+    // mcnc::kernel — update if a wider kernel is ever added)
+    const MAX_NR: usize = 16;
+    let padded_cols = dims[1].div_ceil(MAX_NR).max(1).saturating_mul(MAX_NR);
+    dims[0]
+        .checked_mul(padded_cols)
+        .filter(|&p| p <= MAX_ELEMS)
+        .ok_or_else(|| anyhow!("frame {name:?} padded panel size exceeds bound"))?;
+    let mut builder = PackedBBuilder::new_for(isa, dims[0], dims[1]);
+    let codec = match tag {
+        0 => {
+            let mut planes = Vec::with_capacity(4);
+            for _ in 0..4 {
+                planes.push(get_symbols(b, &mut pos, numel, 8)?);
+            }
+            for i in 0..numel {
+                builder.push(f32::from_le_bytes([
+                    planes[0][i],
+                    planes[1][i],
+                    planes[2][i],
+                    planes[3][i],
+                ]));
+            }
+            Codec::Lossless
+        }
+        1 | 2 => {
+            let bits: u32 = if tag == 1 { 8 } else { 4 };
+            let (block, scales, symbols) =
+                parse_quantized_payload(b, &mut pos, &name, numel, bits)?;
+            let bias = 1i32 << (bits - 1);
+            for (ci, chunk) in symbols.chunks(block).enumerate() {
+                let scale = scales.get(ci).copied().unwrap_or(0.0);
+                for &s in chunk {
+                    builder.push((s as i32 - bias) as f32 * scale);
+                }
+            }
+            if bits == 8 {
+                Codec::Int8 { block }
+            } else {
+                Codec::Int4 { block }
+            }
+        }
+        t => bail!("unknown codec tag {t}"),
+    };
+    if pos != b.len() {
+        bail!("frame {name:?} has {} trailing bytes", b.len() - pos);
+    }
+    Ok((name, builder.finish()?, codec))
 }
 
 #[cfg(test)]
@@ -473,6 +599,38 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn packed_decode_matches_decode_then_pack() {
+        use crate::mcnc::kernel;
+        let vals = Stream::new(17).normal_f32(20 * 33, 0.05);
+        let t = Tensor::from_f32(vals, &[20, 33]).unwrap();
+        for isa in [Isa::Scalar, kernel::active()] {
+            for codec in [Codec::Lossless, Codec::Int8 { block: 64 }, Codec::Int4 { block: 7 }] {
+                let body = encode_frame("w", &t, codec).unwrap();
+                let (name, pb, c) = decode_frame_into_packed(&body, isa).unwrap();
+                assert_eq!(name, "w");
+                assert_eq!(c, codec);
+                let (_, back, _) = decode_frame(&body).unwrap();
+                let want = kernel::pack_b_for(isa, back.f32s().unwrap(), 20, 33);
+                assert_eq!(pb.isa(), want.isa(), "{isa:?} {codec:?}");
+                assert_eq!(pb.panels(), want.panels(), "{isa:?} {codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_decode_rejects_non_2d_and_corrupt() {
+        let t1 = Tensor::ones(&[6]);
+        let body = encode_frame("v", &t1, Codec::Lossless).unwrap();
+        let err = decode_frame_into_packed(&body, Isa::Scalar).unwrap_err();
+        assert!(format!("{err:#}").contains("2-D"), "{err:#}");
+
+        let t2 = Tensor::ones(&[2, 3]);
+        let mut body = encode_frame("m", &t2, Codec::Int8 { block: 4 }).unwrap();
+        body.truncate(body.len() - 1);
+        assert!(decode_frame_into_packed(&body, Isa::Scalar).is_err());
     }
 
     #[test]

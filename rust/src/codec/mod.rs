@@ -24,6 +24,15 @@
 //! Corrupt streams (truncations, bit flips) fail decoding with an error —
 //! never a panic, never a silent mis-decode (CRC32 catches all single-bit
 //! and burst-≤32 errors in frame bodies).
+//!
+//! Decoding parallelizes per frame: frames are self-delimiting and
+//! independently CRC-protected, so [`Decoder::decode_all`] splits the
+//! stream serially and fans entropy decode + dequantization across the
+//! process-wide thread pool, bit-identically to the serial path. The
+//! byte-level wire specification — with a hand-decodable worked example —
+//! lives in `docs/FORMAT.md`.
+
+#![warn(missing_docs)]
 
 pub mod container;
 pub mod quantizer;
@@ -41,9 +50,15 @@ pub enum Codec {
     /// f32 passthrough: byte-plane split + entropy coding, bit-exact.
     Lossless,
     /// Block-wise absmax 8-bit quantization + entropy-coded symbols.
-    Int8 { block: usize },
+    Int8 {
+        /// Elements per absmax scaling group.
+        block: usize,
+    },
     /// Block-wise absmax 4-bit quantization + entropy-coded symbols.
-    Int4 { block: usize },
+    Int4 {
+        /// Elements per absmax scaling group.
+        block: usize,
+    },
 }
 
 impl Codec {
@@ -57,6 +72,7 @@ impl Codec {
         }
     }
 
+    /// Canonical CLI/report spelling ([`Codec::parse`] accepts it back).
     pub fn name(&self) -> &'static str {
         match self {
             Codec::Lossless => "lossless",

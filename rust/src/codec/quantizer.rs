@@ -24,7 +24,9 @@ use crate::mcnc::kernel::{self, Isa};
 /// A quantized f32 slice: per-block scales + biased symbols.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Quantized {
+    /// Symbol width in bits (2..=8).
     pub bits: u32,
+    /// Elements per absmax scaling group.
     pub block: usize,
     /// `numel.div_ceil(block)` scales; 0.0 marks an all-zero block.
     pub scales: Vec<f32>,

@@ -6,18 +6,60 @@
 //! payload. Frame bodies are CRC-verified *before* any payload parsing, and
 //! length fields are bounded, so truncated or bit-flipped streams fail with
 //! an error — never a panic, never a silently wrong tensor.
+//!
+//! Two decode strategies share one framing pass:
+//!
+//! * [`Decoder::next_tensor`] — serial, one frame per call (the reference
+//!   path and the low-memory choice);
+//! * [`Decoder::decode_all`] — splits the remaining stream into raw frames
+//!   (cheap, I/O-bound), then fans the expensive work — CRC verification,
+//!   rANS entropy decode, dequantization — across `util::threadpool`.
+//!   Frames are independent by construction (each carries its own length,
+//!   body and CRC), which is what makes the fan-out safe; results return in
+//!   frame order and are bit-identical to the serial path at every thread
+//!   count.
+//!
+//! Decode errors name the failing frame: its zero-based tensor index and
+//! the byte offset of its length field in the stream, so an operator
+//! staring at a corrupt multi-gigabyte artifact knows where to look.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
 use super::container::{
-    crc32, encode_frame, read_varint, ContainerHeader, MAGIC_V2, MAX_FRAME, MAX_HEADER,
+    crc32, decode_frame_into_packed, encode_frame, read_varint, ContainerHeader, MAGIC_V2,
+    MAX_FRAME, MAX_HEADER,
 };
 use super::{container, Codec};
+use crate::mcnc::kernel::{Isa, PackedB};
 use crate::tensor::Tensor;
+use crate::util::threadpool::{self, ThreadPool};
 
 /// Streaming MCNC2 writer. Call [`Encoder::finish`] to terminate the
 /// stream; a dropped encoder leaves it truncated (which decoders reject).
+///
+/// ```
+/// use mcnc::codec::{Codec, ContainerHeader, Decoder, Encoder};
+/// use mcnc::tensor::Tensor;
+///
+/// let header = ContainerHeader {
+///     entry: "demo".into(),
+///     seed: 7,
+///     step: 0.0,
+///     n_tensors: Some(1),
+/// };
+/// let mut enc = Encoder::new(Vec::new(), &header).unwrap();
+/// enc.write_tensor("w", &Tensor::ones(&[4]), Codec::Lossless).unwrap();
+/// let (bytes, wire) = enc.finish().unwrap();
+/// assert_eq!(bytes.len(), wire);
+///
+/// let mut dec = Decoder::new(&bytes[..]).unwrap();
+/// assert_eq!(dec.header().entry, "demo");
+/// let (name, t, codec) = dec.next_tensor().unwrap().expect("one frame");
+/// assert_eq!((name.as_str(), codec), ("w", Codec::Lossless));
+/// assert_eq!(t.f32s().unwrap(), &[1.0; 4][..]);
+/// assert!(dec.next_tensor().unwrap().is_none());
+/// ```
 pub struct Encoder<W: Write> {
     w: W,
     wire_bytes: usize,
@@ -26,6 +68,8 @@ pub struct Encoder<W: Write> {
 }
 
 impl<W: Write> Encoder<W> {
+    /// Write the magic + CRC-protected header to `w` and return the
+    /// encoder ready for [`Encoder::write_tensor`] calls.
     pub fn new(mut w: W, header: &ContainerHeader) -> Result<Encoder<W>> {
         let hj = header.to_json();
         if hj.len() > MAX_HEADER {
@@ -78,10 +122,63 @@ impl<W: Write> Encoder<W> {
     }
 }
 
-/// Streaming MCNC2 reader: header up front, then one tensor per
-/// [`Decoder::next_tensor`] call.
+/// `Read` wrapper counting consumed bytes, so frame errors can report the
+/// stream offset they happened at.
+struct Counted<R> {
+    inner: R,
+    n: usize,
+}
+
+impl<R: Read> Read for Counted<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let k = self.inner.read(buf)?;
+        self.n += k;
+        Ok(k)
+    }
+}
+
+/// One frame split out of the stream but not yet verified or parsed — the
+/// unit of work the parallel decode path ships to pool workers.
+struct RawFrame {
+    /// Zero-based tensor index in the stream.
+    index: usize,
+    /// Byte offset of the frame's length field from the start of the
+    /// container (magic byte 0).
+    offset: usize,
+    body: Vec<u8>,
+    /// The stored CRC-32, still unchecked.
+    crc: u32,
+}
+
+/// Check a raw frame's stored CRC against its body; the error names the
+/// frame index + stream byte offset.
+fn verify_crc(f: &RawFrame) -> Result<()> {
+    let computed = crc32(&f.body);
+    if computed != f.crc {
+        bail!(
+            "frame {} at byte offset {}: CRC mismatch (stored {:08x}, computed {computed:08x})",
+            f.index,
+            f.offset,
+            f.crc
+        );
+    }
+    Ok(())
+}
+
+/// Verify a raw frame's CRC and parse its body. Runs on pool workers for
+/// the parallel path and inline for the serial one; all failure modes are
+/// `Err` (never a panic) and name the frame index + stream byte offset.
+fn check_and_decode(f: &RawFrame) -> Result<(String, Tensor, Codec)> {
+    verify_crc(f)?;
+    container::decode_frame(&f.body)
+        .with_context(|| format!("frame {} at byte offset {}", f.index, f.offset))
+}
+
+/// Streaming MCNC2 reader: header up front, then tensors — one per
+/// [`Decoder::next_tensor`] call, or all remaining frames decoded across
+/// the thread pool by [`Decoder::decode_all`].
 pub struct Decoder<R: Read> {
-    r: R,
+    r: Counted<R>,
     header: ContainerHeader,
     seen: usize,
     done: bool,
@@ -101,7 +198,10 @@ impl<R: Read> Decoder<R> {
 
     /// Continue past an already-consumed magic (the checkpoint loader
     /// sniffs the magic itself to dispatch between MCNC1 and MCNC2).
-    pub fn after_magic(mut r: R) -> Result<Decoder<R>> {
+    pub fn after_magic(r: R) -> Result<Decoder<R>> {
+        // offsets include the magic whoever consumed it, so errors report
+        // positions an operator can seek to in the file
+        let mut r = Counted { inner: r, n: MAGIC_V2.len() };
         let hlen = read_varint(&mut r)? as usize;
         if hlen > MAX_HEADER {
             bail!("container header length {hlen} unreasonable");
@@ -118,18 +218,21 @@ impl<R: Read> Decoder<R> {
         Ok(Decoder { r, header, seen: 0, done: false })
     }
 
+    /// The container header parsed by [`Decoder::new`]/[`Decoder::after_magic`].
     pub fn header(&self) -> &ContainerHeader {
         &self.header
     }
 
-    /// Decode the next frame, or `None` past the end marker. Errors are
-    /// sticky only in the sense that callers should stop on the first one.
-    pub fn next_tensor(&mut self) -> Result<Option<(String, Tensor, Codec)>> {
+    /// Split the next frame out of the stream without verifying or parsing
+    /// it; `None` past the end marker (where the header's declared tensor
+    /// count, if any, is enforced).
+    fn read_raw_frame(&mut self) -> Result<Option<RawFrame>> {
         if self.done {
             return Ok(None);
         }
-        let len = read_varint(&mut self.r).map_err(|_| anyhow!("stream truncated (no frame)"))?
-            as usize;
+        let offset = self.r.n;
+        let len = read_varint(&mut self.r)
+            .map_err(|_| anyhow!("stream truncated (no frame)"))? as usize;
         if len == 0 {
             if let Some(n) = self.header.n_tensors {
                 if self.seen != n {
@@ -142,16 +245,133 @@ impl<R: Read> Decoder<R> {
         if len > MAX_FRAME {
             bail!("frame length {len} unreasonable");
         }
-        let body = read_exactly(&mut self.r, len).map_err(|_| anyhow!("frame truncated"))?;
+        let index = self.seen;
+        let body = read_exactly(&mut self.r, len)
+            .map_err(|_| anyhow!("frame {index} at byte offset {offset}: truncated"))?;
         let mut crc = [0u8; 4];
-        self.r.read_exact(&mut crc).map_err(|_| anyhow!("frame CRC missing"))?;
-        if crc32(&body) != u32::from_le_bytes(crc) {
-            bail!("frame CRC mismatch");
-        }
-        let frame = container::decode_frame(&body)?;
+        self.r
+            .read_exact(&mut crc)
+            .map_err(|_| anyhow!("frame {index} at byte offset {offset}: CRC missing"))?;
         self.seen += 1;
-        Ok(Some(frame))
+        Ok(Some(RawFrame { index, offset, body, crc: u32::from_le_bytes(crc) }))
     }
+
+    /// Decode the next frame, or `None` past the end marker. Errors are
+    /// sticky only in the sense that callers should stop on the first one.
+    pub fn next_tensor(&mut self) -> Result<Option<(String, Tensor, Codec)>> {
+        match self.read_raw_frame()? {
+            None => Ok(None),
+            Some(f) => check_and_decode(&f).map(Some),
+        }
+    }
+
+    /// Decode the next frame straight into the kernel layer's [`PackedB`]
+    /// panel layout for `isa` — the fused decode→pack path for 2-D weight
+    /// frames feeding the dispatched GEMMs (see
+    /// [`container::decode_frame_into_packed`]).
+    pub fn next_packed(&mut self, isa: Isa) -> Result<Option<(String, PackedB, Codec)>> {
+        let Some(f) = self.read_raw_frame()? else {
+            return Ok(None);
+        };
+        verify_crc(&f)?;
+        decode_frame_into_packed(&f.body, isa)
+            .with_context(|| format!("frame {} at byte offset {}", f.index, f.offset))
+            .map(Some)
+    }
+
+    /// Decode every remaining frame, fanning CRC verification + entropy
+    /// decode + dequantization across the process-wide thread pool in
+    /// bounded windows. Results are in frame order and bit-identical to
+    /// draining [`Decoder::next_tensor`]; on corruption the error for the
+    /// lowest-indexed bad frame of its window is returned (deterministic
+    /// regardless of worker scheduling), and a worker detecting corruption
+    /// yields an `Err` — never a panic.
+    pub fn decode_all(&mut self) -> Result<Vec<(String, Tensor, Codec)>> {
+        self.decode_all_with(threadpool::global())
+    }
+
+    /// [`Decoder::decode_all`] on an explicit pool — the thread-count
+    /// override hook for determinism tests and the decode-throughput bench.
+    pub fn decode_all_with(&mut self, pool: &ThreadPool) -> Result<Vec<(String, Tensor, Codec)>> {
+        self.decode_windowed(pool, check_and_decode)
+    }
+
+    /// [`Decoder::decode_all_with`], decoding only frames whose *name*
+    /// passes `keep`. Every frame — kept or not — is still CRC-verified
+    /// (corruption anywhere stays an error), but skipped frames pay
+    /// neither entropy decode nor dequantization. This is how a shard
+    /// ingests a multi-task warm artifact without doing the whole fleet's
+    /// decode work: with S shards each keeping its `task % S` slice, total
+    /// decode cost stays ~1× the artifact instead of S×.
+    pub fn decode_all_filtered_with(
+        &mut self,
+        pool: &ThreadPool,
+        keep: impl Fn(&str) -> bool + Send + Sync + Clone + 'static,
+    ) -> Result<Vec<(String, Tensor, Codec)>> {
+        let results = self.decode_windowed(
+            pool,
+            move |f: &RawFrame| -> Result<Option<(String, Tensor, Codec)>> {
+                verify_crc(f)?;
+                let name = container::peek_frame_name(&f.body)
+                    .with_context(|| format!("frame {} at byte offset {}", f.index, f.offset))?;
+                if !keep(&name) {
+                    return Ok(None);
+                }
+                container::decode_frame(&f.body)
+                    .with_context(|| format!("frame {} at byte offset {}", f.index, f.offset))
+                    .map(Some)
+            },
+        )?;
+        Ok(results.into_iter().flatten().collect())
+    }
+
+    /// The shared windowed fan-out: split raw frames off the stream in
+    /// bounded batches, run `job` on each across the pool, and return the
+    /// results in frame order (first error by index wins — earlier windows
+    /// complete before later ones are read, so the guarantee is global).
+    fn decode_windowed<T: Send + 'static>(
+        &mut self,
+        pool: &ThreadPool,
+        job: impl Fn(&RawFrame) -> Result<T> + Send + Sync + Clone + 'static,
+    ) -> Result<Vec<T>> {
+        let window = fanout_window(pool);
+        let mut out = Vec::new();
+        loop {
+            let mut batch = Vec::with_capacity(window);
+            while batch.len() < window {
+                match self.read_raw_frame()? {
+                    Some(f) => batch.push(f),
+                    None => break,
+                }
+            }
+            if batch.is_empty() {
+                return Ok(out);
+            }
+            let n = batch.len();
+            let job = job.clone();
+            for r in pool.map(batch, move |f| job(&f)) {
+                out.push(r?);
+            }
+            if n < window {
+                return Ok(out);
+            }
+        }
+    }
+
+    /// How many frames have been split off the stream so far (serial reads
+    /// and `decode_all*` both count) — lets a filtering consumer report
+    /// how much it skipped.
+    pub fn frames_seen(&self) -> usize {
+        self.seen
+    }
+}
+
+/// Raw-frame window per fan-out round: enough to keep every worker busy,
+/// while bounding buffered-but-undecoded frame bytes to O(pool width)
+/// instead of O(stream) — a multi-GB artifact must not be held in memory
+/// twice (compressed + decoded) just to decode in parallel.
+fn fanout_window(pool: &ThreadPool) -> usize {
+    (pool.len() * 4).max(8)
 }
 
 /// Read exactly `n` bytes via a bounded incremental read, so a corrupt
@@ -217,6 +437,121 @@ mod tests {
         assert_eq!(n, 2);
         // past the end marker it stays None
         assert!(dec.next_tensor().unwrap().is_none());
+    }
+
+    #[test]
+    fn decode_all_matches_serial_bitwise() {
+        for codec in [Codec::Lossless, Codec::Int8 { block: 64 }, Codec::Int4 { block: 32 }] {
+            let bytes = encode_all(codec);
+            let mut serial = Vec::new();
+            let mut dec = Decoder::new(&bytes[..]).unwrap();
+            while let Some(f) = dec.next_tensor().unwrap() {
+                serial.push(f);
+            }
+            for threads in [1usize, 3] {
+                let pool = crate::util::threadpool::ThreadPool::new(threads);
+                let mut dec = Decoder::new(&bytes[..]).unwrap();
+                let par = dec.decode_all_with(&pool).unwrap();
+                assert_eq!(par.len(), serial.len());
+                for ((an, at, ac), (bn, bt, bc)) in par.iter().zip(&serial) {
+                    assert_eq!((an, ac), (bn, bc));
+                    assert_eq!(at.dims, bt.dims);
+                    let (af, bf) = (at.f32s().unwrap(), bt.f32s().unwrap());
+                    assert!(af.iter().zip(bf).all(|(x, y)| x.to_bits() == y.to_bits()));
+                }
+                // decode_all consumed the stream: nothing left to yield
+                assert!(dec.next_tensor().unwrap().is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn decode_all_after_partial_serial_reads_the_rest() {
+        let bytes = encode_all(Codec::Lossless);
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let (first, _, _) = dec.next_tensor().unwrap().unwrap();
+        assert_eq!(first, "alpha");
+        let rest = dec.decode_all().unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].0, "beta");
+    }
+
+    #[test]
+    fn filtered_decode_skips_but_still_crc_checks() {
+        let bytes = encode_all(Codec::Int8 { block: 64 });
+        let pool = crate::util::threadpool::ThreadPool::new(2);
+
+        // keep only "beta": one tensor out, both frames seen
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let out = dec.decode_all_filtered_with(&pool, |n| n == "beta").unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, "beta");
+        assert_eq!(dec.frames_seen(), 2);
+
+        // filtered result is bit-identical to the matching full-decode frame
+        let all = Decoder::new(&bytes[..]).unwrap().decode_all_with(&pool).unwrap();
+        let beta = all.iter().find(|(n, _, _)| n == "beta").unwrap();
+        assert!(out[0]
+            .1
+            .f32s()
+            .unwrap()
+            .iter()
+            .zip(beta.1.f32s().unwrap())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        // a bit flip inside the *skipped* frame's body must still error:
+        // every frame is CRC-verified even when its decode is skipped
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let f0 = dec.read_raw_frame().unwrap().unwrap();
+        assert_eq!(f0.index, 0, "alpha is frame 0 (the one we skip)");
+        let mut bad = bytes.clone();
+        bad[f0.offset + 2] ^= 0x08;
+        let err = Decoder::new(&bad[..])
+            .unwrap()
+            .decode_all_filtered_with(&pool, |n| n == "beta")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("CRC mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn next_packed_yields_panel_layout() {
+        use crate::mcnc::kernel;
+        let bytes = encode_all(Codec::Int8 { block: 64 });
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let (name, pb, codec) = dec.next_packed(kernel::Isa::Scalar).unwrap().unwrap();
+        assert_eq!(name, "alpha");
+        assert_eq!(codec, Codec::Int8 { block: 64 });
+        assert_eq!((pb.k, pb.n), (54, 9));
+        // the second frame is 1-D: the packed path must reject it cleanly
+        assert!(dec.next_packed(kernel::Isa::Scalar).is_err());
+    }
+
+    #[test]
+    fn crc_mismatch_names_frame_index_and_offset() {
+        let bytes = encode_all(Codec::Lossless);
+        // find the second frame: walk the framing exactly as the decoder
+        // does, then flip a bit inside that frame's body
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let f0 = dec.read_raw_frame().unwrap().unwrap();
+        let f1 = dec.read_raw_frame().unwrap().unwrap();
+        assert_eq!(f0.index, 0);
+        assert_eq!(f1.index, 1);
+        assert!(f1.offset > f0.offset);
+
+        let mut bad = bytes.clone();
+        bad[f1.offset + 2] ^= 0x40; // inside frame 1's body
+        let mut dec = Decoder::new(&bad[..]).unwrap();
+        assert!(dec.next_tensor().unwrap().is_some(), "frame 0 is untouched");
+        let err = dec.next_tensor().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("frame 1"), "{msg}");
+        assert!(msg.contains(&format!("byte offset {}", f1.offset)), "{msg}");
+        assert!(msg.contains("CRC mismatch"), "{msg}");
+
+        // the parallel path reports the same frame deterministically
+        let mut dec = Decoder::new(&bad[..]).unwrap();
+        let err = dec.decode_all().unwrap_err();
+        assert!(format!("{err:#}").contains("frame 1"), "{err:#}");
     }
 
     #[test]

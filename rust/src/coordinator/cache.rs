@@ -5,7 +5,9 @@
 use std::collections::HashMap;
 use std::hash::Hash;
 
+/// How many bytes a cache entry accounts for against the capacity.
 pub trait Weigh {
+    /// Payload size in bytes.
     fn weight(&self) -> usize;
 }
 
@@ -30,17 +32,24 @@ impl<T: Weigh + ?Sized> Weigh for std::sync::Arc<T> {
     }
 }
 
+/// Byte-capacity-bounded LRU map: inserts evict least-recently-used
+/// entries until the new value fits (oversized values are rejected
+/// outright rather than flushing the whole cache).
 pub struct LruCache<K: Eq + Hash + Clone, V: Weigh> {
     capacity_bytes: usize,
     used_bytes: usize,
     tick: u64,
     map: HashMap<K, (V, u64)>,
+    /// `get` calls that found their key.
     pub hits: u64,
+    /// `get` calls that missed.
     pub misses: u64,
+    /// Entries pushed out by capacity pressure (`remove` not included).
     pub evictions: u64,
 }
 
 impl<K: Eq + Hash + Clone, V: Weigh> LruCache<K, V> {
+    /// An empty cache bounded to `capacity_bytes` of payload.
     pub fn new(capacity_bytes: usize) -> Self {
         LruCache {
             capacity_bytes,
@@ -53,6 +62,7 @@ impl<K: Eq + Hash + Clone, V: Weigh> LruCache<K, V> {
         }
     }
 
+    /// Look up `k`, marking it most-recently-used on a hit.
     pub fn get(&mut self, k: &K) -> Option<&V> {
         self.tick += 1;
         let tick = self.tick;
@@ -69,6 +79,8 @@ impl<K: Eq + Hash + Clone, V: Weigh> LruCache<K, V> {
         }
     }
 
+    /// Insert (or replace) `k`, evicting LRU entries until `v` fits; a
+    /// value bigger than the whole capacity is dropped silently.
     pub fn put(&mut self, k: K, v: V) {
         let w = v.weight();
         if w > self.capacity_bytes {
@@ -111,18 +123,22 @@ impl<K: Eq + Hash + Clone, V: Weigh> LruCache<K, V> {
         }
     }
 
+    /// Number of cached entries.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the cache holds nothing.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Total payload bytes currently cached.
     pub fn used_bytes(&self) -> usize {
         self.used_bytes
     }
 
+    /// Whether `k` is cached (without touching recency).
     pub fn contains(&self, k: &K) -> bool {
         self.map.contains_key(k)
     }

@@ -22,6 +22,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Record one sample.
     pub fn record(&mut self, d: Duration) {
         let us = d.as_secs_f64() * 1e6;
         let idx = if us <= 1.0 {
@@ -35,14 +36,17 @@ impl Histogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Exact mean of the recorded samples.
     pub fn mean(&self) -> Duration {
         Duration::from_secs_f64(self.sum_us / self.count.max(1) as f64 / 1e6)
     }
 
+    /// Largest recorded sample.
     pub fn max(&self) -> Duration {
         Duration::from_secs_f64(self.max_us / 1e6)
     }
@@ -64,6 +68,7 @@ impl Histogram {
         self.max()
     }
 
+    /// Fold another histogram's buckets and counters into this one.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
@@ -82,14 +87,20 @@ pub struct ServeStats {
     pub latency: Histogram,
     /// Submit → batch-formation time of every dispatched request.
     pub queue_wait: Histogram,
+    /// Batches executed.
     pub batches: u64,
+    /// Rows executed (batch size × batches, padding included).
     pub rows: u64,
+    /// Padding rows that carried no real request.
     pub padded_rows: u64,
+    /// Merged-mode batches served from the merged-θ LRU.
     pub cache_hits: u64,
+    /// Merged-mode batches that paid a cold reconstruction.
     pub cache_misses: u64,
     /// Merged cold fills served by the native blocked-GEMM engine (the
     /// remainder of `cache_misses` went through the PJRT recon executable).
     pub native_fills: u64,
+    /// Reconstruction FLOPs spent (per the manifest's analytic count).
     pub recon_flops: u64,
     /// Requests answered with an error Response (malformed tokens, unknown
     /// task, batch execution failure) instead of a prediction.
@@ -100,14 +111,17 @@ pub struct ServeStats {
     /// Engine-loop iterations; at zero load this tracks the heartbeat rate
     /// (the loop blocks between batches instead of spinning).
     pub wakeups: u64,
+    /// Serving window in seconds (the longest shard's, after `merge`).
     pub wall_secs: f64,
 }
 
 impl ServeStats {
+    /// Real (non-padding) rows served per second of wall-clock.
     pub fn throughput(&self) -> f64 {
         self.rows.saturating_sub(self.padded_rows) as f64 / self.wall_secs.max(1e-9)
     }
 
+    /// Fraction of executed rows that carried a real request.
     pub fn occupancy(&self) -> f64 {
         if self.batches == 0 {
             return 0.0;

@@ -4,12 +4,22 @@
 //! adapter-serving claim (Table 4) and the transfer claim (Table 8) are
 //! exercised: requests fan out to `n_shards` engine threads by task
 //! affinity, faults stay per-request, and overload is rejected explicitly.
+//!
+//! Startup is a first-class path too: [`Server::preload`] /
+//! [`Engine::warm_from_artifact`] pre-fill every shard's adapter registry
+//! (and, natively-reconstructing Merged engines, the merged-θ LRU) from one
+//! compressed [`warm`] artifact, decoded in parallel — so a freshly spawned
+//! server answers its first request per task from cache instead of paying
+//! entropy decode + reconstruction on the request path.
+
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod shard;
+pub mod warm;
 pub mod workload;
 
 pub use cache::LruCache;
@@ -17,4 +27,5 @@ pub use metrics::{Histogram, ServeStats};
 pub use router::{Batch, BatchPolicy, Request, Router};
 pub use server::{Engine, Mode, Response, ServeError, Server, ServerCfg};
 pub use shard::EngineCore;
+pub use warm::WarmStats;
 pub use workload::{open_loop, replay, Arrival, ReplayReport, Zipf};

@@ -9,18 +9,26 @@ use std::time::{Duration, Instant};
 /// One inference request (LM serving: a token sequence).
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Server-assigned id; the matching `Response` echoes it.
     pub id: u64,
+    /// Adapter task the request targets.
     pub task: usize,
+    /// Input token sequence (must match the executable's length).
     pub tokens: Vec<i32>,
+    /// When the request was admitted (queue-wait accounting).
     pub enqueued: Instant,
 }
 
+/// A single-task group of requests ready to execute together.
 #[derive(Debug)]
 pub struct Batch {
+    /// The task every request in the batch belongs to.
     pub task: usize,
+    /// The batched requests, FIFO within the task.
     pub requests: Vec<Request>,
 }
 
+/// When the batcher flushes a task queue.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     /// Hard upper bound = the predict executable's compiled batch size.
@@ -35,17 +43,21 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Per-task FIFO queues + the dynamic batcher over them.
 #[derive(Debug, Default)]
 pub struct Router {
     queues: HashMap<usize, VecDeque<Request>>,
     /// Round-robin cursor over task ids for fairness.
     rr: Vec<usize>,
     rr_pos: usize,
+    /// Requests ever pushed.
     pub enqueued: u64,
+    /// Requests ever handed out in batches.
     pub dispatched: u64,
 }
 
 impl Router {
+    /// Queue a request on its task's FIFO.
     pub fn push(&mut self, req: Request) {
         if !self.queues.contains_key(&req.task) {
             self.rr.push(req.task);
@@ -54,10 +66,12 @@ impl Router {
         self.enqueued += 1;
     }
 
+    /// Requests queued and not yet batched.
     pub fn pending(&self) -> usize {
         self.queues.values().map(VecDeque::len).sum()
     }
 
+    /// Whether nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.pending() == 0
     }

@@ -35,6 +35,7 @@ use crate::coordinator::cache::LruCache;
 use crate::coordinator::metrics::ServeStats;
 use crate::coordinator::router::{Batch, BatchPolicy, Request};
 use crate::coordinator::shard::{error_response, EngineCore, Msg, Shard};
+use crate::coordinator::warm::{self, WarmStats};
 use crate::mcnc::{kernel, GenCfg, Generator};
 use crate::runtime::init::init_inputs;
 use crate::runtime::manifest::{Entry, IoSpec, Role};
@@ -42,23 +43,34 @@ use crate::runtime::Session;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
+/// How a shard's engine turns a compressed adapter into predictions (the
+/// paper's Table-4 trade-off; see the module header).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
+    /// Reconstruct the adapter in-graph on every batch.
     OnTheFly,
+    /// Reconstruct full per-task weights once, cache them in a byte-bounded
+    /// LRU, and serve through the dense predict executable.
     Merged,
 }
 
+/// Configuration of a sharded serving [`Server`].
 #[derive(Debug, Clone)]
 pub struct ServerCfg {
     /// Adapter family prefix, e.g. "lm_mcnclora8" / "lm_nola8" / "lm_lora8".
     pub kind: String,
+    /// Number of tasks served (task ids `0..n_tasks`).
     pub n_tasks: usize,
     /// Engine worker threads; task t is owned by shard `t % n_shards`.
     pub n_shards: usize,
+    /// Dynamic batching policy each shard's router applies.
     pub policy: BatchPolicy,
+    /// Adapter execution mode (see [`Mode`]).
     pub mode: Mode,
     /// Merged-mode cache capacity in bytes, split evenly across shards.
     pub cache_bytes: usize,
+    /// Base seed: statics derive from it directly, task adapters from
+    /// task-specific mixes of it (see `synth_adapter`).
     pub seed: u64,
     /// Merged mode: fill cold tasks through the native blocked-GEMM
     /// reconstruction engine instead of dispatching the `{kind}_recon`
@@ -261,23 +273,31 @@ impl std::fmt::Display for ServeError {
     }
 }
 
+/// The single reply every submitted request receives.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The request id assigned at submission.
     pub id: u64,
+    /// The task the request targeted.
     pub task: usize,
     /// Next-token prediction for the sequence's last position (proof the
     /// batch really ran through the model), or why there is none. Every
     /// submitted request receives exactly one Response — errors included.
     pub result: Result<i32, ServeError>,
+    /// Submit → response time.
     pub latency: Duration,
+    /// How many real requests shared the batch (0 for error responses
+    /// produced outside a batch).
     pub batch_rows: usize,
 }
 
 impl Response {
+    /// Whether the request produced a prediction.
     pub fn is_ok(&self) -> bool {
         self.result.is_ok()
     }
 
+    /// The predicted next token, if any.
     pub fn next_token(&self) -> Option<i32> {
         self.result.as_ref().ok().copied()
     }
@@ -304,10 +324,10 @@ fn decode_adapter(
             dec.header().entry
         );
     }
-    let mut frames: Vec<(String, Tensor)> = Vec::new();
-    while let Some((name, t, _codec)) = dec.next_tensor()? {
-        frames.push((name, t));
-    }
+    // frame decode fans across the thread pool (entropy decode dominates a
+    // cold fill's CPU cost); corruption on a worker is still a plain Err
+    let frames: Vec<(String, Tensor)> =
+        dec.decode_all()?.into_iter().map(|(name, t, _codec)| (name, t)).collect();
     let mut out = Vec::with_capacity(specs.len());
     for spec in specs {
         let ix = frames
@@ -321,6 +341,28 @@ fn decode_adapter(
         bail!("encoded adapter has unknown tensors: {}", extra.join(", "));
     }
     Ok(out)
+}
+
+/// Synthesize one task's demo adapter from its task-specific seed: the
+/// entry's trainable init tensors, with the first slot (α/coef) perturbed
+/// so adapters differ across tasks and reconstruction is non-trivial
+/// (zero-init adapters would all produce θ0). Shared by engine seeding and
+/// the `mcnc warm` artifact producer, so a warm-start artifact written for
+/// the same base seed reproduces exactly what an engine would self-seed.
+pub(crate) fn synth_adapter(entry: &Entry, seed: u64, task: usize) -> Result<Vec<Tensor>> {
+    let tslots = init_inputs(entry, seed ^ (0xAD00 + task as u64))?;
+    let mut tr: Vec<Tensor> = tslots
+        .into_iter()
+        .filter(|(s, _)| s.role == Role::Trainable)
+        .map(|(_, t)| t.unwrap())
+        .collect();
+    if let Some(first) = tr.first_mut() {
+        let mut s = crate::util::prng::Stream::new(seed ^ (0x5EED + task as u64));
+        let dims = first.dims.clone();
+        let n = first.numel();
+        *first = Tensor::from_f32(s.normal_f32(n, 0.05), &dims)?;
+    }
+    Ok(tr)
 }
 
 /// Validate adapter tensors against the executable's trainable specs —
@@ -372,6 +414,7 @@ pub struct Engine {
     native: Option<NativeRecon>,
     batch_size: usize,
     seq: usize,
+    /// This engine's serving counters (merged across shards on stop).
     pub stats: ServeStats,
     recon_flops_per_pass: u64,
 }
@@ -420,21 +463,7 @@ impl Engine {
         // the tasks this shard owns
         let mut adapters = HashMap::new();
         for task in (0..cfg.n_tasks).filter(|t| t % n_shards == shard) {
-            let tslots = init_inputs(&entry, cfg.seed ^ (0xAD00 + task as u64))?;
-            let mut tr: Vec<Tensor> = tslots
-                .into_iter()
-                .filter(|(s, _)| s.role == Role::Trainable)
-                .map(|(_, t)| t.unwrap())
-                .collect();
-            // perturb α/coef so adapters differ and reconstruction is
-            // non-trivial (zero-init adapters would all produce θ0)
-            if let Some(first) = tr.first_mut() {
-                let mut s = crate::util::prng::Stream::new(cfg.seed ^ (0x5EED + task as u64));
-                let dims = first.dims.clone();
-                let n = first.numel();
-                *first = Tensor::from_f32(s.normal_f32(n, 0.05), &dims)?;
-            }
-            adapters.insert(task, tr);
+            adapters.insert(task, synth_adapter(&entry, cfg.seed, task)?);
         }
 
         let recon_flops_per_pass = entry.recon_flops() as u64;
@@ -481,14 +510,17 @@ impl Engine {
         })
     }
 
+    /// The predict executable's compiled batch size.
     pub fn batch_size(&self) -> usize {
         self.batch_size
     }
 
+    /// The token-sequence length the predict executable expects.
     pub fn seq(&self) -> usize {
         self.seq
     }
 
+    /// Whether this engine holds an adapter for `task`.
     pub fn has_task(&self, task: usize) -> bool {
         self.adapters.contains_key(&task)
     }
@@ -534,6 +566,84 @@ impl Engine {
     ) -> Result<()> {
         let trainables = decode_adapter(&self.cfg.kind, &self.trainable_specs, reader)?;
         self.install_adapter(task, trainables)
+    }
+
+    /// Warm-start this engine from a multi-task warm artifact stream (the
+    /// `task{t}/{slot}`-framed MCNC2 container `coordinator::warm` writes,
+    /// e.g. via `mcnc warm`): frames decode in parallel across the thread
+    /// pool — and only the frames this shard *owns* pay entropy decode +
+    /// dequantization (foreign frames are CRC-verified and skipped, so an
+    /// S-shard preload does ~1× the artifact's decode work in total, not
+    /// S×). Owned adapters go through the same manifest validation as
+    /// [`Engine::install_adapter`], and — when the native Merged
+    /// reconstruction engine is available — each installed task's full θ is
+    /// reconstructed up front into the merged LRU, so the first request per
+    /// task is a cache hit instead of a cold fill.
+    pub fn warm_from_artifact(&mut self, reader: impl std::io::Read) -> Result<WarmStats> {
+        let mut dec = codec::Decoder::new(reader).context("decoding warm-start artifact")?;
+        if !dec.header().entry.starts_with(&self.cfg.kind) {
+            bail!(
+                "warm artifact is for entry {:?}, this engine serves kind {:?}",
+                dec.header().entry,
+                self.cfg.kind
+            );
+        }
+        let n_shards = self.cfg.n_shards.max(1);
+        let shard = self.shard;
+        // misnamed frames pass the filter so group_for_shard still rejects
+        // them with its precise error instead of them vanishing silently
+        let frames = dec.decode_all_filtered_with(
+            crate::util::threadpool::global(),
+            move |name| match warm::parse_frame_name(name) {
+                Some((task, _)) => task % n_shards == shard,
+                None => true,
+            },
+        )?;
+        let skipped = dec.frames_seen() - frames.len();
+        let (owned, _) = warm::group_for_shard(frames, &self.trainable_specs, shard, n_shards)?;
+        // validate every owned task (range + manifest shapes — the same
+        // checks install_adapter runs) *before* the first install, so a
+        // bad artifact fails the preload without leaving the shard
+        // half-warmed with some adapters silently replaced
+        for (task, trainables) in &owned {
+            if *task >= self.cfg.n_tasks {
+                bail!(
+                    "warm artifact task {task} out of range (server has {} tasks)",
+                    self.cfg.n_tasks
+                );
+            }
+            validate_adapter(&self.trainable_specs, trainables)
+                .with_context(|| format!("warm artifact task {task}"))?;
+        }
+        let mut stats = WarmStats { skipped, ..WarmStats::default() };
+        let mut warmed_tasks = Vec::new();
+        for (task, trainables) in owned {
+            self.install_adapter(task, trainables)?;
+            stats.installed += 1;
+            if let Some(nr) = &self.native {
+                let adapter = self
+                    .adapters
+                    .get(&task)
+                    .expect("adapter just installed");
+                let theta = nr.reconstruct(adapter)?;
+                let raw = adapter
+                    .last()
+                    .ok_or_else(|| anyhow!("task {task}: adapter has no trainable tensors"))?
+                    .clone();
+                // same [θ_c, raw] layout as a run_batch cold fill; counted
+                // in WarmStats (not native_fills/cache_misses — those stay
+                // exact request-path counters)
+                self.merged_cache.put(task, Arc::new(vec![theta, raw]));
+                warmed_tasks.push(task);
+            }
+        }
+        // put() silently rejects oversized entries and a later task's θ
+        // can evict an earlier one's, so count prefills only after every
+        // insert has settled — the operator is never told a cold fill was
+        // eliminated when it wasn't
+        stats.prefilled =
+            warmed_tasks.iter().filter(|t| self.merged_cache.contains(t)).count();
+        Ok(stats)
     }
 
     fn build_x(&self, batch: &Batch) -> Result<(Tensor, usize)> {
@@ -665,6 +775,13 @@ impl EngineCore for Engine {
     fn into_stats(self) -> ServeStats {
         self.stats
     }
+
+    fn preload(&mut self, artifact: &std::path::Path) -> Result<WarmStats> {
+        let f = std::fs::File::open(artifact).with_context(|| {
+            format!("opening warm-start artifact {}", artifact.display())
+        })?;
+        self.warm_from_artifact(std::io::BufReader::new(f))
+    }
 }
 
 /// Front-end handle to a running sharded server: routes each request to
@@ -679,6 +796,20 @@ pub struct Server {
 impl Server {
     /// Spawn `cfg.n_shards` PJRT engine shards. Each Session is created
     /// inside its shard thread (PjRtClient is not Send).
+    ///
+    /// ```no_run
+    /// use mcnc::coordinator::{Server, ServerCfg};
+    /// use mcnc::runtime::artifacts_dir;
+    ///
+    /// // needs `make artifacts`; see Server::start_with for a
+    /// // dependency-free runnable example
+    /// let cfg = ServerCfg { n_shards: 4, ..ServerCfg::default() };
+    /// let server = Server::start(artifacts_dir(), cfg);
+    /// let rx = server.submit(0, vec![0; 32]);
+    /// let response = rx.recv().unwrap();
+    /// println!("{:?}", response.result);
+    /// server.stop().unwrap();
+    /// ```
     pub fn start(artifacts: std::path::PathBuf, cfg: ServerCfg) -> Server {
         let engine_cfg = cfg.clone();
         Server::start_with(&cfg, move |shard| {
@@ -693,6 +824,41 @@ impl Server {
     /// on the shard's own thread). This is how non-PJRT engines — test
     /// doubles, native-only backends — reuse the coordinator: routing,
     /// batching, admission control and fault isolation are identical.
+    ///
+    /// ```
+    /// use mcnc::coordinator::{Batch, EngineCore, ServeStats, Server, ServerCfg};
+    ///
+    /// /// Minimal engine: echoes each request's first token back.
+    /// struct Echo {
+    ///     stats: ServeStats,
+    /// }
+    ///
+    /// impl EngineCore for Echo {
+    ///     fn seq(&self) -> usize {
+    ///         4
+    ///     }
+    ///     fn has_task(&self, task: usize) -> bool {
+    ///         task < 2
+    ///     }
+    ///     fn run_batch(&mut self, batch: &Batch) -> anyhow::Result<Vec<i32>> {
+    ///         Ok(batch.requests.iter().map(|r| r.tokens[0]).collect())
+    ///     }
+    ///     fn stats_mut(&mut self) -> &mut ServeStats {
+    ///         &mut self.stats
+    ///     }
+    ///     fn into_stats(self) -> ServeStats {
+    ///         self.stats
+    ///     }
+    /// }
+    ///
+    /// let cfg = ServerCfg { n_shards: 2, ..ServerCfg::default() };
+    /// let server = Server::start_with(&cfg, |_shard| -> anyhow::Result<Echo> {
+    ///     Ok(Echo { stats: ServeStats::default() })
+    /// });
+    /// let rx = server.submit(1, vec![41, 0, 0, 0]);
+    /// assert_eq!(rx.recv().unwrap().next_token(), Some(41));
+    /// server.stop().unwrap();
+    /// ```
     pub fn start_with<E, F>(cfg: &ServerCfg, factory: F) -> Server
     where
         E: EngineCore,
@@ -708,8 +874,36 @@ impl Server {
         Server { shards, next_id: AtomicU64::new(0), rejected: AtomicU64::new(0) }
     }
 
+    /// Number of engine shards this server dispatches over.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Warm-start every shard from a compressed multi-task artifact (the
+    /// `mcnc warm` output): the path is broadcast to all shards, which
+    /// decode it concurrently — each additionally fanning frame decode
+    /// across the thread pool — install the tasks they own, and pre-fill
+    /// their merged LRUs where the native reconstruction engine allows.
+    /// Blocks until every shard has finished (or failed); the first shard
+    /// error wins, and per-shard [`WarmStats`] are summed. Call before
+    /// opening traffic — preloads share the admission queue with requests.
+    pub fn preload(&self, artifact: &std::path::Path) -> Result<WarmStats> {
+        let mut acks = Vec::with_capacity(self.shards.len());
+        for (ix, s) in self.shards.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            s.tx.send(Msg::Preload(artifact.to_path_buf(), tx))
+                .map_err(|_| anyhow!("shard {ix} unavailable for preload"))?;
+            acks.push((ix, rx));
+        }
+        let mut total = WarmStats::default();
+        for (ix, rx) in acks {
+            let stats = rx
+                .recv()
+                .map_err(|_| anyhow!("shard {ix} dropped its preload ack"))?
+                .with_context(|| format!("shard {ix} preload"))?;
+            total.merge(&stats);
+        }
+        Ok(total)
     }
 
     /// Submit a request; the returned channel yields exactly one Response

@@ -12,6 +12,7 @@
 //! deadline (or a coarse heartbeat when idle).
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -21,10 +22,14 @@ use anyhow::{bail, Result};
 use crate::coordinator::metrics::ServeStats;
 use crate::coordinator::router::{Batch, BatchPolicy, Request, Router};
 use crate::coordinator::server::{Response, ServeError};
+use crate::coordinator::warm::WarmStats;
 
 /// Messages from the dispatcher to a shard.
 pub(crate) enum Msg {
     Req(Request, mpsc::Sender<Response>),
+    /// Warm-start from an artifact on disk; the shard acks with what it
+    /// installed (see `Server::preload`).
+    Preload(PathBuf, mpsc::Sender<Result<WarmStats>>),
     Stop,
 }
 
@@ -38,15 +43,26 @@ pub trait EngineCore {
     fn has_task(&self, task: usize) -> bool;
     /// Run one single-task batch; one prediction per (non-padding) request.
     fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>>;
+    /// The engine's serving counters, updated by the shard loop.
     fn stats_mut(&mut self) -> &mut ServeStats;
+    /// Surrender the final counters when the shard drains.
     fn into_stats(self) -> ServeStats
     where
         Self: Sized;
+    /// Warm-start from a compressed multi-task artifact (see
+    /// `Engine::warm_from_artifact`). Engines without a warm path — test
+    /// doubles, minimal backends — inherit this no-op, which reports zero
+    /// installed adapters.
+    fn preload(&mut self, _artifact: &Path) -> Result<WarmStats> {
+        Ok(WarmStats::default())
+    }
 }
 
 /// Handle to one running shard thread.
 pub(crate) struct Shard {
+    /// Bounded admission channel into the shard's worker loop.
     pub tx: mpsc::SyncSender<Msg>,
+    /// The worker thread; joining yields the shard's final stats.
     pub handle: thread::JoinHandle<Result<ServeStats>>,
 }
 
@@ -99,6 +115,11 @@ fn ingest<E: EngineCore>(
 ) {
     match msg {
         Msg::Stop => *stopping = true,
+        Msg::Preload(artifact, ack) => {
+            // a failed preload is answered on the ack channel, never a
+            // shard abort — the shard keeps serving whatever it has
+            let _ = ack.send(engine.preload(&artifact));
+        }
         Msg::Req(req, reply) => {
             let seq = engine.seq();
             if req.tokens.len() != seq {

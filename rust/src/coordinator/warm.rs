@@ -1,0 +1,275 @@
+//! Warm-start artifacts: one MCNC2 container carrying *every* task's
+//! adapter, so a sharded server can pre-fill its adapter registry and
+//! merged-θ LRU at startup instead of paying serial entropy decode +
+//! reconstruction on the first request per task (the paper's "fast model
+//! reconstruction" claim applied to cold starts; ZipNN makes the same
+//! point for checkpoint transfer).
+//!
+//! Layout: an ordinary MCNC2 stream (see `docs/FORMAT.md`) whose frames
+//! are named `task{t}/{slot}` — e.g. `task3/alpha` — with `slot` matching
+//! the predict executable's trainable input names. The container `entry`
+//! must start with the serving adapter-family kind, exactly like the
+//! single-task encoded-adapter path (`Engine::install_adapter_encoded`).
+//!
+//! Consumption is two-level parallel: `Server::preload` broadcasts the
+//! artifact path to every shard (shards decode concurrently and keep only
+//! the tasks they own), and each shard's `Engine::warm_from_artifact`
+//! fans frame decode across the thread pool via the codec `Decoder`'s
+//! `decode_all`.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::codec::{Codec, ContainerHeader, Encoder};
+use crate::runtime::manifest::{IoSpec, Role};
+use crate::runtime::Session;
+use crate::tensor::Tensor;
+
+/// Frame name of task `task`'s adapter slot `slot` in a warm-start
+/// artifact (`task{t}/{slot}`).
+pub fn frame_name(task: usize, slot: &str) -> String {
+    format!("task{task}/{slot}")
+}
+
+/// Parse a warm-artifact frame name back into `(task, slot)`; `None` when
+/// the name does not follow the `task{t}/{slot}` convention.
+pub fn parse_frame_name(name: &str) -> Option<(usize, &str)> {
+    let rest = name.strip_prefix("task")?;
+    let (t, slot) = rest.split_once('/')?;
+    t.parse().ok().map(|t| (t, slot))
+}
+
+/// What one warm-start ingest accomplished (summed across shards by
+/// `Server::preload`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WarmStats {
+    /// Adapters installed into the engine's task registry.
+    pub installed: usize,
+    /// Merged-θ LRU entries pre-filled through the native reconstruction
+    /// engine (only in `Mode::Merged` with `native_recon` on a family that
+    /// supports it — otherwise adapters install but θ stays lazy).
+    pub prefilled: usize,
+    /// Frames skipped because another shard owns their task.
+    pub skipped: usize,
+}
+
+impl WarmStats {
+    /// Fold another shard's warm-start outcome into this one.
+    pub fn merge(&mut self, other: &WarmStats) {
+        self.installed += other.installed;
+        self.prefilled += other.prefilled;
+        self.skipped += other.skipped;
+    }
+}
+
+/// Write a warm-start artifact: `adapters` is `(task, slots)` with each
+/// slot a `(name, tensor)` pair in the predict executable's trainable
+/// order. Returns the wire size.
+pub fn write_artifact(
+    w: impl Write,
+    kind: &str,
+    seed: u64,
+    codec: Codec,
+    adapters: &[(usize, Vec<(String, Tensor)>)],
+) -> Result<usize> {
+    let n_frames: usize = adapters.iter().map(|(_, slots)| slots.len()).sum();
+    let header = ContainerHeader {
+        entry: format!("{kind}_warm"),
+        seed,
+        step: 0.0,
+        n_tensors: Some(n_frames),
+    };
+    let mut enc = Encoder::new(w, &header)?;
+    for (task, slots) in adapters {
+        for (slot, t) in slots {
+            enc.write_tensor(&frame_name(*task, slot), t, codec)?;
+        }
+    }
+    let (_, wire) = enc.finish()?;
+    Ok(wire)
+}
+
+/// Group a decoded artifact's frames into per-task adapters for one shard:
+/// frames whose task is owned elsewhere (`task % n_shards != shard`) are
+/// counted as skipped, owned tasks get their slots ordered by `specs`
+/// (frames may arrive in any order), and a missing, unknown or duplicate
+/// slot is an error. Tasks come back sorted ascending, so installation
+/// order is deterministic.
+pub fn group_for_shard(
+    frames: Vec<(String, Tensor, Codec)>,
+    specs: &[IoSpec],
+    shard: usize,
+    n_shards: usize,
+) -> Result<(Vec<(usize, Vec<Tensor>)>, usize)> {
+    let n_shards = n_shards.max(1);
+    let mut by_task: BTreeMap<usize, Vec<(String, Tensor)>> = BTreeMap::new();
+    let mut skipped = 0usize;
+    for (name, t, _codec) in frames {
+        let Some((task, slot)) = parse_frame_name(&name) else {
+            bail!("warm artifact frame {name:?} is not task{{t}}/{{slot}}-named");
+        };
+        if task % n_shards != shard {
+            skipped += 1;
+            continue;
+        }
+        by_task.entry(task).or_default().push((slot.to_string(), t));
+    }
+    let mut out = Vec::with_capacity(by_task.len());
+    for (task, mut slots) in by_task {
+        let mut ordered = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let ix = slots.iter().position(|(n, _)| n == &spec.name).ok_or_else(|| {
+                anyhow!("warm artifact task {task} is missing slot {:?}", spec.name)
+            })?;
+            ordered.push(slots.swap_remove(ix).1);
+        }
+        if !slots.is_empty() {
+            let extra: Vec<&str> = slots.iter().map(|(n, _)| n.as_str()).collect();
+            bail!("warm artifact task {task} has unknown slots: {}", extra.join(", "));
+        }
+        out.push((task, ordered));
+    }
+    Ok((out, skipped))
+}
+
+/// Synthesize the per-task demo adapters an engine seeds itself with (the
+/// same task-seed derivation as `Engine::new_sharded`) and write them as a
+/// warm-start artifact — the producer behind `mcnc warm`. Needs the
+/// artifact manifest (for the predict entry's trainable specs) but no
+/// PJRT execution. Returns the wire size.
+pub fn write_synth_artifact(
+    artifacts: &Path,
+    out: &Path,
+    kind: &str,
+    n_tasks: usize,
+    seed: u64,
+    codec: Codec,
+) -> Result<usize> {
+    let session = Session::open(artifacts).context("opening artifact manifest")?;
+    let entry = session.entry(&format!("{kind}_predict"))?.clone();
+    let slot_names: Vec<String> = entry
+        .inputs
+        .iter()
+        .filter(|s| s.role == Role::Trainable)
+        .map(|s| s.name.clone())
+        .collect();
+    let mut adapters = Vec::with_capacity(n_tasks);
+    for task in 0..n_tasks {
+        let tr = super::server::synth_adapter(&entry, seed, task)?;
+        if tr.len() != slot_names.len() {
+            bail!(
+                "task {task}: synthesized {} trainables for {} specs",
+                tr.len(),
+                slot_names.len()
+            );
+        }
+        adapters.push((task, slot_names.iter().cloned().zip(tr).collect()));
+    }
+    let f = std::fs::File::create(out)
+        .with_context(|| format!("creating warm-start artifact {}", out.display()))?;
+    write_artifact(std::io::BufWriter::new(f), kind, seed, codec, &adapters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    fn spec(name: &str, shape: &[usize]) -> IoSpec {
+        IoSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            role: Role::Trainable,
+            init: None,
+        }
+    }
+
+    fn frames_for(tasks: &[usize]) -> Vec<(String, Tensor, Codec)> {
+        let mut out = Vec::new();
+        for &t in tasks {
+            // deliberately out of spec order: beta before alpha
+            out.push((frame_name(t, "beta"), Tensor::ones(&[3]), Codec::Lossless));
+            out.push((frame_name(t, "alpha"), Tensor::zeros(&[2, 3]), Codec::Lossless));
+        }
+        out
+    }
+
+    #[test]
+    fn frame_names_roundtrip() {
+        assert_eq!(frame_name(3, "alpha"), "task3/alpha");
+        assert_eq!(parse_frame_name("task3/alpha"), Some((3, "alpha")));
+        assert_eq!(parse_frame_name("task12/gen/w0"), Some((12, "gen/w0")));
+        assert_eq!(parse_frame_name("alpha"), None);
+        assert_eq!(parse_frame_name("taskX/alpha"), None);
+        assert_eq!(parse_frame_name("task3"), None);
+    }
+
+    #[test]
+    fn group_orders_slots_and_filters_ownership() {
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        // 2 shards: shard 1 owns tasks 1 and 3, skips 0 and 2
+        let (owned, skipped) = group_for_shard(frames_for(&[0, 1, 2, 3]), &specs, 1, 2).unwrap();
+        assert_eq!(skipped, 4, "two frames per foreign task");
+        assert_eq!(owned.len(), 2);
+        assert_eq!(owned[0].0, 1);
+        assert_eq!(owned[1].0, 3);
+        for (_, slots) in &owned {
+            assert_eq!(slots.len(), 2);
+            assert_eq!(slots[0].dims, vec![2, 3], "alpha first (spec order)");
+            assert_eq!(slots[1].dims, vec![3]);
+        }
+    }
+
+    #[test]
+    fn group_rejects_missing_unknown_and_misnamed() {
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        let mut frames = frames_for(&[0]);
+        frames.pop(); // drop task0/alpha
+        let err = group_for_shard(frames, &specs, 0, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("missing slot"), "{err:#}");
+
+        let mut frames = frames_for(&[0]);
+        frames.push((frame_name(0, "gamma"), Tensor::ones(&[1]), Codec::Lossless));
+        let err = group_for_shard(frames, &specs, 0, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown slots"), "{err:#}");
+
+        let frames = vec![("alpha".to_string(), Tensor::ones(&[1]), Codec::Lossless)];
+        let err = group_for_shard(frames, &specs, 0, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("task{t}/{slot}"), "{err:#}");
+    }
+
+    #[test]
+    fn artifact_roundtrips_through_codec() {
+        let adapters: Vec<(usize, Vec<(String, Tensor)>)> = (0..3)
+            .map(|t| {
+                (
+                    t,
+                    vec![
+                        ("alpha".to_string(), Tensor::ones(&[2, 3])),
+                        ("beta".to_string(), Tensor::zeros(&[3])),
+                    ],
+                )
+            })
+            .collect();
+        let mut bytes = Vec::new();
+        let wire =
+            write_artifact(&mut bytes, "lm_mcnclora8", 9, Codec::Lossless, &adapters).unwrap();
+        assert_eq!(wire, bytes.len());
+
+        let mut dec = crate::codec::Decoder::new(&bytes[..]).unwrap();
+        assert!(dec.header().entry.starts_with("lm_mcnclora8"));
+        assert_eq!(dec.header().seed, 9);
+        assert_eq!(dec.header().n_tensors, Some(6));
+        let frames = dec.decode_all().unwrap();
+        assert_eq!(frames.len(), 6);
+        let specs = vec![spec("alpha", &[2, 3]), spec("beta", &[3])];
+        let (owned, skipped) = group_for_shard(frames, &specs, 0, 1).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(owned.len(), 3);
+        assert_eq!(owned.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

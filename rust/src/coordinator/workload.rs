@@ -13,6 +13,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Build the cumulative distribution for `n` tasks, exponent `s`.
     pub fn new(n: usize, s: f64) -> Zipf {
         let mut w: Vec<f64> = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect();
         let total: f64 = w.iter().sum();
@@ -24,6 +25,7 @@ impl Zipf {
         Zipf { cum: w }
     }
 
+    /// Draw one task id from the distribution.
     pub fn sample(&self, s: &mut Stream) -> usize {
         let u = s.next_unit_f32() as f64;
         match self.cum.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
@@ -35,7 +37,9 @@ impl Zipf {
 /// One scheduled arrival.
 #[derive(Debug, Clone, Copy)]
 pub struct Arrival {
+    /// Offset from the start of the replay.
     pub at: Duration,
+    /// Which task the request targets.
     pub task: usize,
 }
 
@@ -72,8 +76,11 @@ pub struct ReplayReport {
     /// timed-out receivers leave no entry, so don't index this against
     /// the schedule — match on `Response.id`).
     pub responses: Vec<crate::coordinator::server::Response>,
+    /// Requests that came back with a prediction.
     pub ok: usize,
+    /// Requests bounced at admission (backpressure).
     pub rejected: usize,
+    /// Requests answered with an execution/validation error.
     pub failed: usize,
     /// Receivers that closed without any Response (a dead shard).
     pub dropped: usize,

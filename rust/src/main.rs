@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use mcnc::codec::Codec;
 use mcnc::coordinator::workload::{open_loop, replay};
@@ -53,6 +53,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "sphere" => sphere_cmd(args),
         "config" => config_cmd(args),
         "pack" => pack_cmd(args),
+        "warm" => warm_cmd(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -65,15 +66,23 @@ const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 re
   info    [--group G]            list artifact executables (+ meta)
   train   --exec NAME [--steps N --lr F --batch B --seed S --out CK --codec lossless|int8|int4 --block N --data synth|c10|c100|lm]
   eval    --ckpt FILE [--seed S]
-  serve   [--kind K --tasks N --shards N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S --queue-cap N]
+  serve   [--kind K --tasks N --shards N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S --queue-cap N --preload FILE]
   sphere  [--acts sine,sigmoid,relu --l 1,5,10,100 --width 256]
   config  --file cfg.toml        config-driven training job
   pack    --ckpt FILE --out FILE [--codec lossless|int8|int4 --block N]
                                  re-encode a checkpoint as an MCNC2 container
+  warm    --out FILE [--kind K --tasks N --seed S --codec lossless|int8|int4 --block N]
+                                 write a multi-task warm-start artifact
+                                 (task{t}/{slot} frames; docs/FORMAT.md)
 
 Global flags / env:
-  --threads N     pin the reconstruction thread pool (same as MCNC_THREADS=N);
-                  makes bench and serve runs reproducible across hosts
+  --threads N     pin the reconstruction + decode thread pool (same as
+                  MCNC_THREADS=N); makes bench and serve runs reproducible
+                  across hosts — parallel decode is bit-identical at every
+                  thread count
+  --preload FILE  (serve) warm-start every shard from FILE before traffic:
+                  adapters install and, with --merged --native-recon, each
+                  task's full θ is pre-reconstructed into the merged LRU
   MCNC_SIMD=x     pin the reconstruction microkernel ISA: scalar|avx2|neon|auto
                   (default auto probes the host; unavailable ISAs fall back
                   to scalar)
@@ -219,6 +228,19 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let schedule =
         open_loop(7, rate, std::time::Duration::from_secs_f64(secs), n_tasks, zipf_s);
     let server = Server::start(artifacts_dir(), cfg);
+    if args.has("preload") {
+        let path = args.require("preload")?;
+        if path == "true" {
+            anyhow::bail!("--preload expects a warm-start artifact path (see `mcnc warm`)");
+        }
+        let warm = server
+            .preload(std::path::Path::new(path))
+            .with_context(|| format!("preloading warm-start artifact {path:?}"))?;
+        println!(
+            "preloaded {path}: {} adapters installed, {} merged-θ prefills, {} foreign-task frames skipped across shards",
+            warm.installed, warm.prefilled, warm.skipped
+        );
+    }
     let rep = replay(&server, &lm, 9, &schedule);
     let stats = server.stop()?;
     println!(
@@ -285,6 +307,35 @@ fn pack_cmd(args: &Args) -> Result<()> {
     if !codec.is_lossless() {
         println!(
             "note: {} is lossy (absmax-bounded); keep the original for bit-exact restores",
+            codec.name()
+        );
+    }
+    Ok(())
+}
+
+fn warm_cmd(args: &Args) -> Result<()> {
+    let out = args.require("out")?;
+    let kind = args.str_or("kind", "lm_mcnclora8");
+    let n_tasks = args.usize_or("tasks", 8);
+    let seed = args.u64_or("seed", 1);
+    let codec = Codec::parse(&args.str_or("codec", "lossless"), args.usize_or("block", 64))?;
+    let wire = mcnc::coordinator::warm::write_synth_artifact(
+        &artifacts_dir(),
+        std::path::Path::new(out),
+        &kind,
+        n_tasks,
+        seed,
+        codec,
+    )?;
+    println!(
+        "warm-start artifact {out} [{}]: {n_tasks} tasks for kind {kind}, {wire} bytes",
+        codec.name()
+    );
+    println!("serve it with: mcnc serve --kind {kind} --tasks {n_tasks} --preload {out}");
+    if !codec.is_lossless() {
+        println!(
+            "note: {} is lossy (absmax-bounded) — warmed adapters differ from \
+             seed-synthesized ones by the quantization error",
             codec.name()
         );
     }

@@ -67,8 +67,127 @@ impl PackedB {
         &self.panels[idx * self.k * self.nr..(idx + 1) * self.k * self.nr]
     }
 
+    /// The raw panel storage (⌈n/NR⌉ panels of `k × NR`, k-major inside a
+    /// panel). Exposed so consumers that built a `PackedB` two ways (e.g.
+    /// the codec's fused decode→pack path vs [`pack_b_for`]) can assert the
+    /// layouts agree.
+    pub fn panels(&self) -> &[f32] {
+        &self.panels
+    }
+
     pub fn size_bytes(&self) -> usize {
         self.panels.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Incremental [`PackedB`] construction for producers that generate B's
+/// values as a row-major *stream* rather than a materialized buffer — the
+/// substrate of the codec's fused decode→pack path, where dequantized
+/// weights go straight into panel layout and the intermediate row-major
+/// `Vec<f32>` is never allocated.
+///
+/// [`PackedBBuilder::push`] must be called exactly `k * n` times in
+/// row-major order; [`PackedBBuilder::finish`] checks the count. The result
+/// is identical to [`pack_b_for`] on the equivalent row-major buffer: every
+/// ISA's pack layout matches the generic panel packer bit-for-bit (pinned
+/// by the `dispatched_pack_layout_matches_generic_packer` test), so the
+/// builder writes the one true layout directly.
+pub struct PackedBBuilder {
+    k: usize,
+    n: usize,
+    nr: usize,
+    isa: Isa,
+    panels: Vec<f32>,
+    filled: usize,
+    // running write cursor — push is the fused decode→pack hot path, so
+    // the panel slot `(j/nr)·k·nr + kk·nr + j%nr` is tracked incrementally
+    // (adds + compares) instead of recomputed with div/mod per element
+    col: usize,
+    lane: usize,
+    at: usize,
+}
+
+impl PackedBBuilder {
+    /// Builder targeting the process-wide ISA's panel layout.
+    pub fn new(k: usize, n: usize) -> PackedBBuilder {
+        PackedBBuilder::new_for(dispatch::active(), k, n)
+    }
+
+    /// Builder for an explicit ISA (degrades to scalar if unavailable,
+    /// exactly like [`pack_b_for`]). Panels start zero-filled, so the
+    /// NR-padding of the last panel needs no separate pass.
+    pub fn new_for(isa: Isa, k: usize, n: usize) -> PackedBBuilder {
+        let isa = dispatch::clamp(isa);
+        let nr = nr_of(isa);
+        let np = n.div_ceil(nr).max(1);
+        PackedBBuilder {
+            k,
+            n,
+            nr,
+            isa,
+            panels: vec![0.0f32; np * k * nr],
+            filled: 0,
+            col: 0,
+            lane: 0,
+            at: 0,
+        }
+    }
+
+    /// Append the next row-major element of B (row `i/n`, column `i%n` for
+    /// the `i`-th call), writing it straight into its panel slot.
+    pub fn push(&mut self, v: f32) {
+        assert!(
+            self.filled < self.k * self.n,
+            "PackedBBuilder overfilled past {}x{}",
+            self.k,
+            self.n
+        );
+        self.panels[self.at + self.lane] = v;
+        self.filled += 1;
+        self.col += 1;
+        self.lane += 1;
+        if self.col == self.n {
+            // next row of B: back to panel 0, one k-row down
+            self.col = 0;
+            self.lane = 0;
+            self.at = (self.filled / self.n) * self.nr;
+        } else if self.lane == self.nr {
+            // same k-row, next NR-wide panel
+            self.lane = 0;
+            self.at += self.k * self.nr;
+        }
+    }
+
+    /// Number of elements pushed so far (of the `k * n` required).
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// Seal the builder into a [`PackedB`]; errors if the element count is
+    /// short (a truncated producer must surface as `Err`, not a silently
+    /// zero-padded weight panel).
+    pub fn finish(self) -> anyhow::Result<PackedB> {
+        if self.filled != self.k * self.n {
+            anyhow::bail!(
+                "PackedBBuilder got {} of {} elements for {}x{}",
+                self.filled,
+                self.k * self.n,
+                self.k,
+                self.n
+            );
+        }
+        Ok(PackedB { k: self.k, n: self.n, nr: self.nr, isa: self.isa, panels: self.panels })
+    }
+}
+
+/// Microtile panel width NR of a (host-available) ISA.
+fn nr_of(isa: Isa) -> usize {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::NR,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::NR,
+        _ => scalar::NR,
     }
 }
 
@@ -369,6 +488,62 @@ mod tests {
         let mut disp = vec![f32::NAN; n];
         gemv(&x, &b, k, n, &mut disp);
         assert_gemm_close(&x, &b, 1, k, n, &disp, &out);
+    }
+
+    #[test]
+    fn builder_matches_pack_b_for_every_isa_and_shape() {
+        for isa in [Isa::Scalar, active()] {
+            for &(k, n) in &[(1usize, 1usize), (3, 15), (4, 16), (5, 17), (7, 40), (2, 523)] {
+                let b = Stream::new(6).uniform_f32(k * n, -1.0, 1.0);
+                let want = pack_b_for(isa, &b, k, n);
+                let mut builder = PackedBBuilder::new_for(isa, k, n);
+                for &v in &b {
+                    builder.push(v);
+                }
+                assert_eq!(builder.filled(), k * n);
+                let got = builder.finish().unwrap();
+                assert_eq!(got.isa(), want.isa(), "{isa:?} k={k} n={n}");
+                assert_eq!(got.nr(), want.nr(), "{isa:?} k={k} n={n}");
+                assert_eq!((got.k, got.n), (want.k, want.n));
+                assert_eq!(got.panels(), want.panels(), "{isa:?} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn builder_result_computes_like_packed_b() {
+        let (m, k, n) = (5, 7, 19);
+        let a = Stream::new(8).uniform_f32(m * k, -1.0, 1.0);
+        let b = Stream::new(9).uniform_f32(k * n, -1.0, 1.0);
+        let mut builder = PackedBBuilder::new(k, n);
+        for &v in &b {
+            builder.push(v);
+        }
+        let pb = builder.finish().unwrap();
+        let mut c1 = vec![f32::NAN; m * n];
+        let mut c2 = vec![f32::NAN; m * n];
+        gemm(&a, m, &pb, &mut c1);
+        gemm(&a, m, &pack_b(&b, k, n), &mut c2);
+        assert!(c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn builder_short_fill_errors_and_empty_is_fine() {
+        let mut builder = PackedBBuilder::new_for(Isa::Scalar, 2, 3);
+        builder.push(1.0);
+        let err = builder.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("1 of 6"), "{err:#}");
+
+        let empty = PackedBBuilder::new_for(Isa::Scalar, 0, 0).finish().unwrap();
+        assert_eq!((empty.k, empty.n), (0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "overfilled")]
+    fn builder_overfill_panics() {
+        let mut builder = PackedBBuilder::new_for(Isa::Scalar, 1, 1);
+        builder.push(1.0);
+        builder.push(2.0);
     }
 
     #[test]

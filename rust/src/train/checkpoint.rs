@@ -191,10 +191,13 @@ impl Checkpoint {
 
     fn load_v2(f: std::fs::File) -> Result<Checkpoint> {
         let mut dec = codec::Decoder::after_magic(std::io::BufReader::new(f))?;
-        let mut tensors = Vec::new();
-        while let Some((name, t, _codec)) = dec.next_tensor()? {
-            tensors.push((name, t));
-        }
+        // frames decode in parallel across the global pool (bit-identical
+        // to the serial path; `--threads` / MCNC_THREADS pins the width)
+        let tensors = dec
+            .decode_all()?
+            .into_iter()
+            .map(|(name, t, _codec)| (name, t))
+            .collect();
         let h = dec.header();
         Ok(Checkpoint { entry: h.entry.clone(), seed: h.seed, step: h.step, tensors })
     }

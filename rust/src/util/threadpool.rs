@@ -72,6 +72,9 @@ impl ThreadPool {
     }
 
     /// Run `f` over `items` in parallel, preserving order of results.
+    /// A panic in `f` is caught on the worker (keeping the pool intact)
+    /// and resumed on the caller with its original payload, mirroring
+    /// [`ThreadPool::parallel_for`].
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -79,21 +82,32 @@ impl ThreadPool {
         F: Fn(T) -> R + Send + Sync + 'static,
     {
         let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<R>)>();
         let n = items.len();
         for (i, item) in items.into_iter().enumerate() {
             let tx = tx.clone();
             let f = Arc::clone(&f);
             self.execute(move || {
-                let _ = tx.send((i, f(item)));
+                let r =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item)));
+                let _ = tx.send((i, r));
             });
         }
         drop(tx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic = None;
         for (i, r) in rx {
-            out[i] = Some(r);
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(p) => {
+                    first_panic.get_or_insert(p);
+                }
+            }
         }
-        out.into_iter().map(|o| o.expect("worker panicked")).collect()
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+        out.into_iter().map(|o| o.expect("worker result lost")).collect()
     }
 
     /// Scoped data-parallel loop: split `[0, n)` into contiguous blocks of
@@ -198,6 +212,25 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * x);
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_propagates_panics_and_keeps_workers() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = pool.map(vec![0usize, 1, 2, 3], |x| {
+                if x == 2 {
+                    panic!("boom in map");
+                }
+                x
+            });
+        }));
+        let payload = caught.unwrap_err();
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom in map", "original payload must survive");
+        // the pool must still be fully operational afterwards
+        let out = pool.map((0..20).collect::<Vec<_>>(), |x| x + 1);
+        assert_eq!(out, (1..=20).collect::<Vec<_>>());
     }
 
     #[test]

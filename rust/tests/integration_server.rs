@@ -317,6 +317,106 @@ fn mock_shard_affinity_and_exactly_once_property() {
 }
 
 // ---------------------------------------------------------------------------
+// Warm-start (preload) coordinator tests (no artifacts required)
+// ---------------------------------------------------------------------------
+
+/// Mock recording which shards were asked to preload; optional failure
+/// injection on one shard.
+struct WarmMock {
+    shard: usize,
+    log: Arc<Mutex<Vec<(usize, std::path::PathBuf)>>>,
+    fail_shard: Option<usize>,
+    stats: ServeStats,
+}
+
+impl EngineCore for WarmMock {
+    fn seq(&self) -> usize {
+        8
+    }
+
+    fn has_task(&self, _task: usize) -> bool {
+        true
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        Ok(batch.requests.iter().map(|_| 0).collect())
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+
+    fn preload(&mut self, artifact: &std::path::Path) -> Result<mcnc::coordinator::WarmStats> {
+        if self.fail_shard == Some(self.shard) {
+            anyhow::bail!("injected preload failure");
+        }
+        self.log.lock().unwrap().push((self.shard, artifact.to_path_buf()));
+        Ok(mcnc::coordinator::WarmStats { installed: 1, prefilled: 1, skipped: 2 })
+    }
+}
+
+fn warm_server(
+    n_shards: usize,
+    fail_shard: Option<usize>,
+) -> (Server, Arc<Mutex<Vec<(usize, std::path::PathBuf)>>>) {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let l = Arc::clone(&log);
+    let cfg = mock_server_cfg(n_shards, 4);
+    let server = Server::start_with(&cfg, move |shard| -> Result<WarmMock> {
+        Ok(WarmMock { shard, log: Arc::clone(&l), fail_shard, stats: ServeStats::default() })
+    });
+    (server, log)
+}
+
+#[test]
+fn preload_broadcasts_to_every_shard_and_sums_stats() {
+    let (server, log) = warm_server(4, None);
+    let warm = server.preload(std::path::Path::new("warm.mcnc2")).unwrap();
+    // every shard acked with (1 installed, 1 prefilled, 2 skipped)
+    assert_eq!(warm.installed, 4);
+    assert_eq!(warm.prefilled, 4);
+    assert_eq!(warm.skipped, 8);
+    let mut shards: Vec<usize> = log.lock().unwrap().iter().map(|(s, _)| *s).collect();
+    shards.sort_unstable();
+    assert_eq!(shards, vec![0, 1, 2, 3], "each shard preloads exactly once");
+    assert!(log.lock().unwrap().iter().all(|(_, p)| p.ends_with("warm.mcnc2")));
+    // the server still serves after a preload
+    let r = recv(server.submit(0, vec![0; 8]));
+    assert!(r.is_ok(), "{:?}", r.result);
+    server.stop().unwrap();
+}
+
+#[test]
+fn preload_failure_names_the_shard_and_leaves_the_server_serving() {
+    let (server, _log) = warm_server(3, Some(1));
+    let err = server.preload(std::path::Path::new("warm.mcnc2")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 1"), "{msg}");
+    assert!(msg.contains("injected preload failure"), "{msg}");
+    // a failed preload must not take shards down
+    for task in 0..3 {
+        let r = recv(server.submit(task, vec![0; 8]));
+        assert!(r.is_ok(), "{:?}", r.result);
+    }
+    server.stop().unwrap();
+}
+
+#[test]
+fn default_enginecore_preload_is_a_noop() {
+    // MockEngine doesn't override preload: the trait default reports zero
+    // work and the coordinator path still completes
+    let mock = MockCfg::new(4, 8, 4);
+    let server = mock.server(&mock_server_cfg(2, 4));
+    let warm = server.preload(std::path::Path::new("ignored")).unwrap();
+    assert_eq!(warm, mcnc::coordinator::WarmStats::default());
+    server.stop().unwrap();
+}
+
+// ---------------------------------------------------------------------------
 // PJRT-backed engine tests (skip when artifacts are absent)
 // ---------------------------------------------------------------------------
 
@@ -512,6 +612,71 @@ fn merged_native_recon_fills_cold_tasks() {
         "native recon diverges from OnTheFly: {agree}/{} agree",
         resps.len()
     );
+}
+
+#[test]
+fn preload_prefills_merged_cache_and_preserves_predictions() {
+    if !ready() {
+        return;
+    }
+    // the acceptance scenario for warm starts: a lossless warm artifact
+    // written from the same base seed installs bit-identical adapters and
+    // pre-reconstructs every task's θ, so Merged traffic never cold-fills
+    let dir = std::env::temp_dir().join(format!("mcnc_warm_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = dir.join("warm.mcnc2");
+    let wire = mcnc::coordinator::warm::write_synth_artifact(
+        &artifacts_dir(),
+        &artifact,
+        "lm_mcnclora8",
+        2,
+        1,
+        mcnc::codec::Codec::Lossless,
+    )
+    .unwrap();
+    assert_eq!(wire as u64, std::fs::metadata(&artifact).unwrap().len());
+
+    let mk = || ServerCfg {
+        kind: "lm_mcnclora8".into(),
+        n_tasks: 2,
+        n_shards: 2,
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(1) },
+        mode: Mode::Merged,
+        native_recon: true,
+        ..ServerCfg::default()
+    };
+
+    // cold server: first batch per task is a native cold fill
+    let (cold_resps, cold_stats) = run_requests(mk(), 32, 2);
+    assert!(cold_stats.cache_misses >= 2);
+
+    // warm server: preload, then identical traffic — zero cold fills
+    let lm = MarkovLm::base(1, 128, 32);
+    let server = Server::start(artifacts_dir(), mk());
+    let warm = server.preload(&artifact).unwrap();
+    assert_eq!(warm.installed, 2, "one adapter per task");
+    assert_eq!(warm.prefilled, 2, "every task's θ pre-reconstructed");
+    // each shard skips the other shard's task frames (count depends on the
+    // family's trainable slot count, so only the shape is asserted)
+    assert!(warm.skipped > 0 && warm.skipped % 2 == 0, "skipped {}", warm.skipped);
+    let mut rxs = Vec::new();
+    for i in 0..32 {
+        rxs.push(server.submit(i % 2, request_tokens(&lm, 7, i as u64)));
+    }
+    let mut warm_resps = Vec::new();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let tok = r.next_token().unwrap_or_else(|| panic!("error response: {:?}", r.result));
+        warm_resps.push((r.id, r.task, tok));
+    }
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.cache_misses, 0, "warm start leaves no cold fills");
+    assert_eq!(stats.native_fills, 0, "no request-path reconstructions");
+    assert!(stats.cache_hits > 0);
+    // lossless warm artifact from the same seed == the self-seeded
+    // adapters, so predictions must match the cold server's exactly
+    assert_eq!(cold_resps, warm_resps, "preload changed predictions");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
