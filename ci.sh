@@ -23,6 +23,12 @@ cargo test -q
 echo "== serving coordinator (mock-engine tests; no artifacts needed) =="
 cargo test -q --test integration_server
 
+echo "== fault tolerance: deterministic chaos schedules (pinned seeds) =="
+cargo test -q --test integration_chaos
+
+echo "== availability under faults (table4 smoke; mock + chaos, no artifacts) =="
+cargo bench --bench table4_peft_serving -- --smoke
+
 echo "== codec property tests (corruption handling must fail tier-1) =="
 cargo test -q -p mcnc --test prop_codec
 

@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             seed: 1,
             ..ServerCfg::default()
         };
-        let server = Server::start(artifacts_dir(), cfg);
+        let server = Server::start(artifacts_dir(), cfg)?;
         let rep = replay(&server, &lm, 9, &schedule);
         let stats = server.stop()?;
         table.row(vec![

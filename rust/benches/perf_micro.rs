@@ -178,7 +178,13 @@ fn main() {
         let mut r = Router::default();
         let now = Instant::now();
         for i in 0..10_000u64 {
-            r.push(Request { id: i, task: (i % 16) as usize, tokens: Vec::new(), enqueued: now });
+            r.push(Request {
+                id: i,
+                task: (i % 16) as usize,
+                tokens: Vec::new(),
+                enqueued: now,
+                deadline: None,
+            });
         }
         let p = BatchPolicy { max_batch: 16, max_delay: std::time::Duration::ZERO };
         while r.next_batch(p, now, true).is_some() {}

@@ -5,20 +5,121 @@
 //! (measured here + the paper's LLaMA-shape numbers from the analytic
 //! model). A second table sweeps the coordinator's shard count
 //! (n_shards ∈ {1, 2, 4}) on the MCNC kind and writes the scaling
-//! trajectory to `BENCH_table4_serving.json`.
+//! trajectory to `BENCH_table4_serving.json`. A third table replays the
+//! same open-loop workload against a mock engine under a deterministic
+//! chaos fault schedule (batch panics, batch errors, shard kills) and
+//! reports availability — it needs no PJRT artifacts and is the only
+//! section run under `-- --smoke`.
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use anyhow::Result;
 use mcnc::coordinator::workload::{open_loop, replay};
-use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg};
+use mcnc::coordinator::{
+    Batch, BatchPolicy, Chaos, ChaosCfg, EngineCore, Mode, ServeStats, Server, ServerCfg,
+};
 use mcnc::data::{Dataset, MarkovLm, Split};
 use mcnc::exp::{steps_lm, Ctx};
 use mcnc::flops;
 use mcnc::train::{self, LrSchedule, TrainCfg, TrainState};
 use mcnc::util::bench::{bench_steps, Table};
 
+/// Minimal engine for the availability table: every task served, constant
+/// prediction. Fault behaviour comes entirely from the [`Chaos`] wrapper,
+/// so the table isolates the coordinator's recovery path.
+struct AvailMock {
+    n_tasks: usize,
+    stats: ServeStats,
+}
+
+impl EngineCore for AvailMock {
+    fn seq(&self) -> usize {
+        32
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        task < self.n_tasks
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        self.stats.batches += 1;
+        Ok(batch.requests.iter().map(|_| 0).collect())
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+}
+
+/// Table 4c: replay an open-loop workload while a seeded chaos schedule
+/// injects batch panics, batch errors and shard kills; report how much of
+/// the offered load still completes and what the supervisor had to do.
+fn availability_under_faults(smoke: bool) {
+    let n_tasks = 6;
+    let rate = 300.0;
+    let secs = if smoke { 0.4 } else { 2.0 };
+    let lm = MarkovLm::base(1, 128, 32);
+    let schedule = open_loop(7, rate, Duration::from_secs_f64(secs), n_tasks, 1.0);
+    let mut table = Table::new(
+        "Table 4c — availability under a deterministic fault schedule (mock engine)",
+        &["n_shards", "ok", "failed", "rejected", "restarts", "batch panics",
+          "breaker opens", "throughput req/s"],
+    );
+    for n_shards in [1usize, 2, 4] {
+        let chaos = Chaos::new(ChaosCfg {
+            seed: 0xFA_017 + n_shards as u64,
+            window: 16,
+            panics: 2,
+            errors: 2,
+            kills: 1,
+            ..ChaosCfg::default()
+        });
+        let cfg = ServerCfg {
+            n_tasks,
+            n_shards,
+            policy: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
+            heartbeat: Duration::from_millis(10),
+            seed: 1,
+            ..ServerCfg::default()
+        };
+        let c = chaos.clone();
+        let server = Server::start_with(&cfg, move |_shard| {
+            c.factory_gate()?;
+            Ok(c.wrap(AvailMock { n_tasks, stats: ServeStats::default() }))
+        })
+        .expect("start chaos mock server");
+        let rep = replay(&server, &lm, 9, &schedule);
+        assert_eq!(rep.dropped, 0, "{n_shards} shards: a receiver closed without a response");
+        let stats = server.stop().unwrap();
+        table.row(vec![
+            n_shards.to_string(),
+            format!("{}/{}", rep.ok, schedule.len()),
+            rep.failed.to_string(),
+            rep.rejected.to_string(),
+            stats.restarts.to_string(),
+            stats.batch_panics.to_string(),
+            stats.breaker_opens.to_string(),
+            format!("{:.1}", stats.throughput()),
+        ]);
+    }
+    table.print();
+    if !smoke {
+        table.save_csv("table4_availability");
+        table.save_json("table4_availability");
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    availability_under_faults(smoke);
+    if smoke {
+        return;
+    }
     let Some(ctx) = Ctx::open() else { return };
     let steps = steps_lm();
     let base_chain = MarkovLm::base(11, 128, 32);
@@ -64,7 +165,7 @@ fn main() {
             seed: 1,
             ..ServerCfg::default()
         };
-        let server = Server::start(mcnc::runtime::artifacts_dir(), cfg);
+        let server = Server::start(mcnc::runtime::artifacts_dir(), cfg).expect("start server");
         let rep = replay(&server, &base_chain, 9, &schedule);
         assert_eq!(rep.dropped, 0, "{kind}: receivers dropped without a response");
         let stats = server.stop().unwrap();
@@ -105,7 +206,7 @@ fn main() {
             seed: 1,
             ..ServerCfg::default()
         };
-        let server = Server::start(mcnc::runtime::artifacts_dir(), cfg);
+        let server = Server::start(mcnc::runtime::artifacts_dir(), cfg).expect("start server");
         let rep = replay(&server, &base_chain, 9, &schedule);
         let stats = server.stop().unwrap();
         sweep.row(vec![

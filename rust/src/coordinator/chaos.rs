@@ -1,0 +1,380 @@
+//! Deterministic chaos injection for the serving coordinator.
+//!
+//! A [`Chaos`] harness owns a *precomputed fault schedule* generated from
+//! a seed via `util::prng`, and wraps any [`EngineCore`] in a
+//! [`FaultyEngine`] that consults the schedule on every batch call. All
+//! scheduling is indexed by atomic call counters — never wall-clock — so
+//! a given `(seed, config)` injects byte-identical fault sequences on
+//! every run, and the integration tests can assert exact convergence
+//! (restart counters, exactly-one-Response) without flakes.
+//!
+//! Fault classes, mapped to the recovery layer they exercise:
+//!
+//! * **batch panic** — `run_batch` panics; the shard loop's containment
+//!   must answer the batch `Failed` and keep serving;
+//! * **batch error** — `run_batch` returns `Err`; same containment path,
+//!   plus circuit-breaker accounting;
+//! * **slow batch** — `run_batch` sleeps before delegating; exercises
+//!   deadlines and queue growth;
+//! * **shard kill** — a panic fired from `has_task` during ingest, which
+//!   *escapes* the batch containment and forces a supervisor restart;
+//! * **preload failure** — `preload` fails from a bounded budget; the
+//!   shard must keep serving cold (and re-warm retries eventually pass);
+//! * **factory failure** — [`Chaos::factory_gate`] fails from a bounded
+//!   budget inside an engine factory; the supervisor's restart backoff
+//!   must absorb it.
+//!
+//! Budgets and counters live behind one shared [`Chaos`] handle (cheap to
+//! clone), so they persist across engine rebuilds — a restarted shard
+//! keeps consuming the *same* schedule instead of starting a fresh one.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::ServeStats;
+use crate::coordinator::router::Batch;
+use crate::coordinator::shard::EngineCore;
+use crate::coordinator::warm::WarmStats;
+use crate::util::prng::{tag, Stream};
+
+/// One scheduled batch-call fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    Panic,
+    Error,
+    Slow,
+}
+
+/// What a [`Chaos`] harness injects, and when. Counts are totals across
+/// the whole server (shards share the schedule through the global
+/// batch-call counter).
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosCfg {
+    /// Seed for the fault schedule (`util::prng` substream).
+    pub seed: u64,
+    /// Batch-call window the faults are scattered over; auto-extended to
+    /// at least twice the scheduled fault count so the schedule always
+    /// fits and a fault-free tail exists for convergence assertions.
+    pub window: usize,
+    /// Batches that panic inside `run_batch` (contained by the shard loop).
+    pub panics: usize,
+    /// Batches that return `Err` from `run_batch`.
+    pub errors: usize,
+    /// Batches delayed by `slow_for` before executing normally.
+    pub slows: usize,
+    /// Sleep injected into each slow batch.
+    pub slow_for: Duration,
+    /// Shard kills: panics fired from `has_task` during ingest once the
+    /// global batch-call counter crosses scheduled thresholds — these
+    /// escape batch containment and force a supervisor restart.
+    pub kills: usize,
+    /// `preload` calls that fail before delegating (bounded budget).
+    pub preload_fails: usize,
+    /// [`Chaos::factory_gate`] calls that fail (bounded budget).
+    pub factory_fails: usize,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        ChaosCfg {
+            seed: 0,
+            window: 0,
+            panics: 0,
+            errors: 0,
+            slows: 0,
+            slow_for: Duration::from_millis(5),
+            kills: 0,
+            preload_fails: 0,
+            factory_fails: 0,
+        }
+    }
+}
+
+/// Injected-fault totals so far (see [`Chaos::report`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosReport {
+    /// Batch panics fired.
+    pub panics: usize,
+    /// Batch errors fired.
+    pub errors: usize,
+    /// Slow batches fired.
+    pub slows: usize,
+    /// Shard kills fired.
+    pub kills: usize,
+    /// Preload failures fired.
+    pub preload_fails: usize,
+    /// Factory failures fired.
+    pub factory_fails: usize,
+}
+
+struct ChaosState {
+    /// Fault (or none) per global batch call, index = call number.
+    schedule: Vec<Option<Fault>>,
+    slow_for: Duration,
+    /// Sorted batch-call thresholds at which `has_task` kills the shard.
+    kill_at: Vec<usize>,
+    next_kill: AtomicUsize,
+    batch_calls: AtomicUsize,
+    preload_budget: AtomicUsize,
+    factory_budget: AtomicUsize,
+    panics: AtomicUsize,
+    errors: AtomicUsize,
+    slows: AtomicUsize,
+    kills: AtomicUsize,
+    preload_fails: AtomicUsize,
+    factory_fails: AtomicUsize,
+}
+
+/// Shared handle to one deterministic fault schedule. Clone it into
+/// engine factories freely: all clones consume the same counters, so the
+/// schedule is global across shards and survives engine restarts.
+#[derive(Clone)]
+pub struct Chaos(Arc<ChaosState>);
+
+impl Chaos {
+    /// Precompute the fault schedule for `cfg`.
+    pub fn new(cfg: ChaosCfg) -> Chaos {
+        let n_faults = cfg.panics + cfg.errors + cfg.slows;
+        let window = cfg.window.max(2 * n_faults).max(1);
+        let mut schedule: Vec<Option<Fault>> = vec![None; window];
+        let mut s = Stream::sub(cfg.seed, tag::DATA + 0xC405);
+        let mut place = |fault: Fault, schedule: &mut Vec<Option<Fault>>| {
+            let mut pos = (s.next_u64() as usize) % window;
+            // bounded probing: the window is ≥ 2× the fault count, so a
+            // free slot is always within one wrap
+            for _ in 0..window {
+                if schedule[pos].is_none() {
+                    schedule[pos] = Some(fault);
+                    return;
+                }
+                pos = (pos + 1) % window;
+            }
+        };
+        for _ in 0..cfg.panics {
+            place(Fault::Panic, &mut schedule);
+        }
+        for _ in 0..cfg.errors {
+            place(Fault::Error, &mut schedule);
+        }
+        for _ in 0..cfg.slows {
+            place(Fault::Slow, &mut schedule);
+        }
+        let mut kill_at: Vec<usize> =
+            (0..cfg.kills).map(|_| 1 + (s.next_u64() as usize) % window).collect();
+        kill_at.sort_unstable();
+        Chaos(Arc::new(ChaosState {
+            schedule,
+            slow_for: cfg.slow_for,
+            kill_at,
+            next_kill: AtomicUsize::new(0),
+            batch_calls: AtomicUsize::new(0),
+            preload_budget: AtomicUsize::new(cfg.preload_fails),
+            factory_budget: AtomicUsize::new(cfg.factory_fails),
+            panics: AtomicUsize::new(0),
+            errors: AtomicUsize::new(0),
+            slows: AtomicUsize::new(0),
+            kills: AtomicUsize::new(0),
+            preload_fails: AtomicUsize::new(0),
+            factory_fails: AtomicUsize::new(0),
+        }))
+    }
+
+    /// Wrap an engine so its calls consult this schedule. Call from the
+    /// engine factory so every (re)built engine is wrapped.
+    pub fn wrap<E: EngineCore>(&self, inner: E) -> FaultyEngine<E> {
+        FaultyEngine { inner, chaos: Arc::clone(&self.0) }
+    }
+
+    /// Consume one scheduled factory failure, if any remain. Engine
+    /// factories under test call this first: `chaos.factory_gate()?`.
+    pub fn factory_gate(&self) -> Result<()> {
+        if take_budget(&self.0.factory_budget) {
+            self.0.factory_fails.fetch_add(1, Ordering::SeqCst);
+            bail!("chaos: injected engine factory failure");
+        }
+        Ok(())
+    }
+
+    /// Whether every scheduled batch fault and kill has fired (budgeted
+    /// preload/factory failures may remain if nothing drew on them).
+    /// After this, traffic must converge back to 100% success.
+    pub fn exhausted(&self) -> bool {
+        self.0.batch_calls.load(Ordering::SeqCst) >= self.0.schedule.len()
+            && self.0.next_kill.load(Ordering::SeqCst) >= self.0.kill_at.len()
+    }
+
+    /// Injected-fault totals so far.
+    pub fn report(&self) -> ChaosReport {
+        ChaosReport {
+            panics: self.0.panics.load(Ordering::SeqCst),
+            errors: self.0.errors.load(Ordering::SeqCst),
+            slows: self.0.slows.load(Ordering::SeqCst),
+            kills: self.0.kills.load(Ordering::SeqCst),
+            preload_fails: self.0.preload_fails.load(Ordering::SeqCst),
+            factory_fails: self.0.factory_fails.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Decrement `b` if positive; true when a unit was consumed.
+fn take_budget(b: &AtomicUsize) -> bool {
+    b.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1)).is_ok()
+}
+
+/// Flip one deterministic bit in the second half of `bytes` — frame-CRC
+/// corruption for codec-path chaos (the decoder must detect the flip and
+/// err, never serve corrupt weights). The second half is targeted so the
+/// container header stays intact and the corruption lands in frame data.
+pub fn corrupt(bytes: &mut [u8], seed: u64) {
+    if bytes.is_empty() {
+        return;
+    }
+    let mut s = Stream::sub(seed, tag::DATA + 0xC0DE);
+    let lo = bytes.len() / 2;
+    let ix = lo + (s.next_u64() as usize) % (bytes.len() - lo).max(1);
+    let bit = (s.next_u64() % 8) as u8;
+    bytes[ix.min(bytes.len() - 1)] ^= 1 << bit;
+}
+
+/// [`EngineCore`] wrapper that injects the faults scheduled by [`Chaos`].
+pub struct FaultyEngine<E> {
+    inner: E,
+    chaos: Arc<ChaosState>,
+}
+
+impl<E> FaultyEngine<E> {
+    /// Kill the shard if the batch-call counter crossed the next kill
+    /// threshold. Fired from `has_task` — the ingest path, outside the
+    /// shard loop's batch containment — so the panic reaches the
+    /// supervisor.
+    fn maybe_kill(&self) {
+        let calls = self.chaos.batch_calls.load(Ordering::SeqCst);
+        let k = self.chaos.next_kill.load(Ordering::SeqCst);
+        if k < self.chaos.kill_at.len()
+            && calls >= self.chaos.kill_at[k]
+            && self
+                .chaos
+                .next_kill
+                .compare_exchange(k, k + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+        {
+            self.chaos.kills.fetch_add(1, Ordering::SeqCst);
+            panic!("chaos: injected shard kill after {calls} batch calls");
+        }
+    }
+}
+
+impl<E: EngineCore> EngineCore for FaultyEngine<E> {
+    fn seq(&self) -> usize {
+        self.inner.seq()
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        self.maybe_kill();
+        self.inner.has_task(task)
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        let i = self.chaos.batch_calls.fetch_add(1, Ordering::SeqCst);
+        match self.chaos.schedule.get(i).copied().flatten() {
+            Some(Fault::Panic) => {
+                self.chaos.panics.fetch_add(1, Ordering::SeqCst);
+                panic!("chaos: injected batch panic at call {i}");
+            }
+            Some(Fault::Error) => {
+                self.chaos.errors.fetch_add(1, Ordering::SeqCst);
+                bail!("chaos: injected batch error at call {i}");
+            }
+            Some(Fault::Slow) => {
+                self.chaos.slows.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(self.chaos.slow_for);
+                self.inner.run_batch(batch)
+            }
+            None => self.inner.run_batch(batch),
+        }
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        self.inner.stats_mut()
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.inner.into_stats()
+    }
+
+    fn preload(&mut self, artifact: &Path) -> Result<WarmStats> {
+        if take_budget(&self.chaos.preload_budget) {
+            self.chaos.preload_fails.fetch_add(1, Ordering::SeqCst);
+            bail!("chaos: injected preload failure");
+        }
+        self.inner.preload(artifact)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_deterministic_and_complete() {
+        let cfg =
+            ChaosCfg { seed: 7, panics: 3, errors: 4, slows: 2, kills: 2, ..ChaosCfg::default() };
+        let a = Chaos::new(cfg);
+        let b = Chaos::new(cfg);
+        assert_eq!(a.0.schedule, b.0.schedule, "same seed, same schedule");
+        assert_eq!(a.0.kill_at, b.0.kill_at);
+        let count = |f: Fault| a.0.schedule.iter().filter(|x| **x == Some(f)).count();
+        assert_eq!(count(Fault::Panic), 3);
+        assert_eq!(count(Fault::Error), 4);
+        assert_eq!(count(Fault::Slow), 2);
+        assert!(a.0.schedule.len() >= 18, "window auto-extends to 2x faults");
+        assert_eq!(a.0.kill_at.len(), 2);
+        let c = Chaos::new(ChaosCfg { seed: 8, ..cfg });
+        assert_ne!(a.0.schedule, c.0.schedule, "different seed, different schedule");
+    }
+
+    #[test]
+    fn budgets_fire_exactly_n_times() {
+        let chaos = Chaos::new(ChaosCfg { factory_fails: 2, ..ChaosCfg::default() });
+        assert!(chaos.factory_gate().is_err());
+        assert!(chaos.factory_gate().is_err());
+        for _ in 0..10 {
+            assert!(chaos.factory_gate().is_ok(), "budget exhausted: always pass");
+        }
+        assert_eq!(chaos.report().factory_fails, 2);
+    }
+
+    #[test]
+    fn exhausted_after_schedule_consumed() {
+        let chaos = Chaos::new(ChaosCfg { window: 4, ..ChaosCfg::default() });
+        assert!(!chaos.exhausted());
+        chaos.0.batch_calls.fetch_add(4, Ordering::SeqCst);
+        assert!(chaos.exhausted());
+    }
+
+    #[test]
+    fn corrupt_flips_one_bit_in_second_half() {
+        let clean: Vec<u8> = (0..64u8).collect();
+        let mut a = clean.clone();
+        let mut b = clean.clone();
+        corrupt(&mut a, 42);
+        corrupt(&mut b, 42);
+        assert_eq!(a, b, "deterministic in seed");
+        let diffs: Vec<usize> =
+            (0..64).filter(|&i| a[i] != clean[i]).collect();
+        assert_eq!(diffs.len(), 1, "exactly one byte touched");
+        assert!(diffs[0] >= 32, "corruption lands past the header half");
+        assert_eq!((a[diffs[0]] ^ clean[diffs[0]]).count_ones(), 1, "single bit");
+        corrupt(&mut a, 42);
+        assert_eq!(a, clean, "same flip twice round-trips");
+        // tiny buffers never panic
+        let mut empty: Vec<u8> = Vec::new();
+        corrupt(&mut empty, 1);
+        let mut one = vec![0u8; 1];
+        corrupt(&mut one, 1);
+    }
+}

@@ -111,6 +111,21 @@ pub struct ServeStats {
     /// Engine-loop iterations; at zero load this tracks the heartbeat rate
     /// (the loop blocks between batches instead of spinning).
     pub wakeups: u64,
+    /// Shard engine restarts performed by the supervisor after a crash.
+    pub restarts: u64,
+    /// Requests shed at batch formation because their deadline had passed
+    /// (answered with `ServeError::DeadlineExceeded`, never executed).
+    pub deadline_shed: u64,
+    /// Batches whose execution panicked; the panic was contained and every
+    /// request in the batch was answered with `ServeError::Failed`.
+    pub batch_panics: u64,
+    /// Times a per-shard circuit breaker transitioned closed → open.
+    pub breaker_opens: u64,
+    /// Requests fast-failed by an open circuit breaker at admission.
+    pub breaker_fastfail: u64,
+    /// Admission retries performed by the dispatcher after `Rejected`
+    /// backpressure (successful or not).
+    pub retries: u64,
     /// Serving window in seconds (the longest shard's, after `merge`).
     pub wall_secs: f64,
 }
@@ -145,6 +160,12 @@ impl ServeStats {
         self.errors += other.errors;
         self.rejected += other.rejected;
         self.wakeups += other.wakeups;
+        self.restarts += other.restarts;
+        self.deadline_shed += other.deadline_shed;
+        self.batch_panics += other.batch_panics;
+        self.breaker_opens += other.breaker_opens;
+        self.breaker_fastfail += other.breaker_fastfail;
+        self.retries += other.retries;
         self.wall_secs = self.wall_secs.max(other.wall_secs);
     }
 }
@@ -208,6 +229,12 @@ mod tests {
         b.cache_misses = 2;
         b.rejected = 4;
         b.recon_flops = 7;
+        b.restarts = 2;
+        b.deadline_shed = 3;
+        b.batch_panics = 1;
+        b.breaker_opens = 1;
+        b.breaker_fastfail = 6;
+        b.retries = 5;
         b.wall_secs = 2.0;
         a.merge(&b);
         assert_eq!(a.latency.count(), 3);
@@ -221,6 +248,12 @@ mod tests {
         assert_eq!(a.rejected, 4);
         assert_eq!(a.wakeups, 10);
         assert_eq!(a.recon_flops, 7);
+        assert_eq!(a.restarts, 2);
+        assert_eq!(a.deadline_shed, 3);
+        assert_eq!(a.batch_panics, 1);
+        assert_eq!(a.breaker_opens, 1);
+        assert_eq!(a.breaker_fastfail, 6);
+        assert_eq!(a.retries, 5);
         // concurrent shards: wall-clock is the max, not the sum
         assert!((a.wall_secs - 2.0).abs() < 1e-12);
     }

@@ -11,10 +11,19 @@
 //! compressed [`warm`] artifact, decoded in parallel — so a freshly spawned
 //! server answers its first request per task from cache instead of paying
 //! entropy decode + reconstruction on the request path.
+//!
+//! Fault *recovery* is first-class as well: shard engines run under a
+//! supervisor that contains batch panics, restarts dead engines with
+//! bounded backoff (re-warming from the preload artifact), sheds expired
+//! requests ([`ServeError::DeadlineExceeded`]), and trips a per-shard
+//! circuit breaker on consecutive batch failures. The [`chaos`] module
+//! provides the deterministic fault-injection harness that proves the
+//! exactly-one-`Response` invariant under all of it.
 
 #![warn(missing_docs)]
 
 pub mod cache;
+pub mod chaos;
 pub mod metrics;
 pub mod router;
 pub mod server;
@@ -23,9 +32,13 @@ pub mod warm;
 pub mod workload;
 
 pub use cache::LruCache;
+pub use chaos::{Chaos, ChaosCfg, ChaosReport, FaultyEngine};
 pub use metrics::{Histogram, ServeStats};
 pub use router::{Batch, BatchPolicy, Request, Router};
-pub use server::{Engine, Mode, Response, ServeError, Server, ServerCfg};
+pub use server::{
+    BreakerCfg, Engine, Mode, Response, RestartPolicy, RetryPolicy, ServeError, Server,
+    ServerCfg,
+};
 pub use shard::EngineCore;
 pub use warm::WarmStats;
-pub use workload::{open_loop, replay, Arrival, ReplayReport, Zipf};
+pub use workload::{open_loop, replay, replay_with, Arrival, ReplayReport, Zipf};

@@ -17,6 +17,17 @@ pub struct Request {
     pub tokens: Vec<i32>,
     /// When the request was admitted (queue-wait accounting).
     pub enqueued: Instant,
+    /// Latest instant the request is still worth executing; past it the
+    /// batcher sheds the request (`ServeError::DeadlineExceeded`) instead
+    /// of packing it. `None` = no deadline.
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    /// Whether the request's deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map(|d| now >= d).unwrap_or(false)
+    }
 }
 
 /// A single-task group of requests ready to execute together.
@@ -54,6 +65,8 @@ pub struct Router {
     pub enqueued: u64,
     /// Requests ever handed out in batches.
     pub dispatched: u64,
+    /// Requests swept out by `sweep_expired`, awaiting `take_expired`.
+    expired: Vec<Request>,
 }
 
 impl Router {
@@ -91,16 +104,56 @@ impl Router {
     /// exactly how long the engine loop may sleep without missing a
     /// deadline (the shard loop caps it with a coarse heartbeat).
     pub fn next_deadline(&self, policy: BatchPolicy) -> Option<Instant> {
-        self.queues
+        let flush = self
+            .queues
             .values()
             .filter_map(|q| q.front())
             .map(|r| r.enqueued + policy.max_delay)
-            .min()
+            .min();
+        // A queued request's own deadline also bounds the sleep: the loop
+        // must wake in time to shed it (else a lone expired request would
+        // sit unanswered until the next heartbeat).
+        let shed = self
+            .queues
+            .values()
+            .flat_map(|q| q.iter())
+            .filter_map(|r| r.deadline)
+            .min();
+        match (flush, shed) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Move every queued request whose deadline has passed at `now` into
+    /// the expired buffer (collect with `take_expired`). FIFO order within
+    /// each task is preserved for the survivors.
+    pub fn sweep_expired(&mut self, now: Instant) {
+        for q in self.queues.values_mut() {
+            if q.iter().any(|r| r.expired(now)) {
+                for r in std::mem::take(q) {
+                    if r.expired(now) {
+                        self.expired.push(r);
+                    } else {
+                        q.push_back(r);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain the requests shed by `sweep_expired` so the shard loop can
+    /// answer them with `DeadlineExceeded`.
+    pub fn take_expired(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.expired)
     }
 
     /// Pop the next ready batch under `policy`, scanning tasks round-robin
     /// from the fairness cursor. `drain` forces flushing partial batches.
+    /// Expired requests are swept out first and never packed — collect
+    /// them with `take_expired`.
     pub fn next_batch(&mut self, policy: BatchPolicy, now: Instant, drain: bool) -> Option<Batch> {
+        self.sweep_expired(now);
         let n = self.rr.len();
         for step in 0..n {
             let task = self.rr[(self.rr_pos + step) % n];
@@ -136,7 +189,7 @@ mod tests {
     use crate::util::prop::run_prop;
 
     fn req(id: u64, task: usize, at: Instant) -> Request {
-        Request { id, task, tokens: vec![0; 4], enqueued: at }
+        Request { id, task, tokens: vec![0; 4], enqueued: at, deadline: None }
     }
 
     #[test]
@@ -208,6 +261,56 @@ mod tests {
         let b = r.next_batch(p, t0 + Duration::from_millis(6), false).unwrap();
         assert_eq!(b.task, 2);
         assert_eq!(r.next_deadline(p), Some(t0 + Duration::from_millis(8)));
+    }
+
+    #[test]
+    fn expired_requests_never_packed() {
+        let mut r = Router::default();
+        let t0 = Instant::now();
+        let mut a = req(0, 1, t0);
+        a.deadline = Some(t0 + Duration::from_millis(2));
+        r.push(a);
+        r.push(req(1, 1, t0)); // no deadline, survives
+        let p = BatchPolicy { max_batch: 16, max_delay: Duration::ZERO };
+        let later = t0 + Duration::from_millis(3);
+        let b = r.next_batch(p, later, true).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        assert_eq!(b.requests[0].id, 1);
+        let shed = r.take_expired();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 0);
+        assert!(r.take_expired().is_empty(), "take_expired drains");
+    }
+
+    #[test]
+    fn sweep_preserves_fifo_among_survivors() {
+        let mut r = Router::default();
+        let t0 = Instant::now();
+        for i in 0..6u64 {
+            let mut q = req(i, 1, t0);
+            if i % 2 == 0 {
+                q.deadline = Some(t0); // already expired
+            }
+            r.push(q);
+        }
+        r.sweep_expired(t0 + Duration::from_millis(1));
+        let p = BatchPolicy { max_batch: 16, max_delay: Duration::ZERO };
+        let b = r.next_batch(p, t0 + Duration::from_millis(1), true).unwrap();
+        let ids: Vec<u64> = b.requests.iter().map(|q| q.id).collect();
+        assert_eq!(ids, vec![1, 3, 5]);
+        assert_eq!(r.take_expired().len(), 3);
+    }
+
+    #[test]
+    fn next_deadline_considers_request_deadlines() {
+        let mut r = Router::default();
+        let p = BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(50) };
+        let t0 = Instant::now();
+        let mut a = req(0, 1, t0);
+        a.deadline = Some(t0 + Duration::from_millis(10));
+        r.push(a);
+        // request deadline (t0+10ms) beats the flush deadline (t0+50ms)
+        assert_eq!(r.next_deadline(p), Some(t0 + Duration::from_millis(10)));
     }
 
     #[test]

@@ -24,8 +24,9 @@
 //! request never kills a shard or strands its neighbours.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -34,8 +35,9 @@ use crate::codec;
 use crate::coordinator::cache::LruCache;
 use crate::coordinator::metrics::ServeStats;
 use crate::coordinator::router::{Batch, BatchPolicy, Request};
-use crate::coordinator::shard::{error_response, EngineCore, Msg, Shard};
+use crate::coordinator::shard::{error_response, EngineCore, Msg, Shard, WarmSlot};
 use crate::coordinator::warm::{self, WarmStats};
+use crate::util::prng::{tag, Stream};
 use crate::mcnc::{kernel, GenCfg, Generator};
 use crate::runtime::init::init_inputs;
 use crate::runtime::manifest::{Entry, IoSpec, Role};
@@ -86,6 +88,17 @@ pub struct ServerCfg {
     /// Idle wake-up period of each shard loop. Shards otherwise sleep
     /// until the router's next flush deadline or a new message.
     pub heartbeat: Duration,
+    /// Default per-request deadline applied by `submit`; a request whose
+    /// deadline passes before batch formation is shed with
+    /// [`ServeError::DeadlineExceeded`] instead of executed. `None` = no
+    /// deadline. Per-request overrides via [`Server::submit_with`].
+    pub deadline: Option<Duration>,
+    /// Supervisor policy for restarting a dead shard engine.
+    pub restart: RestartPolicy,
+    /// Dispatcher retry policy on admission backpressure (`Rejected`).
+    pub retry: RetryPolicy,
+    /// Per-shard circuit breaker policy (`threshold` 0 disables).
+    pub breaker: BreakerCfg,
 }
 
 impl Default for ServerCfg {
@@ -101,7 +114,161 @@ impl Default for ServerCfg {
             native_recon: false,
             queue_cap: 1024,
             heartbeat: Duration::from_millis(50),
+            deadline: None,
+            restart: RestartPolicy::default(),
+            retry: RetryPolicy::default(),
+            breaker: BreakerCfg::default(),
         }
+    }
+}
+
+/// How the shard supervisor restarts a dead engine (factory error or a
+/// panic escaping the serving loop). The budget counts *consecutive
+/// unproductive incarnations*: an incarnation that serves at least one
+/// batch resets it, so isolated crashes over a long uptime never add up
+/// to permanent death.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RestartPolicy {
+    /// Consecutive unproductive restarts before the shard is declared
+    /// permanently dead (queued requests are then answered with errors
+    /// until `Stop`). 0 = die on the first crash.
+    pub max_restarts: u32,
+    /// Sleep before the first restart; doubles per consecutive failure.
+    pub backoff: Duration,
+    /// Upper bound on the doubling backoff.
+    pub max_backoff: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            max_restarts: 3,
+            backoff: Duration::from_millis(25),
+            max_backoff: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Bounded dispatcher-side retry on admission backpressure. With
+/// `attempts` 0 (the default) `Rejected` surfaces immediately — existing
+/// explicit-backpressure behaviour is unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first full-queue bounce.
+    pub attempts: u32,
+    /// Base sleep before a re-attempt; doubles per attempt, plus a small
+    /// deterministic per-request jitter (seeded from the server seed and
+    /// the request id) so colliding submitters desynchronize reproducibly.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 0, backoff: Duration::from_millis(1) }
+    }
+}
+
+/// Per-shard circuit breaker policy: after `threshold` consecutive batch
+/// failures the breaker opens and the dispatcher fast-fails new requests
+/// for that shard (`Rejected`, "circuit open") instead of queueing them
+/// into a black hole; after `cooldown` one probe request is let through
+/// (half-open) and its outcome closes or re-opens the breaker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerCfg {
+    /// Consecutive batch failures that open the breaker; 0 disables it.
+    pub threshold: u32,
+    /// How long the breaker stays open before admitting a probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerCfg {
+    fn default() -> Self {
+        BreakerCfg { threshold: 0, cooldown: Duration::from_millis(250) }
+    }
+}
+
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Circuit-breaker state machine shared between one shard's loop (which
+/// records batch outcomes) and the dispatcher (which asks `allow` before
+/// admitting a request). Lock-free on the hot paths; the open timestamp
+/// takes a mutex only on the cold open/probe transitions.
+pub(crate) struct Breaker {
+    cfg: BreakerCfg,
+    state: AtomicU8,
+    fails: AtomicU32,
+    opened_at: Mutex<Option<Instant>>,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerCfg) -> Breaker {
+        Breaker {
+            cfg,
+            state: AtomicU8::new(BREAKER_CLOSED),
+            fails: AtomicU32::new(0),
+            opened_at: Mutex::new(None),
+        }
+    }
+
+    /// Whether the dispatcher may admit a request for this shard. An open
+    /// breaker past its cooldown admits exactly one probe (half-open);
+    /// the probe's batch outcome then closes or re-opens the breaker.
+    pub fn allow(&self) -> bool {
+        if self.cfg.threshold == 0 {
+            return true;
+        }
+        match self.state.load(Ordering::Acquire) {
+            BREAKER_CLOSED => true,
+            BREAKER_HALF_OPEN => false, // a probe is already in flight
+            _ => {
+                let cooled = match self.opened_at.lock() {
+                    Ok(g) => g.map(|t| t.elapsed() >= self.cfg.cooldown).unwrap_or(true),
+                    Err(_) => true,
+                };
+                cooled
+                    && self
+                        .state
+                        .compare_exchange(
+                            BREAKER_OPEN,
+                            BREAKER_HALF_OPEN,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+            }
+        }
+    }
+
+    /// A batch for this shard completed: close the breaker.
+    pub fn record_success(&self) {
+        if self.cfg.threshold == 0 {
+            return;
+        }
+        self.fails.store(0, Ordering::Release);
+        self.state.store(BREAKER_CLOSED, Ordering::Release);
+    }
+
+    /// A batch for this shard failed. Returns `true` when this failure
+    /// opened (or re-opened, for a failed half-open probe) the breaker.
+    pub fn record_failure(&self) -> bool {
+        if self.cfg.threshold == 0 {
+            return false;
+        }
+        let prior = self.state.load(Ordering::Acquire);
+        let fails = self.fails.fetch_add(1, Ordering::AcqRel) + 1;
+        if prior == BREAKER_OPEN {
+            return false; // already open (stale queued batch failing late)
+        }
+        if prior == BREAKER_HALF_OPEN || fails >= self.cfg.threshold {
+            if let Ok(mut g) = self.opened_at.lock() {
+                *g = Some(Instant::now());
+            }
+            self.state.store(BREAKER_OPEN, Ordering::Release);
+            return true;
+        }
+        false
     }
 }
 
@@ -257,11 +424,15 @@ impl NativeRecon {
 /// Why a request did not produce a prediction.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
-    /// Bounced at admission (shard queue full or shard down) — the request
-    /// was never queued; explicit backpressure, retry later.
+    /// Bounced at admission (shard queue full, circuit open, or shard
+    /// down) — the request was never queued; explicit backpressure, retry
+    /// later.
     Rejected(String),
     /// Accepted but failed validation or execution inside the engine.
     Failed(String),
+    /// Accepted but shed at batch formation because its deadline passed
+    /// before the engine could run it — never executed.
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for ServeError {
@@ -269,6 +440,7 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::Rejected(m) => write!(f, "rejected: {m}"),
             ServeError::Failed(m) => write!(f, "failed: {m}"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
         }
     }
 }
@@ -791,11 +963,21 @@ pub struct Server {
     shards: Vec<Shard>,
     next_id: AtomicU64,
     rejected: AtomicU64,
+    retries: AtomicU64,
+    fastfail: AtomicU64,
+    deadline: Option<Duration>,
+    retry: RetryPolicy,
+    seed: u64,
+    /// Warm-artifact path shared with the shard supervisors so restarted
+    /// engines re-warm themselves (set by `preload`).
+    warm: WarmSlot,
 }
 
 impl Server {
     /// Spawn `cfg.n_shards` PJRT engine shards. Each Session is created
-    /// inside its shard thread (PjRtClient is not Send).
+    /// inside its shard thread (PjRtClient is not Send). Errs when a shard
+    /// worker thread cannot be spawned (fd/thread exhaustion) — already-
+    /// spawned shards are stopped and joined before the error surfaces.
     ///
     /// ```no_run
     /// use mcnc::coordinator::{Server, ServerCfg};
@@ -804,13 +986,13 @@ impl Server {
     /// // needs `make artifacts`; see Server::start_with for a
     /// // dependency-free runnable example
     /// let cfg = ServerCfg { n_shards: 4, ..ServerCfg::default() };
-    /// let server = Server::start(artifacts_dir(), cfg);
+    /// let server = Server::start(artifacts_dir(), cfg).unwrap();
     /// let rx = server.submit(0, vec![0; 32]);
     /// let response = rx.recv().unwrap();
     /// println!("{:?}", response.result);
     /// server.stop().unwrap();
     /// ```
-    pub fn start(artifacts: std::path::PathBuf, cfg: ServerCfg) -> Server {
+    pub fn start(artifacts: std::path::PathBuf, cfg: ServerCfg) -> Result<Server> {
         let engine_cfg = cfg.clone();
         Server::start_with(&cfg, move |shard| {
             let session = Session::open(&artifacts).context("opening session")?;
@@ -854,24 +1036,59 @@ impl Server {
     /// let cfg = ServerCfg { n_shards: 2, ..ServerCfg::default() };
     /// let server = Server::start_with(&cfg, |_shard| -> anyhow::Result<Echo> {
     ///     Ok(Echo { stats: ServeStats::default() })
-    /// });
+    /// })
+    /// .unwrap();
     /// let rx = server.submit(1, vec![41, 0, 0, 0]);
     /// assert_eq!(rx.recv().unwrap().next_token(), Some(41));
     /// server.stop().unwrap();
     /// ```
-    pub fn start_with<E, F>(cfg: &ServerCfg, factory: F) -> Server
+    pub fn start_with<E, F>(cfg: &ServerCfg, factory: F) -> Result<Server>
     where
         E: EngineCore,
         F: Fn(usize) -> Result<E> + Send + Clone + 'static,
     {
         let n = cfg.n_shards.max(1);
-        let shards = (0..n)
-            .map(|ix| {
-                let f = factory.clone();
-                Shard::spawn(ix, cfg.policy, cfg.queue_cap, cfg.heartbeat, move || f(ix))
-            })
-            .collect();
-        Server { shards, next_id: AtomicU64::new(0), rejected: AtomicU64::new(0) }
+        let warm: WarmSlot = Arc::new(Mutex::new(None));
+        let mut shards: Vec<Shard> = Vec::with_capacity(n);
+        for ix in 0..n {
+            let f = factory.clone();
+            let breaker = Arc::new(Breaker::new(cfg.breaker));
+            let spawned = Shard::spawn(
+                ix,
+                cfg.policy,
+                cfg.queue_cap,
+                cfg.heartbeat,
+                cfg.restart,
+                Arc::clone(&warm),
+                breaker,
+                move || f(ix),
+            );
+            match spawned {
+                Ok(s) => shards.push(s),
+                Err(e) => {
+                    // refuse to come up half-sharded: stop and join what
+                    // already started, then surface the spawn error
+                    for s in &shards {
+                        let _ = s.tx.send(Msg::Stop);
+                    }
+                    for s in shards {
+                        let _ = s.handle.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Server {
+            shards,
+            next_id: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            fastfail: AtomicU64::new(0),
+            deadline: cfg.deadline,
+            retry: cfg.retry,
+            seed: cfg.seed,
+            warm,
+        })
     }
 
     /// Number of engine shards this server dispatches over.
@@ -888,6 +1105,12 @@ impl Server {
     /// error wins, and per-shard [`WarmStats`] are summed. Call before
     /// opening traffic — preloads share the admission queue with requests.
     pub fn preload(&self, artifact: &std::path::Path) -> Result<WarmStats> {
+        // remember the artifact so a supervisor restart re-warms the
+        // replacement engine from it
+        match self.warm.lock() {
+            Ok(mut g) => *g = Some(artifact.to_path_buf()),
+            Err(p) => *p.into_inner() = Some(artifact.to_path_buf()),
+        }
         let mut acks = Vec::with_capacity(self.shards.len());
         for (ix, s) in self.shards.iter().enumerate() {
             let (tx, rx) = mpsc::channel();
@@ -906,27 +1129,87 @@ impl Server {
         Ok(total)
     }
 
-    /// Submit a request; the returned channel yields exactly one Response
-    /// (a prediction, or an error/rejected outcome — never a hang).
+    /// Submit a request under the server's default deadline; the returned
+    /// channel yields exactly one Response (a prediction, or an
+    /// error/rejected outcome — never a hang).
     pub fn submit(&self, task: usize, tokens: Vec<i32>) -> mpsc::Receiver<Response> {
+        self.submit_with(task, tokens, self.deadline)
+    }
+
+    /// Submit with an explicit per-request deadline (`None` = none),
+    /// overriding the server default. Admission applies, in order: the
+    /// shard's circuit breaker (open → fast `Rejected`), then the bounded
+    /// admission queue with the configured retry-with-jitter on `Full`.
+    /// A `SyncSender` failure of any kind still answers the request — a
+    /// dead shard produces an error Response, never a silent drop.
+    pub fn submit_with(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<Response> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
-        let req = Request { id, task, tokens, enqueued: Instant::now() };
+        let now = Instant::now();
+        let req =
+            Request { id, task, tokens, enqueued: now, deadline: deadline.map(|d| now + d) };
         let shard = task % self.shards.len();
-        let (bounced, err) = match self.shards[shard].tx.try_send(Msg::Req(req, rtx)) {
-            Ok(()) => return rrx,
-            Err(mpsc::TrySendError::Full(msg)) => {
-                self.rejected.fetch_add(1, Ordering::Relaxed);
-                (msg, ServeError::Rejected(format!("shard {shard} admission queue full")))
-            }
-            Err(mpsc::TrySendError::Disconnected(msg)) => {
-                (msg, ServeError::Failed(format!("shard {shard} unavailable")))
+        if !self.shards[shard].breaker.allow() {
+            self.fastfail.fetch_add(1, Ordering::Relaxed);
+            let _ = rtx.send(error_response(
+                &req,
+                ServeError::Rejected(format!("shard {shard} circuit open")),
+            ));
+            return rrx;
+        }
+        let mut msg = Msg::Req(req, rtx);
+        let mut attempt = 0u32;
+        let (bounced, err) = loop {
+            match self.shards[shard].tx.try_send(msg) {
+                Ok(()) => return rrx,
+                Err(mpsc::TrySendError::Full(m)) => {
+                    if attempt >= self.retry.attempts {
+                        self.rejected.fetch_add(1, Ordering::Relaxed);
+                        break (
+                            m,
+                            ServeError::Rejected(format!("shard {shard} admission queue full")),
+                        );
+                    }
+                    attempt += 1;
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    // doubling backoff + deterministic per-(request,
+                    // attempt) jitter so colliding submitters
+                    // desynchronize reproducibly
+                    let base = self.retry.backoff.as_micros() as u64;
+                    let jitter = if base == 0 {
+                        0
+                    } else {
+                        Stream::sub(self.seed ^ id, tag::DATA + attempt as u64).next_u64()
+                            % (base / 2 + 1)
+                    };
+                    let us = base.saturating_mul(1 << (attempt - 1).min(10)) + jitter;
+                    thread::sleep(Duration::from_micros(us));
+                    msg = m;
+                }
+                Err(mpsc::TrySendError::Disconnected(m)) => {
+                    break (m, ServeError::Failed(format!("shard {shard} unavailable")));
+                }
             }
         };
         if let Msg::Req(req, rtx) = bounced {
             let _ = rtx.send(error_response(&req, err));
         }
         rrx
+    }
+
+    /// How long a response collector should wait before declaring a
+    /// request lost: the configured deadline plus a generous margin, or
+    /// two minutes when no deadline is set (see `workload::replay`).
+    pub fn collect_timeout(&self) -> Duration {
+        match self.deadline {
+            Some(d) => d + Duration::from_secs(30),
+            None => Duration::from_secs(120),
+        }
     }
 
     /// Stop after draining every shard; joins all shard threads and merges
@@ -955,6 +1238,8 @@ impl Server {
             }
         }
         total.rejected += self.rejected.load(Ordering::Relaxed);
+        total.retries += self.retries.load(Ordering::Relaxed);
+        total.breaker_fastfail += self.fastfail.load(Ordering::Relaxed);
         match first_err {
             Some(e) => Err(e),
             None => Ok(total),
@@ -1087,6 +1372,49 @@ mod tests {
         let f = ServeError::Failed("bad tokens".into());
         assert!(r.to_string().contains("rejected"));
         assert!(f.to_string().contains("failed"));
+        assert!(ServeError::DeadlineExceeded.to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn breaker_disabled_by_default() {
+        let b = Breaker::new(BreakerCfg::default());
+        for _ in 0..100 {
+            assert!(!b.record_failure(), "threshold 0 must never open");
+            assert!(b.allow());
+        }
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_probes_after_cooldown() {
+        let cfg = BreakerCfg { threshold: 3, cooldown: Duration::from_millis(5) };
+        let b = Breaker::new(cfg);
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert!(b.allow(), "still closed below threshold");
+        assert!(b.record_failure(), "third consecutive failure opens");
+        assert!(!b.allow(), "open: fast-fail before cooldown");
+        std::thread::sleep(Duration::from_millis(6));
+        assert!(b.allow(), "cooled down: one probe admitted");
+        assert!(!b.allow(), "half-open: only one probe in flight");
+        // probe succeeded → closed again
+        b.record_success();
+        assert!(b.allow());
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens() {
+        let cfg = BreakerCfg { threshold: 1, cooldown: Duration::from_millis(2) };
+        let b = Breaker::new(cfg);
+        assert!(b.record_failure(), "threshold 1 opens immediately");
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.allow(), "probe admitted");
+        assert!(b.record_failure(), "failed probe re-opens");
+        assert!(!b.allow(), "back to open, cooldown restarted");
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.allow(), "second probe after second cooldown");
+        b.record_success();
+        assert!(b.allow());
+        assert!(b.allow(), "closed admits freely");
     }
 
     #[test]

@@ -5,23 +5,37 @@
 //! drains a bounded admission channel into its own `Router`.
 //!
 //! Fault isolation is the shard loop's contract: a malformed request is
-//! answered with an error `Response` at ingest, a failing batch produces
-//! error Responses for exactly that batch's requests, and the loop itself
-//! never `?`-aborts on per-request work. The loop also never busy-waits:
-//! between batches it blocks on the channel until the router's next flush
-//! deadline (or a coarse heartbeat when idle).
+//! answered with an error `Response` at ingest, a failing or *panicking*
+//! batch produces error Responses for exactly that batch's requests, and
+//! the loop itself never `?`-aborts on per-request work. Fault *recovery*
+//! is the supervisor's: the shard thread runs `run_loop` under
+//! `catch_unwind`, and when an incarnation dies (engine factory error, or
+//! a panic escaping the loop) it answers every stranded reply channel,
+//! rebuilds the engine with bounded exponential backoff — re-warming from
+//! the preload artifact when one was configured — and resumes serving.
+//! Exhausting the restart budget without serving a single batch marks the
+//! shard permanently dead: queued and future messages are answered with
+//! errors until `Stop`, so the exactly-one-`Response` invariant holds even
+//! for a shard that never comes back.
+//!
+//! The loop also never busy-waits: between batches it blocks on the
+//! channel until the router's next flush deadline — which accounts for
+//! per-request deadlines, so an expired request is shed (answered with
+//! `ServeError::DeadlineExceeded`) instead of waiting out the heartbeat.
 
 use std::collections::HashMap;
+use std::panic::{self, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::metrics::ServeStats;
 use crate::coordinator::router::{Batch, BatchPolicy, Request, Router};
-use crate::coordinator::server::{Response, ServeError};
+use crate::coordinator::server::{Breaker, Response, RestartPolicy, ServeError};
 use crate::coordinator::warm::WarmStats;
 
 /// Messages from the dispatcher to a shard.
@@ -32,6 +46,22 @@ pub(crate) enum Msg {
     Preload(PathBuf, mpsc::Sender<Result<WarmStats>>),
     Stop,
 }
+
+/// Reply bookkeeping for an admitted request. Kept *outside* the engine
+/// loop's unwind boundary (owned by the supervisor, borrowed by
+/// `run_loop`) so a crashing incarnation can still answer every request it
+/// had accepted — the exactly-one-`Response` invariant survives the crash.
+pub(crate) struct PendingReply {
+    task: usize,
+    enqueued: Instant,
+    tx: mpsc::Sender<Response>,
+}
+
+/// Shared slot holding the warm-start artifact path, set by
+/// `Server::preload`. Supervisor restarts read it so a replacement engine
+/// comes back with its adapters installed and its merged LRU pre-filled
+/// instead of serving cold.
+pub(crate) type WarmSlot = Arc<Mutex<Option<PathBuf>>>;
 
 /// The execution engine a shard drives. `server::Engine` (the PJRT-backed
 /// engine) is the production implementation; tests and non-PJRT harnesses
@@ -64,32 +94,38 @@ pub(crate) struct Shard {
     pub tx: mpsc::SyncSender<Msg>,
     /// The worker thread; joining yields the shard's final stats.
     pub handle: thread::JoinHandle<Result<ServeStats>>,
+    /// This shard's circuit breaker, shared with the dispatcher.
+    pub breaker: Arc<Breaker>,
 }
 
 impl Shard {
-    /// Spawn a shard worker. `factory` builds the engine on the shard
-    /// thread (the engine need not be `Send`); a factory error terminates
-    /// the shard, surfaced by `Server::stop`.
+    /// Spawn a shard worker under supervision. `factory` builds the engine
+    /// on the shard thread (the engine need not be `Send`) and is called
+    /// again on every restart. Thread-spawn failure (fd/thread exhaustion)
+    /// surfaces as an `Err` so `Server::start` can refuse to come up
+    /// half-sharded instead of panicking the coordinator.
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn<E, F>(
         ix: usize,
         policy: BatchPolicy,
         queue_cap: usize,
         heartbeat: Duration,
+        restart: RestartPolicy,
+        warm: WarmSlot,
+        breaker: Arc<Breaker>,
         factory: F,
-    ) -> Shard
+    ) -> Result<Shard>
     where
         E: EngineCore,
-        F: FnOnce() -> Result<E> + Send + 'static,
+        F: Fn() -> Result<E> + Send + 'static,
     {
         let (tx, rx) = mpsc::sync_channel(queue_cap.max(1));
+        let b = Arc::clone(&breaker);
         let handle = thread::Builder::new()
             .name(format!("mcnc-shard-{ix}"))
-            .spawn(move || -> Result<ServeStats> {
-                let engine = factory()?;
-                run_loop(engine, rx, policy, heartbeat)
-            })
-            .expect("spawn shard");
-        Shard { tx, handle }
+            .spawn(move || supervise(ix, rx, policy, heartbeat, restart, warm, b, factory))
+            .with_context(|| format!("spawning shard {ix} worker thread"))?;
+        Ok(Shard { tx, handle, breaker })
     }
 }
 
@@ -103,6 +139,151 @@ pub(crate) fn error_response(req: &Request, err: ServeError) -> Response {
     }
 }
 
+/// Answer a stranded pending reply with an error Response.
+fn answer_pending(id: u64, p: PendingReply, err: ServeError) {
+    let _ = p.tx.send(Response {
+        id,
+        task: p.task,
+        result: Err(err),
+        latency: p.enqueued.elapsed(),
+        batch_rows: 0,
+    });
+}
+
+/// Best-effort panic payload message (panics carry `&str` or `String`).
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// The shard supervisor: builds an engine, runs the serving loop under
+/// `catch_unwind`, and on death answers stranded replies and restarts with
+/// bounded exponential backoff. The restart budget counts *consecutive
+/// unproductive incarnations* — an incarnation that served at least one
+/// batch resets it, so a long-lived shard survives any number of isolated
+/// crashes while a shard that can't even start fails fast.
+#[allow(clippy::too_many_arguments)]
+fn supervise<E, F>(
+    ix: usize,
+    rx: mpsc::Receiver<Msg>,
+    policy: BatchPolicy,
+    heartbeat: Duration,
+    restart: RestartPolicy,
+    warm: WarmSlot,
+    breaker: Arc<Breaker>,
+    factory: F,
+) -> Result<ServeStats>
+where
+    E: EngineCore,
+    F: Fn() -> Result<E>,
+{
+    let started = Instant::now();
+    let mut total = ServeStats::default();
+    let mut pending: HashMap<u64, PendingReply> = HashMap::new();
+    let mut unproductive = 0u32;
+    let mut backoff = restart.backoff;
+    loop {
+        let cause = match factory() {
+            Err(e) => format!("engine factory failed: {e:#}"),
+            Ok(mut engine) => {
+                if total.restarts > 0 {
+                    // Re-warm the replacement engine from the preload
+                    // artifact (the original Preload message was consumed
+                    // by a previous incarnation). Best-effort: a failed
+                    // re-warm leaves the shard serving cold, not dead.
+                    let art = match warm.lock() {
+                        Ok(g) => g.clone(),
+                        Err(p) => p.into_inner().clone(),
+                    };
+                    if let Some(path) = art {
+                        let _ = engine.preload(&path);
+                    }
+                }
+                let served = AtomicBool::new(false);
+                let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+                    run_loop(engine, &rx, policy, heartbeat, &mut pending, &breaker, &served)
+                }));
+                match outcome {
+                    Ok(stats) => {
+                        // clean drain after Stop — the only normal exit
+                        total.merge(&stats);
+                        total.wall_secs = started.elapsed().as_secs_f64();
+                        return Ok(total);
+                    }
+                    Err(payload) => {
+                        if served.load(Ordering::Relaxed) {
+                            unproductive = 0;
+                            backoff = restart.backoff;
+                        }
+                        let msg = panic_msg(payload.as_ref());
+                        // the crashed incarnation's router died with it:
+                        // every request it had admitted must be answered
+                        // now or its reply channel hangs forever
+                        for (id, p) in pending.drain() {
+                            total.errors += 1;
+                            answer_pending(
+                                id,
+                                p,
+                                ServeError::Failed(format!(
+                                    "shard {ix} crashed mid-flight: {msg}"
+                                )),
+                            );
+                        }
+                        format!("crashed: {msg}")
+                    }
+                }
+            }
+        };
+        unproductive += 1;
+        if unproductive > restart.max_restarts {
+            total.wall_secs = started.elapsed().as_secs_f64();
+            drain_dead(&rx, ix, &cause, &mut total, &mut pending);
+            return Err(anyhow!(
+                "shard {ix} permanently dead after {unproductive} failed incarnations ({cause})"
+            ));
+        }
+        total.restarts += 1;
+        thread::sleep(backoff);
+        backoff = (backoff * 2).min(restart.max_backoff.max(restart.backoff));
+    }
+}
+
+/// Terminal state of a permanently dead shard: answer everything queued
+/// (and everything still arriving) with an error until `Stop`, so no reply
+/// channel ever hangs on a shard that will not come back.
+fn drain_dead(
+    rx: &mpsc::Receiver<Msg>,
+    ix: usize,
+    cause: &str,
+    total: &mut ServeStats,
+    pending: &mut HashMap<u64, PendingReply>,
+) {
+    for (id, p) in pending.drain() {
+        total.errors += 1;
+        answer_pending(id, p, ServeError::Failed(format!("shard {ix} dead: {cause}")));
+    }
+    loop {
+        match rx.recv() {
+            Ok(Msg::Stop) | Err(_) => break,
+            Ok(Msg::Preload(_, ack)) => {
+                let _ = ack.send(Err(anyhow!("shard {ix} dead: {cause}")));
+            }
+            Ok(Msg::Req(req, reply)) => {
+                total.errors += 1;
+                let _ = reply.send(error_response(
+                    &req,
+                    ServeError::Failed(format!("shard {ix} dead: {cause}")),
+                ));
+            }
+        }
+    }
+}
+
 /// Ingest one message: validate the request (wrong token count / unknown
 /// task answer immediately with an error Response — they must never poison
 /// a batch) or queue it for batching.
@@ -110,7 +291,7 @@ fn ingest<E: EngineCore>(
     msg: Msg,
     engine: &mut E,
     router: &mut Router,
-    pending: &mut HashMap<u64, mpsc::Sender<Response>>,
+    pending: &mut HashMap<u64, PendingReply>,
     stopping: &mut bool,
 ) {
     match msg {
@@ -121,40 +302,54 @@ fn ingest<E: EngineCore>(
             let _ = ack.send(engine.preload(&artifact));
         }
         Msg::Req(req, reply) => {
+            // register the reply channel *before* touching the engine: if
+            // validation itself panics (a dying engine), the supervisor
+            // can still answer this request from the pending map
+            pending.insert(
+                req.id,
+                PendingReply { task: req.task, enqueued: req.enqueued, tx: reply },
+            );
             let seq = engine.seq();
-            if req.tokens.len() != seq {
-                engine.stats_mut().errors += 1;
-                let _ = reply.send(error_response(
-                    &req,
-                    ServeError::Failed(format!(
-                        "request {} has {} tokens, executable wants {seq}",
-                        req.id,
-                        req.tokens.len()
-                    )),
-                ));
+            let verdict = if req.tokens.len() != seq {
+                Some(format!(
+                    "request {} has {} tokens, executable wants {seq}",
+                    req.id,
+                    req.tokens.len()
+                ))
             } else if !engine.has_task(req.task) {
-                engine.stats_mut().errors += 1;
-                let _ = reply.send(error_response(
-                    &req,
-                    ServeError::Failed(format!("unknown task {}", req.task)),
-                ));
+                Some(format!("unknown task {}", req.task))
             } else {
-                pending.insert(req.id, reply);
-                router.push(req);
+                None
+            };
+            match verdict {
+                Some(msg) => {
+                    engine.stats_mut().errors += 1;
+                    if let Some(p) = pending.remove(&req.id) {
+                        let _ = p.tx.send(error_response(&req, ServeError::Failed(msg)));
+                    }
+                }
+                None => router.push(req),
             }
         }
     }
 }
 
-/// The shard worker loop. Returns the engine's final stats when drained.
+/// The shard worker loop for one engine incarnation. Returns the engine's
+/// final stats when drained after `Stop`; a panic escaping this function
+/// (engine death during ingest/validation) is the supervisor's restart
+/// signal. `pending` is owned by the supervisor so an unwind cannot strand
+/// reply channels; `served` reports whether this incarnation completed at
+/// least one batch (it resets the restart budget).
 pub(crate) fn run_loop<E: EngineCore>(
     mut engine: E,
-    rx: mpsc::Receiver<Msg>,
+    rx: &mpsc::Receiver<Msg>,
     policy: BatchPolicy,
     heartbeat: Duration,
-) -> Result<ServeStats> {
+    pending: &mut HashMap<u64, PendingReply>,
+    breaker: &Breaker,
+    served: &AtomicBool,
+) -> ServeStats {
     let mut router = Router::default();
-    let mut pending: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
     let started = Instant::now();
     let mut stopping = false;
     loop {
@@ -162,7 +357,7 @@ pub(crate) fn run_loop<E: EngineCore>(
         // 1) ingest everything already queued, without blocking
         loop {
             match rx.try_recv() {
-                Ok(msg) => ingest(msg, &mut engine, &mut router, &mut pending, &mut stopping),
+                Ok(msg) => ingest(msg, &mut engine, &mut router, pending, &mut stopping),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     stopping = true;
@@ -170,10 +365,20 @@ pub(crate) fn run_loop<E: EngineCore>(
                 }
             }
         }
-        // 2) dispatch every ready batch; batch failures answer that batch's
-        //    requests with errors and the loop keeps serving
+        // 2) dispatch every ready batch; batch failures (and contained
+        //    batch panics) answer that batch's requests with errors and
+        //    the loop keeps serving
         loop {
             let now = Instant::now();
+            // shed expired requests at batch formation: they are answered
+            // with DeadlineExceeded and never packed into a batch
+            router.sweep_expired(now);
+            for req in router.take_expired() {
+                engine.stats_mut().deadline_shed += 1;
+                if let Some(p) = pending.remove(&req.id) {
+                    let _ = p.tx.send(error_response(&req, ServeError::DeadlineExceeded));
+                }
+            }
             let Some(batch) = router.next_batch(policy, now, stopping) else {
                 break;
             };
@@ -181,9 +386,21 @@ pub(crate) fn run_loop<E: EngineCore>(
                 engine.stats_mut().queue_wait.record(now.duration_since(req.enqueued));
             }
             let rows = batch.requests.len();
+            // contain a panicking batch: its requests are answered Failed
+            // below, exactly like a batch that returned Err, and the loop
+            // keeps serving the other tasks
+            let outcome = match panic::catch_unwind(AssertUnwindSafe(|| {
+                engine.run_batch(&batch)
+            })) {
+                Ok(res) => res,
+                Err(payload) => {
+                    engine.stats_mut().batch_panics += 1;
+                    Err(anyhow!("batch panicked: {}", panic_msg(payload.as_ref())))
+                }
+            };
             // a short prediction vector would strand the unmatched
             // requests' reply channels below — surface it as a batch error
-            let outcome = engine.run_batch(&batch).and_then(|preds| {
+            let outcome = outcome.and_then(|preds| {
                 if preds.len() != rows {
                     bail!("engine returned {} predictions for {rows} requests", preds.len());
                 }
@@ -191,12 +408,14 @@ pub(crate) fn run_loop<E: EngineCore>(
             });
             match outcome {
                 Ok(preds) => {
+                    served.store(true, Ordering::Relaxed);
+                    breaker.record_success();
                     let done = Instant::now();
                     for (req, tok) in batch.requests.iter().zip(preds) {
                         let latency = done.duration_since(req.enqueued);
                         engine.stats_mut().latency.record(latency);
-                        if let Some(reply) = pending.remove(&req.id) {
-                            let _ = reply.send(Response {
+                        if let Some(p) = pending.remove(&req.id) {
+                            let _ = p.tx.send(Response {
                                 id: req.id,
                                 task: req.task,
                                 result: Ok(tok),
@@ -207,12 +426,15 @@ pub(crate) fn run_loop<E: EngineCore>(
                     }
                 }
                 Err(e) => {
+                    if breaker.record_failure() {
+                        engine.stats_mut().breaker_opens += 1;
+                    }
                     let done = Instant::now();
                     let msg = format!("batch failed: {e:#}");
                     for req in &batch.requests {
                         engine.stats_mut().errors += 1;
-                        if let Some(reply) = pending.remove(&req.id) {
-                            let _ = reply.send(Response {
+                        if let Some(p) = pending.remove(&req.id) {
+                            let _ = p.tx.send(Response {
                                 id: req.id,
                                 task: req.task,
                                 result: Err(ServeError::Failed(msg.clone())),
@@ -227,19 +449,21 @@ pub(crate) fn run_loop<E: EngineCore>(
         if stopping && router.is_empty() {
             break;
         }
-        // 3) block until the next router flush deadline (or the heartbeat
-        //    when idle) — no 200µs spin; new messages wake us immediately
+        // 3) block until the next router flush deadline — which includes
+        //    queued requests' own deadlines, so expired requests are shed
+        //    promptly — or the heartbeat when idle; no 200µs spin, and new
+        //    messages wake us immediately
         let now = Instant::now();
         let wait = match router.next_deadline(policy) {
             Some(d) => d.saturating_duration_since(now).min(heartbeat),
             None => heartbeat,
         };
         match rx.recv_timeout(wait) {
-            Ok(msg) => ingest(msg, &mut engine, &mut router, &mut pending, &mut stopping),
+            Ok(msg) => ingest(msg, &mut engine, &mut router, pending, &mut stopping),
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => stopping = true,
         }
     }
     engine.stats_mut().wall_secs = started.elapsed().as_secs_f64();
-    Ok(engine.into_stats())
+    engine.into_stats()
 }

@@ -16,6 +16,11 @@
 //! the tasks they own), and each shard's `Engine::warm_from_artifact`
 //! fans frame decode across the thread pool via the codec `Decoder`'s
 //! `decode_all`.
+//!
+//! The artifact path also outlives the first preload: `Server::preload`
+//! parks it in a slot the shard supervisors read, so an engine rebuilt
+//! after a crash re-warms itself from the same artifact and comes back
+//! with its adapters installed instead of serving cold (see `shard.rs`).
 
 use std::collections::BTreeMap;
 use std::io::Write;

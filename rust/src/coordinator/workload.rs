@@ -4,6 +4,8 @@
 
 use std::time::Duration;
 
+use anyhow::{bail, Result};
+
 use crate::util::prng::{tag, Stream};
 
 /// Zipf sampler over `n` tasks with exponent `s` (s=0 → uniform).
@@ -14,21 +16,41 @@ pub struct Zipf {
 
 impl Zipf {
     /// Build the cumulative distribution for `n` tasks, exponent `s`.
-    pub fn new(n: usize, s: f64) -> Zipf {
+    /// Validates up front — a non-finite exponent (NaN/∞) would poison
+    /// the cumulative weights and a zero task count has nothing to draw —
+    /// so `sample` can never hit an unordered comparison.
+    pub fn try_new(n: usize, s: f64) -> Result<Zipf> {
+        if n == 0 {
+            bail!("Zipf over 0 tasks has nothing to sample");
+        }
+        if !s.is_finite() {
+            bail!("Zipf exponent must be finite, got {s}");
+        }
         let mut w: Vec<f64> = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect();
         let total: f64 = w.iter().sum();
+        if !total.is_finite() || total <= 0.0 {
+            bail!("Zipf weights degenerate (sum {total}) for n={n}, s={s}");
+        }
         let mut acc = 0.0;
         for x in w.iter_mut() {
             acc += *x / total;
             *x = acc;
         }
-        Zipf { cum: w }
+        Ok(Zipf { cum: w })
+    }
+
+    /// `try_new` for known-good parameters; panics with the validation
+    /// message on bad input (callers with operator-supplied exponents
+    /// should use [`Zipf::try_new`]).
+    pub fn new(n: usize, s: f64) -> Zipf {
+        Zipf::try_new(n, s).expect("invalid Zipf parameters")
     }
 
     /// Draw one task id from the distribution.
     pub fn sample(&self, s: &mut Stream) -> usize {
         let u = s.next_unit_f32() as f64;
-        match self.cum.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        // total order: cum is finite by construction, u is finite
+        match self.cum.binary_search_by(|p| p.total_cmp(&u)) {
             Ok(i) | Err(i) => i.min(self.cum.len() - 1),
         }
     }
@@ -82,22 +104,39 @@ pub struct ReplayReport {
     pub rejected: usize,
     /// Requests answered with an execution/validation error.
     pub failed: usize,
+    /// Requests shed because their deadline passed before execution.
+    pub deadline_exceeded: usize,
     /// Receivers that closed without any Response (a dead shard).
     pub dropped: usize,
-    /// Receivers still pending after the 120s collection timeout (shard
-    /// alive but backlogged; the late Response is discarded).
+    /// Receivers still pending after the collection timeout (shard alive
+    /// but backlogged; the late Response is discarded).
     pub timed_out: usize,
 }
 
 /// Replay `schedule` against a running server open-loop: sleep to each
 /// arrival time, submit, then collect every response. This is the shared
 /// driver of the serve CLI, the adapter_server example and the Table-4
-/// bench, so all three exercise the coordinator identically.
+/// bench, so all three exercise the coordinator identically. Stragglers
+/// are waited on for the server's [`collect_timeout`] — the configured
+/// request deadline plus a margin, or 120s without one.
+///
+/// [`collect_timeout`]: crate::coordinator::server::Server::collect_timeout
 pub fn replay(
     server: &crate::coordinator::server::Server,
     lm: &crate::data::MarkovLm,
     token_seed: u64,
     schedule: &[Arrival],
+) -> ReplayReport {
+    replay_with(server, lm, token_seed, schedule, server.collect_timeout())
+}
+
+/// [`replay`] with an explicit per-response collection timeout.
+pub fn replay_with(
+    server: &crate::coordinator::server::Server,
+    lm: &crate::data::MarkovLm,
+    token_seed: u64,
+    schedule: &[Arrival],
+    collect_timeout: Duration,
 ) -> ReplayReport {
     use crate::coordinator::server::ServeError;
     let started = std::time::Instant::now();
@@ -110,12 +149,13 @@ pub fn replay(
     }
     let mut rep = ReplayReport::default();
     for rx in rxs {
-        match rx.recv_timeout(Duration::from_secs(120)) {
+        match rx.recv_timeout(collect_timeout) {
             Ok(resp) => {
                 match &resp.result {
                     Ok(_) => rep.ok += 1,
                     Err(ServeError::Rejected(_)) => rep.rejected += 1,
                     Err(ServeError::Failed(_)) => rep.failed += 1,
+                    Err(ServeError::DeadlineExceeded) => rep.deadline_exceeded += 1,
                 }
                 rep.responses.push(resp);
             }
@@ -153,6 +193,14 @@ mod tests {
         for &c in &counts {
             assert!((700..1300).contains(&c), "{counts:?}");
         }
+    }
+
+    #[test]
+    fn zipf_rejects_degenerate_parameters() {
+        assert!(Zipf::try_new(0, 1.0).is_err(), "no tasks");
+        assert!(Zipf::try_new(8, f64::NAN).is_err(), "NaN exponent");
+        assert!(Zipf::try_new(8, f64::INFINITY).is_err(), "infinite exponent");
+        assert!(Zipf::try_new(8, 1.0).is_ok());
     }
 
     #[test]

@@ -7,8 +7,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use mcnc::codec::Codec;
-use mcnc::coordinator::workload::{open_loop, replay};
-use mcnc::coordinator::{BatchPolicy, Mode, Server, ServerCfg};
+use mcnc::coordinator::workload::{open_loop, replay, Zipf};
+use mcnc::coordinator::{
+    BatchPolicy, BreakerCfg, Mode, RestartPolicy, RetryPolicy, Server, ServerCfg,
+};
 use mcnc::data::{Dataset, MarkovLm, SynthVision};
 use mcnc::mcnc::{Act, GenCfg, Generator};
 use mcnc::runtime::{artifacts_dir, Session};
@@ -66,7 +68,8 @@ const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 re
   info    [--group G]            list artifact executables (+ meta)
   train   --exec NAME [--steps N --lr F --batch B --seed S --out CK --codec lossless|int8|int4 --block N --data synth|c10|c100|lm]
   eval    --ckpt FILE [--seed S]
-  serve   [--kind K --tasks N --shards N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S --queue-cap N --preload FILE]
+  serve   [--kind K --tasks N --shards N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S --queue-cap N --preload FILE
+           --deadline-ms MS --max-restarts N --retry N --breaker K]
   sphere  [--acts sine,sigmoid,relu --l 1,5,10,100 --width 256]
   config  --file cfg.toml        config-driven training job
   pack    --ckpt FILE --out FILE [--codec lossless|int8|int4 --block N]
@@ -82,7 +85,16 @@ Global flags / env:
                   thread count
   --preload FILE  (serve) warm-start every shard from FILE before traffic:
                   adapters install and, with --merged --native-recon, each
-                  task's full θ is pre-reconstructed into the merged LRU
+                  task's full θ is pre-reconstructed into the merged LRU;
+                  restarted shards re-warm from the same artifact
+  --deadline-ms N (serve) per-request deadline: requests not batched within
+                  N ms are shed with a deadline-exceeded error (0 = none)
+  --max-restarts N (serve) consecutive unproductive engine restarts before a
+                  crashed shard is declared permanently dead (default 3)
+  --retry N       (serve) dispatcher re-attempts (with backoff + jitter) on
+                  a full admission queue before surfacing Rejected (default 0)
+  --breaker K     (serve) open a shard's circuit breaker after K consecutive
+                  batch failures; 0 disables (default)
   MCNC_SIMD=x     pin the reconstruction microkernel ISA: scalar|avx2|neon|auto
                   (default auto probes the host; unavailable ISAs fall back
                   to scalar)
@@ -213,12 +225,28 @@ fn serve_cmd(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 1),
         native_recon: args.bool_or("native-recon", false),
         queue_cap: args.usize_or("queue-cap", 1024),
+        deadline: match args.u64_or("deadline-ms", 0) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
+        restart: RestartPolicy {
+            max_restarts: args.u32_or("max-restarts", RestartPolicy::default().max_restarts),
+            ..RestartPolicy::default()
+        },
+        retry: RetryPolicy { attempts: args.u32_or("retry", 0), ..RetryPolicy::default() },
+        breaker: BreakerCfg {
+            threshold: args.u32_or("breaker", 0),
+            ..BreakerCfg::default()
+        },
         ..ServerCfg::default()
     };
     let rate = args.f32_or("rate", 200.0) as f64;
     let secs = args.f32_or("secs", 5.0) as f64;
     let zipf_s = args.f32_or("zipf", 1.0) as f64;
     let n_tasks = cfg.n_tasks;
+    // an operator-supplied NaN/∞ exponent must fail here, not panic the
+    // workload generator mid-run
+    Zipf::try_new(n_tasks, zipf_s).context("--zipf")?;
 
     println!(
         "serving {} ({:?}), {} tasks on {} shard(s), {:.0} req/s for {:.0}s …",
@@ -227,7 +255,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let lm = MarkovLm::base(1, 128, 32);
     let schedule =
         open_loop(7, rate, std::time::Duration::from_secs_f64(secs), n_tasks, zipf_s);
-    let server = Server::start(artifacts_dir(), cfg);
+    let server = Server::start(artifacts_dir(), cfg)?;
     if args.has("preload") {
         let path = args.require("preload")?;
         if path == "true" {
@@ -244,11 +272,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let rep = replay(&server, &lm, 9, &schedule);
     let stats = server.stop()?;
     println!(
-        "ok {}/{} (rejected {} failed {} dropped {} timed-out {}) | throughput {:.1} req/s | p50 {:?} p99 {:?} | queue p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
+        "ok {}/{} (rejected {} failed {} deadline-exceeded {} dropped {} timed-out {}) | throughput {:.1} req/s | p50 {:?} p99 {:?} | queue p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
         rep.ok,
         schedule.len(),
         rep.rejected,
         rep.failed,
+        rep.deadline_exceeded,
         rep.dropped,
         rep.timed_out,
         stats.throughput(),
@@ -259,6 +288,17 @@ fn serve_cmd(args: &Args) -> Result<()> {
         stats.occupancy(),
         stats.recon_flops as f64 / 1e9,
     );
+    if stats.restarts + stats.deadline_shed + stats.batch_panics + stats.breaker_opens > 0 {
+        println!(
+            "fault recovery: {} shard restart(s), {} request(s) shed at deadline, {} contained batch panic(s), {} breaker open(s), {} breaker fast-fail(s), {} admission retry(s)",
+            stats.restarts,
+            stats.deadline_shed,
+            stats.batch_panics,
+            stats.breaker_opens,
+            stats.breaker_fastfail,
+            stats.retries,
+        );
+    }
     Ok(())
 }
 

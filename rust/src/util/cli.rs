@@ -67,6 +67,10 @@ impl Args {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    pub fn u32_or(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
     pub fn f32_or(&self, key: &str, default: f32) -> f32 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -124,7 +128,15 @@ mod tests {
         let a = args("");
         assert_eq!(a.str_or("name", "dflt"), "dflt");
         assert_eq!(a.u64_or("seed", 42), 42);
+        assert_eq!(a.u32_or("retry", 3), 3);
         assert!(!a.bool_or("x", false));
+    }
+
+    #[test]
+    fn u32_parses_and_falls_back() {
+        let a = args("--retry 5 --breaker not-a-number");
+        assert_eq!(a.u32_or("retry", 0), 5);
+        assert_eq!(a.u32_or("breaker", 2), 2);
     }
 
     #[test]

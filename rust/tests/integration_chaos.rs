@@ -1,0 +1,370 @@
+//! Fault-tolerance integration tests: the deterministic chaos harness
+//! (`coordinator::chaos`) driving the supervised serving coordinator.
+//! Everything here runs on mock engines with pinned seeds — no PJRT
+//! artifacts — so the fault schedules are byte-identical on every run and
+//! the assertions are exact:
+//!
+//! * every submitted request receives exactly one `Response` across
+//!   {batch panic, batch error, slow batch, shard kill} × {1, 2, 4}
+//!   shards, and traffic converges to 100% success once the schedule is
+//!   exhausted;
+//! * contained batch faults (panics / errors) never restart a shard;
+//! * a shard kill forces a supervisor restart that re-warms the
+//!   replacement engine from the preload artifact (task coverage proves
+//!   the re-warm happened);
+//! * expired requests are shed with `DeadlineExceeded`, not `Failed`;
+//! * the circuit breaker opens after consecutive batch failures,
+//!   fast-fails while open, and recovers through a half-open probe;
+//! * injected preload / factory failures are absorbed (the shard keeps
+//!   serving cold, or comes up after backoff), and a permanently dead
+//!   shard answers every request with an error instead of hanging.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use mcnc::coordinator::{
+    Batch, BatchPolicy, BreakerCfg, Chaos, ChaosCfg, EngineCore, FaultyEngine, RestartPolicy,
+    ServeError, ServeStats, Server, ServerCfg, WarmStats,
+};
+
+/// Healthy inner engine the chaos wrapper injects faults around. With
+/// `require_warm`, task coverage only exists after a `preload` — so a
+/// restarted engine that still serves proves the supervisor re-warmed it.
+struct ChaosMock {
+    n_tasks: usize,
+    require_warm: bool,
+    warmed: bool,
+    stats: ServeStats,
+}
+
+impl ChaosMock {
+    fn new(n_tasks: usize) -> ChaosMock {
+        ChaosMock { n_tasks, require_warm: false, warmed: false, stats: ServeStats::default() }
+    }
+}
+
+impl EngineCore for ChaosMock {
+    fn seq(&self) -> usize {
+        8
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        task < self.n_tasks && (!self.require_warm || self.warmed)
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        self.stats.batches += 1;
+        Ok(batch.requests.iter().map(|r| r.task as i32).collect())
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+
+    fn preload(&mut self, _artifact: &Path) -> Result<WarmStats> {
+        self.warmed = true;
+        Ok(WarmStats { installed: self.n_tasks, prefilled: 0, skipped: 0 })
+    }
+}
+
+fn chaos_cfg(n_shards: usize, n_tasks: usize) -> ServerCfg {
+    ServerCfg {
+        n_tasks,
+        n_shards,
+        policy: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
+        heartbeat: Duration::from_millis(10),
+        ..ServerCfg::default()
+    }
+}
+
+fn chaos_server(n_shards: usize, n_tasks: usize, chaos: &Chaos, require_warm: bool) -> Server {
+    let cfg = chaos_cfg(n_shards, n_tasks);
+    let c = chaos.clone();
+    Server::start_with(&cfg, move |_shard| -> Result<FaultyEngine<ChaosMock>> {
+        c.factory_gate()?;
+        let mut inner = ChaosMock::new(n_tasks);
+        inner.require_warm = require_warm;
+        Ok(c.wrap(inner))
+    })
+    .expect("start chaos server")
+}
+
+fn recv(rx: std::sync::mpsc::Receiver<mcnc::coordinator::Response>) -> mcnc::coordinator::Response {
+    rx.recv_timeout(Duration::from_secs(30)).expect("response")
+}
+
+#[test]
+fn every_request_answered_exactly_once_under_faults() {
+    // the acceptance matrix: {panic, error, slow, kill} × {1, 2, 4} shards
+    for (n_shards, seed) in [(1usize, 101u64), (2, 202), (4, 404)] {
+        let chaos = Chaos::new(ChaosCfg {
+            seed,
+            window: 12,
+            panics: 2,
+            errors: 2,
+            slows: 1,
+            slow_for: Duration::from_millis(2),
+            kills: 1,
+            ..ChaosCfg::default()
+        });
+        let n_tasks = 4;
+        let server = chaos_server(n_shards, n_tasks, &chaos, false);
+        for _wave in 0..200 {
+            if chaos.exhausted() {
+                break;
+            }
+            let rxs: Vec<_> = (0..n_tasks).map(|t| server.submit(t, vec![0; 8])).collect();
+            for rx in rxs {
+                let r = recv(rx);
+                match &r.result {
+                    Ok(tok) => assert_eq!(*tok, r.task as i32),
+                    Err(ServeError::Failed(_)) => {}
+                    Err(e) => panic!("unexpected outcome under faults: {e:?}"),
+                }
+                // exactly one Response per request, never a second
+                assert!(rx.try_recv().is_err(), "second response for request {}", r.id);
+            }
+        }
+        assert!(chaos.exhausted(), "{n_shards} shards: fault schedule never completed");
+        let rep = chaos.report();
+        assert_eq!((rep.panics, rep.errors, rep.slows, rep.kills), (2, 2, 1, 1));
+        // post-schedule: traffic converges back to 100% success
+        let rxs: Vec<_> = (0..n_tasks).map(|t| server.submit(t, vec![0; 8])).collect();
+        for rx in rxs {
+            let r = recv(rx);
+            assert!(r.is_ok(), "{n_shards} shards, post-schedule failure: {:?}", r.result);
+        }
+        let stats = server.stop().expect("no shard may die permanently");
+        assert_eq!(stats.restarts, 1, "{n_shards} shards: the kill forces exactly one restart");
+    }
+}
+
+#[test]
+fn batch_panics_and_errors_are_contained_without_restarts() {
+    let chaos =
+        Chaos::new(ChaosCfg { seed: 9, window: 12, panics: 3, errors: 3, ..ChaosCfg::default() });
+    let n_tasks = 4;
+    let server = chaos_server(2, n_tasks, &chaos, false);
+    let mut failed = 0usize;
+    for _wave in 0..200 {
+        if chaos.exhausted() {
+            break;
+        }
+        let rxs: Vec<_> = (0..n_tasks).map(|t| server.submit(t, vec![0; 8])).collect();
+        for rx in rxs {
+            let r = recv(rx);
+            match &r.result {
+                Ok(_) => {}
+                Err(ServeError::Failed(m)) => {
+                    failed += 1;
+                    assert!(m.contains("chaos: injected batch"), "{m}");
+                }
+                Err(e) => panic!("unexpected outcome: {e:?}"),
+            }
+        }
+    }
+    assert!(chaos.exhausted());
+    let rep = chaos.report();
+    assert_eq!((rep.panics, rep.errors), (3, 3));
+    // one request per batch here, so each faulted batch fails exactly one
+    assert_eq!(failed, 6, "each injected fault answers its batch with Failed");
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.restarts, 0, "contained batch faults never restart a shard");
+    assert_eq!(stats.batch_panics, 3, "every contained panic is counted");
+    assert_eq!(stats.errors, 6);
+}
+
+#[test]
+fn restart_rewarms_replacement_engine_from_preload_artifact() {
+    let chaos = Chaos::new(ChaosCfg { seed: 5, window: 6, kills: 1, ..ChaosCfg::default() });
+    let n_tasks = 2;
+    let server = chaos_server(1, n_tasks, &chaos, true);
+    // before the preload the engine serves nothing: coverage is warm-only
+    let r = recv(server.submit(0, vec![0; 8]));
+    assert!(matches!(r.result, Err(ServeError::Failed(_))), "{:?}", r.result);
+    let warm = server.preload(Path::new("chaos-warm.mcnc2")).unwrap();
+    assert_eq!(warm.installed, n_tasks);
+    // drive traffic until the scheduled kill fires and the shard restarts
+    for _wave in 0..200 {
+        if chaos.exhausted() {
+            break;
+        }
+        let rxs: Vec<_> = (0..n_tasks).map(|t| server.submit(t, vec![0; 8])).collect();
+        for rx in rxs {
+            let r = recv(rx);
+            assert!(
+                r.is_ok() || matches!(r.result, Err(ServeError::Failed(_))),
+                "{:?}",
+                r.result
+            );
+        }
+    }
+    assert!(chaos.exhausted());
+    assert_eq!(chaos.report().kills, 1);
+    // the replacement engine re-warmed itself from the parked artifact:
+    // it still has task coverage, so traffic succeeds instead of failing
+    // with "unknown task" from a cold rebuild
+    let r = recv(server.submit(1, vec![0; 8]));
+    assert!(r.is_ok(), "restarted shard lost its warm coverage: {:?}", r.result);
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.restarts, 1);
+}
+
+#[test]
+fn expired_requests_shed_with_deadline_exceeded_not_failed() {
+    let cfg = ServerCfg {
+        // a zero deadline expires at submission: every request must be
+        // shed at batch formation, deterministically
+        deadline: Some(Duration::ZERO),
+        ..chaos_cfg(1, 2)
+    };
+    let server = Server::start_with(&cfg, |_| -> Result<ChaosMock> { Ok(ChaosMock::new(2)) })
+        .expect("start");
+    for i in 0..8 {
+        let r = recv(server.submit(i % 2, vec![0; 8]));
+        assert_eq!(r.result, Err(ServeError::DeadlineExceeded), "request {i}");
+    }
+    // per-request override: no deadline → served normally
+    let r = recv(server.submit_with(0, vec![0; 8], None));
+    assert!(r.is_ok(), "{:?}", r.result);
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.deadline_shed, 8);
+    assert_eq!(stats.errors, 0, "shedding is not an execution error");
+    assert_eq!(stats.latency.count(), 1, "only the deadline-free request completed");
+}
+
+/// Engine whose batches fail until `healthy` flips — drives the breaker
+/// through open → half-open → closed deterministically.
+struct FlakyMock {
+    healthy: Arc<AtomicBool>,
+    stats: ServeStats,
+}
+
+impl EngineCore for FlakyMock {
+    fn seq(&self) -> usize {
+        8
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        task < 4
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        if !self.healthy.load(Ordering::SeqCst) {
+            anyhow::bail!("induced batch failure");
+        }
+        self.stats.batches += 1;
+        Ok(batch.requests.iter().map(|_| 0).collect())
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+}
+
+#[test]
+fn breaker_opens_fast_fails_and_recovers_via_probe() {
+    let healthy = Arc::new(AtomicBool::new(false));
+    let cfg = ServerCfg {
+        policy: BatchPolicy { max_batch: 1, max_delay: Duration::ZERO },
+        breaker: BreakerCfg { threshold: 3, cooldown: Duration::from_millis(20) },
+        ..chaos_cfg(1, 4)
+    };
+    let h = Arc::clone(&healthy);
+    let server = Server::start_with(&cfg, move |_| -> Result<FlakyMock> {
+        Ok(FlakyMock { healthy: Arc::clone(&h), stats: ServeStats::default() })
+    })
+    .expect("start");
+    // three consecutive batch failures open the breaker (the breaker is
+    // updated before the batch's responses are sent, so sequential
+    // submit/recv pairs observe it deterministically)
+    for _ in 0..3 {
+        let r = recv(server.submit(0, vec![0; 8]));
+        assert!(matches!(r.result, Err(ServeError::Failed(_))), "{:?}", r.result);
+    }
+    // open: the dispatcher fast-fails before the admission queue
+    let r = recv(server.submit(0, vec![0; 8]));
+    match &r.result {
+        Err(ServeError::Rejected(m)) => assert!(m.contains("circuit open"), "{m}"),
+        other => panic!("expected a circuit-open rejection, got {other:?}"),
+    }
+    // heal the engine and wait out the cooldown: exactly one probe is
+    // admitted (half-open), succeeds, and closes the breaker
+    healthy.store(true, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(30));
+    let r = recv(server.submit(0, vec![0; 8]));
+    assert!(r.is_ok(), "probe should close the breaker: {:?}", r.result);
+    let r = recv(server.submit(0, vec![0; 8]));
+    assert!(r.is_ok(), "closed breaker serves normally: {:?}", r.result);
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.breaker_opens, 1);
+    assert!(stats.breaker_fastfail >= 1);
+    assert_eq!(stats.restarts, 0, "the breaker absorbs failures without restarts");
+}
+
+#[test]
+fn injected_preload_failure_leaves_the_shard_serving() {
+    let chaos = Chaos::new(ChaosCfg { seed: 3, preload_fails: 1, ..ChaosCfg::default() });
+    let server = chaos_server(1, 2, &chaos, false);
+    let err = server.preload(Path::new("warm.mcnc2")).unwrap_err();
+    assert!(format!("{err:#}").contains("injected preload failure"), "{err:#}");
+    let r = recv(server.submit(0, vec![0; 8]));
+    assert!(r.is_ok(), "a failed preload must not take the shard down: {:?}", r.result);
+    // the failure budget is spent: a retry goes through
+    server.preload(Path::new("warm.mcnc2")).unwrap();
+    assert_eq!(chaos.report().preload_fails, 1);
+    server.stop().unwrap();
+}
+
+#[test]
+fn factory_failure_is_absorbed_by_restart_backoff() {
+    let chaos = Chaos::new(ChaosCfg { seed: 2, factory_fails: 1, ..ChaosCfg::default() });
+    let server = chaos_server(1, 2, &chaos, false);
+    let r = recv(server.submit(0, vec![0; 8]));
+    assert!(r.is_ok(), "shard must come up after the factory failure: {:?}", r.result);
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.restarts, 1);
+    assert_eq!(chaos.report().factory_fails, 1);
+}
+
+#[test]
+fn permanently_dead_shard_answers_instead_of_hanging() {
+    // more factory failures than the restart budget: the shard dies for
+    // good, and every queued or late request must still get a Response
+    let chaos = Chaos::new(ChaosCfg { seed: 1, factory_fails: 8, ..ChaosCfg::default() });
+    let cfg = ServerCfg {
+        restart: RestartPolicy {
+            max_restarts: 1,
+            backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(4),
+        },
+        ..chaos_cfg(1, 2)
+    };
+    let c = chaos.clone();
+    let server = Server::start_with(&cfg, move |_| -> Result<FaultyEngine<ChaosMock>> {
+        c.factory_gate()?;
+        Ok(c.wrap(ChaosMock::new(2)))
+    })
+    .expect("start");
+    let rxs: Vec<_> = (0..6).map(|i| server.submit(i % 2, vec![0; 8])).collect();
+    for rx in rxs {
+        let r = recv(rx);
+        match &r.result {
+            Err(ServeError::Failed(m)) => assert!(m.contains("dead"), "{m}"),
+            other => panic!("dead shard must answer Failed, got {other:?}"),
+        }
+    }
+    let err = server.stop().unwrap_err();
+    assert!(err.to_string().contains("permanently dead"), "{err:#}");
+}

@@ -79,6 +79,7 @@ impl MockCfg {
                 stats: ServeStats::default(),
             })
         })
+        .expect("start mock server")
     }
 }
 
@@ -368,7 +369,8 @@ fn warm_server(
     let cfg = mock_server_cfg(n_shards, 4);
     let server = Server::start_with(&cfg, move |shard| -> Result<WarmMock> {
         Ok(WarmMock { shard, log: Arc::clone(&l), fail_shard, stats: ServeStats::default() })
-    });
+    })
+    .expect("start warm mock server");
     (server, log)
 }
 
@@ -426,7 +428,7 @@ fn ready() -> bool {
 
 fn run_requests(cfg: ServerCfg, n: usize, n_tasks: usize) -> (Vec<(u64, usize, i32)>, ServeStats) {
     let lm = MarkovLm::base(1, 128, 32);
-    let server = Server::start(artifacts_dir(), cfg);
+    let server = Server::start(artifacts_dir(), cfg).expect("start server");
     let mut rxs = Vec::new();
     for i in 0..n {
         let task = i % n_tasks;
@@ -522,7 +524,7 @@ fn fault_isolation_on_4shard_server() {
         native_recon: true,
         ..ServerCfg::default()
     };
-    let server = Server::start(artifacts_dir(), cfg);
+    let server = Server::start(artifacts_dir(), cfg).expect("start server");
     let wrong_len = server.submit(0, vec![1, 2, 3]);
     let unknown = server.submit(100, request_tokens(&lm, 7, 0));
     let mut valid = Vec::new();
@@ -652,7 +654,7 @@ fn preload_prefills_merged_cache_and_preserves_predictions() {
 
     // warm server: preload, then identical traffic — zero cold fills
     let lm = MarkovLm::base(1, 128, 32);
-    let server = Server::start(artifacts_dir(), mk());
+    let server = Server::start(artifacts_dir(), mk()).expect("start server");
     let warm = server.preload(&artifact).unwrap();
     assert_eq!(warm.installed, 2, "one adapter per task");
     assert_eq!(warm.prefilled, 2, "every task's θ pre-reconstructed");
@@ -692,7 +694,7 @@ fn different_adapters_give_different_predictions() {
         mode: Mode::OnTheFly,
         ..ServerCfg::default()
     };
-    let server = Server::start(artifacts_dir(), cfg);
+    let server = Server::start(artifacts_dir(), cfg).expect("start server");
     let mut pairs = Vec::new();
     for i in 0..16u64 {
         let tokens = request_tokens(&lm, 3, i);
