@@ -7,8 +7,15 @@ cd "$(dirname "$0")"
 echo "== cargo fmt --check =="
 cargo fmt --all -- --check
 
-echo "== cargo clippy (-D warnings) =="
-cargo clippy --workspace --all-targets -- -D warnings
+echo "== cargo clippy (-D warnings; every unsafe block needs // SAFETY:) =="
+cargo clippy --workspace --all-targets -- -D warnings -D clippy::undocumented_unsafe_blocks
+
+echo "== mcnc-lint (repo invariants: safety/dispatch/determinism/wire-format) =="
+# exits nonzero on any unsuppressed finding; see docs/LINTS.md
+cargo run -q -p mcnc-lint -- rust/src
+
+echo "== mcnc-lint self-tests (golden fixtures + tree self-check) =="
+cargo test -q -p mcnc-lint
 
 echo "== cargo doc (-D warnings; rustdoc headers + intra-doc links) =="
 # -p mcnc: the vendored anyhow twin is not held to the doc gate

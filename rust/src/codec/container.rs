@@ -45,6 +45,21 @@ pub const MAX_FRAME: usize = 1 << 30;
 const MAX_ELEMS: usize = 1 << 28;
 const MAX_DIMS: usize = 8;
 const MAX_NAME: usize = 4096;
+/// Container header version produced and accepted (`docs/FORMAT.md` §2).
+pub const VERSION: u64 = 2;
+/// Longest legal LEB128 varint: 10 bytes carry 70 payload bits, enough for
+/// any u64 (`docs/FORMAT.md` §1.1).
+pub const MAX_VARINT_BYTES: usize = 10;
+/// Frame codec tag: lossless byte-plane payload (`docs/FORMAT.md` §3).
+pub const TAG_LOSSLESS: u8 = 0;
+/// Frame codec tag: block-absmax int8 payload.
+pub const TAG_INT8: u8 = 1;
+/// Frame codec tag: block-absmax int4 payload.
+pub const TAG_INT4: u8 = 2;
+/// Symbol width of the int8 codec (`docs/FORMAT.md` §4.2).
+pub const INT8_BITS: u32 = 8;
+/// Symbol width of the int4 codec.
+pub const INT4_BITS: u32 = 4;
 
 // ---------------------------------------------------------------------------
 // varints + CRC-32
@@ -78,7 +93,7 @@ pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
             return Ok(v);
         }
         shift += 7;
-        if shift > 63 {
+        if shift >= 7 * MAX_VARINT_BYTES as u32 {
             bail!("varint too long");
         }
     }
@@ -100,7 +115,7 @@ pub fn read_varint(r: &mut impl Read) -> Result<u64> {
             return Ok(v);
         }
         shift += 7;
-        if shift > 63 {
+        if shift >= 7 * MAX_VARINT_BYTES as u32 {
             bail!("varint too long");
         }
     }
@@ -159,7 +174,7 @@ impl ContainerHeader {
     /// Serialize to the wire's JSON spelling (seed as a decimal string).
     pub fn to_json(&self) -> String {
         let mut pairs = vec![
-            ("version", Json::num(2.0)),
+            ("version", Json::num(VERSION as f64)),
             ("entry", Json::str(self.entry.clone())),
             ("seed", Json::str(self.seed.to_string())),
             ("step", Json::num(self.step as f64)),
@@ -175,8 +190,8 @@ impl ContainerHeader {
     pub fn parse(text: &str) -> Result<ContainerHeader> {
         let j = json::parse(text).map_err(|e| anyhow!("container header: {e}"))?;
         let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
-        if version != 2 {
-            bail!("container header version {version}, want 2");
+        if version != VERSION as usize {
+            bail!("container header version {version}, want {VERSION}");
         }
         let seed = match j.get("seed") {
             Some(s) => seed_from_json(s)?,
@@ -297,15 +312,15 @@ pub fn encode_frame(name: &str, t: &Tensor, codec: Codec) -> Result<Vec<u8>> {
     }
     match codec {
         Codec::Lossless => {
-            b.push(0);
+            b.push(TAG_LOSSLESS);
             for plane in 0..4 {
                 let bytes: Vec<u8> = w.iter().map(|v| v.to_le_bytes()[plane]).collect();
                 put_symbols(&mut b, &bytes, 8);
             }
         }
         Codec::Int8 { block } | Codec::Int4 { block } => {
-            let bits = if matches!(codec, Codec::Int8 { .. }) { 8 } else { 4 };
-            b.push(if bits == 8 { 1 } else { 2 });
+            let bits = if matches!(codec, Codec::Int8 { .. }) { INT8_BITS } else { INT4_BITS };
+            b.push(if bits == INT8_BITS { TAG_INT8 } else { TAG_INT4 });
             let q = quantizer::quantize(w, bits, block);
             put_varint(&mut b, q.block as u64);
             for s in &q.scales {
@@ -413,7 +428,7 @@ pub fn decode_frame(b: &[u8]) -> Result<(String, Tensor, Codec)> {
     let meta = parse_frame_meta(b, &mut pos)?;
     let FrameMeta { name, dims, numel, tag } = meta;
     let (w, codec) = match tag {
-        0 => {
+        TAG_LOSSLESS => {
             let mut planes = Vec::with_capacity(4);
             for _ in 0..4 {
                 planes.push(get_symbols(b, &mut pos, numel, 8)?);
@@ -429,13 +444,16 @@ pub fn decode_frame(b: &[u8]) -> Result<(String, Tensor, Codec)> {
             }
             (w, Codec::Lossless)
         }
-        1 | 2 => {
-            let bits: u32 = if tag == 1 { 8 } else { 4 };
+        TAG_INT8 | TAG_INT4 => {
+            let bits = if tag == TAG_INT8 { INT8_BITS } else { INT4_BITS };
             let (block, scales, symbols) =
                 parse_quantized_payload(b, &mut pos, &name, numel, bits)?;
             let q = quantizer::Quantized { bits, block, scales, symbols };
-            let codec =
-                if bits == 8 { Codec::Int8 { block } } else { Codec::Int4 { block } };
+            let codec = if bits == INT8_BITS {
+                Codec::Int8 { block }
+            } else {
+                Codec::Int4 { block }
+            };
             (quantizer::dequantize(&q), codec)
         }
         t => bail!("unknown codec tag {t}"),
@@ -477,7 +495,7 @@ pub fn decode_frame_into_packed(b: &[u8], isa: Isa) -> Result<(String, PackedB, 
         .ok_or_else(|| anyhow!("frame {name:?} padded panel size exceeds bound"))?;
     let mut builder = PackedBBuilder::new_for(isa, dims[0], dims[1]);
     let codec = match tag {
-        0 => {
+        TAG_LOSSLESS => {
             let mut planes = Vec::with_capacity(4);
             for _ in 0..4 {
                 planes.push(get_symbols(b, &mut pos, numel, 8)?);
@@ -492,8 +510,8 @@ pub fn decode_frame_into_packed(b: &[u8], isa: Isa) -> Result<(String, PackedB, 
             }
             Codec::Lossless
         }
-        1 | 2 => {
-            let bits: u32 = if tag == 1 { 8 } else { 4 };
+        TAG_INT8 | TAG_INT4 => {
+            let bits = if tag == TAG_INT8 { INT8_BITS } else { INT4_BITS };
             let (block, scales, symbols) =
                 parse_quantized_payload(b, &mut pos, &name, numel, bits)?;
             let bias = 1i32 << (bits - 1);
@@ -503,7 +521,7 @@ pub fn decode_frame_into_packed(b: &[u8], isa: Isa) -> Result<(String, PackedB, 
                     builder.push((s as i32 - bias) as f32 * scale);
                 }
             }
-            if bits == 8 {
+            if bits == INT8_BITS {
                 Codec::Int8 { block }
             } else {
                 Codec::Int4 { block }

@@ -157,21 +157,22 @@ impl Router {
         let n = self.rr.len();
         for step in 0..n {
             let task = self.rr[(self.rr_pos + step) % n];
-            let ready = {
-                let q = match self.queues.get(&task) {
-                    Some(q) if !q.is_empty() => q,
-                    _ => continue,
-                };
-                q.len() >= policy.max_batch
-                    || drain
-                    || q.front()
-                        .map(|r| now.duration_since(r.enqueued) >= policy.max_delay)
-                        .unwrap_or(false)
+            // single get_mut: no second lookup whose miss would need an
+            // unwrap after the readiness check above it already passed
+            let Some(q) = self.queues.get_mut(&task) else {
+                continue;
             };
+            if q.is_empty() {
+                continue;
+            }
+            let ready = q.len() >= policy.max_batch
+                || drain
+                || q.front()
+                    .map(|r| now.duration_since(r.enqueued) >= policy.max_delay)
+                    .unwrap_or(false);
             if !ready {
                 continue;
             }
-            let q = self.queues.get_mut(&task).unwrap();
             let take = q.len().min(policy.max_batch);
             let requests: Vec<Request> = q.drain(..take).collect();
             self.rr_pos = (self.rr_pos + step + 1) % n;

@@ -523,11 +523,16 @@ fn decode_adapter(
 /// the same base seed reproduces exactly what an engine would self-seed.
 pub(crate) fn synth_adapter(entry: &Entry, seed: u64, task: usize) -> Result<Vec<Tensor>> {
     let tslots = init_inputs(entry, seed ^ (0xAD00 + task as u64))?;
-    let mut tr: Vec<Tensor> = tslots
-        .into_iter()
-        .filter(|(s, _)| s.role == Role::Trainable)
-        .map(|(_, t)| t.unwrap())
-        .collect();
+    let mut tr: Vec<Tensor> = Vec::with_capacity(tslots.len());
+    for (spec, t) in tslots {
+        if spec.role != Role::Trainable {
+            continue;
+        }
+        // init_inputs materializes every Trainable slot; a hole is a
+        // manifest bug and must answer the caller, not panic a shard
+        let t = t.ok_or_else(|| anyhow!("trainable slot {} has no init tensor", spec.name))?;
+        tr.push(t);
+    }
     if let Some(first) = tr.first_mut() {
         let mut s = crate::util::prng::Stream::new(seed ^ (0x5EED + task as u64));
         let dims = first.dims.clone();
@@ -535,6 +540,22 @@ pub(crate) fn synth_adapter(entry: &Entry, seed: u64, task: usize) -> Result<Vec
         *first = Tensor::from_f32(s.normal_f32(n, 0.05), &dims)?;
     }
     Ok(tr)
+}
+
+/// Collect the materialized Static-role tensors out of an `init_inputs`
+/// slot list, in spec order. `init_inputs` fills every Static slot, so a
+/// hole is a manifest bug — surfaced as an error that answers the caller
+/// instead of panicking a shard thread.
+fn static_slots(slots: &[(IoSpec, Option<Tensor>)]) -> Result<Vec<Tensor>> {
+    let mut out = Vec::new();
+    for (spec, t) in slots {
+        if spec.role != Role::Static {
+            continue;
+        }
+        let t = t.clone().ok_or_else(|| anyhow!("static slot {} has no init tensor", spec.name))?;
+        out.push(t);
+    }
+    Ok(out)
 }
 
 /// Validate adapter tensors against the executable's trainable specs —
@@ -605,7 +626,7 @@ impl Engine {
         let n_shards = cfg.n_shards.max(1);
         let predict = format!("{}_predict", cfg.kind);
         let entry = session.entry(&predict)?.clone();
-        let x_spec = entry.inputs.last().unwrap();
+        let x_spec = entry.inputs.last().ok_or_else(|| anyhow!("{predict} declares no inputs"))?;
         let (batch_size, seq) = (x_spec.shape[0], x_spec.shape[1]);
         // an oversized router batch would index past build_x's buffer and
         // panic the shard thread — reject the misconfiguration up front
@@ -618,11 +639,7 @@ impl Engine {
 
         // shared statics (θ0, generator weights / bases) from the base seed
         let slots = init_inputs(&entry, cfg.seed)?;
-        let statics: Vec<Tensor> = slots
-            .iter()
-            .filter(|(s, _)| s.role == Role::Static)
-            .map(|(_, t)| t.clone().unwrap())
-            .collect();
+        let statics = static_slots(&slots)?;
         let trainable_specs: Vec<IoSpec> = entry
             .inputs
             .iter()
@@ -653,11 +670,7 @@ impl Engine {
         if cfg.mode == Mode::Merged {
             let dense = session.entry("lm_dense_predict")?.clone();
             let dslots = init_inputs(&dense, cfg.seed)?;
-            dense_statics = dslots
-                .iter()
-                .filter(|(s, _)| s.role == Role::Static)
-                .map(|(_, t)| t.clone().unwrap())
-                .collect();
+            dense_statics = static_slots(&dslots)?;
             if !(cfg.native_recon && native.is_some()) {
                 session.entry(&format!("{}_recon", cfg.kind))?; // must exist
             }
@@ -796,7 +809,7 @@ impl Engine {
                 let adapter = self
                     .adapters
                     .get(&task)
-                    .expect("adapter just installed");
+                    .ok_or_else(|| anyhow!("task {task}: adapter missing after install"))?;
                 let theta = nr.reconstruct(adapter)?;
                 let raw = adapter
                     .last()
@@ -902,7 +915,7 @@ impl Engine {
         };
 
         // logits [b, t, v] → next-token argmax at the last position per row
-        let v = *logits.dims.last().unwrap();
+        let v = *logits.dims.last().ok_or_else(|| anyhow!("predict output has no dims"))?;
         let lf = logits.f32s()?;
         let row = self.seq * v;
         let preds = (0..batch.requests.len())

@@ -168,7 +168,12 @@ thread_local! {
 /// a disjoint `[start·d, end·d)` row range, so the aliasing is sound.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: the pointer targets the caller's `out` buffer, which outlives
+// the blocking `parallel_for` call, and every worker writes only its own
+// disjoint row range.
 unsafe impl Send for SendPtr {}
+// SAFETY: shared access is read-only pointer arithmetic; writes through
+// the pointer are partitioned by row range (see Send above).
 unsafe impl Sync for SendPtr {}
 
 impl Generator {
@@ -223,6 +228,9 @@ impl Generator {
         let min_rows = (131_072 / self.cfg.flops_per_chunk().max(1)).max(1);
         let ptr = SendPtr(out.as_mut_ptr());
         crate::util::threadpool::global().parallel_for(n, min_rows, &|s, e| {
+            // SAFETY: `out` is n·d long and outlives this blocking call;
+            // parallel_for hands each worker a disjoint [s, e) row range,
+            // so the reborrowed sub-slices never overlap.
             let rows = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s * d), (e - s) * d) };
             self.forward_chunks(&alpha[s * k..e * k], &beta[s..e], rows);
         });

@@ -37,10 +37,16 @@ pub(super) fn gemm(a: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &
     super::APACK.with(|cell| {
         let mut buf = cell.borrow_mut();
         super::pack_a(a, m, k, MR, &mut buf);
+        // SAFETY: NEON is architecturally mandatory on aarch64, where
+        // this module is compiled; sizes are checked by the safe callers.
         unsafe { gemm_inner(&buf, m, k, n, panels, c) };
     });
 }
 
+// SAFETY: callers pass `ap` as ⌈m/MR⌉ zero-padded MR-row tiles and
+// `panels` as ⌈n/NR⌉ NR-wide panels, so the tile/panel pointers below
+// always address a full k·MR / k·NR block; `micro` masks its stores to
+// the mr×nr live region of `c`. NEON itself is baseline on aarch64.
 #[target_feature(enable = "neon")]
 unsafe fn gemm_inner(ap: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &mut [f32]) {
     for jc in (0..n).step_by(NC) {
@@ -64,6 +70,8 @@ unsafe fn gemm_inner(ap: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c
 
 /// One 8×8 tile: `c[r, j] = Σ_p ap[p, r] · panel[p, j]`, p ascending,
 /// each term fused. Padded rows/columns are computed but never stored.
+// SAFETY: callers pass `ap`/`bp` pointing at full k·MR / k·NR blocks;
+// stores are masked to the mr×nr live region of `c`.
 #[target_feature(enable = "neon")]
 unsafe fn micro(
     ap: *const f32,
@@ -104,9 +112,13 @@ unsafe fn micro(
 /// Fused row-streaming GEMV: `out[N] = x[K] · b[K, N]`, 16 columns of
 /// register accumulators at a time, ascending-K per output.
 pub(super) fn gemv(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    // SAFETY: NEON is baseline on aarch64; slice lengths (x=k, b=k·n,
+    // out=n) are the dispatched API contract.
     unsafe { gemv_inner(x, b, k, n, out) };
 }
 
+// SAFETY: callers pass x of len k, b of len k·n, out of len n; every
+// unchecked access below is bounded by those. NEON is baseline on aarch64.
 #[target_feature(enable = "neon")]
 unsafe fn gemv_inner(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
     let mut j = 0usize;
@@ -147,9 +159,12 @@ unsafe fn gemv_inner(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) 
 /// (returns the non-NaN operand), matching the scalar `f32::max` fold
 /// bit-for-bit.
 pub(super) fn absmax(xs: &[f32]) -> f32 {
+    // SAFETY: NEON is baseline on aarch64.
     unsafe { absmax_inner(xs) }
 }
 
+// SAFETY: vector loads stop at i + 4 ≤ len and the tail is read through
+// the slice. NEON is baseline on aarch64.
 #[target_feature(enable = "neon")]
 unsafe fn absmax_inner(xs: &[f32]) -> f32 {
     let mut acc = vdupq_n_f32(0.0);
@@ -174,9 +189,12 @@ unsafe fn absmax_inner(xs: &[f32]) -> f32 {
 /// `NaN as i32`) and saturates ±inf, which the integer clamp then maps to
 /// the same bounds the scalar float clamp produces.
 pub(super) fn quantize_block(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    // SAFETY: NEON is baseline on aarch64.
     unsafe { quantize_inner(chunk, scale, bits, out) };
 }
 
+// SAFETY: vector loads stop at i + 4 ≤ len and the scalar tail handles
+// the rest. NEON is baseline on aarch64.
 #[target_feature(enable = "neon")]
 unsafe fn quantize_inner(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
     let qmax = (1i32 << (bits - 1)) - 1;

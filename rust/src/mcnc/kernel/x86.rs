@@ -33,10 +33,14 @@ const _: () = assert!(MC % MR == 0 && NC % NR == 0);
 pub(super) fn pack(b: &[f32], k: usize, n: usize) -> Vec<f32> {
     let np = n.div_ceil(NR).max(1);
     let mut panels = vec![0.0f32; np * k * NR];
+    // SAFETY: only reachable via dispatch after the avx2 probe passed.
     unsafe { pack_inner(b, k, n, &mut panels) };
     panels
 }
 
+// SAFETY: callers must have verified avx2. Every load stays inside `b`
+// (j0 + 16 ≤ n for each full panel) and every store inside `panels`
+// (sized np·k·NR by the safe wrapper).
 #[target_feature(enable = "avx2")]
 unsafe fn pack_inner(b: &[f32], k: usize, n: usize, panels: &mut [f32]) {
     let full = n / NR;
@@ -65,10 +69,15 @@ pub(super) fn gemm(a: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &
     super::APACK.with(|cell| {
         let mut buf = cell.borrow_mut();
         super::pack_a(a, m, k, MR, &mut buf);
+        // SAFETY: only reachable via dispatch after the avx2+fma probe.
         unsafe { gemm_inner(&buf, m, k, n, panels, c) };
     });
 }
 
+// SAFETY: callers must have verified avx2+fma and pass `ap` as ⌈m/MR⌉
+// zero-padded MR-row tiles and `panels` as ⌈n/NR⌉ NR-wide panels, so the
+// tile/panel pointers below always address a full k·MR / k·NR block;
+// `micro` masks its stores to the mr×nr live region of `c`.
 #[target_feature(enable = "avx2,fma")]
 unsafe fn gemm_inner(ap: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c: &mut [f32]) {
     for jc in (0..n).step_by(NC) {
@@ -92,6 +101,8 @@ unsafe fn gemm_inner(ap: &[f32], m: usize, k: usize, n: usize, panels: &[f32], c
 
 /// One 6×16 tile: `c[r, j] = Σ_p ap[p, r] · panel[p, j]`, p ascending,
 /// each term fused. Padded rows/columns are computed but never stored.
+// SAFETY: callers must have verified avx2+fma and pass `ap`/`bp` pointing
+// at full k·MR / k·NR blocks; stores are masked to the mr×nr live region.
 #[target_feature(enable = "avx2,fma")]
 unsafe fn micro(
     ap: *const f32,
@@ -132,9 +143,12 @@ unsafe fn micro(
 /// Fused row-streaming GEMV: `out[N] = x[K] · b[K, N]`, 32 columns of
 /// register accumulators at a time, ascending-K per output.
 pub(super) fn gemv(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    // SAFETY: only reachable via dispatch after the avx2+fma probe.
     unsafe { gemv_inner(x, b, k, n, out) };
 }
 
+// SAFETY: callers must have verified avx2+fma and pass x of len k, b of
+// len k·n, out of len n; every unchecked access below is bounded by those.
 #[target_feature(enable = "avx2,fma")]
 unsafe fn gemv_inner(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
     let mut j = 0usize;
@@ -175,9 +189,12 @@ unsafe fn gemv_inner(x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) 
 /// (max never rounds; `max_ps(|v|, acc)` returns `acc` when `|v|` is NaN,
 /// same as `f32::max`).
 pub(super) fn absmax(xs: &[f32]) -> f32 {
+    // SAFETY: only reachable via dispatch after the avx2 probe.
     unsafe { absmax_inner(xs) }
 }
 
+// SAFETY: callers must have verified avx2; vector loads stop at
+// i + 8 ≤ len and the tail is read through the slice.
 #[target_feature(enable = "avx2")]
 unsafe fn absmax_inner(xs: &[f32]) -> f32 {
     let sign = _mm256_set1_ps(-0.0);
@@ -207,9 +224,12 @@ unsafe fn absmax_inner(xs: &[f32]) -> f32 {
 ///   0.5, or zero once ulp(x) > 0.5);
 /// * NaN lanes are zeroed before the clamp to match `NaN as i32 == 0`.
 pub(super) fn quantize_block(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
+    // SAFETY: only reachable via dispatch after the avx2 probe.
     unsafe { quantize_inner(chunk, scale, bits, out) };
 }
 
+// SAFETY: callers must have verified avx2; vector loads stop at
+// i + 8 ≤ len and the scalar tail handles the rest.
 #[target_feature(enable = "avx2")]
 unsafe fn quantize_inner(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec<u8>) {
     let qmax = ((1i32 << (bits - 1)) - 1) as f32;

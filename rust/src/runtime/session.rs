@@ -250,10 +250,14 @@ pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
 }
 
 fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding or invalid bit patterns as bytes, u8 has
+    // alignment 1, and the byte view borrows `v` for the same lifetime.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
 fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    // SAFETY: as above — plain-old-data element type viewed as bytes, same
+    // length in bytes, same borrow lifetime.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 

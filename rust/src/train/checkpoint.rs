@@ -78,6 +78,8 @@ impl Checkpoint {
         f.write_all(header.as_bytes())?;
         for (_, t) in &self.tensors {
             let v = t.f32s().map_err(|_| anyhow!("only f32 tensors are checkpointed"))?;
+            // SAFETY: f32 is plain-old-data, u8 has alignment 1, and the
+            // byte view lives only for this iteration's borrow of `v`.
             let bytes =
                 unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
             f.write_all(bytes)?;

@@ -1,0 +1,281 @@
+//! A small comment/string-aware Rust lexer: just enough structure for
+//! line-oriented lint rules. Each source line is split into its *code*
+//! text (string/char literal contents masked out, delimiters kept) and
+//! its *comment* text (line, block, and doc comments), so rules can match
+//! code without tripping over `"unsafe"` inside a string or an example in
+//! a doc comment. Handles nested block comments, raw strings (`r#"…"#`),
+//! byte strings, and char-literal vs lifetime disambiguation.
+
+/// One source line, split into masked code and comment text.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code with string/char contents removed (delimiters preserved).
+    pub code: String,
+    /// Concatenated comment text of the line (line, block, doc).
+    pub comment: String,
+}
+
+enum State {
+    Normal,
+    LineComment,
+    /// Block comment with nesting depth.
+    BlockComment(u32),
+    /// Inside a `"…"` or `b"…"` string.
+    Str,
+    /// Inside a raw string; payload is the hash count of the opener.
+    RawStr(usize),
+    /// Inside a char or byte-char literal.
+    CharLit,
+}
+
+/// Split `src` into per-line [`Line`]s. Never fails: unterminated
+/// constructs simply run to end of input, which is the right behavior for
+/// a linter that must not crash on the code it is judging.
+pub fn lex(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Normal;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                let c2 = chars.get(i + 1).copied();
+                if c == '/' && c2 == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && c2 == Some('*') {
+                    state = State::BlockComment(1);
+                    code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    if let Some((skip, raw, hashes)) = string_prefix(&chars, i) {
+                        code.extend(&chars[i..i + skip]);
+                        i += skip;
+                        state = if raw { State::RawStr(hashes) } else { State::Str };
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    let c1 = chars.get(i + 1).copied();
+                    let cc = chars.get(i + 2).copied();
+                    code.push('\'');
+                    i += 1;
+                    let lifetime = c1.map(|ch| ch.is_alphabetic() || ch == '_').unwrap_or(false)
+                        && cc != Some('\'');
+                    if !lifetime {
+                        state = State::CharLit;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let c2 = chars.get(i + 1).copied();
+                if c == '/' && c2 == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && c2 == Some('/') {
+                    i += 2;
+                    if depth == 1 {
+                        state = State::Normal;
+                    } else {
+                        state = State::BlockComment(depth - 1);
+                        comment.push_str("*/");
+                    }
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        code.push('"');
+                        state = State::Normal;
+                    }
+                    i += 1;
+                }
+            }
+            State::RawStr(h) => {
+                let closes = c == '"'
+                    && chars
+                        .get(i + 1..i + 1 + h)
+                        .map(|tail| tail.iter().all(|&x| x == '#'))
+                        .unwrap_or(false);
+                if closes {
+                    code.push('"');
+                    for _ in 0..h {
+                        code.push('#');
+                    }
+                    i += 1 + h;
+                    state = State::Normal;
+                } else {
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '\'' {
+                        code.push('\'');
+                        state = State::Normal;
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(Line { code, comment });
+    lines
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Match a string-literal prefix (`b"`, `r"`, `r#"`, `br##"` …) starting
+/// at `i`. Returns `(chars consumed incl. the opening quote, is_raw,
+/// hash_count)`, or `None` when `i` does not start a string.
+fn string_prefix(chars: &[char], i: usize) -> Option<(usize, bool, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    let raw = chars.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while raw && chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if j > i && chars.get(j) == Some(&'"') {
+        Some((j - i + 1, raw, hashes))
+    } else {
+        None
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offset of the first occurrence of `word` in `code` that is not
+/// part of a longer identifier, or `None`.
+pub fn find_token(code: &str, word: &str) -> Option<usize> {
+    let b = code.as_bytes();
+    let w = word.as_bytes();
+    if w.is_empty() || b.len() < w.len() {
+        return None;
+    }
+    for (k, win) in b.windows(w.len()).enumerate() {
+        if win != w {
+            continue;
+        }
+        let before_ok = k == 0 || !is_ident_byte(b[k - 1]);
+        let after = k + w.len();
+        let after_ok = after >= b.len() || !is_ident_byte(b[after]);
+        if before_ok && after_ok {
+            return Some(k);
+        }
+    }
+    None
+}
+
+/// Whether `code` contains `word` as a standalone token.
+pub fn has_token(code: &str, word: &str) -> bool {
+    find_token(code, word).is_some()
+}
+
+/// A line that carries comment text and no code.
+pub fn comment_only(line: &Line) -> bool {
+    line.code.trim().is_empty() && !line.comment.trim().is_empty()
+}
+
+fn brace_delta(code: &str) -> i64 {
+    let open = code.bytes().filter(|&b| b == b'{').count() as i64;
+    let close = code.bytes().filter(|&b| b == b'}').count() as i64;
+    open - close
+}
+
+/// Per-line flags: inside a `#[cfg(test)]`-gated braced item (typically a
+/// `mod tests { … }`). Tracked by brace counting on the masked code, so
+/// braces in strings or comments can't skew the depth.
+pub fn test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    // depths at which currently-open test regions started
+    let mut stack: Vec<i64> = Vec::new();
+    // saw a #[cfg(..test..)] attribute, waiting for the gated item
+    let mut pending = false;
+    for (idx, line) in lines.iter().enumerate() {
+        let t = line.code.trim();
+        if !stack.is_empty() {
+            in_test[idx] = true;
+        }
+        let cfg_test = t.find("#[cfg(").map(|k| has_token(&t[k..], "test")).unwrap_or(false);
+        if cfg_test {
+            pending = true;
+            depth += brace_delta(t);
+            continue;
+        }
+        if pending && !t.is_empty() {
+            if t.starts_with("#[") {
+                depth += brace_delta(t);
+                continue;
+            }
+            let ob = t.find('{');
+            let sc = t.find(';');
+            let opens_region = match (ob, sc) {
+                (Some(o), Some(s)) => o < s,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if opens_region {
+                in_test[idx] = true;
+                stack.push(depth);
+                pending = false;
+            } else if sc.is_some() {
+                // a single `;`-terminated gated item (use, type alias…)
+                in_test[idx] = true;
+                pending = false;
+            }
+        }
+        depth += brace_delta(t);
+        while stack.last().map(|&d| depth <= d).unwrap_or(false) {
+            stack.pop();
+            in_test[idx] = true;
+        }
+    }
+    in_test
+}

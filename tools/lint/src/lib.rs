@@ -1,0 +1,171 @@
+//! `mcnc-lint`: repo-specific static analysis for the MCNC codebase.
+//!
+//! The compiler cannot see the invariants this repo's claims rest on —
+//! bit-identical reconstruction across ISAs, host-independent MCNC2 wire
+//! bytes, seed-deterministic fault schedules — so this crate enforces
+//! them mechanically. Five rules (catalog: `docs/LINTS.md`):
+//!
+//! * `unsafe-discipline` — every `unsafe` needs an adjacent `// SAFETY:`;
+//! * `dispatch-containment` — ISA intrinsics stay in `mcnc/kernel/`;
+//! * `panic-freedom` — no `unwrap`/`expect`/`panic!` on serving paths;
+//! * `determinism` — no wall-clock/ambient randomness in `codec/`, chaos;
+//! * `wire-format` — `docs/FORMAT.md` constants match `codec/` constants.
+//!
+//! Findings carry `file:line` and a rule ID, and can be silenced inline
+//! with `// lint:allow(<rule>): <why>` on the offending line or the
+//! comment block directly above it. The library is IO-free except for
+//! [`lint_tree`]; tests drive [`lint_sources`] on in-memory fixtures.
+
+use std::collections::HashMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+/// One lint hit, anchored to a file and 1-based line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Slash-separated path relative to the scan root (or the spec path).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule ID (see [`report::RULES`]).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub msg: String,
+}
+
+/// A lexed source file plus the metadata rules key off.
+pub struct SourceFile {
+    /// Slash-separated path relative to the scan root — rules are
+    /// path-gated on this, not on where the file physically lives.
+    pub rel: String,
+    /// Raw text (the wire-format rule reads string literals the lexer
+    /// masks out of `lines`).
+    pub raw: String,
+    /// Per-line masked code + comment text.
+    pub lines: Vec<lexer::Line>,
+    /// Per-line `#[cfg(test)]`-region flags.
+    pub in_test: Vec<bool>,
+}
+
+/// Lex `raw` into a [`SourceFile`] scanned under the path `rel`.
+pub fn source_file(rel: &str, raw: &str) -> SourceFile {
+    let lines = lexer::lex(raw);
+    let in_test = lexer::test_regions(&lines);
+    SourceFile { rel: rel.to_string(), raw: raw.to_string(), lines, in_test }
+}
+
+/// The outcome of a lint run: unsuppressed findings, suppressed ones
+/// (kept for the report's per-rule accounting), and the file count.
+pub struct Report {
+    /// Findings that fail the gate.
+    pub findings: Vec<Finding>,
+    /// Findings silenced by `lint:allow` comments.
+    pub suppressed: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+/// Run every rule over `files`, plus the wire-format cross-check when a
+/// spec is supplied as `(path, text)`. Pure: no filesystem access.
+pub fn lint_sources(files: &[SourceFile], spec: Option<(&str, &str)>) -> Report {
+    let mut found = Vec::new();
+    for f in files {
+        rules::unsafe_discipline::check(f, &mut found);
+        rules::dispatch::check(f, &mut found);
+        rules::panic_freedom::check(f, &mut found);
+        rules::determinism::check(f, &mut found);
+    }
+    if let Some((spec_rel, spec_text)) = spec {
+        rules::wire_format::check(spec_rel, spec_text, files, &mut found);
+    }
+    found.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+
+    let by_rel: HashMap<&str, &SourceFile> = files.iter().map(|f| (f.rel.as_str(), f)).collect();
+    let mut findings = Vec::new();
+    let mut suppressed = Vec::new();
+    for f in found {
+        let allowed = by_rel
+            .get(f.file.as_str())
+            .map(|sf| is_suppressed(&sf.lines, f.line, f.rule))
+            .unwrap_or(false);
+        if allowed {
+            suppressed.push(f);
+        } else {
+            findings.push(f);
+        }
+    }
+    Report { findings, suppressed, files_scanned: files.len() }
+}
+
+/// Whether the finding at 1-based `line` is covered by a
+/// `// lint:allow(<rule>)` comment on that line or in the comment-only
+/// block directly above it.
+fn is_suppressed(lines: &[lexer::Line], line: usize, rule: &str) -> bool {
+    if line == 0 || line > lines.len() {
+        return false;
+    }
+    let ix = line - 1;
+    let mut cands: Vec<&str> = vec![&lines[ix].comment];
+    let mut j = ix;
+    while j > 0 && lexer::comment_only(&lines[j - 1]) {
+        j -= 1;
+        cands.push(&lines[j].comment);
+    }
+    cands.iter().any(|c| allow_matches(c, rule))
+}
+
+fn allow_matches(comment: &str, rule: &str) -> bool {
+    const NEEDLE: &str = "lint:allow(";
+    let Some(k) = comment.find(NEEDLE) else {
+        return false;
+    };
+    let Some(close) = comment[k..].find(')') else {
+        return false;
+    };
+    let inner = &comment[k + NEEDLE.len()..k + close];
+    inner.split(',').any(|name| name.trim() == rule)
+}
+
+/// Recursively collect, lex, and lint every `.rs` file under `root`,
+/// reading the wire-format spec from `spec` when given.
+pub fn lint_tree(root: &Path, spec: Option<&Path>) -> io::Result<Report> {
+    let mut paths = Vec::new();
+    walk(root, &mut paths)?;
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let rel = rel_path(root, p);
+        let raw = std::fs::read_to_string(p)?;
+        files.push(source_file(&rel, &raw));
+    }
+    let spec_data = match spec {
+        Some(sp) => Some((sp.display().to_string(), std::fs::read_to_string(sp)?)),
+        None => None,
+    };
+    let spec_ref = spec_data.as_ref().map(|(p, t)| (p.as_str(), t.as_str()));
+    Ok(lint_sources(&files, spec_ref))
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}

@@ -1,0 +1,95 @@
+//! CLI entry point.
+//!
+//! ```text
+//! mcnc-lint [--report PATH] [--spec PATH] ROOT
+//! ```
+//!
+//! Lints every `.rs` file under `ROOT`, prints `file:line: [rule] msg`
+//! per finding, writes a JSON report (default `LINT_report.json`), and
+//! exits 0 when clean, 1 on unsuppressed findings, 2 on usage or IO
+//! errors. Without `--spec`, `docs/FORMAT.md` is located by walking up
+//! from `ROOT`, so `cargo run -p mcnc-lint -- rust/src` from the repo
+//! root does the right thing.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use mcnc_lint::{lint_tree, report};
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut report_path = PathBuf::from("LINT_report.json");
+    let mut spec: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--report" => match args.next() {
+                Some(p) => report_path = PathBuf::from(p),
+                None => return usage("--report needs a path"),
+            },
+            "--spec" => match args.next() {
+                Some(p) => spec = Some(PathBuf::from(p)),
+                None => return usage("--spec needs a path"),
+            },
+            "--help" | "-h" => {
+                println!("usage: mcnc-lint [--report PATH] [--spec PATH] ROOT");
+                return ExitCode::SUCCESS;
+            }
+            _ if root.is_none() => root = Some(PathBuf::from(a)),
+            _ => return usage("unexpected extra argument"),
+        }
+    }
+    let Some(root) = root else {
+        return usage("missing ROOT directory");
+    };
+    let spec = spec.or_else(|| find_spec(&root));
+    if spec.is_none() {
+        eprintln!("mcnc-lint: warning: no docs/FORMAT.md found; wire-format rule skipped");
+    }
+    let rep = match lint_tree(&root, spec.as_deref()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("mcnc-lint: {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &rep.findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+    }
+    println!(
+        "mcnc-lint: {} finding(s), {} suppressed, {} files scanned",
+        rep.findings.len(),
+        rep.suppressed.len(),
+        rep.files_scanned
+    );
+    if let Err(e) = std::fs::write(&report_path, report::to_json(&rep)) {
+        eprintln!("mcnc-lint: cannot write {}: {e}", report_path.display());
+        return ExitCode::from(2);
+    }
+    if rep.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("mcnc-lint: {msg}");
+    eprintln!("usage: mcnc-lint [--report PATH] [--spec PATH] ROOT");
+    ExitCode::from(2)
+}
+
+/// Walk up from `ROOT` looking for `docs/FORMAT.md`, so the spec is
+/// found no matter which subtree is being linted.
+fn find_spec(root: &Path) -> Option<PathBuf> {
+    let start = root.canonicalize().ok()?;
+    let mut dir: Option<&Path> = Some(start.as_path());
+    while let Some(d) = dir {
+        let cand = d.join("docs/FORMAT.md");
+        if cand.is_file() {
+            return Some(cand);
+        }
+        dir = d.parent();
+    }
+    None
+}

@@ -1,0 +1,77 @@
+//! Machine-readable report writer (`LINT_report.json`). The JSON is
+//! hand-rolled — the crate is dependency-free by design — with a stable
+//! shape: scan totals, per-rule counts, then the finding lists.
+
+use crate::{Finding, Report};
+
+/// Every rule ID, in catalog order (see `docs/LINTS.md`).
+pub const RULES: [&str; 5] = [
+    crate::rules::unsafe_discipline::ID,
+    crate::rules::dispatch::ID,
+    crate::rules::panic_freedom::ID,
+    crate::rules::determinism::ID,
+    crate::rules::wire_format::ID,
+];
+
+/// Serialize a [`Report`] as pretty-printed JSON.
+pub fn to_json(r: &Report) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"files_scanned\": {},\n", r.files_scanned));
+    s.push_str(&format!("  \"total_findings\": {},\n", r.findings.len()));
+    s.push_str(&format!("  \"total_suppressed\": {},\n", r.suppressed.len()));
+    s.push_str("  \"rules\": {\n");
+    for (i, rule) in RULES.iter().enumerate() {
+        let nf = r.findings.iter().filter(|f| f.rule == *rule).count();
+        let ns = r.suppressed.iter().filter(|f| f.rule == *rule).count();
+        let comma = if i + 1 < RULES.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    \"{rule}\": {{ \"findings\": {nf}, \"suppressed\": {ns} }}{comma}\n"
+        ));
+    }
+    s.push_str("  },\n");
+    push_list(&mut s, "findings", &r.findings, ",");
+    push_list(&mut s, "suppressed", &r.suppressed, "");
+    s.push_str("}\n");
+    s
+}
+
+fn push_list(s: &mut String, key: &str, items: &[Finding], trail: &str) {
+    if items.is_empty() {
+        s.push_str(&format!("  \"{key}\": []{trail}\n"));
+        return;
+    }
+    s.push_str(&format!("  \"{key}\": [\n"));
+    for (i, f) in items.iter().enumerate() {
+        s.push_str("    { \"file\": \"");
+        s.push_str(&escape(&f.file));
+        s.push_str("\", \"line\": ");
+        s.push_str(&f.line.to_string());
+        s.push_str(", \"rule\": \"");
+        s.push_str(f.rule);
+        s.push_str("\", \"message\": \"");
+        s.push_str(&escape(&f.msg));
+        s.push_str("\" }");
+        if i + 1 < items.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str(&format!("  ]{trail}\n"));
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

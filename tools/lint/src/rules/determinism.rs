@@ -1,0 +1,36 @@
+//! `determinism`: the codec and the chaos harness must be pure functions
+//! of their inputs. MCNC2 bytes are golden-tested across hosts, and the
+//! fault schedule replays from a seed — so `Instant::now`, `SystemTime`,
+//! and ambient RNG entropy (`thread_rng`, `from_entropy`, `getrandom`)
+//! are banned in `codec/` and `coordinator/chaos.rs` outside tests.
+//! Randomness there must flow from an explicit seed.
+
+use crate::{Finding, SourceFile};
+
+/// Stable rule name.
+pub const ID: &str = "determinism";
+
+const DET_PATTERNS: [&str; 5] =
+    ["Instant::now", "SystemTime", "thread_rng", "from_entropy", "getrandom"];
+
+/// Flag ambient time/randomness in deterministic modules.
+pub fn check(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !(f.rel.contains("codec/") || f.rel.ends_with("coordinator/chaos.rs")) {
+        return;
+    }
+    for (ix, line) in f.lines.iter().enumerate() {
+        if f.in_test[ix] {
+            continue;
+        }
+        for pat in DET_PATTERNS {
+            if line.code.contains(pat) {
+                out.push(Finding {
+                    file: f.rel.clone(),
+                    line: ix + 1,
+                    rule: ID,
+                    msg: format!("ambient nondeterminism `{pat}` in deterministic module"),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! `dispatch-containment`: ISA-specific code stays behind the dispatch
+//! layer. Intrinsics (`core::arch`, `#[target_feature]`) may appear only
+//! in `mcnc/kernel/{x86,neon}.rs`; runtime feature probes only there or
+//! in `mcnc/kernel/dispatch.rs`; and the `x86::`/`neon::`/`scalar::`
+//! backend modules may be named only inside `mcnc/kernel/`. Everything
+//! above the kernel layer must go through `kernel::dispatch`, which is
+//! what makes "scalar and SIMD backends are bit-identical" a checkable
+//! claim instead of a convention.
+
+use crate::lexer::find_token;
+use crate::{Finding, SourceFile};
+
+/// Stable rule name.
+pub const ID: &str = "dispatch-containment";
+
+const ARCH_FILES: [&str; 2] = ["mcnc/kernel/x86.rs", "mcnc/kernel/neon.rs"];
+const DETECT_FILES: [&str; 3] =
+    ["mcnc/kernel/x86.rs", "mcnc/kernel/neon.rs", "mcnc/kernel/dispatch.rs"];
+const KERNEL_DIR: &str = "mcnc/kernel/";
+
+/// Flag ISA-specific constructs outside their sanctioned files.
+pub fn check(f: &SourceFile, out: &mut Vec<Finding>) {
+    let in_arch = ARCH_FILES.iter().any(|s| f.rel.ends_with(s));
+    let in_detect = DETECT_FILES.iter().any(|s| f.rel.ends_with(s));
+    let in_kernel = f.rel.contains(KERNEL_DIR);
+    for (ix, line) in f.lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if !in_arch {
+            for pat in ["std::arch", "core::arch"] {
+                if code.contains(pat) {
+                    push(out, f, ix, format!("`{pat}` outside kernel/{{x86,neon}}.rs"));
+                }
+            }
+            if code.contains("#[target_feature") {
+                push(out, f, ix, "`#[target_feature]` outside kernel/{x86,neon}.rs".into());
+            }
+        }
+        if !in_detect && code.contains("is_x86_feature_detected!") {
+            push(out, f, ix, "feature detection outside kernel/dispatch.rs".into());
+        }
+        if !in_kernel {
+            for m in ["x86", "neon", "scalar"] {
+                let hit = find_token(code, m)
+                    .map(|k| code[k + m.len()..].starts_with("::"))
+                    .unwrap_or(false);
+                if hit {
+                    push(out, f, ix, format!("ISA module `{m}::` outside mcnc/kernel/"));
+                }
+            }
+        }
+    }
+}
+
+fn push(out: &mut Vec<Finding>, f: &SourceFile, ix: usize, msg: String) {
+    out.push(Finding { file: f.rel.clone(), line: ix + 1, rule: ID, msg });
+}

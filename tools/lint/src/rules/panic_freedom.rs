@@ -1,0 +1,48 @@
+//! `panic-freedom`: the serving path must degrade, not die. A panic in
+//! `coordinator/{shard,server,router}.rs` takes down a shard that the
+//! supervisor then has to resurrect — every fallible step there must
+//! propagate a `Result` so the deadline/circuit-breaker machinery can do
+//! its job. `#[cfg(test)]` regions are exempt.
+
+use crate::lexer::find_token;
+use crate::{Finding, SourceFile};
+
+/// Stable rule name.
+pub const ID: &str = "panic-freedom";
+
+const PANIC_FILES: [&str; 3] =
+    ["coordinator/shard.rs", "coordinator/server.rs", "coordinator/router.rs"];
+
+/// Flag `.unwrap()`/`.expect()` calls and panicking macros in non-test
+/// code of the serving-path files.
+pub fn check(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !PANIC_FILES.iter().any(|s| f.rel.ends_with(s)) {
+        return;
+    }
+    for (ix, line) in f.lines.iter().enumerate() {
+        if f.in_test[ix] {
+            continue;
+        }
+        let code = line.code.as_str();
+        for word in ["unwrap", "expect"] {
+            if let Some(k) = find_token(code, word) {
+                let prev = code[..k].trim_end();
+                let rest = code[k + word.len()..].trim_start();
+                if prev.ends_with('.') && rest.starts_with('(') {
+                    push(out, f, ix, format!("`.{word}()` on a serving path"));
+                }
+            }
+        }
+        for mac in ["panic", "unreachable", "todo", "unimplemented"] {
+            if let Some(k) = find_token(code, mac) {
+                if code[k + mac.len()..].trim_start().starts_with('!') {
+                    push(out, f, ix, format!("`{mac}!` on a serving path"));
+                }
+            }
+        }
+    }
+}
+
+fn push(out: &mut Vec<Finding>, f: &SourceFile, ix: usize, msg: String) {
+    out.push(Finding { file: f.rel.clone(), line: ix + 1, rule: ID, msg });
+}

@@ -1,0 +1,64 @@
+//! `unsafe-discipline`: every `unsafe` token must have a `// SAFETY:`
+//! comment on the same line or in the comment block directly above it
+//! (attributes and obvious statement-continuation lines are skipped when
+//! walking upward, so the comment may sit above a `#[target_feature]`
+//! attribute or a multi-line signature).
+
+use crate::lexer::{comment_only, has_token};
+use crate::{Finding, SourceFile};
+
+/// Stable rule name.
+pub const ID: &str = "unsafe-discipline";
+
+/// Line endings that mean "the statement continues below", so the walk
+/// upward toward the safety comment keeps going.
+const CONT_ENDINGS: [&str; 7] = ["=", "(", ",", "&&", "||", "+", "->"];
+
+/// Flag `unsafe` tokens that lack an adjacent `// SAFETY:` comment.
+pub fn check(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (ix, line) in f.lines.iter().enumerate() {
+        if !has_token(&line.code, "unsafe") {
+            continue;
+        }
+        if line.comment.contains("SAFETY:") {
+            continue;
+        }
+        if covered_above(f, ix) {
+            continue;
+        }
+        out.push(Finding {
+            file: f.rel.clone(),
+            line: ix + 1,
+            rule: ID,
+            msg: "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+        });
+    }
+}
+
+fn covered_above(f: &SourceFile, ix: usize) -> bool {
+    let mut j = ix;
+    while j > 0 {
+        j -= 1;
+        if comment_only(&f.lines[j]) {
+            // scan the whole contiguous comment block
+            loop {
+                if f.lines[j].comment.contains("SAFETY:") {
+                    return true;
+                }
+                if j == 0 || !comment_only(&f.lines[j - 1]) {
+                    return false;
+                }
+                j -= 1;
+            }
+        }
+        let t = f.lines[j].code.trim();
+        if t.starts_with("#[") || t.starts_with("#![") {
+            continue;
+        }
+        if !t.is_empty() && CONT_ENDINGS.iter().any(|e| t.ends_with(e)) {
+            continue;
+        }
+        return false;
+    }
+    false
+}

@@ -1,0 +1,435 @@
+//! `wire-format`: `docs/FORMAT.md` is normative for the MCNC2 container,
+//! so the numbers in the prose must equal the constants in `codec/`.
+//! This rule parses the spec (magic line, varint limit, bounds table,
+//! header table, codec-tag table, rANS parameters) into expected values,
+//! scans `codec/` sources for `const` declarations (resolving simple
+//! `A << B` and identifier references), and reports three failure modes:
+//! a spec value the parser can no longer locate, a spec value with no
+//! matching code constant, and a plain numeric mismatch. Drift is fixed
+//! in code or spec — findings on this rule should never be suppressed.
+
+use std::collections::HashMap;
+
+use crate::lexer::find_token;
+use crate::{Finding, SourceFile};
+
+/// Stable rule name.
+pub const ID: &str = "wire-format";
+
+/// Spec-named integer constants that must exist in `codec/` with the
+/// exact spec value. The magic byte string is checked separately.
+const WIRE_INTS: [&str; 15] = [
+    "MAX_HEADER",
+    "MAX_FRAME",
+    "MAX_ELEMS",
+    "MAX_DIMS",
+    "MAX_NAME",
+    "MAX_VARINT_BYTES",
+    "VERSION",
+    "TAG_LOSSLESS",
+    "TAG_INT8",
+    "TAG_INT4",
+    "INT8_BITS",
+    "INT4_BITS",
+    "M",
+    "SCALE_BITS",
+    "RANS_L",
+];
+
+/// Cross-check the spec text against the `codec/` constants in `files`.
+pub fn check(spec_rel: &str, spec_text: &str, files: &[SourceFile], out: &mut Vec<Finding>) {
+    let (exp, magic_spec) = spec_expectations(spec_rel, spec_text, out);
+    let consts = code_constants(files);
+    let magic_code = find_magic(files);
+
+    match magic_spec {
+        None => miss(out, spec_rel, 1, "FORMAT.md: could not locate spec value for `MAGIC_V2`"),
+        Some((want, spec_line)) => match magic_code {
+            None => miss(out, spec_rel, spec_line, "codec/ has no MAGIC_V2 byte-string constant"),
+            Some((got, rel, line)) => {
+                if got != want {
+                    let g = String::from_utf8_lossy(&got).escape_default().to_string();
+                    let w = String::from_utf8_lossy(&want).escape_default().to_string();
+                    out.push(Finding {
+                        file: rel,
+                        line,
+                        rule: ID,
+                        msg: format!("magic bytes \"{g}\" in code but \"{w}\" in FORMAT.md"),
+                    });
+                }
+            }
+        },
+    }
+
+    for name in WIRE_INTS {
+        let Some(&(want, spec_line)) = exp.get(name) else {
+            let m = format!("FORMAT.md: could not locate spec value for `{name}`");
+            miss(out, spec_rel, 1, &m);
+            continue;
+        };
+        let Some((got, rel, line)) = consts.get(name) else {
+            let m = format!("codec/ defines no constant `{name}` (spec: {want})");
+            miss(out, spec_rel, spec_line, &m);
+            continue;
+        };
+        if *got != want {
+            out.push(Finding {
+                file: rel.clone(),
+                line: *line,
+                rule: ID,
+                msg: format!("`{name}` = {got} in code but {want} in FORMAT.md"),
+            });
+        }
+    }
+}
+
+fn miss(out: &mut Vec<Finding>, file: &str, line: usize, msg: &str) {
+    out.push(Finding { file: file.to_string(), line, rule: ID, msg: msg.to_string() });
+}
+
+// ------------------------------------------------------------ spec side
+
+type Expectations = HashMap<String, (u64, usize)>;
+
+/// Parse the spec into `{name: (value, 1-based spec line)}`, plus the
+/// magic byte string. Self-contradictions in the spec (magic string vs
+/// hex bytes) are reported directly.
+fn spec_expectations(
+    spec_rel: &str,
+    spec_text: &str,
+    out: &mut Vec<Finding>,
+) -> (Expectations, Option<(Vec<u8>, usize)>) {
+    let mut exp = Expectations::new();
+    let mut magic = None;
+    for (ix0, line) in spec_text.lines().enumerate() {
+        let ix = ix0 + 1;
+        if line.trim().starts_with("magic") && line.contains('"') && line.contains('=') {
+            parse_magic_line(spec_rel, line, ix, &mut magic, out);
+        }
+        if line.contains("than") && line.contains("bytes") {
+            if let Some(v) = parse_varint_limit(line) {
+                exp.insert("MAX_VARINT_BYTES".to_string(), (v, ix));
+            }
+        }
+        if line.starts_with('|') {
+            parse_table_row(line, ix, &mut exp);
+        }
+        if let Some((_, seg)) = line.split_once("`M = ") {
+            let num = seg.split('`').next().unwrap_or("").trim();
+            if !num.is_empty() && num.chars().all(|c| c.is_ascii_digit()) {
+                if let Ok(v) = num.parse() {
+                    exp.insert("M".to_string(), (v, ix));
+                }
+            }
+            if let Some(bits) = trailing_int_before(line, "-bit") {
+                exp.insert("SCALE_BITS".to_string(), (bits, ix));
+            }
+        }
+        if let Some((_, seg)) = line.split_once("`L = ") {
+            if let Some(v) = parse_value(seg.split('`').next().unwrap_or("")) {
+                exp.insert("RANS_L".to_string(), (v, ix));
+            }
+        }
+    }
+    (exp, magic)
+}
+
+/// `magic    6 bytes   "MCNC2\n" = 4d 43 4e 43 32 0a` — extract the
+/// quoted literal, check it against the hex pairs, record it.
+fn parse_magic_line(
+    spec_rel: &str,
+    line: &str,
+    ix: usize,
+    magic: &mut Option<(Vec<u8>, usize)>,
+    out: &mut Vec<Finding>,
+) {
+    let Some(q1) = line.find('"') else {
+        return;
+    };
+    let Some(q2r) = line[q1 + 1..].find('"') else {
+        return;
+    };
+    let q2 = q1 + 1 + q2r;
+    let lit = unescape(&line[q1 + 1..q2]);
+    let Some(eqr) = line[q2..].find('=') else {
+        return;
+    };
+    let mut hexbytes = Vec::new();
+    for tok in line[q2 + eqr + 1..].split_whitespace() {
+        if tok.len() != 2 {
+            continue;
+        }
+        if let Ok(b) = u8::from_str_radix(tok, 16) {
+            hexbytes.push(b);
+        }
+    }
+    if lit != hexbytes {
+        miss(out, spec_rel, ix, "FORMAT.md magic string and hex bytes disagree");
+    }
+    *magic = Some((lit, ix));
+}
+
+fn unescape(s: &str) -> Vec<u8> {
+    s.replace("\\n", "\n").replace("\\0", "\0").into_bytes()
+}
+
+/// `... must reject varints longer than 10 bytes ...` — the number
+/// between "than" and "bytes", when both land on this line.
+fn parse_varint_limit(line: &str) -> Option<u64> {
+    let (_, seg) = line.split_once("than")?;
+    let seg = seg.trim_start();
+    let num: String = seg.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if num.is_empty() || !seg[num.len()..].trim_start().starts_with("bytes") {
+        return None;
+    }
+    num.parse().ok()
+}
+
+/// One `| ... |` table row: bounds cells (`≤ value (\`NAME\`)`), the
+/// header-table version row, and codec-tag rows.
+fn parse_table_row(line: &str, ix: usize, exp: &mut Expectations) {
+    let parts: Vec<&str> = line.split('|').collect();
+    let cells: Vec<&str> = parts[1..parts.len() - 1].iter().map(|c| c.trim()).collect();
+    for cell in &cells {
+        let Some(bt) = cell.find("(`") else {
+            continue;
+        };
+        if !cell.ends_with("`)") || bt + 2 > cell.len() - 2 {
+            continue;
+        }
+        let name = &cell[bt + 2..cell.len() - 2];
+        if let Some(val) = parse_value(&cell[..bt]) {
+            exp.insert(name.to_string(), (val, ix));
+        }
+    }
+    if cells.len() >= 3 && cells[0] == "`version`" && line.contains("must be") {
+        let seg = line.split_once("must be").map(|x| x.1).unwrap_or("");
+        if let Some(v) = backtick_int(seg) {
+            exp.insert("VERSION".to_string(), (v, ix));
+        }
+    }
+    if cells.len() >= 3 && !cells[0].is_empty() && cells[0].chars().all(|c| c.is_ascii_digit()) {
+        if let Ok(tag) = cells[0].parse::<u64>() {
+            let name = cells[1].trim_matches('`');
+            let key = match name {
+                "lossless" => Some("TAG_LOSSLESS"),
+                "int8" => Some("TAG_INT8"),
+                "int4" => Some("TAG_INT4"),
+                _ => None,
+            };
+            if let Some(key) = key {
+                exp.insert(key.to_string(), (tag, ix));
+                if let Some(bits) = trailing_int_before(cells[2], "-bit") {
+                    if name == "int8" {
+                        exp.insert("INT8_BITS".to_string(), (bits, ix));
+                    } else if name == "int4" {
+                        exp.insert("INT4_BITS".to_string(), (bits, ix));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The digit run immediately before the first `marker` in `text`.
+fn trailing_int_before(text: &str, marker: &str) -> Option<u64> {
+    let k = text.find(marker)?;
+    let digits: String = text[..k].chars().rev().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() {
+        return None;
+    }
+    digits.chars().rev().collect::<String>().parse().ok()
+}
+
+/// First backtick-quoted integer in `seg`.
+fn backtick_int(seg: &str) -> Option<u64> {
+    let q1 = seg.find('`')?;
+    let rest = &seg[q1 + 1..];
+    let inner = &rest[..rest.find('`')?];
+    if inner.is_empty() || !inner.chars().all(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    inner.parse().ok()
+}
+
+fn superscript(c: char) -> Option<u64> {
+    "⁰¹²³⁴⁵⁶⁷⁸⁹".chars().position(|x| x == c).map(|p| p as u64)
+}
+
+/// Parse a spec-side value: `1 MiB` | `1 GiB` | `2²⁸` | `2^28` | `4096`
+/// (leading `≤` and whitespace tolerated).
+fn parse_value(text: &str) -> Option<u64> {
+    let t = text.trim().trim_start_matches('≤').trim();
+    for (suffix, mult) in [("MiB", 1u64 << 20), ("GiB", 1 << 30), ("KiB", 1 << 10)] {
+        if let Some(k) = t.find(suffix) {
+            let num = t[..k].trim();
+            if !num.is_empty() && num.chars().all(|c| c.is_ascii_digit()) {
+                return num.parse::<u64>().ok().map(|v| v * mult);
+            }
+        }
+    }
+    let mut chars = t.chars();
+    if chars.next() == Some('2') && chars.next().and_then(superscript).is_some() {
+        let mut e = 0u64;
+        for ch in t.chars().skip(1) {
+            match superscript(ch) {
+                Some(d) => e = e * 10 + d,
+                None => break,
+            }
+        }
+        return Some(1u64 << e);
+    }
+    if let Some(rest) = t.strip_prefix("2^") {
+        let digits: String = rest.chars().filter(|c| c.is_ascii_digit()).collect();
+        if !digits.is_empty() {
+            return digits.parse::<u64>().ok().map(|e| 1u64 << e);
+        }
+    }
+    let mut digits = String::new();
+    for ch in t.chars() {
+        if ch.is_ascii_digit() {
+            digits.push(ch);
+        } else if !digits.is_empty() {
+            break;
+        }
+    }
+    if digits.is_empty() {
+        None
+    } else {
+        digits.parse().ok()
+    }
+}
+
+// ------------------------------------------------------------ code side
+
+struct Decl {
+    expr: String,
+    rel: String,
+    line: usize,
+}
+
+type Resolved = HashMap<String, (u64, String, usize)>;
+
+/// Collect `const NAME[: ty] = EXPR;` declarations from `codec/` files
+/// and resolve them to integers (literals, `A << B`, and references to
+/// other collected constants).
+fn code_constants(files: &[SourceFile]) -> Resolved {
+    let mut decls: HashMap<String, Decl> = HashMap::new();
+    for f in files {
+        if !f.rel.contains("codec/") {
+            continue;
+        }
+        for (ix, line) in f.lines.iter().enumerate() {
+            let Some(k) = find_token(&line.code, "const") else {
+                continue;
+            };
+            let rest = line.code[k + "const".len()..].trim();
+            let Some(eq) = rest.find('=') else {
+                continue;
+            };
+            let name_end = match rest.find(':') {
+                Some(c) if c < eq => c,
+                _ => eq,
+            };
+            let name = rest[..name_end].trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                continue;
+            }
+            let expr = rest[eq + 1..].trim().trim_end_matches(';').trim().to_string();
+            decls.insert(name.to_string(), Decl { expr, rel: f.rel.clone(), line: ix + 1 });
+        }
+    }
+    let mut resolved = Resolved::new();
+    let names: Vec<String> = decls.keys().cloned().collect();
+    for name in names {
+        resolve(&name, &decls, &mut resolved, 0);
+    }
+    resolved
+}
+
+fn resolve(
+    name: &str,
+    decls: &HashMap<String, Decl>,
+    resolved: &mut Resolved,
+    depth: usize,
+) -> Option<u64> {
+    if let Some((v, _, _)) = resolved.get(name) {
+        return Some(*v);
+    }
+    if depth > 8 {
+        return None;
+    }
+    let d = decls.get(name)?;
+    let val = eval_expr(&d.expr, decls, resolved, depth)?;
+    resolved.insert(name.to_string(), (val, d.rel.clone(), d.line));
+    Some(val)
+}
+
+fn eval_expr(
+    expr: &str,
+    decls: &HashMap<String, Decl>,
+    resolved: &mut Resolved,
+    depth: usize,
+) -> Option<u64> {
+    let expr = expr.trim();
+    if expr.starts_with("b\"") {
+        // the magic byte string; handled from raw lines by find_magic
+        return None;
+    }
+    if let Some((lhs, rhs)) = expr.split_once("<<") {
+        let lv = eval_atom(lhs, decls, resolved, depth)?;
+        let rv = eval_atom(rhs, decls, resolved, depth)?;
+        return Some(lv << rv);
+    }
+    eval_atom(expr, decls, resolved, depth)
+}
+
+fn eval_atom(
+    atom: &str,
+    decls: &HashMap<String, Decl>,
+    resolved: &mut Resolved,
+    depth: usize,
+) -> Option<u64> {
+    let mut a = atom.trim().trim_matches(|c: char| c == '(' || c == ')');
+    for suf in ["usize", "u64", "u32", "u8", "i32", "i64"] {
+        if let Some(head) = a.strip_suffix(suf) {
+            let tail_ok = head.chars().last().map(|c| c.is_ascii_digit() || c == '_');
+            if tail_ok.unwrap_or(false) {
+                a = head;
+            }
+        }
+    }
+    let no_us: String = a.chars().filter(|&c| c != '_').collect();
+    if !no_us.is_empty() && no_us.chars().all(|c| c.is_ascii_digit()) {
+        return no_us.parse().ok();
+    }
+    if !a.is_empty() && a.chars().all(|c| c.is_alphanumeric() || c == '_') {
+        return resolve(a, decls, resolved, depth + 1);
+    }
+    None
+}
+
+/// The `MAGIC_V2` byte string must be read from raw source — the lexer
+/// masks string contents out of the code text.
+fn find_magic(files: &[SourceFile]) -> Option<(Vec<u8>, String, usize)> {
+    let mut found = None;
+    for f in files {
+        if !f.rel.contains("codec/") {
+            continue;
+        }
+        for (ix, line) in f.raw.lines().enumerate() {
+            if !(line.contains("MAGIC_V2") && line.contains("b\"") && line.contains("const")) {
+                continue;
+            }
+            let Some(q1) = line.find("b\"") else {
+                continue;
+            };
+            let rest = &line[q1 + 2..];
+            let Some(q2) = rest.find('"') else {
+                continue;
+            };
+            found = Some((unescape(&rest[..q2]), f.rel.clone(), ix + 1));
+        }
+    }
+    found
+}

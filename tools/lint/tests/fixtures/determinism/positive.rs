@@ -1,0 +1,5 @@
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> u128 {
+    Instant::now().elapsed().as_nanos()
+}

@@ -1,0 +1,5 @@
+pub fn boot_id() -> u64 {
+    // lint:allow(determinism): observability label only, never in the schedule
+    let t = std::time::SystemTime::now();
+    (format!("{t:?}").len()) as u64
+}

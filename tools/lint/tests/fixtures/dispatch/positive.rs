@@ -1,0 +1,11 @@
+use core::arch::x86_64::_mm256_setzero_ps;
+
+#[target_feature(enable = "avx2")]
+// SAFETY: fixture only; never executed.
+pub unsafe fn zero() {}
+
+pub fn pick() {
+    if is_x86_feature_detected!("avx2") {
+        scalar::noop();
+    }
+}

@@ -1,0 +1,2 @@
+// lint:allow(dispatch-containment): fixture demonstrates suppression
+use core::arch::x86_64::_mm256_setzero_ps;

@@ -1,0 +1,13 @@
+use anyhow::{anyhow, Result};
+
+pub fn run(v: Option<u32>) -> Result<u32> {
+    v.ok_or_else(|| anyhow!("missing"))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_here() {
+        assert_eq!(Some(3u32).unwrap(), 3);
+    }
+}

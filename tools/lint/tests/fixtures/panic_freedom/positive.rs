@@ -1,0 +1,7 @@
+pub fn run(v: Option<u32>) -> u32 {
+    let x = v.unwrap();
+    if x > 9 {
+        panic!("too big");
+    }
+    x
+}

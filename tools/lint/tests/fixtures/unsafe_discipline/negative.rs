@@ -1,0 +1,11 @@
+pub fn peek(xs: &[u8]) -> u8 {
+    // SAFETY: caller guarantees xs is non-empty.
+    unsafe { *xs.as_ptr() }
+}
+
+// SAFETY: callers must pass a valid, initialized pointer.
+#[inline]
+pub unsafe fn peek_raw(p: *const u8) -> u8 {
+    // SAFETY: contract inherited from the function's safety docs.
+    unsafe { *p }
+}

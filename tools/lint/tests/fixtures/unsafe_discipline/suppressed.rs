@@ -1,0 +1,4 @@
+pub fn peek(xs: &[u8]) -> u8 {
+    // lint:allow(unsafe-discipline): audited in review, comment pending
+    unsafe { *xs.as_ptr() }
+}

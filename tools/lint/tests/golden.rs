@@ -1,0 +1,211 @@
+//! Golden tests for every lint rule: a positive fixture that must fire
+//! at an exact `file:line`, a negative fixture that must stay silent,
+//! and a suppression fixture whose `lint:allow` moves the finding into
+//! the suppressed list. Fixtures live under `tests/fixtures/` and are
+//! linted under *synthetic* relative paths so the path-gated rules
+//! (panic-freedom, determinism, dispatch) see the tree layout they
+//! expect. The suite ends with the self-check: the real `rust/src` tree
+//! must lint clean against `docs/FORMAT.md`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use mcnc_lint::{lint_sources, report, source_file, Report};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+/// Lint one fixture under a synthetic relative path, no spec.
+fn lint_one(rel: &str, fixture_name: &str) -> Report {
+    lint_sources(&[source_file(rel, &fixture(fixture_name))], None)
+}
+
+fn hits(list: &[mcnc_lint::Finding], rule: &str) -> Vec<(String, usize)> {
+    list.iter().filter(|f| f.rule == rule).map(|f| (f.file.clone(), f.line)).collect()
+}
+
+fn loc(file: &str, line: usize) -> (String, usize) {
+    (file.to_string(), line)
+}
+
+// ------------------------------------------------------ unsafe-discipline
+
+#[test]
+fn unsafe_discipline_positive() {
+    let rep = lint_one("mcnc/generator.rs", "unsafe_discipline/positive.rs");
+    assert_eq!(hits(&rep.findings, "unsafe-discipline"), [loc("mcnc/generator.rs", 2)]);
+}
+
+#[test]
+fn unsafe_discipline_negative() {
+    let rep = lint_one("mcnc/generator.rs", "unsafe_discipline/negative.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn unsafe_discipline_suppressed() {
+    let rep = lint_one("mcnc/generator.rs", "unsafe_discipline/suppressed.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(hits(&rep.suppressed, "unsafe-discipline"), [loc("mcnc/generator.rs", 3)]);
+}
+
+// --------------------------------------------------- dispatch-containment
+
+#[test]
+fn dispatch_positive() {
+    let rep = lint_one("runtime/session.rs", "dispatch/positive.rs");
+    let want = [
+        loc("runtime/session.rs", 1), // core::arch import
+        loc("runtime/session.rs", 3), // #[target_feature]
+        loc("runtime/session.rs", 8), // is_x86_feature_detected!
+        loc("runtime/session.rs", 9), // scalar:: reference
+    ];
+    assert_eq!(hits(&rep.findings, "dispatch-containment"), want);
+}
+
+#[test]
+fn dispatch_negative_inside_kernel() {
+    // the same constructs are legal in mcnc/kernel/{x86,neon}.rs
+    let rep = lint_one("mcnc/kernel/x86.rs", "dispatch/negative.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn dispatch_suppressed() {
+    let rep = lint_one("runtime/session.rs", "dispatch/suppressed.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(hits(&rep.suppressed, "dispatch-containment"), [loc("runtime/session.rs", 2)]);
+}
+
+// ----------------------------------------------------------- panic-freedom
+
+#[test]
+fn panic_freedom_positive() {
+    let rep = lint_one("coordinator/server.rs", "panic_freedom/positive.rs");
+    let want = [loc("coordinator/server.rs", 2), loc("coordinator/server.rs", 4)];
+    assert_eq!(hits(&rep.findings, "panic-freedom"), want);
+}
+
+#[test]
+fn panic_freedom_negative_test_code_exempt() {
+    // .unwrap() inside #[cfg(test)] mod tests is allowed
+    let rep = lint_one("coordinator/server.rs", "panic_freedom/negative.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn panic_freedom_suppressed() {
+    let rep = lint_one("coordinator/router.rs", "panic_freedom/suppressed.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(hits(&rep.suppressed, "panic-freedom"), [loc("coordinator/router.rs", 3)]);
+}
+
+#[test]
+fn panic_freedom_ignores_other_files() {
+    // the same code outside coordinator/{shard,server,router}.rs is fine
+    let rep = lint_one("mcnc/generator.rs", "panic_freedom/positive.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+// ------------------------------------------------------------- determinism
+
+#[test]
+fn determinism_positive() {
+    let rep = lint_one("codec/rans.rs", "determinism/positive.rs");
+    let want = [loc("codec/rans.rs", 1), loc("codec/rans.rs", 4)];
+    assert_eq!(hits(&rep.findings, "determinism"), want);
+}
+
+#[test]
+fn determinism_negative_seeded_rng() {
+    let rep = lint_one("codec/rans.rs", "determinism/negative.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn determinism_suppressed() {
+    let rep = lint_one("coordinator/chaos.rs", "determinism/suppressed.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(hits(&rep.suppressed, "determinism"), [loc("coordinator/chaos.rs", 3)]);
+}
+
+// ------------------------------------------------------------- wire-format
+
+#[test]
+fn wire_format_clean() {
+    let spec = fixture("wire_format/spec.md");
+    let sf = source_file("codec/container.rs", &fixture("wire_format/code_ok.rs"));
+    let rep = lint_sources(&[sf], Some(("spec.md", &spec)));
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn wire_format_drift_points_at_code_line() {
+    let spec = fixture("wire_format/spec.md");
+    let sf = source_file("codec/container.rs", &fixture("wire_format/code_drift.rs"));
+    let rep = lint_sources(&[sf], Some(("spec.md", &spec)));
+    let got = hits(&rep.findings, "wire-format");
+    assert_eq!(got, [loc("codec/container.rs", 5)]);
+    assert!(rep.findings[0].msg.contains("MAX_DIMS"), "{}", rep.findings[0].msg);
+}
+
+// ------------------------------------------------------------ JSON report
+
+#[test]
+fn report_json_shape() {
+    let rep = lint_one("coordinator/server.rs", "panic_freedom/positive.rs");
+    let json = report::to_json(&rep);
+    assert!(json.contains("\"files_scanned\": 1"), "{json}");
+    assert!(json.contains("\"total_findings\": 2"), "{json}");
+    assert!(json.contains("\"panic-freedom\": { \"findings\": 2, \"suppressed\": 0 }"), "{json}");
+    assert!(json.contains("\"file\": \"coordinator/server.rs\""), "{json}");
+    for rule in report::RULES {
+        assert!(json.contains(&format!("\"{rule}\"")), "missing rule {rule} in {json}");
+    }
+}
+
+// ------------------------------------------------------------ CLI behavior
+
+#[test]
+fn cli_exit_code_and_report() {
+    let tmp = std::env::temp_dir().join(format!("mcnc-lint-cli-{}", std::process::id()));
+    let src = tmp.join("coordinator");
+    fs::create_dir_all(&src).expect("mkdir fixture tree");
+    let bad = "pub fn f(v: Option<u8>) -> u8 {\n    v.unwrap()\n}\n";
+    fs::write(src.join("server.rs"), bad).expect("write fixture");
+    let report_path = tmp.join("r.json");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_mcnc-lint"))
+        .arg("--report")
+        .arg(&report_path)
+        .arg(&tmp)
+        .output()
+        .expect("run mcnc-lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(1), "stdout: {stdout}");
+    assert!(stdout.contains("coordinator/server.rs:2: [panic-freedom]"), "{stdout}");
+    let json = fs::read_to_string(&report_path).expect("report written");
+    assert!(json.contains("\"total_findings\": 1"), "{json}");
+    let _ = fs::remove_dir_all(&tmp);
+}
+
+// --------------------------------------------------------- tree self-check
+
+fn repo_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../..").join(rel)
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    let root = repo_path("rust/src");
+    let spec = repo_path("docs/FORMAT.md");
+    let rep = mcnc_lint::lint_tree(&root, Some(&spec)).expect("walk rust/src");
+    let msgs: Vec<String> = rep
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg))
+        .collect();
+    assert!(msgs.is_empty(), "unexpected lint findings:\n{}", msgs.join("\n"));
+    assert!(rep.files_scanned > 40, "scanned only {} files", rep.files_scanned);
+}
