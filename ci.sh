@@ -33,6 +33,12 @@ cargo test -q --test integration_server
 echo "== fault tolerance: deterministic chaos schedules (pinned seeds) =="
 cargo test -q --test integration_chaos
 
+echo "== observability: Prometheus/Chrome-trace exports under chaos =="
+cargo test -q --test integration_obs
+
+echo "== observability hook overhead (perf_micro smoke; obs section only) =="
+cargo bench --bench perf_micro -- --smoke
+
 echo "== availability under faults (table4 smoke; mock + chaos, no artifacts) =="
 cargo bench --bench table4_peft_serving -- --smoke
 

@@ -1,21 +1,154 @@
 //! Micro-benchmarks for the §Perf pass: generator reconstruction throughput
 //! (native vs PJRT), router/batcher ops, LRU cache, JSON parsing, session
-//! overhead. Baselines for EXPERIMENTS.md §Perf live here.
+//! overhead, and the observability hook costs (EXPERIMENTS.md §Perf /
+//! docs/OBSERVABILITY.md §Overhead). `-- --smoke` runs only the obs
+//! overhead section — the CI gate that disabled tracing stays one relaxed
+//! atomic load.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use anyhow::Result;
 use mcnc::codec::quantizer;
-use mcnc::coordinator::{BatchPolicy, Request, Router};
+use mcnc::coordinator::{
+    Batch, BatchPolicy, EngineCore, Request, Router, ServeStats, Server, ServerCfg,
+};
 use mcnc::exp::Ctx;
 use mcnc::mcnc::kernel::{self, Isa};
 use mcnc::mcnc::{GenCfg, Generator};
+use mcnc::obs::{self, trace, Kind, TraceMode};
 use mcnc::runtime::init;
 use mcnc::tensor::Tensor;
 use mcnc::util::bench::{fmt_si, fmt_time, time_it, Table};
 use mcnc::util::prng::Stream;
 
+/// Free-running engine for the serve-overhead rows: fault behaviour and
+/// artifact IO are out of the picture, so tracing on/off is the only
+/// variable between the two measurements.
+#[derive(Default)]
+struct NullEngine {
+    stats: ServeStats,
+}
+
+impl EngineCore for NullEngine {
+    fn seq(&self) -> usize {
+        8
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        task < 4
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        self.stats.batches += 1;
+        Ok(batch.requests.iter().map(|_| 0).collect())
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+}
+
+/// Closed-loop mock-serve throughput under a given trace mode.
+fn serve_throughput(mode: TraceMode, window: Duration) -> f64 {
+    trace::set_mode(mode);
+    trace::clear();
+    let cfg = ServerCfg {
+        n_tasks: 4,
+        n_shards: 1,
+        policy: BatchPolicy { max_batch: 8, max_delay: Duration::ZERO },
+        ..ServerCfg::default()
+    };
+    let server = Server::start_with(&cfg, |_| -> Result<NullEngine> { Ok(NullEngine::default()) })
+        .expect("start overhead server");
+    let t0 = Instant::now();
+    let mut n = 0u64;
+    while t0.elapsed() < window {
+        let rxs: Vec<_> = (0..4).map(|t| server.submit(t, vec![0; 8])).collect();
+        for rx in rxs {
+            let _ = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+        }
+        n += 4;
+    }
+    let thr = n as f64 / t0.elapsed().as_secs_f64();
+    server.stop().expect("stop overhead server");
+    trace::set_mode(TraceMode::Off);
+    trace::clear();
+    thr
+}
+
+/// Observability hook costs: the disabled-tracing fast path (one relaxed
+/// atomic load), registry counter/histogram updates, ring writes with
+/// tracing on, and the end-to-end serve delta between tracing modes.
+fn obs_overhead(table: &mut Table, smoke: bool) {
+    let ops: u64 = if smoke { 200_000 } else { 1_000_000 };
+    let per = |s: &mcnc::util::bench::Stats| format!("{:.2}", s.median() * 1e9 / ops as f64);
+
+    // (a) the disabled hook: trace::span behind `enabled()` — this row is
+    // the "tracing off costs one relaxed load" claim, measured.
+    trace::set_mode(TraceMode::Off);
+    let t = Instant::now();
+    let s = time_it(2, 8, || {
+        for i in 0..ops {
+            trace::span(i, 0, 0, Kind::Gemm, t, t);
+        }
+    });
+    table.row(vec!["obs span, tracing off".into(), "ns/op".into(), per(&s)]);
+
+    // (b) the same hook with the ring live
+    trace::set_mode(TraceMode::All);
+    let s = time_it(2, 8, || {
+        for i in 0..ops {
+            trace::span(i, 0, 0, Kind::Gemm, t, t);
+        }
+    });
+    trace::set_mode(TraceMode::Off);
+    trace::clear();
+    table.row(vec!["obs span, tracing all".into(), "ns/op".into(), per(&s)]);
+
+    // (c) registry handles: pre-bound counter inc and histogram record
+    let c = obs::registry().counter("perf_obs_counter_total", &[]);
+    let s = time_it(2, 8, || {
+        for _ in 0..ops {
+            c.inc();
+        }
+    });
+    table.row(vec!["obs counter inc (pre-bound)".into(), "ns/op".into(), per(&s)]);
+    let h = obs::registry().histogram("perf_obs_record_us", &[]);
+    let d = Duration::from_micros(7);
+    let s = time_it(2, 8, || {
+        for _ in 0..ops {
+            h.record(d);
+        }
+    });
+    table.row(vec!["obs histogram record".into(), "ns/op".into(), per(&s)]);
+
+    // (d) end to end: mock-serve throughput, tracing off vs sampled vs all
+    let window = Duration::from_millis(if smoke { 120 } else { 400 });
+    let off = serve_throughput(TraceMode::Off, window);
+    let sampled = serve_throughput(TraceMode::Sampled(64), window);
+    let all = serve_throughput(TraceMode::All, window);
+    table.row(vec!["mock serve, tracing off".into(), "req/s".into(), fmt_si(off)]);
+    table.row(vec!["mock serve, tracing sampled:64".into(), "req/s".into(), fmt_si(sampled)]);
+    table.row(vec!["mock serve, tracing all".into(), "req/s".into(), fmt_si(all)]);
+    table.row(vec![
+        "serve overhead, all vs off".into(),
+        "%".into(),
+        format!("{:.2}", 100.0 * (1.0 - all / off.max(f64::MIN_POSITIVE))),
+    ]);
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut table = Table::new("perf micro", &["target", "metric", "value"]);
+    if smoke {
+        obs_overhead(&mut table, true);
+        table.print();
+        return;
+    }
 
     // --- native generator reconstruction: seed matvec path vs GEMM ---
     let cfg = GenCfg { k: 9, d: 5000, width: 256, depth: 3, ..GenCfg::default() };
@@ -220,6 +353,9 @@ fn main() {
         "median".into(),
         fmt_time(s.median()),
     ]);
+
+    // --- observability hook + serve overhead ---
+    obs_overhead(&mut table, false);
 
     table.print();
     table.save_csv("perf_micro");

@@ -114,13 +114,73 @@ fn availability_under_faults(smoke: bool) {
     }
 }
 
+/// Table 4d: the serving runs above as seen through the process-wide
+/// metrics registry — the same figures an operator scraping
+/// `mcnc serve --metrics-file` would get. Cumulative across every server
+/// this process started (the registry is global by design), so the rows
+/// are cross-checks of the per-server tables, not replacements.
+fn registry_view(smoke: bool) {
+    let snap = mcnc::obs::registry().snapshot();
+    let qw = snap.histogram_merged("mcnc_serve_queue_wait_us");
+    let lat = snap.histogram_merged("mcnc_serve_latency_us");
+    let batches = snap.counter_sum("mcnc_serve_batches_total");
+    let batch_requests = snap.counter_sum("mcnc_serve_batch_requests_total");
+    let occupancy = if batches == 0 {
+        "-".to_string()
+    } else {
+        format!("{:.2}", batch_requests as f64 / batches as f64)
+    };
+    let mut table =
+        Table::new("Table 4d — registry view (process-wide, cumulative)", &["metric", "value"]);
+    table.row(vec![
+        "requests".into(),
+        snap.counter_sum("mcnc_serve_requests_total").to_string(),
+    ]);
+    table.row(vec![
+        "queue wait p50/p99".into(),
+        format!("{:?}/{:?}", qw.percentile_mid(50.0), qw.percentile_mid(99.0)),
+    ]);
+    table.row(vec![
+        "latency p50/p99".into(),
+        format!("{:?}/{:?}", lat.percentile_mid(50.0), lat.percentile_mid(99.0)),
+    ]);
+    table.row(vec!["batch occupancy".into(), occupancy]);
+    table.row(vec![
+        "deadline shed".into(),
+        snap.counter_sum("mcnc_serve_deadline_shed_total").to_string(),
+    ]);
+    table.row(vec![
+        "restarts".into(),
+        snap.counter_sum("mcnc_serve_restarts_total").to_string(),
+    ]);
+    table.row(vec![
+        "breaker opens".into(),
+        snap.counter_sum("mcnc_serve_breaker_opens_total").to_string(),
+    ]);
+    table.print();
+    if !smoke {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("BENCH_table4_metrics.json");
+        let body = mcnc::util::json::to_string(&mcnc::obs::export::snapshot_json(&snap));
+        match std::fs::write(&path, body) {
+            Ok(()) => println!("[bench] wrote {}", path.display()),
+            Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+        }
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     availability_under_faults(smoke);
-    if smoke {
-        return;
+    if !smoke {
+        if let Some(ctx) = Ctx::open() {
+            full_run(&ctx);
+        }
     }
-    let Some(ctx) = Ctx::open() else { return };
+    registry_view(smoke);
+}
+
+fn full_run(ctx: &Ctx) {
     let steps = steps_lm();
     let base_chain = MarkovLm::base(11, 128, 32);
     let task_chain = MarkovLm::task(&base_chain, 1, 0.8);

@@ -1,6 +1,13 @@
 //! Byte-bounded LRU cache — the adapter cache of the serving engine
 //! ("merged" mode caches reconstructed full weights per task; the cap makes
 //! the memory/recompute trade-off of Table 4's discussion explicit).
+//!
+//! The cache keeps no metrics of its own (it is a pure data structure; the
+//! `evictions` counter and `used_bytes`/`len` accessors are its only
+//! accounting). The serving engine mirrors them into the obs registry —
+//! `mcnc_cache_{hits,misses,evictions}_total{shard}` and the
+//! `mcnc_cache_used_bytes`/`mcnc_cache_entries` gauges — at its put/get
+//! call sites, so hit/miss semantics stay where they are decided.
 
 use std::collections::HashMap;
 use std::hash::Hash;

@@ -1,83 +1,12 @@
-//! Serving metrics: log-bucketed latency histogram (HDR-style) and batch
-//! occupancy counters for the Table-4/8 reports.
+//! Serving metrics: the per-shard `ServeStats` counters behind the
+//! Table-4/8 reports. The log-bucketed latency [`Histogram`] that used to
+//! live here was promoted to [`crate::obs::hist`] so every layer shares
+//! one bucket layout; it is re-exported here unchanged for existing
+//! callers. `ServeStats` remains the exact per-`Server` accounting
+//! returned by `stop()`; the obs registry mirrors these counters as the
+//! process-wide live view (`Server::metrics_snapshot()`).
 
-use std::time::Duration;
-
-/// Latency histogram with ~4% relative resolution, 1µs .. ~70s.
-#[derive(Debug, Clone)]
-pub struct Histogram {
-    buckets: Vec<u64>, // geometric: bound_i = 1µs * 1.04^i
-    count: u64,
-    sum_us: f64,
-    max_us: f64,
-}
-
-const GROWTH: f64 = 1.04;
-const N_BUCKETS: usize = 448; // 1.04^448 ≈ 4.3e7 µs ≈ 43 s
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Histogram { buckets: vec![0; N_BUCKETS], count: 0, sum_us: 0.0, max_us: 0.0 }
-    }
-}
-
-impl Histogram {
-    /// Record one sample.
-    pub fn record(&mut self, d: Duration) {
-        let us = d.as_secs_f64() * 1e6;
-        let idx = if us <= 1.0 {
-            0
-        } else {
-            (us.ln() / GROWTH.ln()).floor() as usize
-        };
-        self.buckets[idx.min(N_BUCKETS - 1)] += 1;
-        self.count += 1;
-        self.sum_us += us;
-        self.max_us = self.max_us.max(us);
-    }
-
-    /// Number of recorded samples.
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    /// Exact mean of the recorded samples.
-    pub fn mean(&self) -> Duration {
-        Duration::from_secs_f64(self.sum_us / self.count.max(1) as f64 / 1e6)
-    }
-
-    /// Largest recorded sample.
-    pub fn max(&self) -> Duration {
-        Duration::from_secs_f64(self.max_us / 1e6)
-    }
-
-    /// Percentile (upper bucket bound — conservative).
-    pub fn percentile(&self, p: f64) -> Duration {
-        if self.count == 0 {
-            return Duration::ZERO;
-        }
-        let target = (p / 100.0 * self.count as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                let upper_us = GROWTH.powi(i as i32 + 1);
-                return Duration::from_secs_f64(upper_us / 1e6);
-            }
-        }
-        self.max()
-    }
-
-    /// Fold another histogram's buckets and counters into this one.
-    pub fn merge(&mut self, other: &Histogram) {
-        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
-            *a += b;
-        }
-        self.count += other.count;
-        self.sum_us += other.sum_us;
-        self.max_us = self.max_us.max(other.max_us);
-    }
-}
+pub use crate::obs::Histogram;
 
 /// Aggregate serving counters. Each shard keeps its own; `merge` folds
 /// them into the server-wide totals on stop.
@@ -172,41 +101,13 @@ impl ServeStats {
 
 #[cfg(test)]
 mod tests {
+    use std::time::Duration;
+
     use super::*;
 
-    #[test]
-    fn percentiles_ordered() {
-        let mut h = Histogram::default();
-        for i in 1..=1000u64 {
-            h.record(Duration::from_micros(i));
-        }
-        assert_eq!(h.count(), 1000);
-        let p50 = h.percentile(50.0);
-        let p99 = h.percentile(99.0);
-        assert!(p50 < p99);
-        // ~4% resolution
-        assert!((p50.as_secs_f64() * 1e6 - 500.0).abs() < 40.0, "{p50:?}");
-        assert!((p99.as_secs_f64() * 1e6 - 990.0).abs() < 80.0, "{p99:?}");
-        assert!(h.mean().as_micros() > 400 && h.mean().as_micros() < 600);
-    }
-
-    #[test]
-    fn empty_histogram_safe() {
-        let h = Histogram::default();
-        assert_eq!(h.percentile(99.0), Duration::ZERO);
-        assert_eq!(h.mean(), Duration::ZERO);
-    }
-
-    #[test]
-    fn merge_adds() {
-        let mut a = Histogram::default();
-        let mut b = Histogram::default();
-        a.record(Duration::from_micros(10));
-        b.record(Duration::from_micros(1000));
-        a.merge(&b);
-        assert_eq!(a.count(), 2);
-        assert!(a.max() >= Duration::from_micros(1000));
-    }
+    // Histogram unit tests (bucket semantics, merge, percentile
+    // monotonicity) live with the type in `obs::hist`; these cover the
+    // `ServeStats` aggregation that stayed behind.
 
     #[test]
     fn stats_merge_sums_counters_and_merges_histograms() {

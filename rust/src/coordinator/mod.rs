@@ -19,6 +19,15 @@
 //! circuit breaker on consecutive batch failures. The [`chaos`] module
 //! provides the deterministic fault-injection harness that proves the
 //! exactly-one-`Response` invariant under all of it.
+//!
+//! Every serving counter here is double-booked: the per-shard `ServeStats`
+//! (exact, returned by [`Server::stop`]) and a mirror in the process-wide
+//! [`crate::obs`] registry ([`Server::metrics_snapshot`], labelled by
+//! `shard`/`task_mod`), which also carries the request trace spans — queue
+//! wait, batch execution, merged-LRU fill, codec decode — and the
+//! supervisor's structured events (restart, re-warm, breaker-open). All
+//! coordinator counters go through `obs` handles; mcnc-lint's
+//! `metrics-naming` rule keeps bare atomic counters out of this module.
 
 #![warn(missing_docs)]
 

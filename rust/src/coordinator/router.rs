@@ -24,6 +24,13 @@ pub struct Request {
 }
 
 impl Request {
+    /// The request's trace id: the server-assigned `id` minted at
+    /// `submit`/`submit_with` doubles as the id every obs span for this
+    /// request is recorded under (`MCNC_TRACE` sampling keys off it).
+    pub fn trace_id(&self) -> u64 {
+        self.id
+    }
+
     /// Whether the request's deadline (if any) has passed at `now`.
     pub fn expired(&self, now: Instant) -> bool {
         self.deadline.map(|d| now >= d).unwrap_or(false)
@@ -37,6 +44,17 @@ pub struct Batch {
     pub task: usize,
     /// The batched requests, FIFO within the task.
     pub requests: Vec<Request>,
+}
+
+impl Batch {
+    /// Trace id the batch's execution spans are recorded under: the first
+    /// request's id (FIFO head — the request that waited longest and thus
+    /// triggered the flush), or 0 for an empty batch. Per-request queue
+    /// spans keep their own ids; only batch-granular work (engine run,
+    /// cache fill, GEMM) shares this one.
+    pub fn trace_id(&self) -> u64 {
+        self.requests.first().map_or(0, |r| r.id)
+    }
 }
 
 /// When the batcher flushes a task queue.

@@ -24,7 +24,7 @@
 //! request never kills a shard or strands its neighbours.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -37,6 +37,7 @@ use crate::coordinator::metrics::ServeStats;
 use crate::coordinator::router::{Batch, BatchPolicy, Request};
 use crate::coordinator::shard::{error_response, EngineCore, Msg, Shard, WarmSlot};
 use crate::coordinator::warm::{self, WarmStats};
+use crate::obs;
 use crate::util::prng::{tag, Stream};
 use crate::mcnc::{kernel, GenCfg, Generator};
 use crate::runtime::init::init_inputs;
@@ -498,8 +499,14 @@ fn decode_adapter(
     }
     // frame decode fans across the thread pool (entropy decode dominates a
     // cold fill's CPU cost); corruption on a worker is still a plain Err
-    let frames: Vec<(String, Tensor)> =
-        dec.decode_all()?.into_iter().map(|(name, t, _codec)| (name, t)).collect();
+    let frames: Vec<(String, Tensor)> = dec
+        .decode_all()?
+        .into_iter()
+        .map(|(name, t, codec)| {
+            obs::count_decoded_frame(codec.name());
+            (name, t)
+        })
+        .collect();
     let mut out = Vec::with_capacity(specs.len());
     for spec in specs {
         let ix = frames
@@ -610,6 +617,8 @@ pub struct Engine {
     /// This engine's serving counters (merged across shards on stop).
     pub stats: ServeStats,
     recon_flops_per_pass: u64,
+    /// Registry mirror of the cache / decode / reconstruction counters.
+    obs: obs::EngineObs,
 }
 
 impl Engine {
@@ -691,6 +700,7 @@ impl Engine {
             seq,
             stats: ServeStats::default(),
             recon_flops_per_pass,
+            obs: obs::EngineObs::register(shard),
             cfg,
         })
     }
@@ -749,7 +759,14 @@ impl Engine {
         task: usize,
         reader: impl std::io::Read,
     ) -> Result<()> {
-        let trainables = decode_adapter(&self.cfg.kind, &self.trainable_specs, reader)?;
+        // decode is timed here, on the coordinator side of the codec
+        // boundary — codec/ itself stays wall-clock-free (determinism lint)
+        let t0 = Instant::now();
+        let mut meter = obs::MeterRead::new(reader);
+        let trainables = decode_adapter(&self.cfg.kind, &self.trainable_specs, &mut meter)?;
+        let done = Instant::now();
+        self.obs.record_decode(meter.bytes(), trainables.len() as u64, done - t0);
+        obs::trace::span(0, self.shard, task, obs::Kind::Decode, t0, done);
         self.install_adapter(task, trainables)
     }
 
@@ -765,7 +782,10 @@ impl Engine {
     /// reconstructed up front into the merged LRU, so the first request per
     /// task is a cache hit instead of a cold fill.
     pub fn warm_from_artifact(&mut self, reader: impl std::io::Read) -> Result<WarmStats> {
-        let mut dec = codec::Decoder::new(reader).context("decoding warm-start artifact")?;
+        // caller-side decode timing (see install_adapter_encoded)
+        let t0 = Instant::now();
+        let mut meter = obs::MeterRead::new(reader);
+        let mut dec = codec::Decoder::new(&mut meter).context("decoding warm-start artifact")?;
         if !dec.header().entry.starts_with(&self.cfg.kind) {
             bail!(
                 "warm artifact is for entry {:?}, this engine serves kind {:?}",
@@ -785,6 +805,13 @@ impl Engine {
             },
         )?;
         let skipped = dec.frames_seen() - frames.len();
+        drop(dec);
+        let done = Instant::now();
+        self.obs.record_decode(meter.bytes(), frames.len() as u64, done - t0);
+        obs::trace::span(0, shard, 0, obs::Kind::Decode, t0, done);
+        for (_, _, codec) in &frames {
+            obs::count_decoded_frame(codec.name());
+        }
         let (owned, _) = warm::group_for_shard(frames, &self.trainable_specs, shard, n_shards)?;
         // validate every owned task (range + manifest shapes — the same
         // checks install_adapter runs) *before* the first install, so a
@@ -868,20 +895,25 @@ impl Engine {
                 inputs.extend(adapter.iter());
                 inputs.push(&x);
                 self.stats.recon_flops += self.recon_flops_per_pass;
+                self.obs.recon_flops.add(self.recon_flops_per_pass);
                 self.session.run_refs(&self.predict, &inputs)?.remove(0)
             }
             Mode::Merged => {
                 let dense_tr: Arc<Vec<Tensor>> =
                     if let Some(v) = self.merged_cache.get(&batch.task) {
                         self.stats.cache_hits += 1;
+                        self.obs.cache_hits.inc();
                         Arc::clone(v)
                     } else {
                         // cold task: reconstruct full weights — natively via
                         // the blocked-GEMM engine when built (new_sharded
                         // gates that on cfg.native_recon), else through the
                         // PJRT recon executable
+                        let t_fill = Instant::now();
+                        let native = self.native.is_some();
                         let theta = if let Some(nr) = &self.native {
                             self.stats.native_fills += 1;
+                            self.obs.native_fills.inc();
                             nr.reconstruct(adapter)?
                         } else {
                             let recon = format!("{}_recon", self.cfg.kind);
@@ -889,8 +921,20 @@ impl Engine {
                             rin.extend(adapter.iter());
                             self.session.run_refs(&recon, &rin)?.remove(0)
                         };
+                        // the native path's cost is the packed blocked GEMM,
+                        // so its fill span doubles as the request's GEMM span
+                        obs::trace::span(
+                            batch.trace_id(),
+                            self.shard,
+                            batch.task,
+                            if native { obs::Kind::Gemm } else { obs::Kind::Fill },
+                            t_fill,
+                            Instant::now(),
+                        );
                         self.stats.recon_flops += self.recon_flops_per_pass;
+                        self.obs.recon_flops.add(self.recon_flops_per_pass);
                         self.stats.cache_misses += 1;
+                        self.obs.cache_misses.inc();
                         // dense trainables = [theta_c, raw]; raw comes from
                         // the adapter state (last trainable by convention)
                         let raw = adapter
@@ -902,7 +946,11 @@ impl Engine {
                         let v = Arc::new(vec![theta, raw]);
                         // an entry larger than this shard's cache slice is
                         // rejected by put — still serve it, just uncached
+                        let ev0 = self.merged_cache.evictions;
                         self.merged_cache.put(batch.task, Arc::clone(&v));
+                        self.obs.cache_evictions.add(self.merged_cache.evictions - ev0);
+                        self.obs.cache_used_bytes.set(self.merged_cache.used_bytes() as i64);
+                        self.obs.cache_entries.set(self.merged_cache.len() as i64);
                         v
                     };
                 let mut inputs: Vec<&Tensor> =
@@ -974,10 +1022,17 @@ impl EngineCore for Engine {
 /// per-shard stats on stop.
 pub struct Server {
     shards: Vec<Shard>,
-    next_id: AtomicU64,
-    rejected: AtomicU64,
-    retries: AtomicU64,
-    fastfail: AtomicU64,
+    /// Request-id mint; the id doubles as the request's trace id.
+    next_id: obs::IdGen,
+    // Exact per-`Server` admission counters, read by `stop()`. These are
+    // local `obs::Counter`s (not registry handles) so `stop()` returns
+    // this server's numbers even when several servers share the process;
+    // `obs` below mirrors every increment into the global registry.
+    rejected: obs::Counter,
+    retries: obs::Counter,
+    fastfail: obs::Counter,
+    /// Process-wide registry mirror of the admission counters.
+    obs: obs::ServerObs,
     deadline: Option<Duration>,
     retry: RetryPolicy,
     seed: u64,
@@ -1093,10 +1148,11 @@ impl Server {
         }
         Ok(Server {
             shards,
-            next_id: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            retries: AtomicU64::new(0),
-            fastfail: AtomicU64::new(0),
+            next_id: obs::IdGen::new(),
+            rejected: obs::Counter::new(),
+            retries: obs::Counter::new(),
+            fastfail: obs::Counter::new(),
+            obs: obs::ServerObs::register(),
             deadline: cfg.deadline,
             retry: cfg.retry,
             seed: cfg.seed,
@@ -1161,14 +1217,16 @@ impl Server {
         tokens: Vec<i32>,
         deadline: Option<Duration>,
     ) -> mpsc::Receiver<Response> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.next();
+        self.obs.requests.inc();
         let (rtx, rrx) = mpsc::channel();
         let now = Instant::now();
         let req =
             Request { id, task, tokens, enqueued: now, deadline: deadline.map(|d| now + d) };
         let shard = task % self.shards.len();
         if !self.shards[shard].breaker.allow() {
-            self.fastfail.fetch_add(1, Ordering::Relaxed);
+            self.fastfail.inc();
+            self.obs.fastfail.inc();
             let _ = rtx.send(error_response(
                 &req,
                 ServeError::Rejected(format!("shard {shard} circuit open")),
@@ -1182,14 +1240,16 @@ impl Server {
                 Ok(()) => return rrx,
                 Err(mpsc::TrySendError::Full(m)) => {
                     if attempt >= self.retry.attempts {
-                        self.rejected.fetch_add(1, Ordering::Relaxed);
+                        self.rejected.inc();
+                        self.obs.rejected.inc();
                         break (
                             m,
                             ServeError::Rejected(format!("shard {shard} admission queue full")),
                         );
                     }
                     attempt += 1;
-                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    self.retries.inc();
+                    self.obs.retries.inc();
                     // doubling backoff + deterministic per-(request,
                     // attempt) jitter so colliding submitters
                     // desynchronize reproducibly
@@ -1213,6 +1273,17 @@ impl Server {
             let _ = rtx.send(error_response(&req, err));
         }
         rrx
+    }
+
+    /// Snapshot the observability metrics registry: every counter, gauge
+    /// and histogram the serving path, codec callers and kernels have
+    /// registered. The registry is **process-wide** — when several servers
+    /// share the process the snapshot covers all of them; for this
+    /// server's exact accounting use the `ServeStats` from [`Server::stop`].
+    /// Feed the result to [`crate::obs::export::prometheus_text`] or
+    /// [`crate::obs::export::snapshot_json`].
+    pub fn metrics_snapshot(&self) -> obs::Snapshot {
+        obs::registry().snapshot()
     }
 
     /// How long a response collector should wait before declaring a
@@ -1250,9 +1321,9 @@ impl Server {
                 }
             }
         }
-        total.rejected += self.rejected.load(Ordering::Relaxed);
-        total.retries += self.retries.load(Ordering::Relaxed);
-        total.breaker_fastfail += self.fastfail.load(Ordering::Relaxed);
+        total.rejected += self.rejected.get();
+        total.retries += self.retries.get();
+        total.breaker_fastfail += self.fastfail.get();
         match first_err {
             Some(e) => Err(e),
             None => Ok(total),

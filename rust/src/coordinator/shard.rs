@@ -37,6 +37,8 @@ use crate::coordinator::metrics::ServeStats;
 use crate::coordinator::router::{Batch, BatchPolicy, Request, Router};
 use crate::coordinator::server::{Breaker, Response, RestartPolicy, ServeError};
 use crate::coordinator::warm::WarmStats;
+use crate::obs;
+use crate::util::logging;
 
 /// Messages from the dispatcher to a shard.
 pub(crate) enum Msg {
@@ -183,6 +185,8 @@ where
     F: Fn() -> Result<E>,
 {
     let started = Instant::now();
+    logging::set_thread_context(&format!("shard {ix}"));
+    let sobs = obs::ShardObs::register(ix);
     let mut total = ServeStats::default();
     let mut pending: HashMap<u64, PendingReply> = HashMap::new();
     let mut unproductive = 0u32;
@@ -201,12 +205,18 @@ where
                         Err(p) => p.into_inner().clone(),
                     };
                     if let Some(path) = art {
-                        let _ = engine.preload(&path);
+                        if engine.preload(&path).is_ok() {
+                            obs::trace::event(
+                                ix,
+                                obs::Kind::Rewarm,
+                                &format!("from {}", path.display()),
+                            );
+                        }
                     }
                 }
                 let served = AtomicBool::new(false);
                 let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
-                    run_loop(engine, &rx, policy, heartbeat, &mut pending, &breaker, &served)
+                    run_loop(engine, ix, &sobs, &rx, policy, heartbeat, &mut pending, &breaker, &served)
                 }));
                 match outcome {
                     Ok(stats) => {
@@ -226,6 +236,7 @@ where
                         // now or its reply channel hangs forever
                         for (id, p) in pending.drain() {
                             total.errors += 1;
+                            sobs.errors.inc();
                             answer_pending(
                                 id,
                                 p,
@@ -242,12 +253,14 @@ where
         unproductive += 1;
         if unproductive > restart.max_restarts {
             total.wall_secs = started.elapsed().as_secs_f64();
-            drain_dead(&rx, ix, &cause, &mut total, &mut pending);
+            drain_dead(&rx, ix, &cause, &mut total, &mut pending, &sobs);
             return Err(anyhow!(
                 "shard {ix} permanently dead after {unproductive} failed incarnations ({cause})"
             ));
         }
         total.restarts += 1;
+        sobs.restarts.inc();
+        obs::trace::event(ix, obs::Kind::Restart, &cause);
         thread::sleep(backoff);
         backoff = (backoff * 2).min(restart.max_backoff.max(restart.backoff));
     }
@@ -262,9 +275,12 @@ fn drain_dead(
     cause: &str,
     total: &mut ServeStats,
     pending: &mut HashMap<u64, PendingReply>,
+    sobs: &obs::ShardObs,
 ) {
+    obs::trace::event(ix, obs::Kind::DrainDead, cause);
     for (id, p) in pending.drain() {
         total.errors += 1;
+        sobs.errors.inc();
         answer_pending(id, p, ServeError::Failed(format!("shard {ix} dead: {cause}")));
     }
     loop {
@@ -275,6 +291,7 @@ fn drain_dead(
             }
             Ok(Msg::Req(req, reply)) => {
                 total.errors += 1;
+                sobs.errors.inc();
                 let _ = reply.send(error_response(
                     &req,
                     ServeError::Failed(format!("shard {ix} dead: {cause}")),
@@ -293,6 +310,7 @@ fn ingest<E: EngineCore>(
     router: &mut Router,
     pending: &mut HashMap<u64, PendingReply>,
     stopping: &mut bool,
+    sobs: &obs::ShardObs,
 ) {
     match msg {
         Msg::Stop => *stopping = true,
@@ -324,6 +342,7 @@ fn ingest<E: EngineCore>(
             match verdict {
                 Some(msg) => {
                     engine.stats_mut().errors += 1;
+                    sobs.errors.inc();
                     if let Some(p) = pending.remove(&req.id) {
                         let _ = p.tx.send(error_response(&req, ServeError::Failed(msg)));
                     }
@@ -340,8 +359,11 @@ fn ingest<E: EngineCore>(
 /// signal. `pending` is owned by the supervisor so an unwind cannot strand
 /// reply channels; `served` reports whether this incarnation completed at
 /// least one batch (it resets the restart budget).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_loop<E: EngineCore>(
     mut engine: E,
+    ix: usize,
+    sobs: &obs::ShardObs,
     rx: &mpsc::Receiver<Msg>,
     policy: BatchPolicy,
     heartbeat: Duration,
@@ -357,7 +379,7 @@ pub(crate) fn run_loop<E: EngineCore>(
         // 1) ingest everything already queued, without blocking
         loop {
             match rx.try_recv() {
-                Ok(msg) => ingest(msg, &mut engine, &mut router, pending, &mut stopping),
+                Ok(msg) => ingest(msg, &mut engine, &mut router, pending, &mut stopping, sobs),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     stopping = true;
@@ -375,6 +397,7 @@ pub(crate) fn run_loop<E: EngineCore>(
             router.sweep_expired(now);
             for req in router.take_expired() {
                 engine.stats_mut().deadline_shed += 1;
+                sobs.deadline_shed.inc();
                 if let Some(p) = pending.remove(&req.id) {
                     let _ = p.tx.send(error_response(&req, ServeError::DeadlineExceeded));
                 }
@@ -383,9 +406,15 @@ pub(crate) fn run_loop<E: EngineCore>(
                 break;
             };
             for req in &batch.requests {
-                engine.stats_mut().queue_wait.record(now.duration_since(req.enqueued));
+                let wait = now.duration_since(req.enqueued);
+                engine.stats_mut().queue_wait.record(wait);
+                sobs.queue_wait_us.record(wait);
+                // the queue span ends exactly where the batch span starts
+                obs::trace::span(req.trace_id(), ix, req.task, obs::Kind::Queue, req.enqueued, now);
             }
             let rows = batch.requests.len();
+            sobs.batch_counter(batch.task).inc();
+            sobs.batch_requests.add(rows as u64);
             // contain a panicking batch: its requests are answered Failed
             // below, exactly like a batch that returned Err, and the loop
             // keeps serving the other tasks
@@ -395,6 +424,7 @@ pub(crate) fn run_loop<E: EngineCore>(
                 Ok(res) => res,
                 Err(payload) => {
                     engine.stats_mut().batch_panics += 1;
+                    sobs.batch_panics.inc();
                     Err(anyhow!("batch panicked: {}", panic_msg(payload.as_ref())))
                 }
             };
@@ -411,9 +441,11 @@ pub(crate) fn run_loop<E: EngineCore>(
                     served.store(true, Ordering::Relaxed);
                     breaker.record_success();
                     let done = Instant::now();
+                    obs::trace::span(batch.trace_id(), ix, batch.task, obs::Kind::Batch, now, done);
                     for (req, tok) in batch.requests.iter().zip(preds) {
                         let latency = done.duration_since(req.enqueued);
                         engine.stats_mut().latency.record(latency);
+                        sobs.latency_us.record(latency);
                         if let Some(p) = pending.remove(&req.id) {
                             let _ = p.tx.send(Response {
                                 id: req.id,
@@ -428,11 +460,15 @@ pub(crate) fn run_loop<E: EngineCore>(
                 Err(e) => {
                     if breaker.record_failure() {
                         engine.stats_mut().breaker_opens += 1;
+                        sobs.breaker_opens.inc();
+                        obs::trace::event(ix, obs::Kind::BreakerOpen, &format!("{e:#}"));
                     }
                     let done = Instant::now();
+                    obs::trace::span(batch.trace_id(), ix, batch.task, obs::Kind::Batch, now, done);
                     let msg = format!("batch failed: {e:#}");
                     for req in &batch.requests {
                         engine.stats_mut().errors += 1;
+                        sobs.errors.inc();
                         if let Some(p) = pending.remove(&req.id) {
                             let _ = p.tx.send(Response {
                                 id: req.id,
@@ -459,7 +495,7 @@ pub(crate) fn run_loop<E: EngineCore>(
             None => heartbeat,
         };
         match rx.recv_timeout(wait) {
-            Ok(msg) => ingest(msg, &mut engine, &mut router, pending, &mut stopping),
+            Ok(msg) => ingest(msg, &mut engine, &mut router, pending, &mut stopping, sobs),
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => stopping = true,
         }

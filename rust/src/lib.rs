@@ -21,6 +21,9 @@
 //!   rANS, framed container, streaming adapters).
 //! * [`train`] / [`runtime`] — training orchestration and the PJRT
 //!   boundary (stubbed offline behind the `pjrt` feature).
+//! * [`obs`] — observability: the metrics registry, request tracing, and
+//!   Prometheus / Chrome-trace exporters (callable from every layer; see
+//!   docs/OBSERVABILITY.md for the metric catalog).
 //! * [`baselines`], [`sphere`], [`flops`], [`data`] — paper comparisons
 //!   and analyses.
 //! * [`util`] — in-tree substrates: JSON, CLI, config, PRNG, thread pool
@@ -45,6 +48,7 @@ pub mod data;
 pub mod exp;
 pub mod flops;
 pub mod mcnc;
+pub mod obs;
 pub mod runtime;
 pub mod sphere;
 pub mod tensor;

@@ -22,6 +22,7 @@ use mcnc::util::threadpool;
 
 fn main() {
     mcnc::util::logging::init_from_env();
+    mcnc::obs::init_from_env();
     let args = Args::from_env();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let code = match run(cmd, &args) {
@@ -69,7 +70,8 @@ const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 re
   train   --exec NAME [--steps N --lr F --batch B --seed S --out CK --codec lossless|int8|int4 --block N --data synth|c10|c100|lm]
   eval    --ckpt FILE [--seed S]
   serve   [--kind K --tasks N --shards N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S --queue-cap N --preload FILE
-           --deadline-ms MS --max-restarts N --retry N --breaker K]
+           --deadline-ms MS --max-restarts N --retry N --breaker K
+           --metrics-file F --metrics-interval-ms N --trace-out F]
   sphere  [--acts sine,sigmoid,relu --l 1,5,10,100 --width 256]
   config  --file cfg.toml        config-driven training job
   pack    --ckpt FILE --out FILE [--codec lossless|int8|int4 --block N]
@@ -95,6 +97,17 @@ Global flags / env:
                   a full admission queue before surfacing Rejected (default 0)
   --breaker K     (serve) open a shard's circuit breaker after K consecutive
                   batch failures; 0 disables (default)
+  --metrics-file F (serve) write a metrics-registry snapshot to F every
+                  --metrics-interval-ms N (default 1000), plus a final one on
+                  stop; `.prom`/`.txt` extension → Prometheus text exposition,
+                  anything else → JSON (docs/OBSERVABILITY.md)
+  --trace-out F   (serve) record request/shard spans and write a Chrome
+                  trace-event JSON to F on stop (load in Perfetto or
+                  chrome://tracing); forces MCNC_TRACE=all unless MCNC_TRACE
+                  is already set
+  MCNC_TRACE=x    request tracing: off (default) | all | sampled:N (trace
+                  every Nth request id)
+  MCNC_LOG=x      stderr log level: debug|info|warn|off (default info)
   MCNC_SIMD=x     pin the reconstruction microkernel ISA: scalar|avx2|neon|auto
                   (default auto probes the host; unavailable ISAs fall back
                   to scalar)
@@ -252,6 +265,38 @@ fn serve_cmd(args: &Args) -> Result<()> {
         "serving {} ({:?}), {} tasks on {} shard(s), {:.0} req/s for {:.0}s …",
         cfg.kind, cfg.mode, n_tasks, cfg.n_shards, rate, secs
     );
+    // --trace-out implies tracing on for the run; an explicit MCNC_TRACE
+    // (e.g. sampled:100) still wins so operators can bound trace volume
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        if std::env::var("MCNC_TRACE").is_err() {
+            mcnc::obs::trace::set_mode(mcnc::obs::TraceMode::All);
+        }
+        mcnc::obs::trace::clear();
+    }
+    // periodic metrics snapshots: the registry is process-global, so the
+    // writer thread needs no handle on the server
+    let metrics_file = args.get("metrics-file").map(std::path::PathBuf::from);
+    let metrics_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let metrics_writer = metrics_file.clone().map(|path| {
+        let stop = Arc::clone(&metrics_stop);
+        let interval =
+            std::time::Duration::from_millis(args.u64_or("metrics-interval-ms", 1000).max(10));
+        std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                write_metrics_file(&path);
+                // sleep in short slices so stop is honored promptly
+                let mut left = interval;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed)
+                    && left > std::time::Duration::ZERO
+                {
+                    let s = left.min(std::time::Duration::from_millis(50));
+                    std::thread::sleep(s);
+                    left = left.saturating_sub(s);
+                }
+            }
+        })
+    });
     let lm = MarkovLm::base(1, 128, 32);
     let schedule =
         open_loop(7, rate, std::time::Duration::from_secs_f64(secs), n_tasks, zipf_s);
@@ -271,6 +316,25 @@ fn serve_cmd(args: &Args) -> Result<()> {
     }
     let rep = replay(&server, &lm, 9, &schedule);
     let stats = server.stop()?;
+    metrics_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(h) = metrics_writer {
+        let _ = h.join();
+    }
+    if let Some(path) = &metrics_file {
+        // final snapshot after stop so the file carries the run's totals
+        write_metrics_file(path);
+        println!("metrics snapshot: {}", path.display());
+    }
+    if let Some(path) = &trace_out {
+        let recs = mcnc::obs::trace::records();
+        std::fs::write(path, mcnc::obs::export::chrome_trace(&recs))
+            .with_context(|| format!("writing chrome trace {}", path.display()))?;
+        println!(
+            "chrome trace: {} ({} records; load in Perfetto or chrome://tracing)",
+            path.display(),
+            recs.len()
+        );
+    }
     println!(
         "ok {}/{} (rejected {} failed {} deadline-exceeded {} dropped {} timed-out {}) | throughput {:.1} req/s | p50 {:?} p99 {:?} | queue p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
         rep.ok,
@@ -300,6 +364,21 @@ fn serve_cmd(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Write one metrics-registry snapshot to `path`: Prometheus text
+/// exposition when the extension is `.prom`/`.txt`, JSON otherwise.
+/// Best-effort — a failed write warns and the run continues (metrics must
+/// never take down serving).
+fn write_metrics_file(path: &std::path::Path) {
+    let snap = mcnc::obs::registry().snapshot();
+    let body = match path.extension().and_then(|e| e.to_str()) {
+        Some("prom") | Some("txt") => mcnc::obs::export::prometheus_text(&snap),
+        _ => mcnc::util::json::to_string(&mcnc::obs::export::snapshot_json(&snap)),
+    };
+    if let Err(e) = std::fs::write(path, body) {
+        eprintln!("warning: metrics snapshot {}: {e}", path.display());
+    }
 }
 
 fn sphere_cmd(args: &Args) -> Result<()> {

@@ -20,7 +20,9 @@
 //! packing and compute can never disagree. `MCNC_SIMD=scalar|avx2|neon`
 //! pins the process-wide choice (unavailable ISAs degrade to scalar); the
 //! `*_for` entry points pin it per call, which is how tests compare both
-//! paths inside one process.
+//! paths inside one process. GEMM/GEMV dispatches are counted per ISA in
+//! the obs registry (`mcnc_kernel_gemm_total{isa}` — see
+//! docs/OBSERVABILITY.md).
 //!
 //! **Reduction-order contract.** Every output element is accumulated over
 //! the *full* K dimension in ascending order, exactly like the per-chunk
@@ -38,6 +40,36 @@ mod scalar;
 mod x86;
 
 pub use dispatch::{active, available, Isa};
+
+/// Per-ISA dispatch counters — `mcnc_kernel_gemm_total{isa}` and
+/// `mcnc_kernel_gemv_total{isa}` — bound lazily in the obs registry the
+/// first time a kernel dispatches. After binding, each dispatch costs one
+/// relaxed atomic add; the counters live here (not in `dispatch`) so the
+/// increment sits next to the `match` that actually picks the kernel.
+fn dispatch_counters() -> &'static [[std::sync::Arc<crate::obs::Counter>; 3]; 2] {
+    static COUNTERS: std::sync::OnceLock<[[std::sync::Arc<crate::obs::Counter>; 3]; 2]> =
+        std::sync::OnceLock::new();
+    COUNTERS.get_or_init(|| {
+        let r = crate::obs::registry();
+        let bind = |name: &'static str| {
+            [Isa::Scalar, Isa::Avx2, Isa::Neon]
+                .map(|isa| r.counter(name, &[("isa", isa.name())]))
+        };
+        [bind("mcnc_kernel_gemm_total"), bind("mcnc_kernel_gemv_total")]
+    })
+}
+
+const OP_GEMM: usize = 0;
+const OP_GEMV: usize = 1;
+
+fn count_dispatch(op: usize, isa: Isa) {
+    let ix = match isa {
+        Isa::Scalar => 0,
+        Isa::Avx2 => 1,
+        Isa::Neon => 2,
+    };
+    dispatch_counters()[op][ix].inc();
+}
 
 /// `B [K, N]` packed into ⌈N/NR⌉ panels of `K × NR` (k-major inside a
 /// panel); the last panel is zero-padded to NR columns. NR is the packing
@@ -268,6 +300,7 @@ pub fn gemm(a: &[f32], m: usize, b: &PackedB, c: &mut [f32]) {
     if m == 0 || n == 0 {
         return;
     }
+    count_dispatch(OP_GEMM, b.isa);
     match b.isa {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => x86::gemm(a, m, k, n, &b.panels, c),
@@ -290,7 +323,9 @@ pub fn gemv_for(isa: Isa, x: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f
     assert!(x.len() >= k, "x smaller than {k}");
     assert!(b.len() >= k * n, "basis smaller than {k}x{n}");
     assert!(out.len() >= n, "out smaller than {n}");
-    match dispatch::clamp(isa) {
+    let isa = dispatch::clamp(isa);
+    count_dispatch(OP_GEMV, isa);
+    match isa {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => x86::gemv(x, b, k, n, out),
         #[cfg(target_arch = "aarch64")]
@@ -437,6 +472,19 @@ mod tests {
                 assert!(cs.iter().zip(&cd).all(|(x, y)| x.to_bits() == y.to_bits()));
             }
         }
+    }
+
+    #[test]
+    fn gemm_dispatch_is_counted_per_isa() {
+        // registry is process-wide and shared across tests: assert
+        // monotone growth, not exact values
+        let c = crate::obs::registry()
+            .counter("mcnc_kernel_gemm_total", &[("isa", Isa::Scalar.name())]);
+        let before = c.get();
+        let b = pack_b_for(Isa::Scalar, &[1.0; 6], 2, 3);
+        let mut out = [0.0f32; 3];
+        gemm(&[1.0, 1.0], 1, &b, &mut out);
+        assert!(c.get() >= before + 1, "scalar gemm dispatch not counted");
     }
 
     #[test]

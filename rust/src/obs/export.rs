@@ -1,0 +1,296 @@
+//! Exporters: Prometheus text exposition, JSON snapshots, and Chrome
+//! trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! All three are pure functions of a [`Snapshot`] or a span list — no IO,
+//! no clocks — so callers (`mcnc serve --metrics-file/--trace-out`,
+//! benches, tests) decide where the bytes go. Histograms export with
+//! cumulative `_bucket{le=...}` lines over their non-empty buckets plus
+//! `+Inf`, `_sum`, and `_count`, all in microseconds.
+
+use std::fmt::Write as _;
+
+use super::hist::Histogram;
+use super::registry::{MetricId, Snapshot};
+use super::trace::SpanRecord;
+use crate::util::json::{to_string, Json};
+
+/// Render a snapshot in Prometheus text exposition format (version 0.0.4):
+/// `# TYPE` headers, then `name{labels} value` sample lines.
+pub fn prometheus_text(s: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut last_name = "";
+    for (id, v) in &s.counters {
+        type_header(&mut out, &mut last_name, id.name, "counter");
+        let _ = writeln!(out, "{}{} {v}", id.name, label_block(id));
+    }
+    for (id, v) in &s.gauges {
+        type_header(&mut out, &mut last_name, id.name, "gauge");
+        let _ = writeln!(out, "{}{} {v}", id.name, label_block(id));
+    }
+    for (id, h) in &s.histograms {
+        type_header(&mut out, &mut last_name, id.name, "histogram");
+        let mut acc = 0u64;
+        for (upper_us, count) in h.nonzero_buckets() {
+            acc += count;
+            let le = fmt_f64(upper_us);
+            let _ = writeln!(out, "{}_bucket{} {acc}", id.name, label_block_with(id, "le", &le));
+        }
+        let _ =
+            writeln!(out, "{}_bucket{} {}", id.name, label_block_with(id, "le", "+Inf"), h.count());
+        let _ = writeln!(out, "{}_sum{} {}", id.name, label_block(id), fmt_f64(h.sum_us()));
+        let _ = writeln!(out, "{}_count{} {}", id.name, label_block(id), h.count());
+    }
+    out
+}
+
+fn type_header(out: &mut String, last: &mut &str, name: &'static str, kind: &str) {
+    if *last != name {
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        *last = name;
+    }
+}
+
+fn label_block(id: &MetricId) -> String {
+    if id.labels.is_empty() {
+        return String::new();
+    }
+    let mut s = String::from("{");
+    for (i, (k, v)) in id.labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{k}=\"{}\"", escape_label(v));
+    }
+    s.push('}');
+    s
+}
+
+fn label_block_with(id: &MetricId, key: &str, value: &str) -> String {
+    let mut s = String::from("{");
+    for (k, v) in &id.labels {
+        let _ = write!(s, "{k}=\"{}\",", escape_label(v));
+    }
+    let _ = write!(s, "{key}=\"{}\"", escape_label(value));
+    s.push('}');
+    s
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Shortest-ish float rendering: integers print bare, otherwise 4 decimal
+/// places (Prometheus `le` bounds and `_sum` values).
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{v}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Serialize a snapshot as JSON (`mcnc serve --metrics-file`, bench
+/// sidecars). Counters and gauges carry `name`/`labels`/`value`;
+/// histograms add count, sum, max, percentile estimates, and their
+/// non-empty `[upper_us, count]` buckets.
+pub fn snapshot_json(s: &Snapshot) -> Json {
+    Json::obj(vec![
+        (
+            "counters",
+            Json::Arr(
+                s.counters.iter().map(|(id, v)| metric_obj(id, Json::Num(*v as f64))).collect(),
+            ),
+        ),
+        (
+            "gauges",
+            Json::Arr(s.gauges.iter().map(|(id, v)| metric_obj(id, Json::Num(*v as f64))).collect()),
+        ),
+        (
+            "histograms",
+            Json::Arr(s.histograms.iter().map(|(id, h)| histogram_obj(id, h)).collect()),
+        ),
+    ])
+}
+
+fn labels_obj(id: &MetricId) -> Json {
+    Json::Obj(id.labels.iter().map(|(k, v)| (k.to_string(), Json::str(v.as_str()))).collect())
+}
+
+fn metric_obj(id: &MetricId, value: Json) -> Json {
+    Json::obj(vec![("name", Json::str(id.name)), ("labels", labels_obj(id)), ("value", value)])
+}
+
+fn histogram_obj(id: &MetricId, h: &Histogram) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(id.name)),
+        ("labels", labels_obj(id)),
+        ("count", Json::Num(h.count() as f64)),
+        ("sum_us", Json::Num(h.sum_us())),
+        ("max_us", Json::Num(h.max().as_secs_f64() * 1e6)),
+        ("p50_us", Json::Num(h.percentile(50.0).as_secs_f64() * 1e6)),
+        ("p90_us", Json::Num(h.percentile(90.0).as_secs_f64() * 1e6)),
+        ("p99_us", Json::Num(h.percentile(99.0).as_secs_f64() * 1e6)),
+        (
+            "buckets",
+            Json::Arr(
+                h.nonzero_buckets()
+                    .into_iter()
+                    .map(|(u, c)| Json::Arr(vec![Json::Num(u), Json::Num(c as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Render trace records as Chrome trace-event JSON: one `pid` (the
+/// server), one `tid` **track per shard** (named via `thread_name`
+/// metadata), duration spans as `ph:"X"` complete events and structured
+/// events as `ph:"i"` instants. Load the output in Perfetto
+/// (<https://ui.perfetto.dev>) or `chrome://tracing`.
+pub fn chrome_trace(records: &[SpanRecord]) -> String {
+    let mut events = Vec::new();
+    let mut shards: Vec<u32> = records.iter().map(|r| r.shard).collect();
+    shards.sort_unstable();
+    shards.dedup();
+    for s in &shards {
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(*s as f64)),
+            ("args", Json::obj(vec![("name", Json::str(format!("shard {s}")))])),
+        ]));
+    }
+    for r in records {
+        let args = Json::obj(vec![
+            ("trace_id", Json::Num(r.trace_id as f64)),
+            ("task", Json::Num(r.task as f64)),
+        ]);
+        let mut ev = vec![
+            ("name", Json::str(r.kind.name())),
+            ("cat", Json::str("mcnc")),
+            ("ph", Json::str(if r.kind.is_event() { "i" } else { "X" })),
+            ("ts", Json::Num(r.start_us as f64)),
+        ];
+        if r.kind.is_event() {
+            ev.push(("s", Json::str("t"))); // thread-scoped instant
+        } else {
+            ev.push(("dur", Json::Num(r.dur_us as f64)));
+        }
+        ev.push(("pid", Json::Num(1.0)));
+        ev.push(("tid", Json::Num(r.shard as f64)));
+        ev.push(("args", args));
+        events.push(Json::obj(ev));
+    }
+    to_string(&Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+    use crate::obs::trace::Kind;
+    use crate::util::json;
+    use std::time::Duration;
+
+    fn sample_snapshot() -> Snapshot {
+        let r = Registry::default();
+        r.counter("test_hits_total", &[("shard", "0")]).add(3);
+        r.counter("test_hits_total", &[("shard", "1")]).add(4);
+        r.gauge("test_bytes", &[]).set(1024);
+        let h = r.histogram("test_wait_us", &[("shard", "0")]);
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(5000));
+        r.snapshot()
+    }
+
+    #[test]
+    fn prometheus_families_and_values() {
+        let text = prometheus_text(&sample_snapshot());
+        assert!(text.contains("# TYPE test_hits_total counter"));
+        assert!(text.contains("test_hits_total{shard=\"0\"} 3"));
+        assert!(text.contains("test_hits_total{shard=\"1\"} 4"));
+        assert!(text.contains("# TYPE test_bytes gauge"));
+        assert!(text.contains("test_bytes 1024"));
+        assert!(text.contains("# TYPE test_wait_us histogram"));
+        assert!(text.contains("test_wait_us_bucket{shard=\"0\",le=\"+Inf\"} 4"));
+        assert!(text.contains("test_wait_us_count{shard=\"0\"} 4"));
+        // One _bucket line per non-empty bucket + the +Inf line.
+        let buckets = text.lines().filter(|l| l.starts_with("test_wait_us_bucket")).count();
+        assert_eq!(buckets, 4);
+        // Cumulative bucket values never decrease.
+        let mut prev = 0u64;
+        for l in text.lines().filter(|l| l.starts_with("test_wait_us_bucket")) {
+            let v: u64 = l.rsplit(' ').next().and_then(|v| v.parse().ok()).expect("bucket value");
+            assert!(v >= prev, "cumulative buckets must be monotone: {l}");
+            prev = v;
+        }
+        // The TYPE header appears once per family, not once per label set.
+        assert_eq!(text.matches("# TYPE test_hits_total").count(), 1);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        let j = snapshot_json(&sample_snapshot());
+        let parsed = json::parse(&to_string(&j)).expect("snapshot JSON parses");
+        let counters = parsed.get("counters").and_then(Json::as_arr).expect("counters");
+        assert_eq!(counters.len(), 2);
+        let hists = parsed.get("histograms").and_then(Json::as_arr).expect("histograms");
+        assert_eq!(hists.len(), 1);
+        let h = &hists[0];
+        assert_eq!(h.get("count").and_then(Json::as_f64), Some(4.0));
+        let p50 = h.get("p50_us").and_then(Json::as_f64).expect("p50");
+        let p99 = h.get("p99_us").and_then(Json::as_f64).expect("p99");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_with_tracks() {
+        let t0 = 100u64;
+        let recs = vec![
+            SpanRecord { trace_id: 1, shard: 0, task: 2, kind: Kind::Queue, start_us: t0, dur_us: 40 },
+            SpanRecord {
+                trace_id: 1,
+                shard: 0,
+                task: 2,
+                kind: Kind::Batch,
+                start_us: t0 + 40,
+                dur_us: 50,
+            },
+            SpanRecord { trace_id: 0, shard: 1, task: 0, kind: Kind::Restart, start_us: 90, dur_us: 0 },
+        ];
+        let parsed = json::parse(&chrome_trace(&recs)).expect("chrome trace parses");
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        // 2 thread_name metadata records (shards 0 and 1) + 3 records.
+        assert_eq!(events.len(), 5);
+        let metas = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .count();
+        assert_eq!(metas, 2, "one thread_name track per shard");
+        for e in events {
+            match e.get("ph").and_then(Json::as_str) {
+                Some("X") => {
+                    assert!(e.get("dur").and_then(Json::as_f64).expect("dur") >= 0.0);
+                    assert_eq!(e.get("cat").and_then(Json::as_str), Some("mcnc"));
+                }
+                Some("i") => assert_eq!(e.get("s").and_then(Json::as_str), Some("t")),
+                Some("M") => {}
+                ph => panic!("unexpected ph {ph:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn label_escaping() {
+        let r = Registry::default();
+        r.counter("test_esc_total", &[("codec", "a\"b\\c")]).inc();
+        let text = prometheus_text(&r.snapshot());
+        assert!(text.contains("codec=\"a\\\"b\\\\c\""), "{text}");
+    }
+}

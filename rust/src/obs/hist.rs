@@ -1,0 +1,328 @@
+//! Log-bucketed duration histogram (HDR-style), promoted here from
+//! `coordinator/metrics.rs` so every layer — coordinator, codec call
+//! sites, kernels — can record durations into the same bucket layout.
+//!
+//! Buckets are geometric with ~4% relative resolution: bucket `i` covers
+//! `(1µs·1.04^(i-1), 1µs·1.04^i]`, i.e. the *bound* of bucket `i` is
+//! `1µs·1.04^i`, and bucket 0 holds everything at or below 1µs. Both
+//! [`Histogram::record`] and [`Histogram::percentile`] use the same bound
+//! semantics, so a reported percentile is always a conservative upper
+//! bound on the true sample value (within one 4% bucket).
+//!
+//! Two flavours share the layout:
+//!
+//! * [`Histogram`] — plain, single-writer, mergeable across shards.
+//! * [`AtomicHistogram`] — concurrent recorder for the obs registry;
+//!   [`AtomicHistogram::snapshot`] yields a plain [`Histogram`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Geometric bucket growth factor (~4% relative resolution).
+pub const GROWTH: f64 = 1.04;
+/// Bucket count: 1.04^448 ≈ 4.3e7 µs ≈ 43 s full scale.
+pub const N_BUCKETS: usize = 448;
+
+/// Map a sample in microseconds to its bucket index. Bucket `i` covers
+/// `(1.04^(i-1), 1.04^i]` µs with bucket 0 holding `us <= 1`; samples
+/// beyond the last bound saturate into the final bucket.
+fn bucket_index(us: f64) -> usize {
+    if us <= 1.0 {
+        0
+    } else {
+        let i = (us.ln() / GROWTH.ln()).ceil();
+        (i as usize).min(N_BUCKETS - 1)
+    }
+}
+
+/// Upper bound of bucket `i` in microseconds (`1.04^i`; bucket 0 → 1µs).
+pub fn bucket_bound_us(i: usize) -> f64 {
+    GROWTH.powi(i as i32)
+}
+
+/// Latency histogram with ~4% relative resolution, 1µs .. ~43s.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>, // geometric: bound_i = 1µs * 1.04^i
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: vec![0; N_BUCKETS], count: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+}
+
+impl Histogram {
+    /// Record one sample.
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of the recorded samples, in microseconds.
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
+    }
+
+    /// Exact mean of the recorded samples.
+    pub fn mean(&self) -> Duration {
+        Duration::from_secs_f64(self.sum_us / self.count.max(1) as f64 / 1e6)
+    }
+
+    /// Largest recorded sample.
+    pub fn max(&self) -> Duration {
+        Duration::from_secs_f64(self.max_us / 1e6)
+    }
+
+    /// Percentile as the containing bucket's *upper* bound — a
+    /// conservative estimate, never below the true sample value.
+    pub fn percentile(&self, p: f64) -> Duration {
+        self.pct(p, false)
+    }
+
+    /// Percentile as the containing bucket's *geometric midpoint*
+    /// (`1.04^(i-1/2)`; arithmetic midpoint 0.5µs for bucket 0) — an
+    /// unbiased-in-log estimator, always at or below [`Histogram::percentile`].
+    pub fn percentile_mid(&self, p: f64) -> Duration {
+        self.pct(p, true)
+    }
+
+    fn pct(&self, p: f64, midpoint: bool) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let us = if !midpoint {
+                    bucket_bound_us(i)
+                } else if i == 0 {
+                    0.5
+                } else {
+                    GROWTH.powf(i as f64 - 0.5)
+                };
+                return Duration::from_secs_f64(us / 1e6);
+            }
+        }
+        self.max()
+    }
+
+    /// Fold another histogram's buckets and counters into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Non-empty buckets as `(upper bound µs, count)` pairs, ascending —
+    /// the exporter's view (Prometheus `_bucket` lines, JSON snapshots).
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_bound_us(i), c))
+            .collect()
+    }
+}
+
+/// Concurrent histogram for the obs registry: the same bucket layout as
+/// [`Histogram`], recorded with relaxed atomics so many shard threads can
+/// share one instance. Sums are kept in integer nanoseconds (exact for
+/// any realistic serving window).
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHistogram {
+    /// Record one sample (relaxed atomics; safe from any thread).
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
+        let idx = bucket_index(ns as f64 / 1e3);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current contents into a plain, mergeable [`Histogram`].
+    /// Concurrent recorders may land between field reads; the drift is at
+    /// most the handful of in-flight samples.
+    pub fn snapshot(&self) -> Histogram {
+        Histogram {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            max_us: self.max_ns.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 < p99);
+        // ~4% resolution
+        assert!((p50.as_secs_f64() * 1e6 - 500.0).abs() < 40.0, "{p50:?}");
+        assert!((p99.as_secs_f64() * 1e6 - 990.0).abs() < 80.0, "{p99:?}");
+        assert!(h.mean().as_micros() > 400 && h.mean().as_micros() < 600);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+        assert_eq!(h.percentile_mid(99.0), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max() >= Duration::from_micros(1000));
+    }
+
+    /// The (1µs, 1.04µs] regression: bound semantics put 1.0µs in bucket
+    /// 0 (reported bound exactly 1µs) and anything above it in bucket 1+
+    /// (reported bound > 1µs). The old floor-indexing collapsed both into
+    /// bucket 0.
+    #[test]
+    fn bucket_bound_semantics_at_one_microsecond() {
+        let mut at = Histogram::default();
+        at.record(Duration::from_nanos(1000));
+        assert_eq!(at.percentile(100.0), Duration::from_micros(1), "1µs stays in bucket 0");
+
+        let mut above = Histogram::default();
+        above.record(Duration::from_nanos(1020)); // 1.02µs ∈ (1, 1.04]
+        let p = above.percentile(100.0).as_secs_f64() * 1e6;
+        assert!(p > 1.0 && p <= 1.0401, "1.02µs maps to bucket 1 (bound 1.04µs), got {p}");
+    }
+
+    #[test]
+    fn record_never_underestimates() {
+        let mut h = Histogram::default();
+        for us in [1u64, 2, 3, 7, 19, 100, 999, 12345] {
+            let mut one = Histogram::default();
+            one.record(Duration::from_micros(us));
+            let bound = one.percentile(100.0).as_secs_f64() * 1e6;
+            assert!(bound >= us as f64, "bound {bound} < sample {us}");
+            assert!(bound <= us as f64 * GROWTH * GROWTH, "bound {bound} too loose for {us}");
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 8);
+    }
+
+    /// `percentile` (and the midpoint estimator) stay monotone in `p` on
+    /// a histogram merged from several disjoint per-shard ranges, and the
+    /// merged percentiles are bracketed by the per-shard extremes.
+    #[test]
+    fn percentile_monotone_across_merged_shards() {
+        let mut shards = Vec::new();
+        for s in 0..4u64 {
+            let mut h = Histogram::default();
+            for i in 0..250u64 {
+                h.record(Duration::from_micros(1 + s * 250 + i));
+            }
+            shards.push(h);
+        }
+        let mut merged = Histogram::default();
+        for h in &shards {
+            merged.merge(h);
+        }
+        assert_eq!(merged.count(), 1000);
+        let mut prev = Duration::ZERO;
+        let mut prev_mid = Duration::ZERO;
+        for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let v = merged.percentile(p);
+            let m = merged.percentile_mid(p);
+            assert!(v >= prev, "percentile({p}) regressed: {v:?} < {prev:?}");
+            assert!(m >= prev_mid, "percentile_mid({p}) regressed");
+            assert!(m <= v, "midpoint above bucket bound at p={p}");
+            prev = v;
+            prev_mid = m;
+        }
+        // Bracketed by the per-shard extremes.
+        let lo = shards.iter().map(|h| h.percentile(50.0)).min().unwrap();
+        let hi = shards.iter().map(|h| h.percentile(50.0)).max().unwrap();
+        let p50 = merged.percentile(50.0);
+        assert!(p50 >= lo && p50 <= hi, "merged p50 {p50:?} outside [{lo:?}, {hi:?}]");
+    }
+
+    #[test]
+    fn atomic_matches_plain() {
+        let at = AtomicHistogram::default();
+        let mut plain = Histogram::default();
+        for i in [1u64, 5, 42, 1000, 30_000] {
+            at.record(Duration::from_micros(i));
+            plain.record(Duration::from_micros(i));
+        }
+        let snap = at.snapshot();
+        assert_eq!(snap.count(), plain.count());
+        assert_eq!(snap.nonzero_buckets(), plain.nonzero_buckets());
+        assert_eq!(snap.percentile(50.0), plain.percentile(50.0));
+        assert!((snap.sum_us() - plain.sum_us()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nonzero_buckets_cumulative_equals_count() {
+        let mut h = Histogram::default();
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i * 7));
+        }
+        let nz = h.nonzero_buckets();
+        assert!(!nz.is_empty());
+        assert!(nz.windows(2).all(|w| w[0].0 < w[1].0), "bounds ascending");
+        assert_eq!(nz.iter().map(|&(_, c)| c).sum::<u64>(), h.count());
+    }
+}

@@ -1,0 +1,233 @@
+//! Pre-bound metric handle bundles for the serving path.
+//!
+//! Registration takes the registry mutex, so hot loops bind their handles
+//! once — a [`ShardObs`] per supervised shard incarnation, an
+//! [`EngineObs`] per engine, a [`ServerObs`] per dispatcher — and then
+//! every update is a relaxed atomic op. The bundles mirror (they do not
+//! replace) the per-shard `ServeStats` counters: `ServeStats` remains the
+//! exact per-`Server` accounting returned by `stop()`, while the registry
+//! is the process-wide live view behind `Server::metrics_snapshot()`.
+//!
+//! Codec decode is timed *here*, from the coordinator-side caller, never
+//! inside `codec/` — that keeps the codec wall-clock-free so mcnc-lint's
+//! `determinism` rule holds (see ARCHITECTURE.md §Observability).
+
+use std::io::Read;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::hist::AtomicHistogram;
+use super::registry::{registry, Counter, Gauge};
+
+/// Task-affinity label classes: batches are labelled `task_mod` = task id
+/// modulo this, keeping label cardinality bounded at any task count.
+pub const TASK_MOD_CLASSES: usize = 8;
+
+/// Per-shard serving metrics, bound once per supervised engine
+/// incarnation and updated from the shard run loop.
+#[derive(Debug, Clone)]
+pub struct ShardObs {
+    /// `mcnc_serve_queue_wait_us{shard}` — enqueue → batch formation.
+    pub queue_wait_us: Arc<AtomicHistogram>,
+    /// `mcnc_serve_latency_us{shard}` — enqueue → response (Ok only).
+    pub latency_us: Arc<AtomicHistogram>,
+    /// `mcnc_serve_batches_total{shard,task_mod}` — executed batches,
+    /// indexed by `task % TASK_MOD_CLASSES`.
+    pub batches: Vec<Arc<Counter>>,
+    /// `mcnc_serve_batch_requests_total{shard}` — real (non-padding)
+    /// requests dispatched into batches; with `batches` this yields the
+    /// registry's batch-occupancy figure.
+    pub batch_requests: Arc<Counter>,
+    /// `mcnc_serve_deadline_shed_total{shard}`.
+    pub deadline_shed: Arc<Counter>,
+    /// `mcnc_serve_errors_total{shard}` — error responses sent.
+    pub errors: Arc<Counter>,
+    /// `mcnc_serve_batch_panics_total{shard}` — contained batch panics.
+    pub batch_panics: Arc<Counter>,
+    /// `mcnc_serve_breaker_opens_total{shard}`.
+    pub breaker_opens: Arc<Counter>,
+    /// `mcnc_serve_restarts_total{shard}` — supervisor engine restarts.
+    pub restarts: Arc<Counter>,
+}
+
+impl ShardObs {
+    /// Bind this shard's handles in the process-wide registry.
+    pub fn register(shard: usize) -> ShardObs {
+        let r = registry();
+        let s = shard.to_string();
+        let l: &[(&str, &str)] = &[("shard", &s)];
+        ShardObs {
+            queue_wait_us: r.histogram("mcnc_serve_queue_wait_us", l),
+            latency_us: r.histogram("mcnc_serve_latency_us", l),
+            batches: (0..TASK_MOD_CLASSES)
+                .map(|m| {
+                    let m = m.to_string();
+                    r.counter("mcnc_serve_batches_total", &[("shard", &s), ("task_mod", &m)])
+                })
+                .collect(),
+            batch_requests: r.counter("mcnc_serve_batch_requests_total", l),
+            deadline_shed: r.counter("mcnc_serve_deadline_shed_total", l),
+            errors: r.counter("mcnc_serve_errors_total", l),
+            batch_panics: r.counter("mcnc_serve_batch_panics_total", l),
+            breaker_opens: r.counter("mcnc_serve_breaker_opens_total", l),
+            restarts: r.counter("mcnc_serve_restarts_total", l),
+        }
+    }
+
+    /// The batch counter for `task`'s affinity class.
+    pub fn batch_counter(&self, task: usize) -> &Counter {
+        &self.batches[task % TASK_MOD_CLASSES]
+    }
+}
+
+/// Per-engine cache / reconstruction / decode metrics (merged-θ serving).
+#[derive(Debug, Clone)]
+pub struct EngineObs {
+    /// `mcnc_cache_hits_total{shard}` — merged-LRU hits.
+    pub cache_hits: Arc<Counter>,
+    /// `mcnc_cache_misses_total{shard}` — cold reconstructions paid.
+    pub cache_misses: Arc<Counter>,
+    /// `mcnc_cache_evictions_total{shard}`.
+    pub cache_evictions: Arc<Counter>,
+    /// `mcnc_cache_used_bytes{shard}` gauge.
+    pub cache_used_bytes: Arc<Gauge>,
+    /// `mcnc_cache_entries{shard}` gauge.
+    pub cache_entries: Arc<Gauge>,
+    /// `mcnc_serve_native_fills_total{shard}` — cold fills served by the
+    /// native blocked-GEMM engine rather than PJRT.
+    pub native_fills: Arc<Counter>,
+    /// `mcnc_recon_flops_total{shard}` — analytic reconstruction FLOPs.
+    pub recon_flops: Arc<Counter>,
+    /// `mcnc_codec_decode_us{shard}` — caller-side decode wall time.
+    pub decode_us: Arc<AtomicHistogram>,
+    /// `mcnc_codec_decode_bytes_total{shard}` — wire bytes decoded; with
+    /// `mcnc_codec_decode_us` this yields decode MB/s.
+    pub decode_bytes: Arc<Counter>,
+    /// `mcnc_codec_decode_frames_total{shard}` — frames decoded.
+    pub decode_frames: Arc<Counter>,
+}
+
+impl EngineObs {
+    /// Bind this shard-engine's handles in the process-wide registry.
+    pub fn register(shard: usize) -> EngineObs {
+        let r = registry();
+        let s = shard.to_string();
+        let l: &[(&str, &str)] = &[("shard", &s)];
+        EngineObs {
+            cache_hits: r.counter("mcnc_cache_hits_total", l),
+            cache_misses: r.counter("mcnc_cache_misses_total", l),
+            cache_evictions: r.counter("mcnc_cache_evictions_total", l),
+            cache_used_bytes: r.gauge("mcnc_cache_used_bytes", l),
+            cache_entries: r.gauge("mcnc_cache_entries", l),
+            native_fills: r.counter("mcnc_serve_native_fills_total", l),
+            recon_flops: r.counter("mcnc_recon_flops_total", l),
+            decode_us: r.histogram("mcnc_codec_decode_us", l),
+            decode_bytes: r.counter("mcnc_codec_decode_bytes_total", l),
+            decode_frames: r.counter("mcnc_codec_decode_frames_total", l),
+        }
+    }
+
+    /// Record one caller-timed decode: `bytes` off the wire, `frames`
+    /// produced, `elapsed` wall time at the coordinator call site.
+    pub fn record_decode(&self, bytes: u64, frames: u64, elapsed: Duration) {
+        self.decode_us.record(elapsed);
+        self.decode_bytes.add(bytes);
+        self.decode_frames.add(frames);
+    }
+}
+
+/// Dispatcher-side admission counters (no labels; one logical front end).
+#[derive(Debug, Clone)]
+pub struct ServerObs {
+    /// `mcnc_serve_requests_total` — ids minted at submit.
+    pub requests: Arc<Counter>,
+    /// `mcnc_serve_rejected_total` — bounced at admission, queue full.
+    pub rejected: Arc<Counter>,
+    /// `mcnc_serve_retries_total` — admission retries after backpressure.
+    pub retries: Arc<Counter>,
+    /// `mcnc_serve_breaker_fastfail_total` — fast-failed by an open breaker.
+    pub fastfail: Arc<Counter>,
+}
+
+impl ServerObs {
+    /// Bind the dispatcher handles in the process-wide registry.
+    pub fn register() -> ServerObs {
+        let r = registry();
+        ServerObs {
+            requests: r.counter("mcnc_serve_requests_total", &[]),
+            rejected: r.counter("mcnc_serve_rejected_total", &[]),
+            retries: r.counter("mcnc_serve_retries_total", &[]),
+            fastfail: r.counter("mcnc_serve_breaker_fastfail_total", &[]),
+        }
+    }
+}
+
+/// Count frames decoded per codec: `mcnc_codec_frames_total{codec}`.
+/// Registry lookup per call — use on cold decode paths only.
+pub fn count_decoded_frame(codec_name: &str) {
+    registry().counter("mcnc_codec_frames_total", &[("codec", codec_name)]).inc();
+}
+
+/// Byte-metering `Read` adapter so decode call sites can report wire
+/// bytes without the codec layer counting for them.
+#[derive(Debug)]
+pub struct MeterRead<R> {
+    inner: R,
+    n: u64,
+}
+
+impl<R> MeterRead<R> {
+    /// Wrap a reader.
+    pub fn new(inner: R) -> MeterRead<R> {
+        MeterRead { inner, n: 0 }
+    }
+
+    /// Bytes read through this wrapper so far.
+    pub fn bytes(&self) -> u64 {
+        self.n
+    }
+}
+
+impl<R: Read> Read for MeterRead<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.n += n as u64;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_read_counts_bytes() {
+        let data = vec![7u8; 1000];
+        let mut m = MeterRead::new(&data[..]);
+        let mut buf = [0u8; 64];
+        let mut total = 0usize;
+        loop {
+            let n = m.read(&mut buf).expect("read");
+            if n == 0 {
+                break;
+            }
+            total += n;
+        }
+        assert_eq!(total, 1000);
+        assert_eq!(m.bytes(), 1000);
+    }
+
+    #[test]
+    fn bundles_bind_against_global_registry() {
+        // Same (name, labels) → same underlying handle, so two bindings of
+        // shard 63's bundle share counters.
+        let a = ShardObs::register(63);
+        let b = ShardObs::register(63);
+        assert!(Arc::ptr_eq(&a.batch_requests, &b.batch_requests));
+        assert!(Arc::ptr_eq(&a.batches[3], &b.batches[3]));
+        assert!(std::ptr::eq(a.batch_counter(3), &*a.batches[3]));
+        let e = EngineObs::register(63);
+        e.record_decode(10, 2, Duration::from_micros(5));
+        assert!(e.decode_us.count() >= 1);
+    }
+}

@@ -1,0 +1,46 @@
+//! Observability: metrics registry, request tracing, and exporters.
+//!
+//! Dependency-free (std only) and callable from **any** layer — the one
+//! module exempt from the usual "lower layers never look up" rule, with
+//! two constraints (see ARCHITECTURE.md §Observability):
+//!
+//! * obs never calls back into the layers it observes, and
+//! * the codec is timed from coordinator-side call sites only, so
+//!   `codec/` itself stays wall-clock-free (mcnc-lint `determinism`).
+//!
+//! The pieces:
+//!
+//! * [`registry`] — global named counters / gauges / histograms with
+//!   label sets (`shard`, `task_mod`, `codec`, `isa`); lock-free updates
+//!   after a mutex-guarded registration. [`hooks`] pre-binds the serving
+//!   path's handles.
+//! * [`hist`] — the log-bucketed [`Histogram`] (promoted from
+//!   `coordinator/metrics.rs`) plus its concurrent [`AtomicHistogram`].
+//! * [`trace`] — per-request spans and structured events in a lock-free
+//!   ring, sampled via `MCNC_TRACE=off|sampled:N|all`; disabled hooks
+//!   cost one relaxed atomic load.
+//! * [`export`] — Prometheus text, JSON snapshots, and Chrome trace-event
+//!   JSON (Perfetto-loadable), all pure functions of a [`Snapshot`] or a
+//!   span list.
+//!
+//! Metric names are stable snake_case, enforced by mcnc-lint's
+//! `metrics-naming` rule; docs/OBSERVABILITY.md is the catalog.
+
+#![warn(missing_docs)]
+
+pub mod export;
+pub mod hist;
+pub mod hooks;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{AtomicHistogram, Histogram};
+pub use hooks::{count_decoded_frame, EngineObs, MeterRead, ServerObs, ShardObs};
+pub use registry::{registry, Counter, Gauge, IdGen, MetricId, Registry, Snapshot};
+pub use trace::{Kind, SpanRecord, TraceMode};
+
+/// Initialize observability from the environment: tracing mode from
+/// `MCNC_TRACE` and the trace epoch. Call once near process start.
+pub fn init_from_env() {
+    trace::init_from_env();
+}

@@ -1,0 +1,346 @@
+//! Global metrics registry: named counters, gauges, and histograms with
+//! small fixed label sets (`shard`, `task_mod`, `codec`, `isa`).
+//!
+//! Registration (cold path) takes a mutex; the handles it returns are
+//! `Arc`s whose updates are lock-free — [`Counter`] is sharded across
+//! cache-line-padded lanes keyed by thread, [`Gauge`] is one atomic, and
+//! [`AtomicHistogram`] records with relaxed atomics. Registering the same
+//! `(name, labels)` pair twice returns the *same* handle, so a metric is
+//! registered once per process no matter how many shards bind it.
+//!
+//! Metric names are `snake_case` by convention and by lint: mcnc-lint's
+//! `metrics-naming` rule checks every name literal passed to
+//! [`Registry::counter`]/[`Registry::gauge`]/[`Registry::histogram`] and
+//! bans bare `AtomicU64` counters in `coordinator/` (see docs/LINTS.md).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::hist::{AtomicHistogram, Histogram};
+
+/// Number of counter lanes; power of two, sized for typical shard counts.
+const LANES: usize = 8;
+
+/// Monotonically assigned per-thread lane index (mod [`LANES`]).
+static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static LANE: usize = NEXT_LANE.fetch_add(1, Ordering::Relaxed) & (LANES - 1);
+}
+
+#[repr(align(64))]
+#[derive(Default, Debug)]
+struct Lane(AtomicU64);
+
+/// Lock-free monotonic counter, sharded across cache-line-padded lanes so
+/// concurrent shard threads don't contend on one cache line.
+#[derive(Default, Debug)]
+pub struct Counter {
+    lanes: [Lane; LANES],
+}
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n` (relaxed; this thread's lane).
+    pub fn add(&self, n: u64) {
+        LANE.with(|l| self.lanes[*l].0.fetch_add(n, Ordering::Relaxed));
+    }
+
+    /// Sum across lanes. Not a linearizable read — concurrent increments
+    /// may or may not be included — but never undercounts the past.
+    pub fn get(&self) -> u64 {
+        self.lanes.iter().map(|l| l.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Last-write-wins signed gauge (e.g. cache bytes in use).
+#[derive(Default, Debug)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Adjust the value by `d`.
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Unique-id mint (request/trace ids). Deliberately *not* a metric: it is
+/// the one sanctioned home for a bare fetch-add word in the serving path,
+/// so `coordinator/` itself never needs to declare an `AtomicU64`.
+#[derive(Default, Debug)]
+pub struct IdGen(AtomicU64);
+
+impl IdGen {
+    /// Return the next id, starting from 0.
+    pub fn next(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// A metric's identity: stable `snake_case` name plus sorted label pairs.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricId {
+    /// Stable snake_case metric name (e.g. `mcnc_serve_batches_total`).
+    pub name: &'static str,
+    /// Label pairs, sorted by key (e.g. `[("shard", "2")]`).
+    pub labels: Vec<(&'static str, String)>,
+}
+
+impl MetricId {
+    fn new(name: &'static str, labels: &[(&'static str, &str)]) -> MetricId {
+        let mut labels: Vec<(&'static str, String)> =
+            labels.iter().map(|&(k, v)| (k, v.to_string())).collect();
+        labels.sort();
+        MetricId { name, labels }
+    }
+
+    /// Value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// True iff `name` is non-empty `snake_case`: starts with a lowercase
+/// letter, then lowercase letters, digits, and underscores only.
+pub fn is_snake_case(name: &str) -> bool {
+    let mut chars = name.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_lowercase())
+        && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+#[derive(Default, Debug)]
+struct Inner {
+    counters: Vec<(MetricId, Arc<Counter>)>,
+    gauges: Vec<(MetricId, Arc<Gauge>)>,
+    histograms: Vec<(MetricId, Arc<AtomicHistogram>)>,
+}
+
+/// Metric registry. Use the process-wide [`registry()`] in serving code;
+/// `Registry::default()` gives an isolated instance for unit tests.
+#[derive(Default, Debug)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    fn locked(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // A poisoned registry mutex only means a panicking thread held it
+        // mid-registration; the Vec push is not left half-done.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Get-or-register the counter `(name, labels)`.
+    pub fn counter(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Counter> {
+        debug_assert!(is_snake_case(name), "metric name `{name}` is not snake_case");
+        let id = MetricId::new(name, labels);
+        let mut g = self.locked();
+        if let Some((_, c)) = g.counters.iter().find(|(i, _)| *i == id) {
+            return c.clone();
+        }
+        debug_assert!(
+            g.gauges.iter().all(|(i, _)| i.name != name)
+                && g.histograms.iter().all(|(i, _)| i.name != name),
+            "metric `{name}` already registered with a different type"
+        );
+        let c = Arc::new(Counter::default());
+        g.counters.push((id, c.clone()));
+        c
+    }
+
+    /// Get-or-register the gauge `(name, labels)`.
+    pub fn gauge(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Gauge> {
+        debug_assert!(is_snake_case(name), "metric name `{name}` is not snake_case");
+        let id = MetricId::new(name, labels);
+        let mut g = self.locked();
+        if let Some((_, c)) = g.gauges.iter().find(|(i, _)| *i == id) {
+            return c.clone();
+        }
+        let c = Arc::new(Gauge::default());
+        g.gauges.push((id, c.clone()));
+        c
+    }
+
+    /// Get-or-register the histogram `(name, labels)`.
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<AtomicHistogram> {
+        debug_assert!(is_snake_case(name), "metric name `{name}` is not snake_case");
+        let id = MetricId::new(name, labels);
+        let mut g = self.locked();
+        if let Some((_, c)) = g.histograms.iter().find(|(i, _)| *i == id) {
+            return c.clone();
+        }
+        let c = Arc::new(AtomicHistogram::default());
+        g.histograms.push((id, c.clone()));
+        c
+    }
+
+    /// Point-in-time copy of every registered metric, sorted by
+    /// `(name, labels)` so exports are deterministic.
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.locked();
+        let mut s = Snapshot {
+            counters: g.counters.iter().map(|(i, c)| (i.clone(), c.get())).collect(),
+            gauges: g.gauges.iter().map(|(i, c)| (i.clone(), c.get())).collect(),
+            histograms: g.histograms.iter().map(|(i, h)| (i.clone(), h.snapshot())).collect(),
+        };
+        s.counters.sort_by(|a, b| a.0.cmp(&b.0));
+        s.gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        s.histograms.sort_by(|a, b| a.0.cmp(&b.0));
+        s
+    }
+}
+
+/// The process-wide registry. Shared by every `Server`, bench, and test
+/// in the process, so assertions against it should be monotone (`>=`) or
+/// structural rather than exact.
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+/// Point-in-time registry contents (see [`Registry::snapshot`]).
+#[derive(Default, Debug, Clone)]
+pub struct Snapshot {
+    /// Counter values by metric id.
+    pub counters: Vec<(MetricId, u64)>,
+    /// Gauge values by metric id.
+    pub gauges: Vec<(MetricId, i64)>,
+    /// Histogram copies by metric id.
+    pub histograms: Vec<(MetricId, Histogram)>,
+}
+
+impl Snapshot {
+    /// Sum of `name` across all label sets.
+    pub fn counter_sum(&self, name: &str) -> u64 {
+        self.counters.iter().filter(|(i, _)| i.name == name).map(|(_, v)| v).sum()
+    }
+
+    /// Sum of `name` across label sets where label `key` equals `value`.
+    pub fn counter_with(&self, name: &str, key: &str, value: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(i, _)| i.name == name && i.label(key) == Some(value))
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Sum of gauge `name` across all label sets.
+    pub fn gauge_sum(&self, name: &str) -> i64 {
+        self.gauges.iter().filter(|(i, _)| i.name == name).map(|(_, v)| v).sum()
+    }
+
+    /// All label sets of histogram `name` merged into one [`Histogram`].
+    pub fn histogram_merged(&self, name: &str) -> Histogram {
+        let mut out = Histogram::default();
+        for (_, h) in self.histograms.iter().filter(|(i, _)| i.name == name) {
+            out.merge(h);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counter_registered_once_and_sums_lanes() {
+        let r = Registry::default();
+        let a = r.counter("test_hits_total", &[("shard", "0")]);
+        let b = r.counter("test_hits_total", &[("shard", "0")]);
+        assert!(Arc::ptr_eq(&a, &b), "same (name, labels) must share one handle");
+        let other = r.counter("test_hits_total", &[("shard", "1")]);
+        a.inc();
+        b.add(2);
+        other.add(10);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter_sum("test_hits_total"), 13);
+        assert_eq!(snap.counter_with("test_hits_total", "shard", "0"), 3);
+        assert_eq!(snap.counter_with("test_hits_total", "shard", "1"), 10);
+    }
+
+    #[test]
+    fn counter_is_thread_safe() {
+        let r = Registry::default();
+        let c = r.counter("test_threads_total", &[]);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("counter thread");
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn gauge_and_histogram_roundtrip() {
+        let r = Registry::default();
+        let g = r.gauge("test_bytes", &[("shard", "0")]);
+        g.set(100);
+        g.add(-40);
+        let h = r.histogram("test_wait_us", &[("shard", "0")]);
+        h.record(Duration::from_micros(50));
+        h.record(Duration::from_micros(500));
+        let snap = r.snapshot();
+        assert_eq!(snap.gauge_sum("test_bytes"), 60);
+        let merged = snap.histogram_merged("test_wait_us");
+        assert_eq!(merged.count(), 2);
+        assert!(merged.percentile(100.0) >= Duration::from_micros(500));
+    }
+
+    #[test]
+    fn snapshot_is_sorted() {
+        let r = Registry::default();
+        r.counter("test_zz_total", &[]).inc();
+        r.counter("test_aa_total", &[("shard", "1")]).inc();
+        r.counter("test_aa_total", &[("shard", "0")]).inc();
+        let snap = r.snapshot();
+        let order: Vec<_> =
+            snap.counters.iter().map(|(i, _)| (i.name, i.labels.clone())).collect();
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(order, sorted);
+    }
+
+    #[test]
+    fn snake_case_validator() {
+        assert!(is_snake_case("mcnc_serve_batches_total"));
+        assert!(is_snake_case("x1_y2"));
+        assert!(!is_snake_case("Bad-Name"));
+        assert!(!is_snake_case("camelCase"));
+        assert!(!is_snake_case("1leading"));
+        assert!(!is_snake_case(""));
+    }
+
+    #[test]
+    fn id_gen_is_dense() {
+        let g = IdGen::default();
+        assert_eq!(g.next(), 0);
+        assert_eq!(g.next(), 1);
+        assert_eq!(g.next(), 2);
+    }
+}

@@ -1,0 +1,408 @@
+//! Span-based request tracing into a fixed-size lock-free ring buffer.
+//!
+//! Every request's id (minted by the dispatcher at `submit`/`submit_with`)
+//! doubles as its **trace id**; the coordinator and engine record spans
+//! against it as the request moves queue → batch → decode → GEMM. Spans
+//! land in a global ring of seqlock-guarded slots: writers claim a ticket
+//! with one fetch-add and publish the record with relaxed stores bracketed
+//! by a version counter, so a reader ([`records`]) can detect and skip
+//! torn slots without any lock.
+//!
+//! Sampling is controlled by `MCNC_TRACE`:
+//!
+//! * `off` (default) — every hook is a single relaxed atomic load.
+//! * `sampled:N` — record spans for trace ids divisible by `N`.
+//! * `all` — record everything (chaos runs, `mcnc serve --trace-out`).
+//!
+//! Structured WARN-worthy events (breaker open, shard restart, re-warm,
+//! drain of a dead shard) go through [`event`], which both emits a WARN
+//! log line and, when tracing is on, drops an instant record into the
+//! ring so the event shows up on the shard's trace track.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::util::logging;
+
+/// Ring capacity in records (power of two; ~3 MiB once allocated, and the
+/// ring is only allocated on the first record).
+pub const RING_CAP: usize = 1 << 16;
+
+const MODE_OFF: u8 = 0;
+const MODE_SAMPLED: u8 = 1;
+const MODE_ALL: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_OFF);
+static SAMPLE_N: AtomicU64 = AtomicU64::new(1);
+
+/// Tracing mode (see module docs for the `MCNC_TRACE` forms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    /// No recording; hooks cost one relaxed atomic load.
+    Off,
+    /// Record trace ids divisible by `N` (N clamped to ≥ 1).
+    Sampled(u64),
+    /// Record every span and event.
+    All,
+}
+
+/// Install a tracing mode (tests, benches, `--trace-out`).
+pub fn set_mode(m: TraceMode) {
+    match m {
+        TraceMode::Off => MODE.store(MODE_OFF, Ordering::Relaxed),
+        TraceMode::Sampled(n) => {
+            SAMPLE_N.store(n.max(1), Ordering::Relaxed);
+            MODE.store(MODE_SAMPLED, Ordering::Relaxed);
+        }
+        TraceMode::All => MODE.store(MODE_ALL, Ordering::Relaxed),
+    }
+}
+
+/// Current tracing mode.
+pub fn mode() -> TraceMode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_ALL => TraceMode::All,
+        MODE_SAMPLED => TraceMode::Sampled(SAMPLE_N.load(Ordering::Relaxed)),
+        _ => TraceMode::Off,
+    }
+}
+
+/// Parse `MCNC_TRACE` (`off` | `sampled:N` | `all`; default `off`) and pin
+/// the trace epoch so span timestamps start near zero.
+pub fn init_from_env() {
+    epoch();
+    let m = match std::env::var("MCNC_TRACE").as_deref() {
+        Ok("all") => TraceMode::All,
+        Ok(s) => match s.strip_prefix("sampled:").and_then(|n| n.parse::<u64>().ok()) {
+            Some(n) => TraceMode::Sampled(n),
+            None => TraceMode::Off,
+        },
+        Err(_) => TraceMode::Off,
+    };
+    set_mode(m);
+}
+
+/// True when any recording mode is active. This is the entire cost of a
+/// disabled hook: one relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    MODE.load(Ordering::Relaxed) != MODE_OFF
+}
+
+/// Should spans for `trace_id` be recorded under the current mode?
+#[inline]
+pub fn sampled(trace_id: u64) -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_OFF => false,
+        MODE_ALL => true,
+        _ => trace_id % SAMPLE_N.load(Ordering::Relaxed).max(1) == 0,
+    }
+}
+
+/// Span and event kinds. The first group are duration spans; the rest are
+/// instant events mirrored from WARN-level structured logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// Request sat in the shard queue (enqueue → batch formation).
+    Queue = 0,
+    /// Batch execution on the shard's engine.
+    Batch = 1,
+    /// Codec decode, timed from the coordinator-side caller.
+    Decode = 2,
+    /// Kernel GEMM work for a merged-θ cold fill.
+    Gemm = 3,
+    /// Merged-LRU cold fill (reconstruction, either backend).
+    Fill = 4,
+    /// Circuit breaker transitioned closed → open.
+    BreakerOpen = 5,
+    /// Supervisor restarted a crashed shard engine.
+    Restart = 6,
+    /// Replacement engine re-warmed from the preload artifact.
+    Rewarm = 7,
+    /// Permanently dead shard began draining requests with errors.
+    DrainDead = 8,
+}
+
+impl Kind {
+    /// Stable display name (trace-event `name` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Queue => "queue",
+            Kind::Batch => "batch",
+            Kind::Decode => "decode",
+            Kind::Gemm => "gemm",
+            Kind::Fill => "fill",
+            Kind::BreakerOpen => "breaker_open",
+            Kind::Restart => "restart",
+            Kind::Rewarm => "rewarm",
+            Kind::DrainDead => "drain_dead",
+        }
+    }
+
+    /// Instant event (no duration) vs duration span.
+    pub fn is_event(self) -> bool {
+        matches!(self, Kind::BreakerOpen | Kind::Restart | Kind::Rewarm | Kind::DrainDead)
+    }
+
+    fn from_u8(v: u8) -> Option<Kind> {
+        Some(match v {
+            0 => Kind::Queue,
+            1 => Kind::Batch,
+            2 => Kind::Decode,
+            3 => Kind::Gemm,
+            4 => Kind::Fill,
+            5 => Kind::BreakerOpen,
+            6 => Kind::Restart,
+            7 => Kind::Rewarm,
+            8 => Kind::DrainDead,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded ring record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Request id the span belongs to (0 for shard-level events).
+    pub trace_id: u64,
+    /// Shard the work ran on (one Chrome-trace track per shard).
+    pub shard: u32,
+    /// Task id, when the span is batch-scoped.
+    pub task: u32,
+    /// Span or event kind.
+    pub kind: Kind,
+    /// Start, µs since the trace epoch.
+    pub start_us: u64,
+    /// Duration in µs (0 for instant events).
+    pub dur_us: u64,
+}
+
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64, // 0 = never written; odd = write in progress
+    trace_id: AtomicU64,
+    meta: AtomicU64, // shard | task << 16 | kind << 48
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+struct Ring {
+    slots: Vec<Slot>,
+    head: AtomicU64,
+}
+
+static RING: OnceLock<Ring> = OnceLock::new();
+
+fn ring() -> &'static Ring {
+    RING.get_or_init(|| Ring {
+        slots: (0..RING_CAP).map(|_| Slot::default()).collect(),
+        head: AtomicU64::new(0),
+    })
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide trace epoch (pinned on first use; [`init_from_env`]
+/// pins it at startup so timestamps start near zero).
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds from the trace epoch to `t` (0 if `t` predates it).
+pub fn us_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+fn push(trace_id: u64, shard: usize, task: usize, kind: Kind, start_us: u64, dur_us: u64) {
+    let r = ring();
+    let ticket = r.head.fetch_add(1, Ordering::Relaxed);
+    let slot = &r.slots[ticket as usize & (RING_CAP - 1)];
+    // Seqlock write: odd while in progress, even (and changed) once done.
+    // Two writers race on one slot only after a full ring wrap-around;
+    // the reader then sees an odd or changed seq and skips the slot.
+    slot.seq.fetch_add(1, Ordering::AcqRel);
+    slot.trace_id.store(trace_id, Ordering::Relaxed);
+    let meta = shard as u64 & 0xFFFF | ((task as u64 & 0xFFFF_FFFF) << 16) | ((kind as u64) << 48);
+    slot.meta.store(meta, Ordering::Relaxed);
+    slot.start_us.store(start_us, Ordering::Relaxed);
+    slot.dur_us.store(dur_us, Ordering::Relaxed);
+    slot.seq.fetch_add(1, Ordering::Release);
+}
+
+/// Record a duration span for `trace_id` if tracing is on and the id is
+/// sampled. Callers pass `Instant`s they already hold (the shard loop
+/// reuses the timestamps it takes for `ServeStats`), so an unsampled hook
+/// does no clock reads.
+pub fn span(trace_id: u64, shard: usize, task: usize, kind: Kind, start: Instant, end: Instant) {
+    if !sampled(trace_id) {
+        return;
+    }
+    let s = us_since_epoch(start);
+    let e = us_since_epoch(end);
+    push(trace_id, shard, task, kind, s, e.saturating_sub(s));
+}
+
+/// Route a structured WARN event: always emits a WARN log line
+/// (`[obs] shard N: <kind> <detail>`), and when tracing is on also drops
+/// an instant record onto the shard's trace track.
+pub fn event(shard: usize, kind: Kind, detail: &str) {
+    logging::log(logging::WARN, "obs", format_args!("shard {shard}: {} {detail}", kind.name()));
+    if !enabled() {
+        return;
+    }
+    let now = us_since_epoch(Instant::now());
+    push(0, shard, 0, kind, now, 0);
+}
+
+/// Decode every valid ring slot, sorted by start time (events last among
+/// equal starts). Torn slots (a writer mid-publish or lapped by a ring
+/// wrap) are skipped.
+pub fn records() -> Vec<SpanRecord> {
+    let Some(r) = RING.get() else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for slot in &r.slots {
+        let s1 = slot.seq.load(Ordering::Acquire);
+        if s1 == 0 || s1 & 1 == 1 {
+            continue;
+        }
+        let trace_id = slot.trace_id.load(Ordering::Relaxed);
+        let meta = slot.meta.load(Ordering::Relaxed);
+        let start_us = slot.start_us.load(Ordering::Relaxed);
+        let dur_us = slot.dur_us.load(Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::Acquire);
+        if slot.seq.load(Ordering::Relaxed) != s1 {
+            continue; // torn: a writer got in between the reads
+        }
+        let Some(kind) = Kind::from_u8((meta >> 48) as u8) else {
+            continue;
+        };
+        out.push(SpanRecord {
+            trace_id,
+            shard: (meta & 0xFFFF) as u32,
+            task: ((meta >> 16) & 0xFFFF_FFFF) as u32,
+            kind,
+            start_us,
+            dur_us,
+        });
+    }
+    out.sort_by_key(|r| (r.start_us, u64::MAX - r.dur_us));
+    out
+}
+
+/// Reset the ring (head and every slot). Only meaningful while no writer
+/// is active — a test/bench helper for isolating one run's spans.
+pub fn clear() {
+    let Some(r) = RING.get() else {
+        return;
+    };
+    r.head.store(0, Ordering::Relaxed);
+    for slot in &r.slots {
+        slot.seq.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Serialize ring-global tests (cargo runs tests on threads).
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static M: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        M.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn off_mode_records_nothing() {
+        let _g = lock();
+        set_mode(TraceMode::Off);
+        clear();
+        let t = Instant::now();
+        span(1, 0, 0, Kind::Queue, t, t + Duration::from_micros(5));
+        assert!(!enabled());
+        assert!(records().is_empty());
+    }
+
+    // The ring and mode are process-global and other tests in this binary
+    // run servers concurrently, so these tests mark their own records with
+    // distinctive trace ids / shard numbers and filter instead of asserting
+    // exact ring counts.
+
+    #[test]
+    fn spans_and_events_roundtrip() {
+        let _g = lock();
+        set_mode(TraceMode::All);
+        clear();
+        let id = 0xDEAD_0007u64;
+        let t0 = epoch();
+        span(id, 2, 3, Kind::Queue, t0, t0 + Duration::from_micros(40));
+        span(id, 2, 3, Kind::Batch, t0 + Duration::from_micros(40), t0 + Duration::from_micros(90));
+        event(911, Kind::Restart, "cause: test");
+        let recs = records();
+        set_mode(TraceMode::Off);
+        let mine: Vec<_> = recs.iter().filter(|r| r.trace_id == id).collect();
+        assert_eq!(mine.len(), 2);
+        let q = mine.iter().find(|r| r.kind == Kind::Queue).expect("queue span");
+        assert_eq!((q.shard, q.task, q.dur_us), (2, 3, 40));
+        let e = recs.iter().find(|r| r.shard == 911).expect("restart event");
+        assert!(e.kind.is_event());
+        assert_eq!((e.kind, e.dur_us), (Kind::Restart, 0));
+        // Sorted by start time.
+        assert!(recs.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+    }
+
+    #[test]
+    fn sampling_keeps_multiples() {
+        let _g = lock();
+        set_mode(TraceMode::Sampled(4));
+        clear();
+        let base = 0x5A3F_0000u64; // divisible by 4
+        let t = epoch();
+        for id in base..base + 16 {
+            span(id, 0, 0, Kind::Queue, t, t + Duration::from_micros(1));
+        }
+        let recs = records();
+        set_mode(TraceMode::Off);
+        let mine: Vec<_> = recs.iter().filter(|r| (base..base + 16).contains(&r.trace_id)).collect();
+        assert_eq!(mine.len(), 4, "ids base+0,4,8,12");
+        assert!(mine.iter().all(|r| r.trace_id % 4 == 0));
+    }
+
+    #[test]
+    fn mode_parse_forms() {
+        let _g = lock();
+        set_mode(TraceMode::Sampled(0));
+        assert_eq!(mode(), TraceMode::Sampled(1), "N clamps to >= 1");
+        set_mode(TraceMode::All);
+        assert_eq!(mode(), TraceMode::All);
+        set_mode(TraceMode::Off);
+        assert_eq!(mode(), TraceMode::Off);
+    }
+
+    #[test]
+    fn ring_wrap_keeps_latest() {
+        let _g = lock();
+        set_mode(TraceMode::All);
+        clear();
+        let base = 0x5EED_0000u64;
+        let t = epoch();
+        let n = RING_CAP as u64 + 10;
+        for id in base..base + n {
+            span(id, 0, 0, Kind::Queue, t, t + Duration::from_micros(1));
+        }
+        let recs = records();
+        set_mode(TraceMode::Off);
+        // Concurrent writers from other tests can take tickets too; they
+        // only ever displace the oldest records (plus a torn slot or two).
+        let mine = recs.iter().filter(|r| (base..base + n).contains(&r.trace_id)).count() as u64;
+        let foreign = recs.len() as u64 - mine;
+        assert!(recs.len() >= RING_CAP - 8, "kept {} of {RING_CAP}", recs.len());
+        assert!(mine >= n.saturating_sub(10 + foreign + 8), "mine {mine}, foreign {foreign}");
+        // Lapping ~10 writes past capacity cannot evict the newest record.
+        assert!(recs.iter().any(|r| r.trace_id == base + n - 1));
+    }
+}

@@ -1,17 +1,50 @@
-//! Leveled stderr logger (in-tree substrate). `MCNC_LOG=debug|info|warn`.
+//! Leveled stderr logger (in-tree substrate).
+//! `MCNC_LOG=debug|info|warn|off`.
+//!
+//! Lines carry a monotonic process-uptime timestamp and an optional
+//! per-thread context prefix (shard id, trace id) set by the owning
+//! loop, e.g.:
+//!
+//! ```text
+//! [   12.042s][WRN][shard 2][obs] shard 2: restart cause: crashed
+//! ```
+//!
+//! WARN-worthy *structured* events on the serving path (breaker open,
+//! shard restart, drain of a dead shard) are routed through
+//! `crate::obs::trace::event`, which logs here at WARN **and** drops an
+//! instant record into the trace ring so the event shows up on the
+//! shard's trace track.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
 
 pub const DEBUG: u8 = 0;
 pub const INFO: u8 = 1;
 pub const WARN: u8 = 2;
+/// Sentinel level above WARN: nothing is emitted.
+pub const OFF: u8 = 3;
 
 static LEVEL: AtomicU8 = AtomicU8::new(1);
 
+static START: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static CONTEXT: std::cell::RefCell<String> = const { std::cell::RefCell::new(String::new()) };
+}
+
+/// Monotonic elapsed time since the logger first ran (process uptime for
+/// all practical purposes; `init_from_env` pins it at startup).
+pub fn uptime() -> Duration {
+    START.get_or_init(Instant::now).elapsed()
+}
+
 pub fn init_from_env() {
+    uptime(); // pin the epoch so timestamps start near zero
     let lvl = match std::env::var("MCNC_LOG").as_deref() {
         Ok("debug") => DEBUG,
         Ok("warn") => WARN,
+        Ok("off") => OFF,
         _ => INFO,
     };
     LEVEL.store(lvl, Ordering::Relaxed);
@@ -22,7 +55,17 @@ pub fn set_level(l: u8) {
 }
 
 pub fn enabled(l: u8) -> bool {
-    l >= LEVEL.load(Ordering::Relaxed)
+    l >= LEVEL.load(Ordering::Relaxed) && LEVEL.load(Ordering::Relaxed) != OFF
+}
+
+/// Install this thread's context prefix (e.g. `"shard 2"` from the shard
+/// loop, `"shard 2 trace 17"` while holding a request). Empty clears it.
+pub fn set_thread_context(ctx: &str) {
+    CONTEXT.with(|c| {
+        let mut c = c.borrow_mut();
+        c.clear();
+        c.push_str(ctx);
+    });
 }
 
 pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments) {
@@ -32,7 +75,15 @@ pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments) {
             INFO => "INF",
             _ => "WRN",
         };
-        eprintln!("[{name}][{tag}] {msg}");
+        let t = uptime().as_secs_f64();
+        CONTEXT.with(|c| {
+            let c = c.borrow();
+            if c.is_empty() {
+                eprintln!("[{t:>9.3}s][{name}][{tag}] {msg}");
+            } else {
+                eprintln!("[{t:>9.3}s][{name}][{c}][{tag}] {msg}");
+            }
+        });
     }
 }
 
@@ -66,8 +117,29 @@ mod tests {
         set_level(WARN);
         assert!(!enabled(INFO));
         assert!(enabled(WARN));
+        set_level(OFF);
+        assert!(!enabled(WARN), "off silences everything");
+        assert!(!enabled(OFF));
         set_level(INFO);
         assert!(enabled(INFO));
         crate::info!("test", "hello {}", 1); // smoke
+    }
+
+    #[test]
+    fn uptime_is_monotone() {
+        let a = uptime();
+        let b = uptime();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn thread_context_is_thread_local() {
+        set_thread_context("shard 9");
+        CONTEXT.with(|c| assert_eq!(&*c.borrow(), "shard 9"));
+        let h = std::thread::spawn(|| CONTEXT.with(|c| c.borrow().clone()));
+        assert_eq!(h.join().expect("ctx thread"), "", "fresh thread has no context");
+        set_thread_context("");
+        CONTEXT.with(|c| assert!(c.borrow().is_empty()));
+        crate::warn!("test", "context smoke"); // smoke: prints with no prefix
     }
 }

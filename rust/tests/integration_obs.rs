@@ -1,0 +1,315 @@
+//! Observability integration: a 4-shard chaos run under full tracing.
+//!
+//! The mock engine emits `decode` / `gemm` spans the way the real engine
+//! does (caller-timed, inside the batch), the chaos wrapper injects a
+//! panic, an error, and a shard kill, and the preload artifact arms the
+//! supervisor's re-warm path. Afterwards the test asserts the two export
+//! surfaces end to end:
+//!
+//! * the Prometheus text exposition parses line-by-line: families are
+//!   present with one `# TYPE` header each, cumulative `_bucket` series
+//!   are monotone, and every `+Inf` bucket equals its `_count`;
+//! * the Chrome trace round-trips through `util/json`: one track per
+//!   shard, non-negative `ph:"X"` spans, `restart` / `rewarm` instants
+//!   from the supervisor, and at least one request whose `queue` span
+//!   ends where its `batch` span begins with `decode` and `gemm` nested
+//!   inside.
+//!
+//! The registry and the trace ring are process-global, so this binary
+//! holds a single test function — parallel tests would contaminate each
+//! other's counters and fight over the trace mode.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use mcnc::coordinator::{
+    Batch, BatchPolicy, Chaos, ChaosCfg, EngineCore, FaultyEngine, ServeError, ServeStats, Server,
+    ServerCfg, WarmStats,
+};
+use mcnc::obs::{self, export, trace, EngineObs, Kind, TraceMode};
+use mcnc::util::json::{self, Json};
+
+/// Mock engine that reports decode metrics and emits `decode` / `gemm`
+/// spans from inside `run_batch`, mirroring the real engine's caller-side
+/// instrumentation. With `require_warm`, task coverage only exists after
+/// `preload` — so a restarted shard that still serves proves the
+/// supervisor re-warmed the replacement engine.
+struct ObsMock {
+    shard: usize,
+    n_tasks: usize,
+    warmed: bool,
+    eobs: EngineObs,
+    stats: ServeStats,
+}
+
+impl ObsMock {
+    fn new(shard: usize, n_tasks: usize) -> ObsMock {
+        ObsMock {
+            shard,
+            n_tasks,
+            warmed: false,
+            eobs: EngineObs::register(shard),
+            stats: ServeStats::default(),
+        }
+    }
+}
+
+impl EngineCore for ObsMock {
+    fn seq(&self) -> usize {
+        8
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        task < self.n_tasks && self.warmed
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        // Pretend to decode one frame per request, then run the GEMM;
+        // both are timed caller-side and nest inside the batch span the
+        // shard loop emits around this call.
+        let t0 = Instant::now();
+        obs::count_decoded_frame("mock");
+        let t1 = Instant::now();
+        self.eobs.record_decode(64 * batch.requests.len() as u64, 1, t1 - t0);
+        trace::span(batch.trace_id(), self.shard, batch.task, Kind::Decode, t0, t1);
+        let t2 = Instant::now();
+        trace::span(batch.trace_id(), self.shard, batch.task, Kind::Gemm, t1, t2);
+        self.stats.batches += 1;
+        Ok(batch.requests.iter().map(|r| r.task as i32).collect())
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+
+    fn preload(&mut self, _artifact: &Path) -> Result<WarmStats> {
+        self.warmed = true;
+        Ok(WarmStats { installed: self.n_tasks, prefilled: 0, skipped: 0 })
+    }
+}
+
+fn recv(rx: std::sync::mpsc::Receiver<mcnc::coordinator::Response>) -> mcnc::coordinator::Response {
+    rx.recv_timeout(Duration::from_secs(30)).expect("response")
+}
+
+/// Parse every `<family>_bucket{...}` line of a Prometheus exposition,
+/// asserting per-series cumulative monotonicity, and return the `+Inf`
+/// value per series keyed by `family|labels-before-le`.
+fn check_buckets(text: &str) -> HashMap<String, u64> {
+    let mut last: HashMap<String, u64> = HashMap::new();
+    let mut inf: HashMap<String, u64> = HashMap::new();
+    for line in text.lines() {
+        let Some((name_labels, val)) = line.rsplit_once(' ') else { continue };
+        let Some(ix) = name_labels.find("_bucket{") else { continue };
+        let family = &name_labels[..ix];
+        let labels = &name_labels[ix + "_bucket{".len()..];
+        let le_at = labels.find("le=").unwrap_or_else(|| panic!("bucket without le: {line}"));
+        let key = format!("{family}|{}", &labels[..le_at]);
+        let v: u64 = val.parse().unwrap_or_else(|_| panic!("bad bucket value: {line}"));
+        let prev = last.insert(key.clone(), v).unwrap_or(0);
+        assert!(v >= prev, "cumulative buckets must be monotone: {line}");
+        if labels.contains("le=\"+Inf\"") {
+            inf.insert(key, v);
+        }
+    }
+    inf
+}
+
+/// Assert every `<family>_count{...}` line matches its series' `+Inf`
+/// bucket from `check_buckets`.
+fn check_counts(text: &str, inf: &HashMap<String, u64>) {
+    let mut checked = 0usize;
+    for line in text.lines() {
+        let Some((name_labels, val)) = line.rsplit_once(' ') else { continue };
+        let Some(ix) = name_labels.find("_count{") else { continue };
+        let family = &name_labels[..ix];
+        let labels = name_labels[ix + "_count{".len()..].trim_end_matches('}');
+        let key = format!("{family}|{labels},");
+        let c: u64 = val.parse().unwrap_or_else(|_| panic!("bad count value: {line}"));
+        assert_eq!(inf.get(&key).copied(), Some(c), "+Inf bucket != _count for {line}");
+        checked += 1;
+    }
+    assert!(checked > 0, "no histogram _count lines in the export");
+}
+
+#[test]
+fn four_shard_chaos_run_exports_prometheus_and_chrome_trace() {
+    trace::set_mode(TraceMode::All);
+    trace::clear();
+
+    let n_tasks = 8;
+    let n_shards = 4;
+    let chaos = Chaos::new(ChaosCfg {
+        seed: 77,
+        window: 12,
+        panics: 1,
+        errors: 1,
+        kills: 1,
+        ..ChaosCfg::default()
+    });
+    let cfg = ServerCfg {
+        n_tasks,
+        n_shards,
+        policy: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
+        heartbeat: Duration::from_millis(10),
+        ..ServerCfg::default()
+    };
+    let c = chaos.clone();
+    let server = Server::start_with(&cfg, move |shard| -> Result<FaultyEngine<ObsMock>> {
+        c.factory_gate()?;
+        Ok(c.wrap(ObsMock::new(shard, n_tasks)))
+    })
+    .expect("start obs server");
+    server.preload(Path::new("obs-warm.mcnc2")).expect("preload");
+
+    // Drive traffic until the fault schedule (panic, error, kill) is
+    // spent; the kill forces a restart + re-warm on one shard.
+    let mut submitted = 0u64;
+    let mut completed = 0u64;
+    for _wave in 0..200 {
+        if chaos.exhausted() {
+            break;
+        }
+        let rxs: Vec<_> = (0..n_tasks).map(|t| server.submit(t, vec![0; 8])).collect();
+        submitted += n_tasks as u64;
+        for rx in rxs {
+            let r = recv(rx);
+            match &r.result {
+                Ok(tok) => {
+                    assert_eq!(*tok, r.task as i32);
+                    completed += 1;
+                }
+                Err(ServeError::Failed(_)) => {}
+                Err(e) => panic!("unexpected outcome under faults: {e:?}"),
+            }
+        }
+    }
+    assert!(chaos.exhausted(), "fault schedule never completed");
+
+    // Live snapshot through the Server API while shards are still up.
+    let live = server.metrics_snapshot();
+    assert!(live.counter_sum("mcnc_serve_requests_total") >= submitted);
+    assert!(live.counter_sum("mcnc_codec_frames_total") >= 1, "mock decode never counted");
+
+    // Post-schedule traffic converges; the restarted shard re-warmed.
+    let rxs: Vec<_> = (0..n_tasks).map(|t| server.submit(t, vec![0; 8])).collect();
+    submitted += n_tasks as u64;
+    for rx in rxs {
+        let r = recv(rx);
+        assert!(r.is_ok(), "post-schedule failure (re-warm lost?): {:?}", r.result);
+        completed += 1;
+    }
+    let stats = server.stop().expect("no shard may die permanently");
+    assert_eq!(stats.restarts, 1, "the kill forces exactly one restart");
+
+    // ---- Prometheus exposition (quiesced: all shard threads joined) ----
+    let snap = obs::registry().snapshot();
+    assert!(snap.counter_sum("mcnc_serve_requests_total") >= submitted);
+    assert!(snap.counter_sum("mcnc_serve_restarts_total") >= 1);
+    assert!(snap.counter_sum("mcnc_serve_batch_requests_total") >= completed);
+    assert!(snap.counter_sum("mcnc_codec_decode_frames_total") >= 1);
+    assert!(snap.histogram_merged("mcnc_serve_queue_wait_us").count() >= completed);
+
+    let text = export::prometheus_text(&snap);
+    for family in [
+        "# TYPE mcnc_serve_requests_total counter",
+        "# TYPE mcnc_serve_restarts_total counter",
+        "# TYPE mcnc_serve_batches_total counter",
+        "# TYPE mcnc_cache_entries gauge",
+        "# TYPE mcnc_serve_queue_wait_us histogram",
+        "# TYPE mcnc_serve_latency_us histogram",
+        "# TYPE mcnc_codec_decode_us histogram",
+    ] {
+        assert_eq!(text.matches(family).count(), 1, "missing/duplicated {family:?}");
+    }
+    // All four shards report, with the task_mod label on batch counters.
+    for s in 0..n_shards {
+        assert!(
+            text.contains(&format!("mcnc_serve_batch_requests_total{{shard=\"{s}\"}}")),
+            "shard {s} missing from the exposition"
+        );
+    }
+    assert!(text.contains("mcnc_serve_batches_total{shard=\""));
+    assert!(text.contains(",task_mod=\""));
+    let inf = check_buckets(&text);
+    assert!(!inf.is_empty(), "no histogram buckets in the export");
+    check_counts(&text, &inf);
+
+    // The JSON snapshot parses back through util/json too.
+    let parsed = json::parse(&json::to_string(&export::snapshot_json(&snap)))
+        .expect("snapshot JSON parses");
+    assert!(
+        !parsed.get("histograms").and_then(Json::as_arr).expect("histograms").is_empty(),
+        "snapshot JSON lost the histograms"
+    );
+
+    // ---- Chrome trace round-trip ----
+    let recs = trace::records();
+    trace::set_mode(TraceMode::Off);
+    let parsed = json::parse(&export::chrome_trace(&recs)).expect("chrome trace parses");
+    let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    // (name, tid, trace_id, ts, dur) per complete span.
+    let mut xs: Vec<(String, f64, u64, f64, f64)> = Vec::new();
+    let mut instants: Vec<String> = Vec::new();
+    let mut tracks = 0usize;
+    for e in events {
+        let name = e.get("name").and_then(Json::as_str).expect("event name").to_string();
+        match e.get("ph").and_then(Json::as_str) {
+            Some("X") => {
+                let tid = e.get("tid").and_then(Json::as_f64).expect("tid");
+                let ts = e.get("ts").and_then(Json::as_f64).expect("ts");
+                let dur = e.get("dur").and_then(Json::as_f64).expect("dur");
+                assert!(ts >= 0.0 && dur >= 0.0, "negative span: {name} ts={ts} dur={dur}");
+                let tic = e
+                    .get("args")
+                    .and_then(|a| a.get("trace_id"))
+                    .and_then(Json::as_f64)
+                    .expect("trace_id") as u64;
+                xs.push((name, tid, tic, ts, dur));
+            }
+            Some("i") => {
+                assert_eq!(e.get("s").and_then(Json::as_str), Some("t"), "{name}");
+                instants.push(name);
+            }
+            Some("M") => tracks += 1,
+            ph => panic!("unexpected ph {ph:?}"),
+        }
+    }
+    assert!(tracks >= n_shards, "expected a named track per shard, got {tracks}");
+    assert!(instants.iter().any(|n| n == "restart"), "no restart instant: {instants:?}");
+    assert!(instants.iter().any(|n| n == "rewarm"), "no rewarm instant: {instants:?}");
+
+    // Span nesting: decode/gemm sit inside their batch span (same shard
+    // track, same trace id); the queue span ends where the batch begins.
+    let batches: Vec<_> = xs.iter().filter(|x| x.0 == "batch").collect();
+    assert!(!batches.is_empty(), "no batch spans recorded");
+    for (name, tid, tic, ts, dur) in &xs {
+        match name.as_str() {
+            "decode" | "gemm" => {
+                let inside = batches.iter().any(|b| {
+                    b.1 == *tid && b.2 == *tic && b.3 <= *ts && ts + dur <= b.3 + b.4
+                });
+                assert!(inside, "{name} span (trace {tic}) not nested in its batch span");
+            }
+            "queue" => {
+                if let Some(b) = batches.iter().find(|b| b.2 == *tic) {
+                    assert!(ts + dur <= b.3, "queue span overruns batch start (trace {tic})");
+                }
+            }
+            _ => {}
+        }
+    }
+    // At least one request journeyed queue → batch ⊇ decode, gemm.
+    let has = |n: &str, t: u64| xs.iter().any(|x| x.0 == n && x.2 == t);
+    let full = batches
+        .iter()
+        .filter(|b| has("queue", b.2) && has("decode", b.2) && has("gemm", b.2))
+        .count();
+    assert!(full >= 1, "no request shows the full queue→batch→decode→gemm journey");
+}

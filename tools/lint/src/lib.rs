@@ -3,12 +3,14 @@
 //! The compiler cannot see the invariants this repo's claims rest on —
 //! bit-identical reconstruction across ISAs, host-independent MCNC2 wire
 //! bytes, seed-deterministic fault schedules — so this crate enforces
-//! them mechanically. Five rules (catalog: `docs/LINTS.md`):
+//! them mechanically. Six rules (catalog: `docs/LINTS.md`):
 //!
 //! * `unsafe-discipline` — every `unsafe` needs an adjacent `// SAFETY:`;
 //! * `dispatch-containment` — ISA intrinsics stay in `mcnc/kernel/`;
 //! * `panic-freedom` — no `unwrap`/`expect`/`panic!` on serving paths;
 //! * `determinism` — no wall-clock/ambient randomness in `codec/`, chaos;
+//! * `metrics-naming` — coordinator counters go through the obs registry,
+//!   metric names are snake_case;
 //! * `wire-format` — `docs/FORMAT.md` constants match `codec/` constants.
 //!
 //! Findings carry `file:line` and a rule ID, and can be silenced inline
@@ -78,6 +80,7 @@ pub fn lint_sources(files: &[SourceFile], spec: Option<(&str, &str)>) -> Report 
         rules::dispatch::check(f, &mut found);
         rules::panic_freedom::check(f, &mut found);
         rules::determinism::check(f, &mut found);
+        rules::metrics_naming::check(f, &mut found);
     }
     if let Some((spec_rel, spec_text)) = spec {
         rules::wire_format::check(spec_rel, spec_text, files, &mut found);

@@ -5,11 +5,12 @@
 use crate::{Finding, Report};
 
 /// Every rule ID, in catalog order (see `docs/LINTS.md`).
-pub const RULES: [&str; 5] = [
+pub const RULES: [&str; 6] = [
     crate::rules::unsafe_discipline::ID,
     crate::rules::dispatch::ID,
     crate::rules::panic_freedom::ID,
     crate::rules::determinism::ID,
+    crate::rules::metrics_naming::ID,
     crate::rules::wire_format::ID,
 ];
 

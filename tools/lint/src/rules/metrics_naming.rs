@@ -1,0 +1,86 @@
+//! `metrics-naming`: serving metrics go through the obs registry, under
+//! Prometheus-conventional names. Two checks:
+//!
+//! * no bare `AtomicU64` counters in `coordinator/` non-test code — every
+//!   coordinator counter must be an `obs::Counter`/registry handle so it
+//!   shows up in `Server::metrics_snapshot()` (the one sanctioned raw
+//!   fetch-add word, the request-id mint, lives in `obs::IdGen`);
+//! * every metric name literal at a `.counter("…")` / `.gauge("…")` /
+//!   `.histogram("…")` registration site must be snake_case
+//!   (`[a-z][a-z0-9_]*`), matching the registry's own debug assertion so
+//!   the Prometheus exporter never emits an invalid family name.
+//!
+//! The lexer masks string contents out of `Line::code`, so call sites are
+//! detected on masked code and the literal is re-read from the raw line.
+
+use crate::{Finding, SourceFile};
+
+/// Stable rule name.
+pub const ID: &str = "metrics-naming";
+
+const REGISTER_CALLS: [&str; 3] = [".counter(\"", ".gauge(\"", ".histogram(\""];
+
+/// Matches `obs::registry::is_snake_case`: `[a-z][a-z0-9_]*`.
+fn is_snake_case(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_lowercase() => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Flag bare atomic counters in `coordinator/` and non-snake_case metric
+/// names at registry registration sites.
+pub fn check(f: &SourceFile, out: &mut Vec<Finding>) {
+    let raw_lines: Vec<&str> = f.raw.lines().collect();
+    let in_coordinator = f.rel.contains("coordinator/");
+    for (ix, line) in f.lines.iter().enumerate() {
+        if f.in_test[ix] {
+            continue;
+        }
+        let code = line.code.as_str();
+        if in_coordinator && code.contains("AtomicU64") {
+            out.push(Finding {
+                file: f.rel.clone(),
+                line: ix + 1,
+                rule: ID,
+                msg: "bare `AtomicU64` counter in coordinator/ — use an `obs::Counter` \
+                      (or `obs::IdGen` for id minting) so the metric reaches the registry"
+                    .into(),
+            });
+        }
+        for call in REGISTER_CALLS {
+            // the masked line keeps delimiters, so the needle (which ends
+            // in the opening quote) still matches; the name itself comes
+            // from the raw line at the same occurrence
+            let Some(k) = code.find(call) else {
+                continue;
+            };
+            let Some(raw) = raw_lines.get(ix) else {
+                continue;
+            };
+            let Some(start) = raw.find(call).map(|p| p + call.len()) else {
+                // multi-line registration call: the literal is not on this
+                // line, nothing to validate here
+                continue;
+            };
+            let _ = k;
+            let Some(end) = raw[start..].find('"').map(|p| start + p) else {
+                continue;
+            };
+            let name = &raw[start..end];
+            if !is_snake_case(name) {
+                out.push(Finding {
+                    file: f.rel.clone(),
+                    line: ix + 1,
+                    rule: ID,
+                    msg: format!(
+                        "metric name {name:?} is not snake_case ([a-z][a-z0-9_]*) — \
+                         the Prometheus exporter needs valid family names"
+                    ),
+                });
+            }
+        }
+    }
+}

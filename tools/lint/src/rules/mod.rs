@@ -1,10 +1,11 @@
 //! The rule set. Each module exposes `ID` (the stable rule name used in
 //! findings and `lint:allow(...)` suppressions) and a `check` function.
-//! Four rules are per-file; `wire_format` is a whole-tree cross-check
+//! Five rules are per-file; `wire_format` is a whole-tree cross-check
 //! between `docs/FORMAT.md` and the `codec/` constants.
 
 pub mod determinism;
 pub mod dispatch;
+pub mod metrics_naming;
 pub mod panic_freedom;
 pub mod unsafe_discipline;
 pub mod wire_format;

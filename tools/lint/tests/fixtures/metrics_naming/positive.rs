@@ -1,0 +1,11 @@
+use std::sync::atomic::AtomicU64;
+
+pub struct Stats {
+    hits: AtomicU64,
+}
+
+pub fn register(r: &Registry) {
+    let _c = r.counter("mcnc_Bad-Name", &[]);
+    let _g = r.gauge("mcnc_cache_used_bytes", &[]);
+    let _h = r.histogram("9leading_digit", &[]);
+}

@@ -1,0 +1,4 @@
+pub struct Stats {
+    // lint:allow(metrics-naming): scratch counter local to this test harness
+    hits: std::sync::atomic::AtomicU64,
+}

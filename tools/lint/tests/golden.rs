@@ -131,6 +131,41 @@ fn determinism_suppressed() {
     assert_eq!(hits(&rep.suppressed, "determinism"), [loc("coordinator/chaos.rs", 3)]);
 }
 
+// ---------------------------------------------------------- metrics-naming
+
+#[test]
+fn metrics_naming_positive() {
+    let rep = lint_one("coordinator/metrics.rs", "metrics_naming/positive.rs");
+    let want = [
+        loc("coordinator/metrics.rs", 1),  // AtomicU64 import
+        loc("coordinator/metrics.rs", 4),  // AtomicU64 field
+        loc("coordinator/metrics.rs", 8),  // mcnc_Bad-Name
+        loc("coordinator/metrics.rs", 10), // 9leading_digit
+    ];
+    assert_eq!(hits(&rep.findings, "metrics-naming"), want);
+}
+
+#[test]
+fn metrics_naming_negative_handles_and_tests_exempt() {
+    let rep = lint_one("coordinator/server.rs", "metrics_naming/negative.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn metrics_naming_atomics_fine_outside_coordinator() {
+    // the AtomicU64 ban is scoped to coordinator/; name checks still apply
+    let rep = lint_one("obs/registry.rs", "metrics_naming/positive.rs");
+    let want = [loc("obs/registry.rs", 8), loc("obs/registry.rs", 10)];
+    assert_eq!(hits(&rep.findings, "metrics-naming"), want);
+}
+
+#[test]
+fn metrics_naming_suppressed() {
+    let rep = lint_one("coordinator/metrics.rs", "metrics_naming/suppressed.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(hits(&rep.suppressed, "metrics-naming"), [loc("coordinator/metrics.rs", 3)]);
+}
+
 // ------------------------------------------------------------- wire-format
 
 #[test]
