@@ -33,17 +33,23 @@ cargo test -q --test integration_server
 echo "== fault tolerance: deterministic chaos schedules (pinned seeds) =="
 cargo test -q --test integration_chaos
 
+echo "== socket front-end: loopback MCNP1 integration + chaos-over-socket =="
+cargo test -q --test integration_net
+
 echo "== observability: Prometheus/Chrome-trace exports under chaos =="
 cargo test -q --test integration_obs
 
 echo "== observability hook overhead (perf_micro smoke; obs section only) =="
 cargo bench --bench perf_micro -- --smoke
 
-echo "== availability under faults (table4 smoke; mock + chaos, no artifacts) =="
+echo "== availability under faults + socket sweep (table4 smoke; mock, no artifacts) =="
 cargo bench --bench table4_peft_serving -- --smoke
 
 echo "== codec property tests (corruption handling must fail tier-1) =="
 cargo test -q -p mcnc --test prop_codec
+
+echo "== MCNP1 protocol fuzz/property tests + docs/PROTOCOL.md worked example =="
+cargo test -q -p mcnc --test prop_net_protocol
 
 echo "== parallel decode determinism + docs/FORMAT.md worked example =="
 cargo test -q -p mcnc --test prop_parallel_decode

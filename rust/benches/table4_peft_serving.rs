@@ -8,17 +8,20 @@
 //! trajectory to `BENCH_table4_serving.json`. A third table replays the
 //! same open-loop workload against a mock engine under a deterministic
 //! chaos fault schedule (batch panics, batch errors, shard kills) and
-//! reports availability — it needs no PJRT artifacts and is the only
-//! section run under `-- --smoke`.
+//! reports availability. A fourth table drives the same workload through
+//! the MCNP1 socket front-end over C ∈ {1, 8, 32} loopback connections and
+//! reports client-measured end-to-end p50/p99. The chaos and socket
+//! sections need no PJRT artifacts and are the ones run under `-- --smoke`.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
-use mcnc::coordinator::workload::{open_loop, replay};
+use mcnc::coordinator::workload::{open_loop, replay, replay_socket};
 use mcnc::coordinator::{
     Batch, BatchPolicy, Chaos, ChaosCfg, EngineCore, Mode, ServeStats, Server, ServerCfg,
 };
+use mcnc::net::{NetCfg, NetListener};
 use mcnc::data::{Dataset, MarkovLm, Split};
 use mcnc::exp::{steps_lm, Ctx};
 use mcnc::flops;
@@ -114,6 +117,70 @@ fn availability_under_faults(smoke: bool) {
     }
 }
 
+/// Table 4e: end-to-end latency through the MCNP1 socket front-end —
+/// a loopback `serve --listen` + `replay --connect` round trip against a
+/// mock engine, swept over C concurrent connections. The latency here is
+/// client-measured (request write → reply decode), so it includes framing,
+/// kernel socket hops and the listener poll loop on top of the dispatch
+/// path the other tables measure. Needs no PJRT artifacts; runs under
+/// `-- --smoke` so CI exercises the socket path every run.
+fn socket_sweep(smoke: bool) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let n_tasks = 6;
+    let rate = if smoke { 200.0 } else { 400.0 };
+    let secs = if smoke { 0.3 } else { 2.0 };
+    let lm = MarkovLm::base(1, 128, 32);
+    let schedule = open_loop(11, rate, Duration::from_secs_f64(secs), n_tasks, 1.0);
+    let mut table = Table::new(
+        "Table 4e — end-to-end latency over the MCNP1 socket front-end (loopback, mock engine)",
+        &["conns", "ok", "rejected", "failed", "e2e p50", "e2e p99", "e2e max"],
+    );
+    for conns in [1usize, 8, 32] {
+        let cfg = ServerCfg {
+            n_tasks,
+            n_shards: 2,
+            policy: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
+            heartbeat: Duration::from_millis(10),
+            seed: 1,
+            ..ServerCfg::default()
+        };
+        let server = Server::start_with(&cfg, move |_shard| {
+            Ok(AvailMock { n_tasks, stats: ServeStats::default() })
+        })
+        .expect("start mock server");
+        let listener = NetListener::bind(NetCfg::default()).expect("bind loopback");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let stop = AtomicBool::new(false);
+        let rep = std::thread::scope(|scope| {
+            let pump = scope.spawn(|| listener.run(&server, &stop));
+            let rep =
+                replay_socket(&addr, &lm, 9, &schedule, conns, None, Duration::from_secs(30))
+                    .expect("socket replay");
+            stop.store(true, Ordering::Relaxed);
+            pump.join().expect("listener thread").expect("listener run");
+            rep
+        });
+        assert_eq!(rep.conn_errors, 0, "{conns} conns: fatal connection errors");
+        assert_eq!(rep.missing, 0, "{conns} conns: unanswered requests");
+        server.stop().expect("stop mock server");
+        table.row(vec![
+            conns.to_string(),
+            format!("{}/{}", rep.ok, rep.sent),
+            rep.rejected.to_string(),
+            rep.failed.to_string(),
+            format!("{:?}", rep.latency.percentile(50.0)),
+            format!("{:?}", rep.latency.percentile(99.0)),
+            format!("{:?}", rep.latency.max()),
+        ]);
+    }
+    table.print();
+    if !smoke {
+        table.save_csv("table4_socket");
+        table.save_json("table4_socket");
+    }
+}
+
 /// Table 4d: the serving runs above as seen through the process-wide
 /// metrics registry — the same figures an operator scraping
 /// `mcnc serve --metrics-file` would get. Cumulative across every server
@@ -172,6 +239,7 @@ fn registry_view(smoke: bool) {
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     availability_under_faults(smoke);
+    socket_sweep(smoke);
     if !smoke {
         if let Some(ctx) = Ctx::open() {
             full_run(&ctx);

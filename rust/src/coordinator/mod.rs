@@ -50,4 +50,6 @@ pub use server::{
 };
 pub use shard::EngineCore;
 pub use warm::WarmStats;
-pub use workload::{open_loop, replay, replay_with, Arrival, ReplayReport, Zipf};
+pub use workload::{
+    open_loop, replay, replay_socket, replay_with, Arrival, ReplayReport, SocketReport, Zipf,
+};

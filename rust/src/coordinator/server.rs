@@ -1217,12 +1217,47 @@ impl Server {
         tokens: Vec<i32>,
         deadline: Option<Duration>,
     ) -> mpsc::Receiver<Response> {
-        let id = self.next_id.next();
-        self.obs.requests.inc();
         let (rtx, rrx) = mpsc::channel();
         let now = Instant::now();
-        let req =
-            Request { id, task, tokens, enqueued: now, deadline: deadline.map(|d| now + d) };
+        self.dispatch(task, tokens, deadline.map(|d| now + d), rtx, self.retry.attempts);
+        rrx
+    }
+
+    /// Submit a request whose `Response` is routed to a **caller-owned**
+    /// channel instead of a fresh per-request one — the socket front-end's
+    /// path, where one channel per connection funnels every reply back to
+    /// the poll loop. Takes an absolute deadline (remote clients specify
+    /// time budgets, not wall-clock instants, so the listener anchors them
+    /// on arrival) and returns the server-minted request id, which doubles
+    /// as the trace id and keys the connection's reply routing. Admission
+    /// retries are disabled (`attempts = 0`): the retry path sleeps, and
+    /// the caller is an event loop that must never block — backpressure
+    /// surfaces immediately as a `Rejected` response instead.
+    pub fn submit_routed(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Instant>,
+        reply: &mpsc::Sender<Response>,
+    ) -> u64 {
+        self.dispatch(task, tokens, deadline, reply.clone(), 0)
+    }
+
+    /// Shared admission path behind [`Server::submit_with`] and
+    /// [`Server::submit_routed`]: mint an id, run breaker → bounded-queue
+    /// admission with up to `attempts` retries, and guarantee exactly one
+    /// `Response` reaches `rtx` whatever happens. Returns the minted id.
+    fn dispatch(
+        &self,
+        task: usize,
+        tokens: Vec<i32>,
+        deadline: Option<Instant>,
+        rtx: mpsc::Sender<Response>,
+        attempts: u32,
+    ) -> u64 {
+        let id = self.next_id.next();
+        self.obs.requests.inc();
+        let req = Request { id, task, tokens, enqueued: Instant::now(), deadline };
         let shard = task % self.shards.len();
         if !self.shards[shard].breaker.allow() {
             self.fastfail.inc();
@@ -1231,15 +1266,15 @@ impl Server {
                 &req,
                 ServeError::Rejected(format!("shard {shard} circuit open")),
             ));
-            return rrx;
+            return id;
         }
         let mut msg = Msg::Req(req, rtx);
         let mut attempt = 0u32;
         let (bounced, err) = loop {
             match self.shards[shard].tx.try_send(msg) {
-                Ok(()) => return rrx,
+                Ok(()) => return id,
                 Err(mpsc::TrySendError::Full(m)) => {
-                    if attempt >= self.retry.attempts {
+                    if attempt >= attempts {
                         self.rejected.inc();
                         self.obs.rejected.inc();
                         break (
@@ -1272,7 +1307,7 @@ impl Server {
         if let Msg::Req(req, rtx) = bounced {
             let _ = rtx.send(error_response(&req, err));
         }
-        rrx
+        id
     }
 
     /// Snapshot the observability metrics registry: every counter, gauge

@@ -166,9 +166,256 @@ pub fn replay_with(
     rep
 }
 
+/// What came back from a socket replay (`replay_socket`): the remote-
+/// client mirror of [`ReplayReport`], with client-measured end-to-end
+/// latency (submit write → reply decode) instead of in-process channel
+/// latency.
+#[derive(Debug, Default)]
+pub struct SocketReport {
+    /// Requests written to sockets.
+    pub sent: usize,
+    /// Requests answered with a prediction.
+    pub ok: usize,
+    /// Requests bounced at admission (backpressure / open breaker),
+    /// delivered as `ERR_REJECTED` protocol replies.
+    pub rejected: usize,
+    /// Requests answered with `ERR_FAILED` (unknown task, dead shard,
+    /// execution error).
+    pub failed: usize,
+    /// Requests shed past their deadline (`ERR_DEADLINE`).
+    pub deadline_exceeded: usize,
+    /// Fatal connection-level errors observed (`ConnErr` frames or corrupt
+    /// reply streams); each ends its connection's collection early.
+    pub conn_errors: usize,
+    /// Requests sent but never answered before the collection timeout.
+    pub missing: usize,
+    /// Client-side end-to-end latency of every answered request.
+    pub latency: crate::obs::Histogram,
+}
+
+impl SocketReport {
+    /// Fold another connection's report into this one.
+    pub fn merge(&mut self, other: &SocketReport) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.rejected += other.rejected;
+        self.failed += other.failed;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.conn_errors += other.conn_errors;
+        self.missing += other.missing;
+        self.latency.merge(&other.latency);
+    }
+
+    /// Requests that got any per-request reply.
+    pub fn answered(&self) -> usize {
+        self.ok + self.rejected + self.failed + self.deadline_exceeded
+    }
+}
+
+/// Replay `schedule` against a **remote** server over `conns` concurrent
+/// MCNP1 connections — the socket mirror of [`replay`], and the driver
+/// behind `mcnc replay --connect` and table4's C-connections sweep.
+///
+/// Arrival `i` goes to connection `i % conns` with its global index as the
+/// wire id; all connections share one epoch so the open-loop clock matches
+/// the in-process replay. Each connection writes requests from its own
+/// thread while a paired reader thread deframes replies and records
+/// client-measured latency; after its last request the sender half-closes
+/// (`shutdown(Write)`), which the listener answers by finishing every
+/// in-flight request before dropping the connection. `deadline` is sent on
+/// the wire per request (`None` = no deadline); `collect_timeout` bounds
+/// how long each reader waits for stragglers.
+pub fn replay_socket(
+    addr: &str,
+    lm: &crate::data::MarkovLm,
+    token_seed: u64,
+    schedule: &[Arrival],
+    conns: usize,
+    deadline: Option<Duration>,
+    collect_timeout: Duration,
+) -> Result<SocketReport> {
+    let conns = conns.max(1);
+    let mut per_conn: Vec<Vec<(Duration, usize, u64, Vec<i32>)>> = vec![Vec::new(); conns];
+    for (i, arr) in schedule.iter().enumerate() {
+        per_conn[i % conns].push((
+            arr.at,
+            arr.task,
+            i as u64,
+            request_tokens(lm, token_seed, i as u64),
+        ));
+    }
+    let deadline_us = deadline.map(|d| d.as_micros() as u64).unwrap_or(0);
+    let epoch = std::time::Instant::now();
+    let reports = std::thread::scope(|scope| {
+        let handles: Vec<_> = per_conn
+            .iter()
+            .map(|reqs| {
+                scope.spawn(move || run_conn(addr, reqs, deadline_us, collect_timeout, epoch))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => bail!("socket replay connection thread panicked"),
+            })
+            .collect::<Result<Vec<SocketReport>>>()
+    })?;
+    let mut total = SocketReport::default();
+    for r in &reports {
+        total.merge(r);
+    }
+    Ok(total)
+}
+
+/// One connection's worth of [`replay_socket`]: connect, preamble, write
+/// requests open-loop, half-close, join the reader.
+fn run_conn(
+    addr: &str,
+    reqs: &[(Duration, usize, u64, Vec<i32>)],
+    deadline_us: u64,
+    collect_timeout: Duration,
+    epoch: std::time::Instant,
+) -> Result<SocketReport> {
+    use std::io::Write as _;
+
+    use crate::net::protocol::{self, Msg};
+
+    let mut rep = SocketReport::default();
+    if reqs.is_empty() {
+        return Ok(rep);
+    }
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    stream.write_all(protocol::NET_MAGIC)?;
+    let sent_at: std::sync::Arc<std::sync::Mutex<std::collections::HashMap<u64, std::time::Instant>>> =
+        Default::default();
+    let reader_stream = stream.try_clone()?;
+    let reader_sent = std::sync::Arc::clone(&sent_at);
+    let expect = reqs.len();
+    let reader =
+        std::thread::spawn(move || read_replies(reader_stream, expect, collect_timeout, reader_sent));
+    for (at, task, wire, tokens) in reqs {
+        if let Some(wait) = at.checked_sub(epoch.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let frame = protocol::encode_frame(&Msg::Req {
+            id: *wire,
+            task: *task as u64,
+            tokens: tokens.clone(),
+            deadline_us,
+        });
+        // record before the write so a fast reply can't race the insert
+        if let Ok(mut g) = sent_at.lock() {
+            g.insert(*wire, std::time::Instant::now());
+        }
+        stream.write_all(&frame)?;
+        rep.sent += 1;
+    }
+    // half-close: tell the server we are done sending; it finishes every
+    // in-flight request, flushes, and closes its side
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let got = reader.join().unwrap_or_default();
+    rep.merge(&got);
+    rep.missing = rep.sent.saturating_sub(rep.answered());
+    Ok(rep)
+}
+
+/// Reader half of one replay connection: deframe replies until `expect`
+/// per-request answers arrived, the stream ended, or `timeout` passed with
+/// nothing to read.
+fn read_replies(
+    mut stream: std::net::TcpStream,
+    expect: usize,
+    timeout: Duration,
+    sent_at: std::sync::Arc<std::sync::Mutex<std::collections::HashMap<u64, std::time::Instant>>>,
+) -> SocketReport {
+    use std::io::{ErrorKind, Read as _};
+
+    use crate::net::protocol::{Deframer, Msg, ERR_DEADLINE, ERR_FAILED, ERR_REJECTED};
+
+    let mut rep = SocketReport::default();
+    let _ = stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))));
+    let mut de = Deframer::new();
+    let mut buf = [0u8; 16 * 1024];
+    let mut got = 0usize;
+    'read: while got < expect {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        };
+        de.push(&buf[..n]);
+        loop {
+            match de.next() {
+                Ok(Some(msg)) => {
+                    let id = match &msg {
+                        Msg::ReplyOk { id, .. } => {
+                            rep.ok += 1;
+                            Some(*id)
+                        }
+                        Msg::ReplyErr { id, code, .. } => {
+                            match *code {
+                                ERR_REJECTED => rep.rejected += 1,
+                                ERR_FAILED => rep.failed += 1,
+                                ERR_DEADLINE => rep.deadline_exceeded += 1,
+                                // decode_body validated the code; count
+                                // anything else defensively as failed
+                                _ => rep.failed += 1,
+                            }
+                            Some(*id)
+                        }
+                        Msg::ConnErr { .. } => {
+                            rep.conn_errors += 1;
+                            break 'read;
+                        }
+                        _ => None, // Pong / echoed requests: not replies
+                    };
+                    if let Some(id) = id {
+                        got += 1;
+                        if let Some(t) = sent_at.lock().ok().and_then(|mut g| g.remove(&id)) {
+                            rep.latency.record(t.elapsed());
+                        }
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    rep.conn_errors += 1;
+                    break 'read;
+                }
+            }
+        }
+    }
+    rep
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn socket_report_merge_sums_and_merges_latency() {
+        let mut a = SocketReport::default();
+        a.sent = 4;
+        a.ok = 3;
+        a.rejected = 1;
+        a.latency.record(Duration::from_micros(100));
+        let mut b = SocketReport::default();
+        b.sent = 2;
+        b.failed = 1;
+        b.deadline_exceeded = 1;
+        b.conn_errors = 1;
+        b.missing = 0;
+        b.latency.record(Duration::from_micros(200));
+        a.merge(&b);
+        assert_eq!(a.sent, 6);
+        assert_eq!(a.answered(), 6);
+        assert_eq!(a.latency.count(), 2);
+        assert_eq!(a.conn_errors, 1);
+    }
 
     #[test]
     fn zipf_head_heavier_than_tail() {

@@ -21,6 +21,9 @@
 //!   rANS, framed container, streaming adapters).
 //! * [`train`] / [`runtime`] — training orchestration and the PJRT
 //!   boundary (stubbed offline behind the `pjrt` feature).
+//! * [`net`] — the MCNP1 framed socket protocol and nonblocking serving
+//!   loop exposing the coordinator to remote clients (`mcnc serve
+//!   --listen`; byte-level spec in docs/PROTOCOL.md).
 //! * [`obs`] — observability: the metrics registry, request tracing, and
 //!   Prometheus / Chrome-trace exporters (callable from every layer; see
 //!   docs/OBSERVABILITY.md for the metric catalog).
@@ -48,6 +51,7 @@ pub mod data;
 pub mod exp;
 pub mod flops;
 pub mod mcnc;
+pub mod net;
 pub mod obs;
 pub mod runtime;
 pub mod sphere;

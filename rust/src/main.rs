@@ -7,7 +7,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use mcnc::codec::Codec;
-use mcnc::coordinator::workload::{open_loop, replay, Zipf};
+use mcnc::coordinator::workload::{open_loop, replay, replay_socket, Zipf};
 use mcnc::coordinator::{
     BatchPolicy, BreakerCfg, Mode, RestartPolicy, RetryPolicy, Server, ServerCfg,
 };
@@ -53,6 +53,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "train" => train_cmd(args),
         "eval" => eval_cmd(args),
         "serve" => serve_cmd(args),
+        "replay" => replay_cmd(args),
         "sphere" => sphere_cmd(args),
         "config" => config_cmd(args),
         "pack" => pack_cmd(args),
@@ -71,7 +72,13 @@ const HELP: &str = "mcnc — Manifold-Constrained Neural Compression (ICLR'25 re
   eval    --ckpt FILE [--seed S]
   serve   [--kind K --tasks N --shards N --rate HZ --secs S --merged BOOL --native-recon BOOL --zipf S --queue-cap N --preload FILE
            --deadline-ms MS --max-restarts N --retry N --breaker K
-           --metrics-file F --metrics-interval-ms N --trace-out F]
+           --metrics-file F --metrics-interval-ms N --trace-out F
+           --listen ADDR --max-conns N]
+  replay  --connect ADDR [--conns C --rate HZ --secs S --tasks N --zipf S
+           --deadline-ms MS --seed S --collect-secs N]
+                                 drive a remote `serve --listen` server over
+                                 C concurrent MCNP1 connections (loopback or
+                                 LAN) and report end-to-end p50/p99
   sphere  [--acts sine,sigmoid,relu --l 1,5,10,100 --width 256]
   config  --file cfg.toml        config-driven training job
   pack    --ckpt FILE --out FILE [--codec lossless|int8|int4 --block N]
@@ -101,6 +108,14 @@ Global flags / env:
                   --metrics-interval-ms N (default 1000), plus a final one on
                   stop; `.prom`/`.txt` extension → Prometheus text exposition,
                   anything else → JSON (docs/OBSERVABILITY.md)
+  --listen ADDR   (serve) serve the MCNP1 framed socket protocol on ADDR
+                  (e.g. 127.0.0.1:7433; port 0 = ephemeral, printed at bind)
+                  instead of generating local load; runs for --secs seconds
+                  (0 = until killed), then drains every connection. Remote
+                  clients use `mcnc replay --connect ADDR`; byte-level spec
+                  in docs/PROTOCOL.md
+  --max-conns N   (serve --listen) connection cap; accepts beyond it are
+                  refused with a typed connection error (default 1024)
   --trace-out F   (serve) record request/shard spans and write a Chrome
                   trace-event JSON to F on stop (load in Perfetto or
                   chrome://tracing); forces MCNC_TRACE=all unless MCNC_TRACE
@@ -314,7 +329,53 @@ fn serve_cmd(args: &Args) -> Result<()> {
             warm.installed, warm.prefilled, warm.skipped
         );
     }
-    let rep = replay(&server, &lm, 9, &schedule);
+    let rep = if let Some(addr) = args.get("listen") {
+        // socket front-end: remote clients drive the load (`mcnc replay
+        // --connect`); --secs bounds the serving window, 0 = until killed
+        let net_cfg = mcnc::net::NetCfg {
+            addr: addr.clone(),
+            max_conns: args.usize_or("max-conns", 1024),
+            ..mcnc::net::NetCfg::default()
+        };
+        let listener = mcnc::net::NetListener::bind(net_cfg)?;
+        println!(
+            "listening on {} (MCNP1; spec docs/PROTOCOL.md) for {}",
+            listener.local_addr()?,
+            if secs > 0.0 { format!("{secs:.0}s") } else { "ever (kill to stop)".into() }
+        );
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let timer = (secs > 0.0).then(|| {
+            let stop = Arc::clone(&stop);
+            let window = std::time::Duration::from_secs_f64(secs);
+            std::thread::spawn(move || {
+                // sleep in short slices so a finished run exits promptly
+                let t0 = std::time::Instant::now();
+                while t0.elapsed() < window {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            })
+        });
+        let net = listener.run(&server, &stop)?;
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(t) = timer {
+            let _ = t.join();
+        }
+        println!(
+            "net: {} conns accepted ({} refused, {} protocol errors), {} requests, {} frames in / {} out, {} B read / {} B written",
+            net.accepted,
+            net.refused,
+            net.protocol_errors,
+            net.requests,
+            net.frames_in,
+            net.frames_out,
+            net.bytes_read,
+            net.bytes_written,
+        );
+        None
+    } else {
+        Some(replay(&server, &lm, 9, &schedule))
+    };
     let stats = server.stop()?;
     metrics_stop.store(true, std::sync::atomic::Ordering::Relaxed);
     if let Some(h) = metrics_writer {
@@ -335,23 +396,36 @@ fn serve_cmd(args: &Args) -> Result<()> {
             recs.len()
         );
     }
-    println!(
-        "ok {}/{} (rejected {} failed {} deadline-exceeded {} dropped {} timed-out {}) | throughput {:.1} req/s | p50 {:?} p99 {:?} | queue p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
-        rep.ok,
-        schedule.len(),
-        rep.rejected,
-        rep.failed,
-        rep.deadline_exceeded,
-        rep.dropped,
-        rep.timed_out,
-        stats.throughput(),
-        stats.latency.percentile(50.0),
-        stats.latency.percentile(99.0),
-        stats.queue_wait.percentile(50.0),
-        stats.queue_wait.percentile(99.0),
-        stats.occupancy(),
-        stats.recon_flops as f64 / 1e9,
-    );
+    if let Some(rep) = &rep {
+        println!(
+            "ok {}/{} (rejected {} failed {} deadline-exceeded {} dropped {} timed-out {}) | throughput {:.1} req/s | p50 {:?} p99 {:?} | queue p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
+            rep.ok,
+            schedule.len(),
+            rep.rejected,
+            rep.failed,
+            rep.deadline_exceeded,
+            rep.dropped,
+            rep.timed_out,
+            stats.throughput(),
+            stats.latency.percentile(50.0),
+            stats.latency.percentile(99.0),
+            stats.queue_wait.percentile(50.0),
+            stats.queue_wait.percentile(99.0),
+            stats.occupancy(),
+            stats.recon_flops as f64 / 1e9,
+        );
+    } else {
+        println!(
+            "served: throughput {:.1} req/s | p50 {:?} p99 {:?} | queue p50 {:?} p99 {:?} | occupancy {:.2} | recon {:.2} GFLOPs",
+            stats.throughput(),
+            stats.latency.percentile(50.0),
+            stats.latency.percentile(99.0),
+            stats.queue_wait.percentile(50.0),
+            stats.queue_wait.percentile(99.0),
+            stats.occupancy(),
+            stats.recon_flops as f64 / 1e9,
+        );
+    }
     if stats.restarts + stats.deadline_shed + stats.batch_panics + stats.breaker_opens > 0 {
         println!(
             "fault recovery: {} shard restart(s), {} request(s) shed at deadline, {} contained batch panic(s), {} breaker open(s), {} breaker fast-fail(s), {} admission retry(s)",
@@ -361,6 +435,60 @@ fn serve_cmd(args: &Args) -> Result<()> {
             stats.breaker_opens,
             stats.breaker_fastfail,
             stats.retries,
+        );
+    }
+    Ok(())
+}
+
+/// `mcnc replay --connect ADDR`: the remote client half of `serve
+/// --listen` — generate the same deterministic open-loop workload the
+/// in-process serve path uses and drive it over C concurrent MCNP1
+/// connections, reporting client-measured end-to-end latency.
+fn replay_cmd(args: &Args) -> Result<()> {
+    let addr = args.require("connect")?;
+    let conns = args.usize_or("conns", 8);
+    let rate = args.f32_or("rate", 200.0) as f64;
+    let secs = args.f32_or("secs", 5.0) as f64;
+    let n_tasks = args.usize_or("tasks", 8);
+    let zipf_s = args.f32_or("zipf", 1.0) as f64;
+    Zipf::try_new(n_tasks, zipf_s).context("--zipf")?;
+    let deadline = match args.u64_or("deadline-ms", 0) {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    let collect = std::time::Duration::from_secs(args.u64_or("collect-secs", 30).max(1));
+    let lm = MarkovLm::base(1, 128, 32);
+    let schedule = open_loop(
+        args.u64_or("seed", 7),
+        rate,
+        std::time::Duration::from_secs_f64(secs),
+        n_tasks,
+        zipf_s,
+    );
+    println!(
+        "replaying {} requests ({:.0} req/s, {n_tasks} tasks, zipf {zipf_s}) over {conns} connection(s) to {addr} …",
+        schedule.len(),
+        rate,
+    );
+    let rep = replay_socket(addr, &lm, 9, &schedule, conns, deadline, collect)?;
+    println!(
+        "ok {}/{} (rejected {} failed {} deadline-exceeded {} conn-errors {} missing {}) | e2e p50 {:?} p99 {:?} max {:?}",
+        rep.ok,
+        rep.sent,
+        rep.rejected,
+        rep.failed,
+        rep.deadline_exceeded,
+        rep.conn_errors,
+        rep.missing,
+        rep.latency.percentile(50.0),
+        rep.latency.percentile(99.0),
+        rep.latency.max(),
+    );
+    if rep.conn_errors > 0 || rep.missing > 0 {
+        anyhow::bail!(
+            "{} connection error(s), {} request(s) unanswered",
+            rep.conn_errors,
+            rep.missing
         );
     }
     Ok(())

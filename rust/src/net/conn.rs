@@ -1,0 +1,229 @@
+//! Per-connection protocol state machine — pure logic, no sockets, so the
+//! preamble handshake, deframing, reply routing and write backpressure are
+//! all unit- and property-testable without I/O. The listener owns one
+//! [`Conn`] per accepted socket and feeds it raw reads; the `Conn` answers
+//! with decoded messages and accumulates encoded reply bytes for the
+//! listener to flush.
+//!
+//! The `inflight` map is the wire-id ↔ trace-id bridge: shard reply
+//! channels are keyed by the **server-minted** request id (which doubles
+//! as the trace id), while clients choose their own wire ids — the map
+//! records `trace → wire` at submit so each [`Response`] coming back off
+//! the reply channel can be re-addressed to the client's id.
+//!
+//! [`Response`]: crate::coordinator::Response
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::protocol::{self, Deframer, Msg, NET_MAGIC};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Waiting for the 6-byte `NET_MAGIC` preamble.
+    Preamble,
+    /// Preamble verified; frames flow.
+    Open,
+    /// Fatal protocol error or shutdown: no more reads or submissions;
+    /// pending write bytes (e.g. a final `ConnErr`) still flush.
+    Closed,
+}
+
+/// Protocol state for one client connection.
+#[derive(Debug)]
+pub struct Conn {
+    state: State,
+    pre: Vec<u8>,
+    deframer: Deframer,
+    /// Encoded-but-unflushed reply bytes.
+    out: Vec<u8>,
+    /// Flushed prefix of `out` (compacted lazily).
+    sent: usize,
+    /// Server trace id → client wire id for requests awaiting a reply.
+    inflight: HashMap<u64, u64>,
+}
+
+impl Default for Conn {
+    fn default() -> Conn {
+        Conn::new()
+    }
+}
+
+impl Conn {
+    /// Fresh connection awaiting its preamble.
+    pub fn new() -> Conn {
+        Conn {
+            state: State::Preamble,
+            pre: Vec::with_capacity(NET_MAGIC.len()),
+            deframer: Deframer::new(),
+            out: Vec::new(),
+            sent: 0,
+            inflight: HashMap::new(),
+        }
+    }
+
+    /// Feed freshly read bytes; returns every message completed by them.
+    /// `Err` means a protocol violation (bad preamble, corrupt frame): the
+    /// caller should [`Conn::queue`] a [`Msg::ConnErr`], [`Conn::close`],
+    /// flush, and drop the socket.
+    pub fn on_bytes(&mut self, mut data: &[u8]) -> Result<Vec<Msg>> {
+        if self.state == State::Closed {
+            return Ok(Vec::new());
+        }
+        if self.state == State::Preamble {
+            let take = (NET_MAGIC.len() - self.pre.len()).min(data.len());
+            self.pre.extend_from_slice(&data[..take]);
+            data = &data[take..];
+            if self.pre.len() < NET_MAGIC.len() {
+                return Ok(Vec::new());
+            }
+            if self.pre != NET_MAGIC[..] {
+                bail!("bad connection preamble (expected {:?})", protocol::NET_MAGIC);
+            }
+            self.state = State::Open;
+        }
+        self.deframer.push(data);
+        let mut msgs = Vec::new();
+        while let Some(m) = self.deframer.next()? {
+            msgs.push(m);
+        }
+        Ok(msgs)
+    }
+
+    /// Encode `msg` into the write buffer (flushed by the listener).
+    pub fn queue(&mut self, msg: &Msg) {
+        self.out.extend_from_slice(&protocol::encode_frame(msg));
+    }
+
+    /// Bytes queued for the socket but not yet written.
+    pub fn pending_write(&self) -> &[u8] {
+        &self.out[self.sent..]
+    }
+
+    /// Note that `n` bytes of [`Conn::pending_write`] reached the socket.
+    pub fn consume_written(&mut self, n: usize) {
+        self.sent = (self.sent + n).min(self.out.len());
+        if self.sent == self.out.len() {
+            self.out.clear();
+            self.sent = 0;
+        } else if self.sent > 8192 {
+            self.out.drain(..self.sent);
+            self.sent = 0;
+        }
+    }
+
+    /// Unflushed write-buffer depth in bytes — the listener's backpressure
+    /// signal: past its threshold it stops reading this socket, which
+    /// leaves further requests in the kernel buffer and ultimately pushes
+    /// back on the client, mirroring the shard admission queues.
+    pub fn write_backlog(&self) -> usize {
+        self.out.len() - self.sent
+    }
+
+    /// Record a submitted request: server `trace` id → client `wire` id.
+    pub fn note_inflight(&mut self, trace: u64, wire: u64) {
+        self.inflight.insert(trace, wire);
+    }
+
+    /// Resolve (and forget) the wire id for a completed request.
+    pub fn take_inflight(&mut self, trace: u64) -> Option<u64> {
+        self.inflight.remove(&trace)
+    }
+
+    /// Requests submitted on this connection still awaiting replies.
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Stop accepting input and submissions (pending writes still flush).
+    pub fn close(&mut self) {
+        self.state = State::Closed;
+    }
+
+    /// False once [`Conn::close`] was called.
+    pub fn is_open(&self) -> bool {
+        self.state != State::Closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open_conn() -> Conn {
+        let mut c = Conn::new();
+        assert!(c.on_bytes(NET_MAGIC).expect("preamble").is_empty());
+        c
+    }
+
+    #[test]
+    fn preamble_split_across_reads() {
+        let mut c = Conn::new();
+        assert!(c.on_bytes(&NET_MAGIC[..3]).expect("half").is_empty());
+        let mut wire = NET_MAGIC[3..].to_vec();
+        wire.extend_from_slice(&protocol::encode_frame(&Msg::Ping { nonce: 5 }));
+        let msgs = c.on_bytes(&wire).expect("rest + frame");
+        assert_eq!(msgs, vec![Msg::Ping { nonce: 5 }]);
+    }
+
+    #[test]
+    fn bad_preamble_is_fatal() {
+        let mut c = Conn::new();
+        let err = c.on_bytes(b"MCNC2\n").expect_err("wrong magic");
+        assert!(err.to_string().contains("preamble"), "{err}");
+    }
+
+    #[test]
+    fn closed_conn_ignores_input_but_flushes_writes() {
+        let mut c = open_conn();
+        c.queue(&Msg::ConnErr { msg: "bye".into() });
+        c.close();
+        assert!(!c.is_open());
+        assert!(c.on_bytes(&[1, 2, 3]).expect("ignored").is_empty());
+        let n = c.pending_write().len();
+        assert!(n > 0);
+        c.consume_written(n);
+        assert_eq!(c.write_backlog(), 0);
+    }
+
+    #[test]
+    fn partial_writes_and_backlog_accounting() {
+        let mut c = open_conn();
+        c.queue(&Msg::Pong { nonce: 1 });
+        c.queue(&Msg::Pong { nonce: 2 });
+        let total = c.write_backlog();
+        c.consume_written(3);
+        assert_eq!(c.write_backlog(), total - 3);
+        let rest = c.pending_write().len();
+        c.consume_written(rest);
+        assert_eq!(c.write_backlog(), 0);
+        assert!(c.pending_write().is_empty());
+    }
+
+    #[test]
+    fn inflight_maps_trace_to_wire_once() {
+        let mut c = open_conn();
+        c.note_inflight(1001, 7);
+        c.note_inflight(1002, 8);
+        assert_eq!(c.inflight(), 2);
+        assert_eq!(c.take_inflight(1001), Some(7));
+        assert_eq!(c.take_inflight(1001), None, "resolved exactly once");
+        assert_eq!(c.inflight(), 1);
+    }
+
+    #[test]
+    fn interleaved_frames_across_chunk_boundaries() {
+        let mut c = open_conn();
+        let frames: Vec<Msg> = (0..5).map(|i| Msg::Ping { nonce: i }).collect();
+        let mut wire = Vec::new();
+        for m in &frames {
+            wire.extend_from_slice(&protocol::encode_frame(m));
+        }
+        let mut got = Vec::new();
+        for chunk in wire.chunks(7) {
+            got.extend(c.on_bytes(chunk).expect("chunk"));
+        }
+        assert_eq!(got, frames);
+    }
+}

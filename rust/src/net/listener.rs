@@ -1,0 +1,388 @@
+//! Dependency-free nonblocking socket front-end: one poll loop
+//! multiplexes every client connection onto the sharded dispatcher.
+//!
+//! Everything socket-shaped lives in this file — `protocol.rs` and
+//! `conn.rs` stay pure so the byte-level behaviour is testable without
+//! I/O. The loop is plain `std::net` readiness polling: the listener and
+//! every stream are nonblocking, each iteration accepts, reads, submits,
+//! drains reply channels and flushes writes until `WouldBlock`, and an
+//! idle iteration sleeps briefly instead of spinning.
+//!
+//! Backpressure is two-layered, both bounded:
+//!
+//! * **admission** — requests go through [`Server::submit_routed`] with no
+//!   retry sleeps, so a full shard queue answers `Rejected` immediately
+//!   (the poll loop must never block on a shard);
+//! * **write** — a connection whose unflushed reply bytes exceed
+//!   [`NetCfg::max_backlog`] stops being read until the client drains its
+//!   side, pushing the overload back into the kernel socket buffers.
+//!
+//! Shutdown is a drain: once the stop flag is observed the listener stops
+//! accepting and reading, finishes every in-flight request, flushes every
+//! reply, and only then closes — bounded by [`NetCfg::drain`].
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Response, Server};
+use crate::obs::{self, Kind, NetObs};
+
+use super::conn::Conn;
+use super::protocol::{self, Msg};
+
+/// Socket front-end configuration.
+#[derive(Debug, Clone)]
+pub struct NetCfg {
+    /// Listen address, e.g. `127.0.0.1:7433` (`:0` = ephemeral port).
+    pub addr: String,
+    /// Connection cap; accepts beyond it get a `ConnErr` and a close.
+    pub max_conns: usize,
+    /// Per-connection unflushed-reply-bytes threshold past which the
+    /// connection stops being read (write backpressure).
+    pub max_backlog: usize,
+    /// Shutdown drain budget: how long to keep flushing in-flight replies
+    /// after the stop flag before closing regardless.
+    pub drain: Duration,
+}
+
+impl Default for NetCfg {
+    fn default() -> NetCfg {
+        NetCfg {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 1024,
+            max_backlog: 256 << 10,
+            drain: Duration::from_secs(5),
+        }
+    }
+}
+
+/// What the poll loop did over its lifetime (returned by
+/// [`NetListener::run`]; the obs registry carries the live view).
+#[derive(Debug, Clone, Default)]
+pub struct NetReport {
+    /// Connections accepted (including ones later refused for capacity).
+    pub accepted: u64,
+    /// Connections closed (EOF, error, shutdown drain).
+    pub closed: u64,
+    /// Accepts refused because [`NetCfg::max_conns`] was reached.
+    pub refused: u64,
+    /// Complete frames decoded off client sockets.
+    pub frames_in: u64,
+    /// Reply/pong frames queued to clients.
+    pub frames_out: u64,
+    /// Requests submitted into the dispatcher.
+    pub requests: u64,
+    /// Connections dropped for protocol violations.
+    pub protocol_errors: u64,
+    /// Raw bytes read off sockets.
+    pub bytes_read: u64,
+    /// Raw bytes written to sockets.
+    pub bytes_written: u64,
+}
+
+/// One accepted client connection and its reply plumbing.
+struct ConnSlot {
+    stream: TcpStream,
+    conn: Conn,
+    /// Cloned into every `submit_routed` so this connection's responses
+    /// funnel into one channel, drained by the poll loop.
+    reply_tx: mpsc::Sender<Response>,
+    reply_rx: mpsc::Receiver<Response>,
+    /// Monotonic connection number (trace-span track id, mod 2¹⁶).
+    id: usize,
+    /// Client half-closed its write side: stop reading, keep replying.
+    eof: bool,
+    /// Socket is unusable (reset / write error): drop without flushing.
+    dead: bool,
+}
+
+impl ConnSlot {
+    /// Finished when nothing can ever flow again: the socket died, or the
+    /// conn is closed/EOF with no replies pending and nothing to flush.
+    fn finished(&self) -> bool {
+        self.dead
+            || (!self.conn.is_open() && self.conn.write_backlog() == 0)
+            || (self.eof && self.conn.inflight() == 0 && self.conn.write_backlog() == 0)
+    }
+
+    /// Nothing in flight and nothing buffered — safe to close in a drain.
+    fn drained(&self) -> bool {
+        self.conn.inflight() == 0 && self.conn.write_backlog() == 0
+    }
+}
+
+/// A bound (but not yet running) socket front-end. Binding is separate
+/// from [`NetListener::run`] so callers can bind `:0`, read the ephemeral
+/// port with [`NetListener::local_addr`], and hand the run loop to a
+/// thread — the pattern the loopback tests and table4's socket sweep use.
+pub struct NetListener {
+    listener: TcpListener,
+    cfg: NetCfg,
+}
+
+impl NetListener {
+    /// Bind `cfg.addr` and switch the listener to nonblocking mode.
+    pub fn bind(cfg: NetCfg) -> Result<NetListener> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        Ok(NetListener { listener, cfg })
+    }
+
+    /// The bound address (the real port when `cfg.addr` ended in `:0`).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("listener local_addr")
+    }
+
+    /// Run the poll loop until `stop` is set, then drain and return the
+    /// lifetime totals. Every request submitted on any connection is
+    /// answered before its socket closes (the coordinator's exactly-one-
+    /// `Response` invariant carries over the wire), bounded only by the
+    /// configured drain budget.
+    pub fn run(self, server: &Server, stop: &AtomicBool) -> Result<NetReport> {
+        let net_obs = NetObs::register();
+        let mut conns: Vec<ConnSlot> = Vec::new();
+        let mut report = NetReport::default();
+        let mut next_id = 0usize;
+        let mut buf = vec![0u8; 16 * 1024];
+        let mut drain_deadline: Option<Instant> = None;
+
+        loop {
+            let mut progressed = false;
+            if drain_deadline.is_none() && stop.load(Ordering::Relaxed) {
+                drain_deadline = Some(Instant::now() + self.cfg.drain);
+            }
+            let draining = drain_deadline.is_some();
+
+            // -- accept ------------------------------------------------
+            while !draining {
+                let t0 = Instant::now();
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        progressed = true;
+                        report.accepted += 1;
+                        net_obs.accepted.inc();
+                        let id = next_id;
+                        next_id += 1;
+                        obs::trace::span(0, id & 0xFFFF, 0, Kind::Accept, t0, Instant::now());
+                        if stream.set_nonblocking(true).is_err() {
+                            report.closed += 1;
+                            net_obs.closed.inc();
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        if conns.len() >= self.cfg.max_conns {
+                            // best-effort refusal notice, then drop
+                            report.refused += 1;
+                            report.closed += 1;
+                            net_obs.closed.inc();
+                            let frame = protocol::encode_frame(&Msg::ConnErr {
+                                msg: format!("server at capacity ({} connections)", conns.len()),
+                            });
+                            let mut s = stream;
+                            let _ = s.write_all(&frame);
+                            continue;
+                        }
+                        let (reply_tx, reply_rx) = mpsc::channel();
+                        net_obs.connections.add(1);
+                        conns.push(ConnSlot {
+                            stream,
+                            conn: Conn::new(),
+                            reply_tx,
+                            reply_rx,
+                            id,
+                            eof: false,
+                            dead: false,
+                        });
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => break, // transient accept failure; retry next tick
+                }
+            }
+
+            // -- per-connection read / submit / reply / write ----------
+            for slot in conns.iter_mut() {
+                // read (suppressed under write backpressure and in drain)
+                if !slot.dead
+                    && !slot.eof
+                    && slot.conn.is_open()
+                    && !draining
+                    && slot.conn.write_backlog() <= self.cfg.max_backlog
+                {
+                    let t0 = Instant::now();
+                    let mut read_bytes = 0u64;
+                    loop {
+                        match slot.stream.read(&mut buf) {
+                            Ok(0) => {
+                                slot.eof = true;
+                                break;
+                            }
+                            Ok(n) => {
+                                progressed = true;
+                                read_bytes += n as u64;
+                                match slot.conn.on_bytes(&buf[..n]) {
+                                    Ok(msgs) => {
+                                        report.frames_in += msgs.len() as u64;
+                                        net_obs.frames_in.add(msgs.len() as u64);
+                                        let mut violation = None;
+                                        for m in msgs {
+                                            if let Err(e) =
+                                                handle_msg(server, slot, m, &mut report, &net_obs)
+                                            {
+                                                violation = Some(e);
+                                                break;
+                                            }
+                                        }
+                                        if let Some(e) = violation {
+                                            protocol_error(slot, &e, &mut report, &net_obs);
+                                            break;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        protocol_error(slot, &e, &mut report, &net_obs);
+                                        break;
+                                    }
+                                }
+                                if n < buf.len() {
+                                    break;
+                                }
+                            }
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                            Err(_) => {
+                                slot.dead = true;
+                                break;
+                            }
+                        }
+                    }
+                    if read_bytes > 0 {
+                        report.bytes_read += read_bytes;
+                        net_obs.bytes_read.add(read_bytes);
+                        obs::trace::span(0, slot.id & 0xFFFF, 0, Kind::NetRead, t0, Instant::now());
+                    }
+                }
+
+                // drain this connection's reply channel
+                while let Ok(resp) = slot.reply_rx.try_recv() {
+                    progressed = true;
+                    if let Some(wire) = slot.conn.take_inflight(resp.id) {
+                        slot.conn.queue(&protocol::reply_msg(wire, &resp));
+                        report.frames_out += 1;
+                        net_obs.frames_out.inc();
+                    }
+                }
+
+                // flush
+                if !slot.dead && slot.conn.write_backlog() > 0 {
+                    let t0 = Instant::now();
+                    let mut wrote = 0u64;
+                    while !slot.conn.pending_write().is_empty() {
+                        match slot.stream.write(slot.conn.pending_write()) {
+                            Ok(0) => {
+                                slot.dead = true;
+                                break;
+                            }
+                            Ok(n) => {
+                                progressed = true;
+                                wrote += n as u64;
+                                slot.conn.consume_written(n);
+                            }
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                            Err(_) => {
+                                slot.dead = true;
+                                break;
+                            }
+                        }
+                    }
+                    if wrote > 0 {
+                        report.bytes_written += wrote;
+                        net_obs.bytes_written.add(wrote);
+                        obs::trace::span(0, slot.id & 0xFFFF, 0, Kind::NetWrite, t0, Instant::now());
+                    }
+                }
+
+                if draining && slot.drained() {
+                    slot.conn.close();
+                }
+            }
+
+            // -- reap finished connections -----------------------------
+            conns.retain(|s| {
+                if s.finished() {
+                    report.closed += 1;
+                    net_obs.closed.inc();
+                    net_obs.connections.add(-1);
+                    false
+                } else {
+                    true
+                }
+            });
+
+            if let Some(deadline) = drain_deadline {
+                if conns.is_empty() || Instant::now() >= deadline {
+                    break;
+                }
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_micros(300));
+            }
+        }
+
+        report.closed += conns.len() as u64;
+        for _ in &conns {
+            net_obs.closed.inc();
+            net_obs.connections.add(-1);
+        }
+        Ok(report)
+    }
+}
+
+/// Dispatch one decoded client message. `Err` = protocol violation (the
+/// client sent a server-only message): the caller answers `ConnErr` and
+/// closes the connection.
+fn handle_msg(
+    server: &Server,
+    slot: &mut ConnSlot,
+    msg: Msg,
+    report: &mut NetReport,
+    net_obs: &NetObs,
+) -> Result<()> {
+    match msg {
+        Msg::Req { id, task, tokens, deadline_us } => {
+            let deadline = if deadline_us == 0 {
+                None
+            } else {
+                Some(Instant::now() + Duration::from_micros(deadline_us))
+            };
+            let task = usize::try_from(task).unwrap_or(usize::MAX);
+            let trace = server.submit_routed(task, tokens, deadline, &slot.reply_tx);
+            slot.conn.note_inflight(trace, id);
+            report.requests += 1;
+            net_obs.requests.inc();
+            Ok(())
+        }
+        Msg::Ping { nonce } => {
+            slot.conn.queue(&Msg::Pong { nonce });
+            report.frames_out += 1;
+            net_obs.frames_out.inc();
+            Ok(())
+        }
+        other => anyhow::bail!("client sent a server-only message: {other:?}"),
+    }
+}
+
+/// Answer a protocol violation: queue a final `ConnErr` (flushed before
+/// the socket drops) and close the connection to further input.
+fn protocol_error(slot: &mut ConnSlot, err: &anyhow::Error, report: &mut NetReport, o: &NetObs) {
+    report.protocol_errors += 1;
+    o.protocol_errors.inc();
+    slot.conn.queue(&Msg::ConnErr { msg: protocol::clip(format!("{err:#}")) });
+    slot.conn.close();
+}

@@ -1,0 +1,27 @@
+//! Network front-end: the MCNP1 framed wire protocol and the socket
+//! serving loop that exposes the coordinator to remote clients.
+//!
+//! Layered bottom-up, each layer pure with respect to the one below so
+//! the protocol battery in `rust/tests/prop_net_protocol.rs` can hammer
+//! the byte-level behaviour without opening a socket:
+//!
+//! * [`protocol`] — frame/message codec: varint length prefix, CRC-32
+//!   trailer, typed request/reply/error messages mirroring
+//!   [`ServeError`](crate::coordinator::ServeError). Byte-level spec in
+//!   `docs/PROTOCOL.md` (cross-checked by `mcnc-lint wire-format`).
+//! * [`conn`] — per-connection state machine: preamble handshake,
+//!   incremental deframing, reply write buffer, trace-id ↔ wire-id map.
+//! * [`listener`] — dependency-free nonblocking accept/readiness loop
+//!   multiplexing every connection onto the shard dispatcher via
+//!   [`Server::submit_routed`](crate::coordinator::Server::submit_routed),
+//!   with write backpressure mapped onto the bounded admission queues.
+
+#![warn(missing_docs)]
+
+pub mod conn;
+pub mod listener;
+pub mod protocol;
+
+pub use conn::Conn;
+pub use listener::{NetCfg, NetListener, NetReport};
+pub use protocol::{Deframer, Msg};

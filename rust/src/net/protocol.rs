@@ -1,0 +1,546 @@
+//! MCNP1 wire codec: pure, panic-free encode/decode of the socket
+//! front-end's framed request/reply protocol. `docs/PROTOCOL.md` is the
+//! byte-level specification of everything here; its worked example is
+//! pinned by `rust/tests/prop_net_protocol.rs::
+//! protocol_spec_worked_example_decodes`.
+//!
+//! A connection opens with the 6-byte preamble [`NET_MAGIC`] (the `1` is
+//! the protocol version, [`NET_VERSION`]), then carries frames in both
+//! directions:
+//!
+//! ```text
+//! frame:  varint body_len | body_len bytes | u32 crc32(body) LE
+//! body:   msg type (u8) | type-specific fields
+//! ```
+//!
+//! Varints and CRC-32 are exactly the MCNC2 container's
+//! (`docs/FORMAT.md` §1.1/§1.2) — one repo, one framing idiom. Every
+//! length a decoder allocates from is bounded ([`NET_MAX_FRAME`],
+//! [`MAX_TOKENS`], [`MAX_ERR_LEN`]) and the CRC is verified before any
+//! body parsing, so arbitrary bytes off a socket surface as an error,
+//! never a panic or a giant allocation. This module is wall-clock-free
+//! and deterministic (mcnc-lint `determinism` covers it): identical
+//! messages encode to identical bytes on every host.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::codec::container::{crc32, put_varint, MAX_VARINT_BYTES};
+use crate::coordinator::{Response, ServeError};
+
+/// Connection preamble a client sends once after connecting; the trailing
+/// digit is the protocol version ([`NET_VERSION`]).
+pub const NET_MAGIC: &[u8; 6] = b"MCNP1\n";
+/// Protocol version carried by the preamble (`MCNP`**`1`**).
+pub const NET_VERSION: u64 = 1;
+/// Frame body length bound: a corrupt length field must not stall the
+/// deframer or drive a giant allocation.
+pub const NET_MAX_FRAME: usize = 1 << 20;
+/// Token-count bound of a request payload.
+pub const MAX_TOKENS: usize = 1 << 16;
+/// Byte-length bound of an error/conn-error message string.
+pub const MAX_ERR_LEN: usize = 4096;
+
+/// Message type: request (client → server).
+pub const MSG_REQ: u8 = 1;
+/// Message type: successful prediction reply (server → client).
+pub const MSG_REPLY_OK: u8 = 2;
+/// Message type: per-request typed error reply (server → client).
+pub const MSG_REPLY_ERR: u8 = 3;
+/// Message type: liveness probe (client → server).
+pub const MSG_PING: u8 = 4;
+/// Message type: probe echo (server → client).
+pub const MSG_PONG: u8 = 5;
+/// Message type: fatal connection-level error; the sender closes after it.
+pub const MSG_CONN_ERR: u8 = 6;
+
+/// Reply error code mirroring [`ServeError::Rejected`] (admission
+/// backpressure or an open circuit breaker — retry later).
+pub const ERR_REJECTED: u8 = 1;
+/// Reply error code mirroring [`ServeError::Failed`] (validation or
+/// execution failure — retrying the same request will not help).
+pub const ERR_FAILED: u8 = 2;
+/// Reply error code mirroring [`ServeError::DeadlineExceeded`].
+pub const ERR_DEADLINE: u8 = 3;
+
+/// One decoded protocol message. `id` is always the **client-chosen wire
+/// id** (echoed verbatim in replies); `trace` is the server-minted request
+/// id, which doubles as the trace id in `mcnc serve --trace-out` output —
+/// a remote client can correlate its replies with server-side spans.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Msg {
+    /// Client request: run `tokens` against `task`'s adapter.
+    Req {
+        /// Client-chosen wire id, echoed in the reply.
+        id: u64,
+        /// Target task (adapter) id.
+        task: u64,
+        /// Token payload (i32 little-endian on the wire).
+        tokens: Vec<i32>,
+        /// Relative deadline in µs from server receipt; 0 = none.
+        deadline_us: u64,
+    },
+    /// Successful prediction.
+    ReplyOk {
+        /// Echoed wire id.
+        id: u64,
+        /// Server-minted trace id.
+        trace: u64,
+        /// Predicted next token.
+        token: i32,
+        /// Rows in the batch that served this request.
+        batch_rows: u64,
+        /// Server-side submit → response latency in µs.
+        latency_us: u64,
+    },
+    /// Typed per-request error ([`ERR_REJECTED`] / [`ERR_FAILED`] /
+    /// [`ERR_DEADLINE`]); the connection stays open.
+    ReplyErr {
+        /// Echoed wire id.
+        id: u64,
+        /// Server-minted trace id.
+        trace: u64,
+        /// One of the `ERR_*` codes.
+        code: u8,
+        /// Human-readable detail (≤ [`MAX_ERR_LEN`] bytes, may be empty).
+        msg: String,
+    },
+    /// Liveness probe.
+    Ping {
+        /// Opaque nonce echoed by the pong.
+        nonce: u64,
+    },
+    /// Probe echo.
+    Pong {
+        /// The ping's nonce.
+        nonce: u64,
+    },
+    /// Fatal connection error (bad preamble, corrupt frame, unknown
+    /// message type); the peer closes the connection after sending it.
+    ConnErr {
+        /// Human-readable reason (≤ [`MAX_ERR_LEN`] bytes).
+        msg: String,
+    },
+}
+
+/// Encode a message body (everything inside the frame, no length/CRC).
+pub fn encode_body(msg: &Msg) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        Msg::Req { id, task, tokens, deadline_us } => {
+            out.push(MSG_REQ);
+            put_varint(&mut out, *id);
+            put_varint(&mut out, *task);
+            put_varint(&mut out, tokens.len() as u64);
+            for t in tokens {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+            put_varint(&mut out, *deadline_us);
+        }
+        Msg::ReplyOk { id, trace, token, batch_rows, latency_us } => {
+            out.push(MSG_REPLY_OK);
+            put_varint(&mut out, *id);
+            put_varint(&mut out, *trace);
+            out.extend_from_slice(&token.to_le_bytes());
+            put_varint(&mut out, *batch_rows);
+            put_varint(&mut out, *latency_us);
+        }
+        Msg::ReplyErr { id, trace, code, msg } => {
+            out.push(MSG_REPLY_ERR);
+            put_varint(&mut out, *id);
+            put_varint(&mut out, *trace);
+            out.push(*code);
+            put_string(&mut out, msg);
+        }
+        Msg::Ping { nonce } => {
+            out.push(MSG_PING);
+            put_varint(&mut out, *nonce);
+        }
+        Msg::Pong { nonce } => {
+            out.push(MSG_PONG);
+            put_varint(&mut out, *nonce);
+        }
+        Msg::ConnErr { msg } => {
+            out.push(MSG_CONN_ERR);
+            put_string(&mut out, msg);
+        }
+    }
+    out
+}
+
+/// Encode one complete frame: `varint body_len | body | crc32(body) LE`.
+pub fn encode_frame(msg: &Msg) -> Vec<u8> {
+    let body = encode_body(msg);
+    let mut out = Vec::with_capacity(body.len() + MAX_VARINT_BYTES + 4);
+    put_varint(&mut out, body.len() as u64);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    out
+}
+
+/// Decode a frame body (the deframer has already verified the CRC).
+/// Rejects unknown message types, out-of-bound lengths, unknown error
+/// codes, non-UTF-8 strings and trailing bytes.
+pub fn decode_body(body: &[u8]) -> Result<Msg> {
+    let mut pos = 0usize;
+    let ty = *body.get(pos).ok_or_else(|| anyhow!("empty frame body"))?;
+    pos += 1;
+    let msg = match ty {
+        MSG_REQ => {
+            let id = get_varint(body, &mut pos)?;
+            let task = get_varint(body, &mut pos)?;
+            let n = get_varint(body, &mut pos)?;
+            if n > MAX_TOKENS as u64 {
+                bail!("request carries {n} tokens, limit {MAX_TOKENS}");
+            }
+            let mut tokens = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                tokens.push(get_i32(body, &mut pos)?);
+            }
+            let deadline_us = get_varint(body, &mut pos)?;
+            Msg::Req { id, task, tokens, deadline_us }
+        }
+        MSG_REPLY_OK => {
+            let id = get_varint(body, &mut pos)?;
+            let trace = get_varint(body, &mut pos)?;
+            let token = get_i32(body, &mut pos)?;
+            let batch_rows = get_varint(body, &mut pos)?;
+            let latency_us = get_varint(body, &mut pos)?;
+            Msg::ReplyOk { id, trace, token, batch_rows, latency_us }
+        }
+        MSG_REPLY_ERR => {
+            let id = get_varint(body, &mut pos)?;
+            let trace = get_varint(body, &mut pos)?;
+            let code = *body.get(pos).ok_or_else(|| anyhow!("error code truncated"))?;
+            pos += 1;
+            if !(ERR_REJECTED..=ERR_DEADLINE).contains(&code) {
+                bail!("unknown reply error code {code}");
+            }
+            let msg = get_string(body, &mut pos, "error message")?;
+            Msg::ReplyErr { id, trace, code, msg }
+        }
+        MSG_PING => Msg::Ping { nonce: get_varint(body, &mut pos)? },
+        MSG_PONG => Msg::Pong { nonce: get_varint(body, &mut pos)? },
+        MSG_CONN_ERR => Msg::ConnErr { msg: get_string(body, &mut pos, "conn-error message")? },
+        _ => bail!("unknown message type {ty}"),
+    };
+    if pos != body.len() {
+        bail!("{} trailing bytes after message", body.len() - pos);
+    }
+    Ok(msg)
+}
+
+/// Incremental frame extractor for a byte stream arriving in arbitrary
+/// chunks. Feed reads with [`Deframer::push`]; [`Deframer::next`] yields
+/// complete messages, `Ok(None)` while a frame is still partial, and
+/// `Err` on corruption (bad length, CRC mismatch, malformed body) — a
+/// fatal condition for the connection. Buffering is bounded: a frame
+/// length beyond [`NET_MAX_FRAME`] errors before any body bytes are
+/// awaited, so a hostile peer cannot grow the buffer past one frame.
+#[derive(Debug, Default)]
+pub struct Deframer {
+    buf: Vec<u8>,
+    read: usize,
+}
+
+impl Deframer {
+    /// Empty deframer.
+    pub fn new() -> Deframer {
+        Deframer::default()
+    }
+
+    /// Append freshly received bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        // reclaim the consumed prefix before growing
+        if self.read > 0 {
+            self.buf.drain(..self.read);
+            self.read = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.read
+    }
+
+    /// Extract the next complete message, if one is fully buffered.
+    pub fn next(&mut self) -> Result<Option<Msg>> {
+        let avail = &self.buf[self.read..];
+        let mut pos = 0usize;
+        let body_len = match peek_varint(avail, &mut pos)? {
+            None => return Ok(None),
+            Some(v) => v,
+        };
+        if body_len == 0 {
+            bail!("zero-length frame body");
+        }
+        if body_len > NET_MAX_FRAME as u64 {
+            bail!("frame body of {body_len} bytes exceeds the {NET_MAX_FRAME}-byte limit");
+        }
+        let body_len = body_len as usize;
+        let need = pos + body_len + 4;
+        if avail.len() < need {
+            return Ok(None);
+        }
+        let body = &avail[pos..pos + body_len];
+        let c = &avail[pos + body_len..need];
+        let stored = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        let computed = crc32(body);
+        if stored != computed {
+            bail!("frame CRC mismatch: stored {stored:#010x}, computed {computed:#010x}");
+        }
+        let msg = decode_body(body)?;
+        self.read += need;
+        Ok(Some(msg))
+    }
+}
+
+/// Build the reply message for a coordinator [`Response`], echoing the
+/// connection's `wire_id` and exposing the server trace id alongside.
+pub fn reply_msg(wire_id: u64, resp: &Response) -> Msg {
+    match &resp.result {
+        Ok(token) => Msg::ReplyOk {
+            id: wire_id,
+            trace: resp.id,
+            token: *token,
+            batch_rows: resp.batch_rows as u64,
+            latency_us: resp.latency.as_micros() as u64,
+        },
+        Err(e) => {
+            let (code, msg) = match e {
+                ServeError::Rejected(m) => (ERR_REJECTED, m.clone()),
+                ServeError::Failed(m) => (ERR_FAILED, m.clone()),
+                ServeError::DeadlineExceeded => (ERR_DEADLINE, String::new()),
+            };
+            Msg::ReplyErr { id: wire_id, trace: resp.id, code, msg: clip(msg) }
+        }
+    }
+}
+
+/// Map a reply error code back to the [`ServeError`] it mirrors (the
+/// client-side inverse of [`reply_msg`]). Unknown codes were already
+/// rejected by [`decode_body`].
+pub fn wire_error(code: u8, msg: &str) -> ServeError {
+    match code {
+        ERR_REJECTED => ServeError::Rejected(msg.to_string()),
+        ERR_DEADLINE => ServeError::DeadlineExceeded,
+        _ => ServeError::Failed(msg.to_string()),
+    }
+}
+
+/// Clip a message string to [`MAX_ERR_LEN`] bytes on a char boundary.
+pub fn clip(mut msg: String) -> String {
+    if msg.len() > MAX_ERR_LEN {
+        let mut n = MAX_ERR_LEN;
+        while n > 0 && !msg.is_char_boundary(n) {
+            n -= 1;
+        }
+        msg.truncate(n);
+    }
+    msg
+}
+
+/// Varint string: `varint byte_len | UTF-8 bytes`, clipped on encode.
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    let s = clip(s.to_string());
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_string(buf: &[u8], pos: &mut usize, what: &str) -> Result<String> {
+    let n = get_varint(buf, pos)?;
+    if n > MAX_ERR_LEN as u64 {
+        bail!("{what} of {n} bytes exceeds the {MAX_ERR_LEN}-byte limit");
+    }
+    let n = n as usize;
+    let b = buf.get(*pos..*pos + n).ok_or_else(|| anyhow!("{what} truncated"))?;
+    *pos += n;
+    String::from_utf8(b.to_vec()).map_err(|_| anyhow!("{what} is not UTF-8"))
+}
+
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    crate::codec::container::get_varint(buf, pos)
+}
+
+fn get_i32(buf: &[u8], pos: &mut usize) -> Result<i32> {
+    let b = buf.get(*pos..*pos + 4).ok_or_else(|| anyhow!("i32 field truncated"))?;
+    *pos += 4;
+    Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+/// Varint peek that distinguishes "not enough bytes yet" (`Ok(None)`)
+/// from a malformed varint (`Err`), for the deframer's incremental parse.
+fn peek_varint(buf: &[u8], pos: &mut usize) -> Result<Option<u64>> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = buf.get(*pos) else {
+            return Ok(None);
+        };
+        *pos += 1;
+        if shift == 63 && (b & 0x7f) > 1 {
+            bail!("frame length varint overflows u64");
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(Some(v));
+        }
+        shift += 7;
+        if shift >= 7 * MAX_VARINT_BYTES as u32 {
+            bail!("frame length varint too long");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn variants() -> Vec<Msg> {
+        vec![
+            Msg::Req { id: 1, task: 0, tokens: vec![], deadline_us: 0 },
+            Msg::Req { id: u64::MAX, task: 999, tokens: vec![i32::MIN, -1, 0, i32::MAX], deadline_us: 50_000 },
+            Msg::ReplyOk { id: 17, trace: 300, token: -7, batch_rows: 16, latency_us: 1234 },
+            Msg::ReplyErr { id: 2, trace: 3, code: ERR_REJECTED, msg: "queue full".into() },
+            Msg::ReplyErr { id: 2, trace: 3, code: ERR_DEADLINE, msg: String::new() },
+            Msg::Ping { nonce: 42 },
+            Msg::Pong { nonce: 42 },
+            Msg::ConnErr { msg: "bad preamble".into() },
+        ]
+    }
+
+    #[test]
+    fn body_roundtrip_all_variants() {
+        for m in variants() {
+            let body = encode_body(&m);
+            let back = decode_body(&body).expect("decode");
+            assert_eq!(back, m);
+            // bit-exact re-encode
+            assert_eq!(encode_body(&back), body);
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_through_deframer() {
+        let mut d = Deframer::new();
+        let mut wire = Vec::new();
+        for m in variants() {
+            wire.extend_from_slice(&encode_frame(&m));
+        }
+        d.push(&wire);
+        let mut got = Vec::new();
+        while let Some(m) = d.next().expect("frame") {
+            got.push(m);
+        }
+        assert_eq!(got, variants());
+        assert_eq!(d.buffered(), 0);
+    }
+
+    #[test]
+    fn deframer_waits_on_partial_frames() {
+        let frame = encode_frame(&Msg::Ping { nonce: 7 });
+        let mut d = Deframer::new();
+        for (i, b) in frame.iter().enumerate() {
+            if i + 1 < frame.len() {
+                d.push(&[*b]);
+                assert!(d.next().expect("partial").is_none(), "byte {i}");
+            } else {
+                d.push(&[*b]);
+                assert_eq!(d.next().expect("full"), Some(Msg::Ping { nonce: 7 }));
+            }
+        }
+    }
+
+    #[test]
+    fn deframer_rejects_oversized_and_zero_lengths() {
+        let mut d = Deframer::new();
+        let mut wire = Vec::new();
+        put_varint(&mut wire, (NET_MAX_FRAME + 1) as u64);
+        d.push(&wire);
+        assert!(d.next().is_err(), "oversized length must fail before body bytes arrive");
+        let mut d = Deframer::new();
+        d.push(&[0x00]);
+        assert!(d.next().is_err(), "zero body length");
+        let mut d = Deframer::new();
+        d.push(&[0xff; 11]);
+        assert!(d.next().is_err(), "runaway length varint");
+    }
+
+    #[test]
+    fn crc_mismatch_is_fatal() {
+        let mut frame = encode_frame(&Msg::Ping { nonce: 9 });
+        let n = frame.len();
+        frame[n - 1] ^= 0x01;
+        let mut d = Deframer::new();
+        d.push(&frame);
+        let err = d.next().expect_err("corrupt CRC").to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_trailing_and_unknown() {
+        let mut body = encode_body(&Msg::Ping { nonce: 1 });
+        body.push(0);
+        assert!(decode_body(&body).unwrap_err().to_string().contains("trailing"));
+        assert!(decode_body(&[0x7f]).unwrap_err().to_string().contains("unknown message type"));
+        assert!(decode_body(&[]).is_err());
+        // unknown error code
+        let mut b = vec![MSG_REPLY_ERR];
+        put_varint(&mut b, 1);
+        put_varint(&mut b, 2);
+        b.push(9); // not an ERR_* code
+        put_varint(&mut b, 0);
+        assert!(decode_body(&b).unwrap_err().to_string().contains("error code"));
+    }
+
+    #[test]
+    fn token_count_is_bounded() {
+        let mut b = vec![MSG_REQ];
+        put_varint(&mut b, 1);
+        put_varint(&mut b, 0);
+        put_varint(&mut b, (MAX_TOKENS + 1) as u64);
+        let err = decode_body(&b).unwrap_err().to_string();
+        assert!(err.contains("tokens"), "{err}");
+    }
+
+    #[test]
+    fn reply_msg_mirrors_serve_errors() {
+        let mk = |result| Response {
+            id: 55,
+            task: 3,
+            result,
+            latency: Duration::from_micros(250),
+            batch_rows: 4,
+        };
+        match reply_msg(9, &mk(Ok(31))) {
+            Msg::ReplyOk { id, trace, token, batch_rows, latency_us } => {
+                assert_eq!((id, trace, token, batch_rows, latency_us), (9, 55, 31, 4, 250));
+            }
+            other => panic!("{other:?}"),
+        }
+        for (err, code) in [
+            (ServeError::Rejected("full".into()), ERR_REJECTED),
+            (ServeError::Failed("boom".into()), ERR_FAILED),
+            (ServeError::DeadlineExceeded, ERR_DEADLINE),
+        ] {
+            match reply_msg(9, &mk(Err(err.clone()))) {
+                Msg::ReplyErr { code: c, msg, .. } => {
+                    assert_eq!(c, code);
+                    assert!(matches!(wire_error(c, &msg), e if std::mem::discriminant(&e)
+                        == std::mem::discriminant(&err)));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn clip_respects_char_boundaries() {
+        let long = "é".repeat(MAX_ERR_LEN); // 2 bytes per char
+        let clipped = clip(long);
+        assert!(clipped.len() <= MAX_ERR_LEN);
+        assert!(clipped.is_char_boundary(clipped.len()));
+        assert_eq!(clip("short".into()), "short");
+    }
+}

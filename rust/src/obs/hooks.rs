@@ -162,6 +162,49 @@ impl ServerObs {
     }
 }
 
+/// Socket front-end counters (no labels; one listener per process). Bound
+/// once by `NetListener::run` and updated from the poll loop.
+#[derive(Debug, Clone)]
+pub struct NetObs {
+    /// `mcnc_net_connections` gauge — currently open connections.
+    pub connections: Arc<Gauge>,
+    /// `mcnc_net_accepted_total` — connections accepted.
+    pub accepted: Arc<Counter>,
+    /// `mcnc_net_closed_total` — connections closed (any reason).
+    pub closed: Arc<Counter>,
+    /// `mcnc_net_bytes_read_total` — raw bytes off client sockets.
+    pub bytes_read: Arc<Counter>,
+    /// `mcnc_net_bytes_written_total` — raw bytes to client sockets.
+    pub bytes_written: Arc<Counter>,
+    /// `mcnc_net_frames_in_total` — complete frames decoded.
+    pub frames_in: Arc<Counter>,
+    /// `mcnc_net_frames_out_total` — reply/pong frames queued.
+    pub frames_out: Arc<Counter>,
+    /// `mcnc_net_requests_total` — requests submitted via the socket path.
+    pub requests: Arc<Counter>,
+    /// `mcnc_net_protocol_errors_total` — connections dropped for
+    /// protocol violations (bad preamble, corrupt frame, bad message).
+    pub protocol_errors: Arc<Counter>,
+}
+
+impl NetObs {
+    /// Bind the socket front-end handles in the process-wide registry.
+    pub fn register() -> NetObs {
+        let r = registry();
+        NetObs {
+            connections: r.gauge("mcnc_net_connections", &[]),
+            accepted: r.counter("mcnc_net_accepted_total", &[]),
+            closed: r.counter("mcnc_net_closed_total", &[]),
+            bytes_read: r.counter("mcnc_net_bytes_read_total", &[]),
+            bytes_written: r.counter("mcnc_net_bytes_written_total", &[]),
+            frames_in: r.counter("mcnc_net_frames_in_total", &[]),
+            frames_out: r.counter("mcnc_net_frames_out_total", &[]),
+            requests: r.counter("mcnc_net_requests_total", &[]),
+            protocol_errors: r.counter("mcnc_net_protocol_errors_total", &[]),
+        }
+    }
+}
+
 /// Count frames decoded per codec: `mcnc_codec_frames_total{codec}`.
 /// Registry lookup per call — use on cold decode paths only.
 pub fn count_decoded_frame(codec_name: &str) {

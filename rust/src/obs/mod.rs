@@ -35,7 +35,7 @@ pub mod registry;
 pub mod trace;
 
 pub use hist::{AtomicHistogram, Histogram};
-pub use hooks::{count_decoded_frame, EngineObs, MeterRead, ServerObs, ShardObs};
+pub use hooks::{count_decoded_frame, EngineObs, MeterRead, NetObs, ServerObs, ShardObs};
 pub use registry::{registry, Counter, Gauge, IdGen, MetricId, Registry, Snapshot};
 pub use trace::{Kind, SpanRecord, TraceMode};
 

@@ -123,6 +123,12 @@ pub enum Kind {
     Rewarm = 7,
     /// Permanently dead shard began draining requests with errors.
     DrainDead = 8,
+    /// Socket listener accepted a new client connection.
+    Accept = 9,
+    /// One read burst off a client socket (bytes → decoded frames).
+    NetRead = 10,
+    /// One write burst flushing queued reply frames to a client socket.
+    NetWrite = 11,
 }
 
 impl Kind {
@@ -138,6 +144,9 @@ impl Kind {
             Kind::Restart => "restart",
             Kind::Rewarm => "rewarm",
             Kind::DrainDead => "drain_dead",
+            Kind::Accept => "accept",
+            Kind::NetRead => "net_read",
+            Kind::NetWrite => "net_write",
         }
     }
 
@@ -157,6 +166,9 @@ impl Kind {
             6 => Kind::Restart,
             7 => Kind::Rewarm,
             8 => Kind::DrainDead,
+            9 => Kind::Accept,
+            10 => Kind::NetRead,
+            11 => Kind::NetWrite,
             _ => return None,
         })
     }

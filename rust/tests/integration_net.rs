@@ -1,0 +1,509 @@
+//! Loopback integration of the MCNP1 socket front-end: real sockets, real
+//! listener poll loop, mock engines — no PJRT artifacts required. Covers
+//! the tentpole invariants end to end:
+//!
+//! * N concurrent connections × M shards: every request answered exactly
+//!   once, predictions prove shard affinity survives the wire;
+//! * per-request error replies (unknown task) leave the connection usable;
+//! * admission backpressure surfaces as typed `ERR_REJECTED` replies;
+//! * breaker fast-fails arrive as typed protocol errors, not resets;
+//! * shutdown drains: every in-flight request is answered and flushed
+//!   before the socket closes;
+//! * protocol violations (bad preamble, server-only messages) get a final
+//!   `ConnErr` and a close, without disturbing other connections;
+//! * chaos-over-socket: shard kills/panics/errors behind a live socket
+//!   leave connections intact and every request answered (ok or `Failed`).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+use mcnc::coordinator::workload::{open_loop, replay_socket};
+use mcnc::coordinator::{
+    Batch, BatchPolicy, BreakerCfg, Chaos, ChaosCfg, EngineCore, ServeStats, Server, ServerCfg,
+};
+use mcnc::data::MarkovLm;
+use mcnc::net::protocol::{
+    encode_frame, Deframer, Msg, ERR_FAILED, ERR_REJECTED, NET_MAGIC,
+};
+use mcnc::net::{NetCfg, NetListener, NetReport};
+
+// ---------------------------------------------------------------------------
+// Mock engine + harness
+// ---------------------------------------------------------------------------
+
+/// Deterministic mock mirroring `integration_server.rs`: predicts
+/// `shard * 1000 + task`, with optional failure injection and a gate the
+/// test holds shut to park a shard mid-batch.
+struct MockEngine {
+    shard: usize,
+    n_tasks: usize,
+    seq: usize,
+    fail_task: Option<usize>,
+    gate: Option<Arc<Mutex<()>>>,
+    entered: Arc<AtomicUsize>,
+    stats: ServeStats,
+}
+
+#[derive(Clone)]
+struct MockCfg {
+    n_tasks: usize,
+    seq: usize,
+    fail_task: Option<usize>,
+    gate: Option<Arc<Mutex<()>>>,
+    entered: Arc<AtomicUsize>,
+}
+
+impl MockCfg {
+    fn new(n_tasks: usize, seq: usize) -> MockCfg {
+        MockCfg {
+            n_tasks,
+            seq,
+            fail_task: None,
+            gate: None,
+            entered: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    fn server(&self, cfg: &ServerCfg) -> Server {
+        let mock = self.clone();
+        Server::start_with(cfg, move |shard| -> Result<MockEngine> {
+            Ok(MockEngine {
+                shard,
+                n_tasks: mock.n_tasks,
+                seq: mock.seq,
+                fail_task: mock.fail_task,
+                gate: mock.gate.clone(),
+                entered: Arc::clone(&mock.entered),
+                stats: ServeStats::default(),
+            })
+        })
+        .expect("start mock server")
+    }
+}
+
+impl EngineCore for MockEngine {
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        task < self.n_tasks
+    }
+
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        if let Some(gate) = &self.gate {
+            drop(gate.lock().unwrap());
+        }
+        if self.fail_task == Some(batch.task) {
+            anyhow::bail!("injected failure for task {}", batch.task);
+        }
+        self.stats.batches += 1;
+        Ok(batch.requests.iter().map(|r| (self.shard * 1000 + r.task) as i32).collect())
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+}
+
+fn mock_server_cfg(n_shards: usize, max_batch: usize) -> ServerCfg {
+    ServerCfg {
+        n_shards,
+        policy: BatchPolicy { max_batch, max_delay: Duration::from_millis(1) },
+        heartbeat: Duration::from_millis(10),
+        ..ServerCfg::default()
+    }
+}
+
+/// Bind an ephemeral loopback listener, run its poll loop in a scoped
+/// thread while `f` drives clients at the bound address, then stop, drain
+/// and hand back both `f`'s result and the listener's `NetReport`.
+fn with_listener<R>(server: &Server, f: impl FnOnce(SocketAddr) -> R) -> (R, NetReport) {
+    let listener = NetListener::bind(NetCfg::default()).expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let pump = scope.spawn(|| listener.run(server, &stop));
+        let r = f(addr);
+        stop.store(true, Ordering::Relaxed);
+        let report = pump.join().expect("listener thread").expect("listener run");
+        (r, report)
+    })
+}
+
+/// Minimal blocking MCNP1 client for direct frame-level assertions.
+struct Client {
+    stream: TcpStream,
+    de: Deframer,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let mut c = Client::connect_raw(addr);
+        c.stream.write_all(NET_MAGIC).expect("preamble");
+        c
+    }
+
+    /// Connect without sending the preamble (for handshake tests).
+    fn connect_raw(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout");
+        Client { stream, de: Deframer::new(), buf: vec![0u8; 16 * 1024] }
+    }
+
+    fn send(&mut self, m: &Msg) {
+        self.stream.write_all(&encode_frame(m)).expect("send frame");
+    }
+
+    fn send_bytes(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).expect("send bytes");
+    }
+
+    /// Next message; panics on timeout or EOF.
+    fn recv(&mut self) -> Msg {
+        self.try_recv().expect("connection closed while awaiting a reply")
+    }
+
+    /// Next message, or `None` on clean EOF.
+    fn try_recv(&mut self) -> Option<Msg> {
+        loop {
+            if let Some(m) = self.de.next().expect("deframe reply") {
+                return Some(m);
+            }
+            let n = self.stream.read(&mut self.buf).expect("read reply");
+            if n == 0 {
+                return None;
+            }
+            self.de.push(&self.buf[..n]);
+        }
+    }
+}
+
+fn req(id: u64, task: u64, seq: usize) -> Msg {
+    Msg::Req { id, task, tokens: vec![0; seq], deadline_us: 0 }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn loopback_exactly_once_across_connections_and_shards() {
+    let n_conns = 8;
+    let n_reqs = 25u64;
+    let n_shards = 3;
+    let mock = MockCfg::new(6, 8);
+    let server = mock.server(&mock_server_cfg(n_shards, 4));
+    let ((), report) = with_listener(&server, |addr| {
+        std::thread::scope(|scope| {
+            for conn in 0..n_conns {
+                scope.spawn(move || {
+                    let mut c = Client::connect(addr);
+                    for i in 0..n_reqs {
+                        // wire ids are per-connection; reuse across conns
+                        // is legal and must not cross-talk
+                        c.send(&req(i, (conn as u64 + i) % 6, 8));
+                    }
+                    let mut seen = std::collections::HashMap::new();
+                    for _ in 0..n_reqs {
+                        match c.recv() {
+                            Msg::ReplyOk { id, trace, token, .. } => {
+                                assert!(seen.insert(id, trace).is_none(), "wire id {id} twice");
+                                let task = (conn as u64 + id) % 6;
+                                let shard = task as usize % n_shards;
+                                assert_eq!(token, (shard * 1000) as i32 + task as i32);
+                            }
+                            other => panic!("conn {conn}: unexpected {other:?}"),
+                        }
+                    }
+                    assert_eq!(seen.len(), n_reqs as usize);
+                    // trace ids are server-global: all distinct within a conn
+                    let traces: std::collections::HashSet<u64> =
+                        seen.values().copied().collect();
+                    assert_eq!(traces.len(), n_reqs as usize, "trace ids collided");
+                });
+            }
+        });
+    });
+    assert_eq!(report.accepted, n_conns as u64);
+    assert_eq!(report.requests, n_conns as u64 * n_reqs);
+    assert_eq!(report.frames_in, n_conns as u64 * n_reqs);
+    assert_eq!(report.frames_out, n_conns as u64 * n_reqs);
+    assert_eq!(report.protocol_errors, 0);
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.latency.count(), n_conns as u64 * n_reqs);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn unknown_task_gets_error_reply_and_connection_survives() {
+    let mock = MockCfg::new(4, 8);
+    let server = mock.server(&mock_server_cfg(2, 4));
+    let ((), report) = with_listener(&server, |addr| {
+        let mut c = Client::connect(addr);
+        c.send(&req(1, 99, 8)); // unknown task
+        c.send(&req(2, 250, 8)); // wrong token count for a known task
+        match c.recv() {
+            Msg::ReplyErr { id: 1, code, msg, .. } => {
+                assert_eq!(code, ERR_FAILED);
+                assert!(!msg.is_empty(), "error reply should say why");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(c.recv(), Msg::ReplyErr { id: 2, code: ERR_FAILED, .. }));
+        // same connection still serves
+        c.send(&req(3, 1, 8));
+        match c.recv() {
+            Msg::ReplyOk { id: 3, token, .. } => assert_eq!(token, 1001),
+            other => panic!("unexpected {other:?}"),
+        }
+    });
+    assert_eq!(report.protocol_errors, 0, "error replies are not protocol errors");
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.errors, 2);
+}
+
+#[test]
+fn backpressure_surfaces_as_typed_rejected_replies() {
+    let gate = Arc::new(Mutex::new(()));
+    let mut mock = MockCfg::new(4, 8);
+    mock.gate = Some(Arc::clone(&gate));
+    let cfg = ServerCfg {
+        n_shards: 1,
+        queue_cap: 2,
+        policy: BatchPolicy { max_batch: 1, max_delay: Duration::ZERO },
+        heartbeat: Duration::from_millis(10),
+        ..ServerCfg::default()
+    };
+    let server = mock.server(&cfg);
+    let ((), _report) = with_listener(&server, |addr| {
+        let mut c = Client::connect(addr);
+        let guard = gate.lock().unwrap();
+        c.send(&req(0, 0, 8));
+        let t0 = std::time::Instant::now();
+        while mock.entered.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "shard never started");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // shard parked mid-batch: the bounded admission queue (cap 2) must
+        // overflow and every overflow arrive as a typed ERR_REJECTED reply
+        for i in 1..=40u64 {
+            c.send(&req(i, 0, 8));
+        }
+        drop(guard);
+        let mut ok = 0;
+        let mut rejected = 0;
+        for _ in 0..41 {
+            match c.recv() {
+                Msg::ReplyOk { .. } => ok += 1,
+                Msg::ReplyErr { code, msg, .. } => {
+                    assert_eq!(code, ERR_REJECTED, "{msg}");
+                    assert!(msg.contains("queue full"), "{msg}");
+                    rejected += 1;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(ok, 3, "parked request + queue_cap complete");
+        assert_eq!(rejected, 38);
+    });
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.rejected, 38);
+}
+
+#[test]
+fn breaker_fastfail_is_a_typed_protocol_error_not_a_reset() {
+    let mut mock = MockCfg::new(2, 8);
+    mock.fail_task = Some(0);
+    let cfg = ServerCfg {
+        n_shards: 1,
+        policy: BatchPolicy { max_batch: 1, max_delay: Duration::ZERO },
+        heartbeat: Duration::from_millis(10),
+        breaker: BreakerCfg { threshold: 2, ..BreakerCfg::default() },
+        ..ServerCfg::default()
+    };
+    let server = mock.server(&cfg);
+    let ((), report) = with_listener(&server, |addr| {
+        let mut c = Client::connect(addr);
+        // two consecutive batch failures trip the breaker …
+        for i in 0..2u64 {
+            c.send(&req(i, 0, 8));
+            match c.recv() {
+                Msg::ReplyErr { code, msg, .. } => {
+                    assert_eq!(code, ERR_FAILED);
+                    assert!(msg.contains("injected failure"), "{msg}");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // … and the fast-fail arrives as a typed reply on a live socket
+        c.send(&req(2, 0, 8));
+        match c.recv() {
+            Msg::ReplyErr { code, msg, .. } => {
+                assert_eq!(code, ERR_REJECTED);
+                assert!(msg.contains("circuit open"), "{msg}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    });
+    assert_eq!(report.protocol_errors, 0);
+    let stats = server.stop().unwrap();
+    assert!(stats.breaker_opens >= 1);
+    assert!(stats.breaker_fastfail >= 1);
+}
+
+#[test]
+fn shutdown_drains_inflight_requests_before_closing() {
+    let gate = Arc::new(Mutex::new(()));
+    let mut mock = MockCfg::new(4, 8);
+    mock.gate = Some(Arc::clone(&gate));
+    let server = mock.server(&mock_server_cfg(1, 1));
+    let listener = NetListener::bind(NetCfg::default()).expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let pump = scope.spawn(|| listener.run(&server, &stop));
+        let mut c = Client::connect(addr);
+        let guard = gate.lock().unwrap();
+        for i in 0..3u64 {
+            c.send(&req(i, 0, 8));
+        }
+        let t0 = std::time::Instant::now();
+        while mock.entered.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "shard never started");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // give the poll loop time to read + submit all three requests,
+        // then order a shutdown while they are in flight
+        std::thread::sleep(Duration::from_millis(100));
+        stop.store(true, Ordering::Relaxed);
+        drop(guard);
+        let mut ok = std::collections::HashSet::new();
+        while let Some(m) = c.try_recv() {
+            match m {
+                Msg::ReplyOk { id, .. } => {
+                    assert!(ok.insert(id));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // clean EOF only after every in-flight request was answered
+        assert_eq!(ok.len(), 3, "drain lost replies: got {ok:?}");
+        let report = pump.join().expect("listener thread").expect("listener run");
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.frames_out, 3);
+        assert_eq!(report.closed, report.accepted);
+    });
+    server.stop().unwrap();
+}
+
+#[test]
+fn protocol_violations_get_conn_err_and_do_not_disturb_neighbors() {
+    let mock = MockCfg::new(4, 8);
+    let server = mock.server(&mock_server_cfg(2, 4));
+    let ((), report) = with_listener(&server, |addr| {
+        let mut good = Client::connect(addr);
+
+        // bad preamble → ConnErr, then EOF
+        let mut bad = Client::connect_raw(addr);
+        bad.send_bytes(b"HTTP/1\n");
+        match bad.try_recv() {
+            Some(Msg::ConnErr { msg }) => assert!(msg.contains("preamble"), "{msg}"),
+            other => panic!("expected ConnErr, got {other:?}"),
+        }
+        assert!(bad.try_recv().is_none(), "connection must close after ConnErr");
+
+        // server-only message from a client → ConnErr, then EOF
+        let mut rogue = Client::connect(addr);
+        rogue.send(&Msg::Pong { nonce: 1 });
+        match rogue.try_recv() {
+            Some(Msg::ConnErr { msg }) => assert!(msg.contains("server-only"), "{msg}"),
+            other => panic!("expected ConnErr, got {other:?}"),
+        }
+        assert!(rogue.try_recv().is_none());
+
+        // ping/pong and requests on the good connection are unaffected
+        good.send(&Msg::Ping { nonce: 7 });
+        assert_eq!(good.recv(), Msg::Pong { nonce: 7 });
+        good.send(&req(1, 1, 8));
+        assert!(matches!(good.recv(), Msg::ReplyOk { id: 1, .. }));
+    });
+    assert_eq!(report.protocol_errors, 2);
+    assert_eq!(report.accepted, 3);
+    server.stop().unwrap();
+}
+
+#[test]
+fn chaos_over_socket_answers_every_request_and_keeps_connections_alive() {
+    // the chaos schedule of table4c — panics, errors and a shard kill —
+    // driven through a live socket: connections must survive the faults,
+    // stranded requests must come back as typed Failed replies, and no
+    // request may go unanswered
+    let n_tasks = 6;
+    let chaos = Chaos::new(ChaosCfg {
+        seed: 0xBEEF,
+        window: 16,
+        panics: 2,
+        errors: 2,
+        kills: 1,
+        ..ChaosCfg::default()
+    });
+    let cfg = ServerCfg {
+        n_tasks,
+        n_shards: 2,
+        policy: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
+        heartbeat: Duration::from_millis(10),
+        seed: 1,
+        ..ServerCfg::default()
+    };
+    let c = chaos.clone();
+    let server = Server::start_with(&cfg, move |_shard| {
+        c.factory_gate()?;
+        Ok(c.wrap(MockEngine {
+            shard: 0,
+            n_tasks,
+            seq: 32,
+            fail_task: None,
+            gate: None,
+            entered: Arc::new(AtomicUsize::new(0)),
+            stats: ServeStats::default(),
+        }))
+    })
+    .expect("start chaos mock server");
+    let lm = MarkovLm::base(1, 128, 32);
+    let schedule = open_loop(7, 300.0, Duration::from_secs_f64(0.5), n_tasks, 1.0);
+    let (rep, report) = with_listener(&server, |addr| {
+        replay_socket(
+            &addr.to_string(),
+            &lm,
+            9,
+            &schedule,
+            4,
+            None,
+            Duration::from_secs(30),
+        )
+        .expect("socket replay")
+    });
+    assert_eq!(rep.sent, schedule.len());
+    assert_eq!(rep.conn_errors, 0, "chaos must not surface as connection errors");
+    assert_eq!(rep.missing, 0, "every request must be answered: {rep:?}");
+    assert_eq!(rep.answered(), rep.sent);
+    assert!(rep.ok > 0, "no request survived the fault schedule: {rep:?}");
+    assert_eq!(report.protocol_errors, 0);
+    let stats = server.stop().unwrap();
+    assert!(
+        stats.batch_panics + stats.restarts + stats.errors > 0,
+        "chaos schedule injected nothing — the test is vacuous"
+    );
+}

@@ -1,0 +1,310 @@
+//! Randomized properties of the MCNP1 socket protocol (`net::protocol`,
+//! `net::conn`), mirroring `prop_codec.rs`: every message variant
+//! round-trips bit-exactly through frame encode → deframe; streams split
+//! at every byte boundary reassemble identically; and hostile input —
+//! truncations, single-bit flips, oversized length fields, arbitrary byte
+//! soup — always surfaces as `Err` or "wait for more bytes", never a
+//! panic, never a silent mis-decode, never unbounded buffering. The
+//! worked hex example from `docs/PROTOCOL.md` §4 is pinned here byte for
+//! byte (`protocol_spec_worked_example_decodes`).
+
+use mcnc::net::conn::Conn;
+use mcnc::net::protocol::{
+    self, encode_body, encode_frame, Deframer, Msg, ERR_DEADLINE, ERR_FAILED, ERR_REJECTED,
+    MAX_ERR_LEN, NET_MAGIC, NET_MAX_FRAME,
+};
+use mcnc::prop_assert;
+use mcnc::util::prop::{run_prop, Gen};
+
+fn arb_u64(g: &mut Gen) -> u64 {
+    *g.pick(&[
+        0u64,
+        1,
+        127,
+        128,
+        300,
+        16_383,
+        16_384,
+        u32::MAX as u64,
+        u64::MAX,
+        g.usize(0, 1_000_000) as u64,
+    ])
+}
+
+fn arb_i32(g: &mut Gen) -> i32 {
+    *g.pick(&[0i32, 1, -1, 7, -128, i32::MAX, i32::MIN, g.usize(0, 65_535) as i32])
+}
+
+fn arb_string(g: &mut Gen) -> String {
+    let base = g.pick(&["", "queue full", "shard 3 unavailable", "é✓ ünicode"]).to_string();
+    let pad = g.usize(0, 64);
+    format!("{base}{}", "x".repeat(pad))
+}
+
+fn arb_msg(g: &mut Gen) -> Msg {
+    match g.usize(0, 5) {
+        0 => Msg::Req {
+            id: arb_u64(g),
+            task: arb_u64(g),
+            tokens: {
+                let n = g.usize(0, 48);
+                (0..n).map(|_| arb_i32(g)).collect()
+            },
+            deadline_us: arb_u64(g),
+        },
+        1 => Msg::ReplyOk {
+            id: arb_u64(g),
+            trace: arb_u64(g),
+            token: arb_i32(g),
+            batch_rows: arb_u64(g),
+            latency_us: arb_u64(g),
+        },
+        2 => Msg::ReplyErr {
+            id: arb_u64(g),
+            trace: arb_u64(g),
+            code: *g.pick(&[ERR_REJECTED, ERR_FAILED, ERR_DEADLINE]),
+            msg: arb_string(g),
+        },
+        3 => Msg::Ping { nonce: arb_u64(g) },
+        4 => Msg::Pong { nonce: arb_u64(g) },
+        _ => Msg::ConnErr { msg: arb_string(g) },
+    }
+}
+
+/// Drain a deframer, collecting messages until `Ok(None)` or `Err`.
+fn drain(d: &mut Deframer) -> Result<Vec<Msg>, anyhow::Error> {
+    let mut out = Vec::new();
+    while let Some(m) = d.next()? {
+        out.push(m);
+    }
+    Ok(out)
+}
+
+#[test]
+fn all_variants_roundtrip_bit_exactly() {
+    run_prop("net_roundtrip", 200, |g| {
+        let msgs: Vec<Msg> = (0..g.usize(1, 8)).map(|_| arb_msg(g)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&encode_frame(m));
+        }
+        let mut d = Deframer::new();
+        d.push(&wire);
+        let back = drain(&mut d).map_err(|e| format!("pristine stream failed: {e:#}"))?;
+        prop_assert!(back == msgs, "roundtrip mismatch: {} in, {} out", msgs.len(), back.len());
+        prop_assert!(d.buffered() == 0, "{} bytes left after a whole stream", d.buffered());
+        // bit-exact deterministic re-encode
+        let mut wire2 = Vec::new();
+        for m in &back {
+            wire2.extend_from_slice(&encode_frame(m));
+        }
+        prop_assert!(wire2 == wire, "re-encode drifted");
+        Ok(())
+    });
+}
+
+#[test]
+fn split_at_every_byte_boundary_reassembles() {
+    // exhaustive split points on a fixed stream, not sampled ones: every
+    // prefix/suffix pair must decode to the same messages
+    let msgs = vec![
+        Msg::Req { id: 17, task: 3, tokens: vec![5, -2], deadline_us: 0 },
+        Msg::Ping { nonce: u64::MAX },
+        Msg::ReplyErr { id: 1, trace: 2, code: ERR_REJECTED, msg: "full".into() },
+    ];
+    let mut wire = Vec::new();
+    for m in &msgs {
+        wire.extend_from_slice(&encode_frame(m));
+    }
+    for cut in 0..=wire.len() {
+        let mut d = Deframer::new();
+        let mut got = Vec::new();
+        d.push(&wire[..cut]);
+        got.extend(drain(&mut d).unwrap_or_else(|e| panic!("prefix of {cut} bytes: {e:#}")));
+        d.push(&wire[cut..]);
+        got.extend(drain(&mut d).unwrap_or_else(|e| panic!("suffix after {cut} bytes: {e:#}")));
+        assert_eq!(got, msgs, "split at byte {cut}");
+        assert_eq!(d.buffered(), 0, "split at byte {cut} left residue");
+    }
+}
+
+#[test]
+fn random_chunking_through_a_conn_reassembles() {
+    run_prop("net_chunked_conn", 120, |g| {
+        let msgs: Vec<Msg> = (0..g.usize(1, 6)).map(|_| arb_msg(g)).collect();
+        let mut wire = NET_MAGIC.to_vec();
+        for m in &msgs {
+            wire.extend_from_slice(&encode_frame(m));
+        }
+        let mut c = Conn::new();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < wire.len() {
+            let n = g.usize(1, 9).min(wire.len() - off);
+            got.extend(
+                c.on_bytes(&wire[off..off + n]).map_err(|e| format!("chunk at {off}: {e:#}"))?,
+            );
+            off += n;
+        }
+        prop_assert!(got == msgs, "conn reassembly mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn truncations_never_panic_and_never_fabricate() {
+    run_prop("net_truncation", 200, |g| {
+        let msgs: Vec<Msg> = (0..g.usize(1, 5)).map(|_| arb_msg(g)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&encode_frame(m));
+        }
+        let cut = g.usize(0, wire.len().saturating_sub(1));
+        let mut d = Deframer::new();
+        d.push(&wire[..cut]);
+        // a truncated pristine stream yields some prefix of the original
+        // messages and then waits — it must never error or invent frames
+        let got = drain(&mut d).map_err(|e| format!("truncated stream errored: {e:#}"))?;
+        prop_assert!(got.len() <= msgs.len(), "fabricated messages");
+        prop_assert!(got[..] == msgs[..got.len()], "prefix mismatch after truncation at {cut}");
+        // decode_body on truncated bodies: error, never panic
+        for m in &msgs {
+            let body = encode_body(m);
+            let keep = g.usize(0, body.len().saturating_sub(1));
+            prop_assert!(
+                protocol::decode_body(&body[..keep]).is_err(),
+                "strict body prefix of {keep} bytes decoded"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_bit_flips_never_silently_misdecode() {
+    run_prop("net_bitflip", 300, |g| {
+        let msg = arb_msg(g);
+        let mut frame = encode_frame(&msg);
+        let bit = g.usize(0, frame.len() * 8 - 1);
+        frame[bit / 8] ^= 1 << (bit % 8);
+        let mut d = Deframer::new();
+        d.push(&frame);
+        // outcomes: Err (detected), Ok(None) (waiting for phantom bytes),
+        // or a decoded message that differs from the original. What must
+        // never happen: a panic, or the original message resurrected from
+        // corrupt bytes (CRC-32 catches every single-bit error in the
+        // covered region).
+        match drain(&mut d) {
+            Err(_) => {}
+            Ok(got) => {
+                prop_assert!(
+                    !got.contains(&msg),
+                    "bit {bit} flipped yet the original message decoded"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arbitrary_byte_soup_never_panics_and_buffering_stays_bounded() {
+    run_prop("net_soup", 300, |g| {
+        let n = g.usize(0, 2048);
+        let bytes: Vec<u8> = (0..n).map(|_| g.usize(0, 255) as u8).collect();
+        let mut d = Deframer::new();
+        let mut off = 0;
+        let mut dead = false;
+        while off < bytes.len() {
+            let k = g.usize(1, 64).min(bytes.len() - off);
+            d.push(&bytes[off..off + k]);
+            off += k;
+            match drain(&mut d) {
+                Ok(_) => {}
+                Err(_) => {
+                    dead = true;
+                    break; // a real connection closes here
+                }
+            }
+        }
+        prop_assert!(
+            dead || d.buffered() <= NET_MAX_FRAME + 14,
+            "deframer buffered {} bytes of garbage",
+            d.buffered()
+        );
+        // same soup through a Conn (random bad preambles usually die at
+        // the handshake; NET_MAGIC-prefixed soup dies at the first frame)
+        let mut c = Conn::new();
+        let mut wire = if g.bool() { NET_MAGIC.to_vec() } else { Vec::new() };
+        wire.extend_from_slice(&bytes);
+        let _ = c.on_bytes(&wire); // must not panic, either way
+        Ok(())
+    });
+}
+
+#[test]
+fn oversized_length_fields_fail_before_buffering() {
+    run_prop("net_oversize", 100, |g| {
+        let claim = (NET_MAX_FRAME as u64 + 1).saturating_add(g.usize(0, 1 << 30) as u64);
+        let mut wire = Vec::new();
+        mcnc::codec::container::put_varint(&mut wire, claim);
+        let mut d = Deframer::new();
+        d.push(&wire);
+        prop_assert!(d.next().is_err(), "length {claim} accepted");
+        // error strings on the wire are bounded too
+        let huge = "a".repeat(MAX_ERR_LEN * 3);
+        let frame = encode_frame(&Msg::ConnErr { msg: huge });
+        prop_assert!(
+            frame.len() <= MAX_ERR_LEN + 16,
+            "encoder emitted an unbounded error frame ({} bytes)",
+            frame.len()
+        );
+        Ok(())
+    });
+}
+
+/// Pins the worked example of docs/PROTOCOL.md §4: these exact bytes must
+/// decode to these exact messages (and re-encode identically) on every
+/// host, forever. Changing the wire format requires bumping the preamble
+/// version and rewriting the spec, not editing this test.
+#[test]
+fn protocol_spec_worked_example_decodes() {
+    assert_eq!(&NET_MAGIC[..], b"MCNP1\n");
+    assert_eq!(NET_MAGIC.to_vec(), vec![0x4d, 0x43, 0x4e, 0x50, 0x31, 0x0a]);
+
+    let req_frame: Vec<u8> = vec![
+        0x0d, // body_len = 13
+        0x01, // MSG_REQ
+        0x11, // id = 17
+        0x03, // task = 3
+        0x02, // n_tokens = 2
+        0x05, 0x00, 0x00, 0x00, // token 5
+        0xfe, 0xff, 0xff, 0xff, // token -2
+        0x00, // deadline_us = 0 (none)
+        0xb5, 0xec, 0x62, 0x96, // crc32(body) LE
+    ];
+    let req = Msg::Req { id: 17, task: 3, tokens: vec![5, -2], deadline_us: 0 };
+    assert_eq!(encode_frame(&req), req_frame);
+
+    let ok_frame: Vec<u8> = vec![
+        0x0b, // body_len = 11
+        0x02, // MSG_REPLY_OK
+        0x11, // id = 17 (echoed)
+        0xac, 0x02, // trace = 300
+        0x07, 0x00, 0x00, 0x00, // token = 7
+        0x04, // batch_rows = 4
+        0xd2, 0x09, // latency_us = 1234
+        0x15, 0x1d, 0x4e, 0xb3, // crc32(body) LE
+    ];
+    let ok = Msg::ReplyOk { id: 17, trace: 300, token: 7, batch_rows: 4, latency_us: 1234 };
+    assert_eq!(encode_frame(&ok), ok_frame);
+
+    // and the full conversation decodes through a Conn byte-for-byte
+    let mut wire = NET_MAGIC.to_vec();
+    wire.extend_from_slice(&req_frame);
+    let mut c = Conn::new();
+    assert_eq!(c.on_bytes(&wire).expect("spec bytes"), vec![req]);
+    let mut d = Deframer::new();
+    d.push(&ok_frame);
+    assert_eq!(d.next().expect("spec reply"), Some(ok));
+}

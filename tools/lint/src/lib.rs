@@ -11,7 +11,9 @@
 //! * `determinism` — no wall-clock/ambient randomness in `codec/`, chaos;
 //! * `metrics-naming` — coordinator counters go through the obs registry,
 //!   metric names are snake_case;
-//! * `wire-format` — `docs/FORMAT.md` constants match `codec/` constants.
+//! * `wire-format` — `docs/FORMAT.md` constants match `codec/` constants,
+//!   and `docs/PROTOCOL.md` constants match `net/` constants (the spec
+//!   path picks the binding: `*PROTOCOL.md` ↔ `net/`, else ↔ `codec/`).
 //!
 //! Findings carry `file:line` and a rule ID, and can be silenced inline
 //! with `// lint:allow(<rule>): <why>` on the offending line or the
@@ -71,9 +73,10 @@ pub struct Report {
     pub files_scanned: usize,
 }
 
-/// Run every rule over `files`, plus the wire-format cross-check when a
-/// spec is supplied as `(path, text)`. Pure: no filesystem access.
-pub fn lint_sources(files: &[SourceFile], spec: Option<(&str, &str)>) -> Report {
+/// Run every rule over `files`, plus one wire-format cross-check per
+/// spec supplied as `(path, text)` — a path ending in `PROTOCOL.md`
+/// checks `net/`, any other checks `codec/`. Pure: no filesystem access.
+pub fn lint_sources(files: &[SourceFile], specs: &[(&str, &str)]) -> Report {
     let mut found = Vec::new();
     for f in files {
         rules::unsafe_discipline::check(f, &mut found);
@@ -82,8 +85,12 @@ pub fn lint_sources(files: &[SourceFile], spec: Option<(&str, &str)>) -> Report 
         rules::determinism::check(f, &mut found);
         rules::metrics_naming::check(f, &mut found);
     }
-    if let Some((spec_rel, spec_text)) = spec {
-        rules::wire_format::check(spec_rel, spec_text, files, &mut found);
+    for (spec_rel, spec_text) in specs {
+        if spec_rel.ends_with("PROTOCOL.md") {
+            rules::wire_format::check_protocol(spec_rel, spec_text, files, &mut found);
+        } else {
+            rules::wire_format::check(spec_rel, spec_text, files, &mut found);
+        }
     }
     found.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
 
@@ -134,8 +141,8 @@ fn allow_matches(comment: &str, rule: &str) -> bool {
 }
 
 /// Recursively collect, lex, and lint every `.rs` file under `root`,
-/// reading the wire-format spec from `spec` when given.
-pub fn lint_tree(root: &Path, spec: Option<&Path>) -> io::Result<Report> {
+/// reading each wire-format spec from `specs`.
+pub fn lint_tree(root: &Path, specs: &[PathBuf]) -> io::Result<Report> {
     let mut paths = Vec::new();
     walk(root, &mut paths)?;
     let mut files = Vec::with_capacity(paths.len());
@@ -144,12 +151,13 @@ pub fn lint_tree(root: &Path, spec: Option<&Path>) -> io::Result<Report> {
         let raw = std::fs::read_to_string(p)?;
         files.push(source_file(&rel, &raw));
     }
-    let spec_data = match spec {
-        Some(sp) => Some((sp.display().to_string(), std::fs::read_to_string(sp)?)),
-        None => None,
-    };
-    let spec_ref = spec_data.as_ref().map(|(p, t)| (p.as_str(), t.as_str()));
-    Ok(lint_sources(&files, spec_ref))
+    let mut spec_data = Vec::with_capacity(specs.len());
+    for sp in specs {
+        spec_data.push((sp.display().to_string(), std::fs::read_to_string(sp)?));
+    }
+    let spec_refs: Vec<(&str, &str)> =
+        spec_data.iter().map(|(p, t)| (p.as_str(), t.as_str())).collect();
+    Ok(lint_sources(&files, &spec_refs))
 }
 
 fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {

@@ -1,15 +1,17 @@
 //! CLI entry point.
 //!
 //! ```text
-//! mcnc-lint [--report PATH] [--spec PATH] ROOT
+//! mcnc-lint [--report PATH] [--spec PATH]... ROOT
 //! ```
 //!
 //! Lints every `.rs` file under `ROOT`, prints `file:line: [rule] msg`
 //! per finding, writes a JSON report (default `LINT_report.json`), and
 //! exits 0 when clean, 1 on unsuppressed findings, 2 on usage or IO
-//! errors. Without `--spec`, `docs/FORMAT.md` is located by walking up
-//! from `ROOT`, so `cargo run -p mcnc-lint -- rust/src` from the repo
-//! root does the right thing.
+//! errors. `--spec` is repeatable (a path ending in `PROTOCOL.md` is
+//! cross-checked against `net/`, any other against `codec/`). Without
+//! it, `docs/FORMAT.md` and `docs/PROTOCOL.md` are located by walking
+//! up from `ROOT`, so `cargo run -p mcnc-lint -- rust/src` from the
+//! repo root does the right thing.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -19,7 +21,7 @@ use mcnc_lint::{lint_tree, report};
 fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
     let mut report_path = PathBuf::from("LINT_report.json");
-    let mut spec: Option<PathBuf> = None;
+    let mut specs: Vec<PathBuf> = Vec::new();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -28,11 +30,11 @@ fn main() -> ExitCode {
                 None => return usage("--report needs a path"),
             },
             "--spec" => match args.next() {
-                Some(p) => spec = Some(PathBuf::from(p)),
+                Some(p) => specs.push(PathBuf::from(p)),
                 None => return usage("--spec needs a path"),
             },
             "--help" | "-h" => {
-                println!("usage: mcnc-lint [--report PATH] [--spec PATH] ROOT");
+                println!("usage: mcnc-lint [--report PATH] [--spec PATH]... ROOT");
                 return ExitCode::SUCCESS;
             }
             _ if root.is_none() => root = Some(PathBuf::from(a)),
@@ -42,11 +44,17 @@ fn main() -> ExitCode {
     let Some(root) = root else {
         return usage("missing ROOT directory");
     };
-    let spec = spec.or_else(|| find_spec(&root));
-    if spec.is_none() {
-        eprintln!("mcnc-lint: warning: no docs/FORMAT.md found; wire-format rule skipped");
+    if specs.is_empty() {
+        for name in ["docs/FORMAT.md", "docs/PROTOCOL.md"] {
+            match find_spec(&root, name) {
+                Some(p) => specs.push(p),
+                None => eprintln!(
+                    "mcnc-lint: warning: no {name} found; its wire-format check skipped"
+                ),
+            }
+        }
     }
-    let rep = match lint_tree(&root, spec.as_deref()) {
+    let rep = match lint_tree(&root, &specs) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("mcnc-lint: {}: {e}", root.display());
@@ -75,17 +83,17 @@ fn main() -> ExitCode {
 
 fn usage(msg: &str) -> ExitCode {
     eprintln!("mcnc-lint: {msg}");
-    eprintln!("usage: mcnc-lint [--report PATH] [--spec PATH] ROOT");
+    eprintln!("usage: mcnc-lint [--report PATH] [--spec PATH]... ROOT");
     ExitCode::from(2)
 }
 
-/// Walk up from `ROOT` looking for `docs/FORMAT.md`, so the spec is
-/// found no matter which subtree is being linted.
-fn find_spec(root: &Path) -> Option<PathBuf> {
+/// Walk up from `ROOT` looking for `name` (e.g. `docs/FORMAT.md`), so
+/// the spec is found no matter which subtree is being linted.
+fn find_spec(root: &Path, name: &str) -> Option<PathBuf> {
     let start = root.canonicalize().ok()?;
     let mut dir: Option<&Path> = Some(start.as_path());
     while let Some(d) = dir {
-        let cand = d.join("docs/FORMAT.md");
+        let cand = d.join(name);
         if cand.is_file() {
             return Some(cand);
         }

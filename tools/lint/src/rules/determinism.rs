@@ -1,8 +1,11 @@
-//! `determinism`: the codec and the chaos harness must be pure functions
-//! of their inputs. MCNC2 bytes are golden-tested across hosts, and the
-//! fault schedule replays from a seed — so `Instant::now`, `SystemTime`,
-//! and ambient RNG entropy (`thread_rng`, `from_entropy`, `getrandom`)
-//! are banned in `codec/` and `coordinator/chaos.rs` outside tests.
+//! `determinism`: the codec, the chaos harness, and the MCNP1 protocol
+//! codec must be pure functions of their inputs. MCNC2 bytes are
+//! golden-tested across hosts, the fault schedule replays from a seed,
+//! and protocol encode/deframe must produce host-independent wire bytes
+//! — so `Instant::now`, `SystemTime`, and ambient RNG entropy
+//! (`thread_rng`, `from_entropy`, `getrandom`) are banned in `codec/`,
+//! `coordinator/chaos.rs`, `net/protocol.rs`, and `net/conn.rs` outside
+//! tests (the listener keeps the clock: deadlines anchor there).
 //! Randomness there must flow from an explicit seed.
 
 use crate::{Finding, SourceFile};
@@ -15,7 +18,11 @@ const DET_PATTERNS: [&str; 5] =
 
 /// Flag ambient time/randomness in deterministic modules.
 pub fn check(f: &SourceFile, out: &mut Vec<Finding>) {
-    if !(f.rel.contains("codec/") || f.rel.ends_with("coordinator/chaos.rs")) {
+    if !(f.rel.contains("codec/")
+        || f.rel.ends_with("coordinator/chaos.rs")
+        || f.rel.ends_with("net/protocol.rs")
+        || f.rel.ends_with("net/conn.rs"))
+    {
         return;
     }
     for (ix, line) in f.lines.iter().enumerate() {

@@ -1,8 +1,10 @@
 //! `panic-freedom`: the serving path must degrade, not die. A panic in
 //! `coordinator/{shard,server,router}.rs` takes down a shard that the
-//! supervisor then has to resurrect — every fallible step there must
-//! propagate a `Result` so the deadline/circuit-breaker machinery can do
-//! its job. `#[cfg(test)]` regions are exempt.
+//! supervisor then has to resurrect, and a panic in `net/` takes down
+//! the socket front-end's poll loop with every connection on it — every
+//! fallible step there must propagate a `Result` so the deadline/
+//! circuit-breaker machinery (and per-connection error replies) can do
+//! their job. `#[cfg(test)]` regions are exempt.
 
 use crate::lexer::find_token;
 use crate::{Finding, SourceFile};
@@ -14,9 +16,10 @@ const PANIC_FILES: [&str; 3] =
     ["coordinator/shard.rs", "coordinator/server.rs", "coordinator/router.rs"];
 
 /// Flag `.unwrap()`/`.expect()` calls and panicking macros in non-test
-/// code of the serving-path files.
+/// code of the serving-path files (the coordinator hot path and the
+/// whole `net/` subtree).
 pub fn check(f: &SourceFile, out: &mut Vec<Finding>) {
-    if !PANIC_FILES.iter().any(|s| f.rel.ends_with(s)) {
+    if !(PANIC_FILES.iter().any(|s| f.rel.ends_with(s)) || f.rel.contains("net/")) {
         return;
     }
     for (ix, line) in f.lines.iter().enumerate() {

@@ -1,12 +1,18 @@
-//! `wire-format`: `docs/FORMAT.md` is normative for the MCNC2 container,
-//! so the numbers in the prose must equal the constants in `codec/`.
-//! This rule parses the spec (magic line, varint limit, bounds table,
-//! header table, codec-tag table, rANS parameters) into expected values,
-//! scans `codec/` sources for `const` declarations (resolving simple
-//! `A << B` and identifier references), and reports three failure modes:
-//! a spec value the parser can no longer locate, a spec value with no
-//! matching code constant, and a plain numeric mismatch. Drift is fixed
-//! in code or spec — findings on this rule should never be suppressed.
+//! `wire-format`: the byte-level specs are normative, so the numbers in
+//! the prose must equal the constants in code. Two cross-checks share
+//! one engine:
+//!
+//! * `docs/FORMAT.md` (MCNC2 container) ↔ `codec/` constants;
+//! * `docs/PROTOCOL.md` (MCNP1 socket framing) ↔ `net/` constants.
+//!
+//! Each parses its spec (magic line, varint limit, bounds tables,
+//! `` `value` (`CONST`) `` cells, codec-tag table, rANS parameters) into
+//! expected values, scans the gated source subtree for `const`
+//! declarations (resolving simple `A << B` and identifier references),
+//! and reports three failure modes: a spec value the parser can no
+//! longer locate, a spec value with no matching code constant, and a
+//! plain numeric mismatch. Drift is fixed in code or spec — findings on
+//! this rule should never be suppressed.
 
 use std::collections::HashMap;
 
@@ -36,16 +42,77 @@ const WIRE_INTS: [&str; 15] = [
     "RANS_L",
 ];
 
-/// Cross-check the spec text against the `codec/` constants in `files`.
+/// Spec-named integer constants that must exist in `net/` with the
+/// exact `docs/PROTOCOL.md` value (MCNP1 framing bounds, message types,
+/// error codes). The preamble byte string is checked separately.
+const NET_INTS: [&str; 13] = [
+    "NET_VERSION",
+    "NET_MAX_FRAME",
+    "MAX_TOKENS",
+    "MAX_ERR_LEN",
+    "MSG_REQ",
+    "MSG_REPLY_OK",
+    "MSG_REPLY_ERR",
+    "MSG_PING",
+    "MSG_PONG",
+    "MSG_CONN_ERR",
+    "ERR_REJECTED",
+    "ERR_FAILED",
+    "ERR_DEADLINE",
+];
+
+/// One spec ↔ code binding: which doc, which source subtree, which
+/// magic constant, which integer constants.
+struct Binding {
+    /// Spec label used in finding messages ("FORMAT.md" / "PROTOCOL.md").
+    label: &'static str,
+    /// Path fragment gating the code side ("codec/" / "net/").
+    frag: &'static str,
+    /// Name of the byte-string magic constant.
+    magic_name: &'static str,
+    /// Integer constants the spec must pin.
+    ints: &'static [&'static str],
+}
+
+/// Cross-check `docs/FORMAT.md` against the `codec/` constants in `files`.
 pub fn check(spec_rel: &str, spec_text: &str, files: &[SourceFile], out: &mut Vec<Finding>) {
-    let (exp, magic_spec) = spec_expectations(spec_rel, spec_text, out);
-    let consts = code_constants(files);
-    let magic_code = find_magic(files);
+    let b = Binding { label: "FORMAT.md", frag: "codec/", magic_name: "MAGIC_V2", ints: &WIRE_INTS };
+    cross_check(&b, spec_rel, spec_text, files, out);
+}
+
+/// Cross-check `docs/PROTOCOL.md` against the `net/` constants in `files`.
+pub fn check_protocol(
+    spec_rel: &str,
+    spec_text: &str,
+    files: &[SourceFile],
+    out: &mut Vec<Finding>,
+) {
+    let b =
+        Binding { label: "PROTOCOL.md", frag: "net/", magic_name: "NET_MAGIC", ints: &NET_INTS };
+    cross_check(&b, spec_rel, spec_text, files, out);
+}
+
+fn cross_check(
+    b: &Binding,
+    spec_rel: &str,
+    spec_text: &str,
+    files: &[SourceFile],
+    out: &mut Vec<Finding>,
+) {
+    let (exp, magic_spec) = spec_expectations(b.label, spec_rel, spec_text, out);
+    let consts = code_constants(files, b.frag);
+    let magic_code = find_magic(files, b.frag, b.magic_name);
 
     match magic_spec {
-        None => miss(out, spec_rel, 1, "FORMAT.md: could not locate spec value for `MAGIC_V2`"),
+        None => {
+            let m = format!("{}: could not locate spec value for `{}`", b.label, b.magic_name);
+            miss(out, spec_rel, 1, &m);
+        }
         Some((want, spec_line)) => match magic_code {
-            None => miss(out, spec_rel, spec_line, "codec/ has no MAGIC_V2 byte-string constant"),
+            None => {
+                let m = format!("{} has no {} byte-string constant", b.frag, b.magic_name);
+                miss(out, spec_rel, spec_line, &m);
+            }
             Some((got, rel, line)) => {
                 if got != want {
                     let g = String::from_utf8_lossy(&got).escape_default().to_string();
@@ -54,21 +121,21 @@ pub fn check(spec_rel: &str, spec_text: &str, files: &[SourceFile], out: &mut Ve
                         file: rel,
                         line,
                         rule: ID,
-                        msg: format!("magic bytes \"{g}\" in code but \"{w}\" in FORMAT.md"),
+                        msg: format!("magic bytes \"{g}\" in code but \"{w}\" in {}", b.label),
                     });
                 }
             }
         },
     }
 
-    for name in WIRE_INTS {
+    for &name in b.ints {
         let Some(&(want, spec_line)) = exp.get(name) else {
-            let m = format!("FORMAT.md: could not locate spec value for `{name}`");
+            let m = format!("{}: could not locate spec value for `{name}`", b.label);
             miss(out, spec_rel, 1, &m);
             continue;
         };
         let Some((got, rel, line)) = consts.get(name) else {
-            let m = format!("codec/ defines no constant `{name}` (spec: {want})");
+            let m = format!("{} defines no constant `{name}` (spec: {want})", b.frag);
             miss(out, spec_rel, spec_line, &m);
             continue;
         };
@@ -77,7 +144,7 @@ pub fn check(spec_rel: &str, spec_text: &str, files: &[SourceFile], out: &mut Ve
                 file: rel.clone(),
                 line: *line,
                 rule: ID,
-                msg: format!("`{name}` = {got} in code but {want} in FORMAT.md"),
+                msg: format!("`{name}` = {got} in code but {want} in {}", b.label),
             });
         }
     }
@@ -95,6 +162,7 @@ type Expectations = HashMap<String, (u64, usize)>;
 /// magic byte string. Self-contradictions in the spec (magic string vs
 /// hex bytes) are reported directly.
 fn spec_expectations(
+    label: &str,
     spec_rel: &str,
     spec_text: &str,
     out: &mut Vec<Finding>,
@@ -104,7 +172,7 @@ fn spec_expectations(
     for (ix0, line) in spec_text.lines().enumerate() {
         let ix = ix0 + 1;
         if line.trim().starts_with("magic") && line.contains('"') && line.contains('=') {
-            parse_magic_line(spec_rel, line, ix, &mut magic, out);
+            parse_magic_line(label, spec_rel, line, ix, &mut magic, out);
         }
         if line.contains("than") && line.contains("bytes") {
             if let Some(v) = parse_varint_limit(line) {
@@ -137,6 +205,7 @@ fn spec_expectations(
 /// `magic    6 bytes   "MCNC2\n" = 4d 43 4e 43 32 0a` — extract the
 /// quoted literal, check it against the hex pairs, record it.
 fn parse_magic_line(
+    label: &str,
     spec_rel: &str,
     line: &str,
     ix: usize,
@@ -164,7 +233,7 @@ fn parse_magic_line(
         }
     }
     if lit != hexbytes {
-        miss(out, spec_rel, ix, "FORMAT.md magic string and hex bytes disagree");
+        miss(out, spec_rel, ix, &format!("{label} magic string and hex bytes disagree"));
     }
     *magic = Some((lit, ix));
 }
@@ -310,13 +379,13 @@ struct Decl {
 
 type Resolved = HashMap<String, (u64, String, usize)>;
 
-/// Collect `const NAME[: ty] = EXPR;` declarations from `codec/` files
-/// and resolve them to integers (literals, `A << B`, and references to
-/// other collected constants).
-fn code_constants(files: &[SourceFile]) -> Resolved {
+/// Collect `const NAME[: ty] = EXPR;` declarations from files whose
+/// relative path contains `frag` and resolve them to integers (literals,
+/// `A << B`, and references to other collected constants).
+fn code_constants(files: &[SourceFile], frag: &str) -> Resolved {
     let mut decls: HashMap<String, Decl> = HashMap::new();
     for f in files {
-        if !f.rel.contains("codec/") {
+        if !f.rel.contains(frag) {
             continue;
         }
         for (ix, line) in f.lines.iter().enumerate() {
@@ -409,16 +478,16 @@ fn eval_atom(
     None
 }
 
-/// The `MAGIC_V2` byte string must be read from raw source — the lexer
-/// masks string contents out of the code text.
-fn find_magic(files: &[SourceFile]) -> Option<(Vec<u8>, String, usize)> {
+/// The magic byte string (`MAGIC_V2` / `NET_MAGIC`) must be read from
+/// raw source — the lexer masks string contents out of the code text.
+fn find_magic(files: &[SourceFile], frag: &str, name: &str) -> Option<(Vec<u8>, String, usize)> {
     let mut found = None;
     for f in files {
-        if !f.rel.contains("codec/") {
+        if !f.rel.contains(frag) {
             continue;
         }
         for (ix, line) in f.raw.lines().enumerate() {
-            if !(line.contains("MAGIC_V2") && line.contains("b\"") && line.contains("const")) {
+            if !(line.contains(name) && line.contains("b\"") && line.contains("const")) {
                 continue;
             }
             let Some(q1) = line.find("b\"") else {

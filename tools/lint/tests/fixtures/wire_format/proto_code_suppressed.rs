@@ -1,0 +1,16 @@
+pub const NET_MAGIC: &[u8; 6] = b"PROT1\n";
+pub const NET_VERSION: u64 = 1;
+pub const NET_MAX_FRAME: usize = 1 << 20;
+pub const MAX_TOKENS: usize = 1 << 16;
+pub const MAX_ERR_LEN: usize = 4096;
+pub const MSG_REQ: u8 = 1;
+pub const MSG_REPLY_OK: u8 = 2;
+pub const MSG_REPLY_ERR: u8 = 3;
+pub const MSG_PING: u8 = 4;
+// lint:allow(wire-format): fixture proving suppression accounting only —
+// real drift must be fixed in code or spec, never silenced
+pub const MSG_PONG: u8 = 7;
+pub const MSG_CONN_ERR: u8 = 6;
+pub const ERR_REJECTED: u8 = 1;
+pub const ERR_FAILED: u8 = 2;
+pub const ERR_DEADLINE: u8 = 3;

@@ -5,7 +5,7 @@
 //! linted under *synthetic* relative paths so the path-gated rules
 //! (panic-freedom, determinism, dispatch) see the tree layout they
 //! expect. The suite ends with the self-check: the real `rust/src` tree
-//! must lint clean against `docs/FORMAT.md`.
+//! must lint clean against both `docs/FORMAT.md` and `docs/PROTOCOL.md`.
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -19,7 +19,7 @@ fn fixture(name: &str) -> String {
 
 /// Lint one fixture under a synthetic relative path, no spec.
 fn lint_one(rel: &str, fixture_name: &str) -> Report {
-    lint_sources(&[source_file(rel, &fixture(fixture_name))], None)
+    lint_sources(&[source_file(rel, &fixture(fixture_name))], &[])
 }
 
 fn hits(list: &[mcnc_lint::Finding], rule: &str) -> Vec<(String, usize)> {
@@ -109,6 +109,14 @@ fn panic_freedom_ignores_other_files() {
     assert!(rep.findings.is_empty(), "{:?}", rep.findings);
 }
 
+#[test]
+fn panic_freedom_applies_to_net() {
+    // the socket front-end is a serving path too: net/*.rs is gated
+    let rep = lint_one("net/listener.rs", "panic_freedom/positive.rs");
+    let want = [loc("net/listener.rs", 2), loc("net/listener.rs", 4)];
+    assert_eq!(hits(&rep.findings, "panic-freedom"), want);
+}
+
 // ------------------------------------------------------------- determinism
 
 #[test]
@@ -129,6 +137,21 @@ fn determinism_suppressed() {
     let rep = lint_one("coordinator/chaos.rs", "determinism/suppressed.rs");
     assert!(rep.findings.is_empty(), "{:?}", rep.findings);
     assert_eq!(hits(&rep.suppressed, "determinism"), [loc("coordinator/chaos.rs", 3)]);
+}
+
+#[test]
+fn determinism_applies_to_protocol_codec() {
+    // MCNP1 encode/deframe must be host-independent, like the container
+    let rep = lint_one("net/protocol.rs", "determinism/positive.rs");
+    let want = [loc("net/protocol.rs", 1), loc("net/protocol.rs", 4)];
+    assert_eq!(hits(&rep.findings, "determinism"), want);
+}
+
+#[test]
+fn determinism_exempts_net_listener() {
+    // the listener owns the clock (deadline anchoring, drain budget)
+    let rep = lint_one("net/listener.rs", "determinism/positive.rs");
+    assert!(hits(&rep.findings, "determinism").is_empty(), "{:?}", rep.findings);
 }
 
 // ---------------------------------------------------------- metrics-naming
@@ -172,7 +195,7 @@ fn metrics_naming_suppressed() {
 fn wire_format_clean() {
     let spec = fixture("wire_format/spec.md");
     let sf = source_file("codec/container.rs", &fixture("wire_format/code_ok.rs"));
-    let rep = lint_sources(&[sf], Some(("spec.md", &spec)));
+    let rep = lint_sources(&[sf], &[("spec.md", &spec)]);
     assert!(rep.findings.is_empty(), "{:?}", rep.findings);
 }
 
@@ -180,10 +203,54 @@ fn wire_format_clean() {
 fn wire_format_drift_points_at_code_line() {
     let spec = fixture("wire_format/spec.md");
     let sf = source_file("codec/container.rs", &fixture("wire_format/code_drift.rs"));
-    let rep = lint_sources(&[sf], Some(("spec.md", &spec)));
+    let rep = lint_sources(&[sf], &[("spec.md", &spec)]);
     let got = hits(&rep.findings, "wire-format");
     assert_eq!(got, [loc("codec/container.rs", 5)]);
     assert!(rep.findings[0].msg.contains("MAX_DIMS"), "{}", rep.findings[0].msg);
+}
+
+#[test]
+fn wire_format_protocol_clean() {
+    // a spec path ending in PROTOCOL.md binds to net/ instead of codec/
+    let spec = fixture("wire_format/proto_spec.md");
+    let sf = source_file("net/protocol.rs", &fixture("wire_format/proto_code_ok.rs"));
+    let rep = lint_sources(&[sf], &[("docs/PROTOCOL.md", &spec)]);
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn wire_format_protocol_drift_points_at_code_line() {
+    let spec = fixture("wire_format/proto_spec.md");
+    let sf = source_file("net/protocol.rs", &fixture("wire_format/proto_code_drift.rs"));
+    let rep = lint_sources(&[sf], &[("docs/PROTOCOL.md", &spec)]);
+    let got = hits(&rep.findings, "wire-format");
+    assert_eq!(got, [loc("net/protocol.rs", 10)]);
+    assert!(rep.findings[0].msg.contains("MSG_PONG"), "{}", rep.findings[0].msg);
+    assert!(rep.findings[0].msg.contains("PROTOCOL.md"), "{}", rep.findings[0].msg);
+}
+
+#[test]
+fn wire_format_protocol_suppression_is_accounted() {
+    let spec = fixture("wire_format/proto_spec.md");
+    let sf = source_file("net/protocol.rs", &fixture("wire_format/proto_code_suppressed.rs"));
+    let rep = lint_sources(&[sf], &[("docs/PROTOCOL.md", &spec)]);
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert_eq!(hits(&rep.suppressed, "wire-format"), [loc("net/protocol.rs", 12)]);
+}
+
+#[test]
+fn wire_format_both_specs_check_disjoint_subtrees() {
+    // FORMAT.md sees only codec/, PROTOCOL.md only net/ — running both
+    // over both trees at once stays clean and cross-talk-free
+    let spec_c = fixture("wire_format/spec.md");
+    let spec_n = fixture("wire_format/proto_spec.md");
+    let files = [
+        source_file("codec/container.rs", &fixture("wire_format/code_ok.rs")),
+        source_file("net/protocol.rs", &fixture("wire_format/proto_code_ok.rs")),
+    ];
+    let rep =
+        lint_sources(&files, &[("docs/FORMAT.md", &spec_c), ("docs/PROTOCOL.md", &spec_n)]);
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
 }
 
 // ------------------------------------------------------------ JSON report
@@ -234,8 +301,8 @@ fn repo_path(rel: &str) -> PathBuf {
 #[test]
 fn real_tree_lints_clean() {
     let root = repo_path("rust/src");
-    let spec = repo_path("docs/FORMAT.md");
-    let rep = mcnc_lint::lint_tree(&root, Some(&spec)).expect("walk rust/src");
+    let specs = [repo_path("docs/FORMAT.md"), repo_path("docs/PROTOCOL.md")];
+    let rep = mcnc_lint::lint_tree(&root, &specs).expect("walk rust/src");
     let msgs: Vec<String> = rep
         .findings
         .iter()
