@@ -54,6 +54,12 @@ cargo test -q -p mcnc --test prop_net_protocol
 echo "== parallel decode determinism + docs/FORMAT.md worked example =="
 cargo test -q -p mcnc --test prop_parallel_decode
 
+echo "== int8 GEMM oracle parity (analytic bound + cross-ISA bit-identity) =="
+cargo test -q -p mcnc --test prop_int8_gemm
+
+echo "== compressed-domain serving (quantized panels over MCNP1 vs f32 oracle) =="
+cargo test -q -p mcnc --test integration_quant_serving
+
 echo "== doctests (Encoder/Decoder, Server examples must stay runnable) =="
 cargo test -q -p mcnc --doc
 

@@ -8,7 +8,7 @@
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use mcnc::codec::quantizer;
+use mcnc::codec::{quantizer, Codec, ContainerHeader, Decoder, Encoder};
 use mcnc::coordinator::{
     Batch, BatchPolicy, EngineCore, Request, Router, ServeStats, Server, ServerCfg,
 };
@@ -247,6 +247,62 @@ fn main() {
         "kernel gemm simd speedup vs scalar".into(),
         "x".into(),
         format!("{:.2}", simd_gflops / scalar_gflops),
+    ]);
+
+    // --- compressed-domain kernel: int8 gemm_q vs the f32 microkernel ---
+    // same shape as the f32 rows so GOP/s compares directly (2·m·k·n MACs
+    // either way); B carries 4-row scale groups (block = 4·n, the SIMD-
+    // admissible layout) and A is quantized once outside the timed loop —
+    // the per-request quantize cost is visible in the serve benches.
+    let qblock = 4 * kn;
+    let qz = quantizer::quantize_with(Isa::Scalar, &kb, 8, qblock);
+    let bq_scalar = kernel::pack_bq_for(Isa::Scalar, kk, kn, 8, qblock, &qz.scales, &qz.symbols)
+        .expect("pack int8 B (scalar)");
+    let qa = kernel::quantize_a(&ka, km, kk, bq_scalar.group_rows());
+    let s = time_it(3, 15, || kernel::gemm_q(&qa, &bq_scalar, &mut kc));
+    let scalar_q_gops = kflops / s.median() / 1e9;
+    table.row(vec![
+        "kernel gemm_q int8 192x512x768, scalar".into(),
+        "GOP/s".into(),
+        format!("{scalar_q_gops:.2}"),
+    ]);
+    let bq_simd =
+        kernel::pack_bq(kk, kn, 8, qblock, &qz.scales, &qz.symbols).expect("pack int8 B (simd)");
+    let s = time_it(3, 15, || kernel::gemm_q(&qa, &bq_simd, &mut kc));
+    let simd_q_gops = kflops / s.median() / 1e9;
+    table.row(vec![
+        format!("kernel gemm_q int8 192x512x768, {}", bq_simd.isa().name()),
+        "GOP/s".into(),
+        format!("{simd_q_gops:.2}"),
+    ]);
+    table.row(vec![
+        "kernel int8 speedup vs f32 (dispatched)".into(),
+        "x".into(),
+        format!("{:.2}", simd_q_gops / simd_gflops),
+    ]);
+
+    // --- quantized cold fill: rANS int8 frame → PackedBQ, no f32 detour ---
+    // GB/s is f32-equivalent logical weight bytes per second — the number a
+    // serving fill effectively delivers, comparable across codecs.
+    let cold_w = Tensor::from_f32(kb.clone(), &[kk, kn]).expect("cold-fill tensor");
+    let hdr = ContainerHeader {
+        entry: "perf_cold_fill".into(),
+        seed: 0,
+        step: 0.0,
+        n_tensors: Some(1),
+    };
+    let mut enc = Encoder::new(Vec::new(), &hdr).expect("cold-fill encoder");
+    enc.write_tensor("w", &cold_w, Codec::Int8 { block: qblock }).expect("cold-fill frame");
+    let (cold_bytes, _) = enc.finish().expect("cold-fill container");
+    let logical_gb = (kk * kn * std::mem::size_of::<f32>()) as f64 / 1e9;
+    let s = time_it(2, 10, || {
+        let mut dec = Decoder::new(&cold_bytes[..]).expect("cold-fill decoder");
+        let _ = dec.next_packed_q(kernel::active()).expect("cold-fill frame decode");
+    });
+    table.row(vec![
+        "cold fill int8 frame -> PackedBQ 512x768".into(),
+        "GB/s (f32-equiv)".into(),
+        format!("{:.2}", logical_gb / s.median()),
     ]);
 
     // --- quantizer scans (MCNC2 encode hot path): scalar vs SIMD ---

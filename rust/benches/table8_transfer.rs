@@ -11,9 +11,12 @@
 //! 2. **Parallel decode + warm start** (runs everywhere): in-memory decode
 //!    throughput of `Decoder::decode_all_with` at {1, 2, 4, 8} pool
 //!    threads per codec (checked bit-identical to the serial path), the
-//!    fused decode→`PackedB` path vs decode-then-pack, and the warm-start
-//!    decode+group wall-clock on a multi-task artifact. Rows land in the
-//!    same table/JSON, labeled `∥ N threads`.
+//!    fused decode→`PackedB` path vs decode-then-pack, the compressed-domain
+//!    end-to-end rows (artifact → quantized panels → int8 GEMM with the
+//!    dispatched result checked bit-identical to the forced-scalar oracle,
+//!    so every `--smoke` CI run re-pins the cross-ISA invariant), and the
+//!    warm-start decode+group wall-clock on a multi-task artifact. Rows land
+//!    in the same table/JSON, labeled `∥ N threads`.
 //! 3. **Host→device staging** (needs artifacts + `--features pjrt`): the
 //!    original measured + PCIe-projected comparison of dense weights vs
 //!    (α, β)+expand, and the shard-replication analytic.
@@ -22,10 +25,10 @@
 //! skips the JSON/CSV outputs so a quick gate run never clobbers a full
 //! run's recorded trajectory.
 
-use mcnc::codec::{Codec, ContainerHeader, Decoder, Encoder};
+use mcnc::codec::{Codec, ContainerHeader, Decoder, Encoder, PackedPanels};
 use mcnc::coordinator::warm;
 use mcnc::exp::Ctx;
-use mcnc::mcnc::kernel;
+use mcnc::mcnc::kernel::{self, Isa};
 use mcnc::runtime::{init, IoSpec, Role};
 use mcnc::tensor::{DType, Tensor};
 use mcnc::train::Checkpoint;
@@ -44,6 +47,7 @@ fn main() {
     );
     codec_wire_table(&mut table, smoke);
     parallel_decode_rows(&mut table, smoke);
+    compressed_domain_rows(&mut table, smoke);
     warm_start_rows(&mut table, smoke);
     table.print();
     println!(
@@ -264,6 +268,78 @@ fn parallel_decode_rows(table: &mut Table, smoke: bool) {
                 mbps(payload, stats.min()),
             ]);
         }
+    }
+}
+
+/// Compressed-domain end to end: artifact → panels → GEMM. Quantized
+/// codecs never materialize f32 weights (rANS → `PackedBQ` → `gemm_q`);
+/// the lossless row is the f32 baseline (rANS → `PackedB` → `gemm`).
+/// Before timing, the dispatched quantized results are checked
+/// bit-identical to a forced-scalar pass — the cross-ISA invariant the
+/// prop_int8_gemm battery pins, re-asserted here on the full pipeline (and
+/// therefore on every `--smoke` CI run). The f32 baseline is exempt: its
+/// SIMD accumulation order legitimately differs from scalar.
+fn compressed_domain_rows(table: &mut Table, smoke: bool) {
+    let (n_tensors, per) = if smoke { (4, 2_048) } else { (8, 131_072) };
+    let samples = if smoke { 1 } else { 5 };
+    let pool = ThreadPool::new(if smoke { 2 } else { 4 });
+    let cols = 64usize;
+    let rows = per / cols;
+    let m = 16usize;
+    let a = Stream::new(300).uniform_f32(m * rows, -1.0, 1.0);
+    let fixture = format!("e2e ({n_tensors}x{per} p)");
+
+    for codec in
+        [Codec::Lossless, Codec::Int8 { block: 4 * cols }, Codec::Int4 { block: 4 * cols }]
+    {
+        let (bytes, payload) = fleet_container(n_tensors, per, codec);
+
+        // full pipeline under one ISA: decode every frame to panels on the
+        // pool, then run the per-frame GEMM on its native path
+        let run = |isa: Isa| -> Vec<Vec<f32>> {
+            let panels =
+                Decoder::new(&bytes[..]).unwrap().decode_all_panels_with(&pool, isa, false).unwrap();
+            panels
+                .iter()
+                .map(|(_, p, _)| {
+                    let mut c = vec![0.0f32; m * cols];
+                    match p {
+                        PackedPanels::F32(pb) => kernel::gemm(&a, m, pb, &mut c),
+                        PackedPanels::Quant(pq) => {
+                            let qa = kernel::quantize_a(&a, m, rows, pq.group_rows());
+                            kernel::gemm_q(&qa, pq, &mut c);
+                        }
+                    }
+                    c
+                })
+                .collect()
+        };
+        if !codec.is_lossless() {
+            let oracle = run(Isa::Scalar);
+            let disp = run(kernel::active());
+            for (i, (x, y)) in disp.iter().zip(&oracle).enumerate() {
+                assert!(
+                    x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "e2e frame {i}: dispatched {} path not bit-identical to scalar oracle",
+                    codec.name()
+                );
+            }
+        }
+
+        let stats = time_it(1, samples, || {
+            let out = run(kernel::active());
+            assert_eq!(out.len(), n_tensors);
+        });
+        table.row(vec![
+            fixture.clone(),
+            format!("MCNC2 {} artifact→panels→GEMM", codec.name()),
+            format!("{}", bytes.len()),
+            format!("{:.2}x", payload as f64 / bytes.len() as f64),
+            "-".into(),
+            fmt_time(stats.min()),
+            "-".into(),
+            mbps(payload, stats.min()),
+        ]);
     }
 }
 

@@ -24,10 +24,12 @@
 //! payload parsing — corruption surfaces as an error, never a panic or a
 //! silent mis-decode.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::Read;
 
-use crate::mcnc::kernel::{Isa, PackedB, PackedBBuilder};
+use crate::mcnc::kernel::{
+    quant_panels_admissible, Isa, PackedB, PackedBBuilder, PackedBQ, PackedBQBuilder,
+};
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 
@@ -535,6 +537,120 @@ pub fn decode_frame_into_packed(b: &[u8], isa: Isa) -> Result<(String, PackedB, 
     Ok((name, builder.finish()?, codec))
 }
 
+/// Fused decode→pack for the *compressed domain*: parse a CRC-verified
+/// 2-D quantized `[k, n]` weight frame straight into the kernel layer's
+/// [`PackedBQ`] — rANS symbols into i8 panel slots, wire scales carried
+/// alongside — with no f32 weight materialization at all. The panels are
+/// bit-identical to [`crate::mcnc::kernel::pack_bq_for`] over the frame's
+/// embedded `quantize(w)` symbols/scales (which the wire round-trips
+/// exactly), so a consumer can cross-check the two construction paths.
+///
+/// Errors — never panics — on lossless frames and on quantized frames
+/// whose scale blocks straddle weight rows (the `block % n == 0` /
+/// single-block layout rule on [`PackedBQ`]); callers fall back to
+/// [`decode_frame_into_packed`], which handles every codec.
+pub fn decode_frame_into_packed_q(b: &[u8], isa: Isa) -> Result<(String, PackedBQ, Codec)> {
+    let mut pos = 0usize;
+    let meta = parse_frame_meta(b, &mut pos)?;
+    let FrameMeta { name, dims, numel, tag } = meta;
+    if dims.len() != 2 {
+        bail!("frame {name:?} is {}-D; packed decode needs a 2-D [k, n] weight", dims.len());
+    }
+    let bits = match tag {
+        TAG_INT8 => INT8_BITS,
+        TAG_INT4 => INT4_BITS,
+        TAG_LOSSLESS => {
+            bail!("frame {name:?} is lossless; packed-q decode needs a quantized frame")
+        }
+        t => bail!("unknown codec tag {t}"),
+    };
+    // padded panel bound, mirroring decode_frame_into_packed: panels are 8
+    // columns wide with k rounded up to the widest interleave (ku = 4).
+    // The symbols are i8 (4× smaller than f32), but applying the same
+    // element cap keeps the two fused paths' admission behavior identical.
+    const MAX_KU: usize = 4;
+    let padded_rows = dims[0].div_ceil(MAX_KU).saturating_mul(MAX_KU);
+    let padded_cols = dims[1].div_ceil(8).max(1).saturating_mul(8);
+    padded_rows
+        .checked_mul(padded_cols)
+        .filter(|&p| p <= MAX_ELEMS)
+        .ok_or_else(|| anyhow!("frame {name:?} padded panel size exceeds bound"))?;
+    let (block, scales, symbols) = parse_quantized_payload(b, &mut pos, &name, numel, bits)?;
+    if pos != b.len() {
+        bail!("frame {name:?} has {} trailing bytes", b.len() - pos);
+    }
+    let mut builder = PackedBQBuilder::new_for(isa, dims[0], dims[1], bits, block, scales)
+        .with_context(|| format!("frame {name:?}"))?;
+    for &s in &symbols {
+        builder.push(s);
+    }
+    let codec = if bits == INT8_BITS { Codec::Int8 { block } } else { Codec::Int4 { block } };
+    Ok((name, builder.finish()?, codec))
+}
+
+/// One decoded weight frame in whichever panel form the cold-fill path
+/// chose for it: quantized panels when the frame's codec and block layout
+/// admit the compressed-domain GEMM, f32 panels otherwise (lossless
+/// frames, row-straddling blocks, or a forced-oracle override).
+pub enum PackedPanels {
+    /// f32 panels feeding the dispatched f32 GEMM — the oracle/fallback.
+    F32(PackedB),
+    /// Quantized panels feeding `mcnc::kernel::gemm_q` — no f32 weight
+    /// was ever materialized on the way here.
+    Quant(PackedBQ),
+}
+
+impl PackedPanels {
+    /// Rows of the logical `[k, n]` weight.
+    pub fn k(&self) -> usize {
+        match self {
+            PackedPanels::F32(p) => p.k,
+            PackedPanels::Quant(p) => p.k,
+        }
+    }
+
+    /// Columns of the logical `[k, n]` weight.
+    pub fn n(&self) -> usize {
+        match self {
+            PackedPanels::F32(p) => p.n,
+            PackedPanels::Quant(p) => p.n,
+        }
+    }
+
+    /// Did this frame land on the compressed-domain path?
+    pub fn is_quant(&self) -> bool {
+        matches!(self, PackedPanels::Quant(_))
+    }
+}
+
+/// Fused decode with per-frame path selection: quantized 2-D frames whose
+/// scale blocks tile whole rows become [`PackedBQ`] via
+/// [`decode_frame_into_packed_q`]; everything else (lossless frames,
+/// row-straddling blocks) falls back to the f32
+/// [`decode_frame_into_packed`]. `force_f32` pins the fallback for every
+/// frame — the oracle switch serving uses to cross-check the two paths on
+/// identical artifacts. The selection peeks only the frame preamble and
+/// the block-size varint, so no payload work is duplicated.
+pub fn decode_frame_into_panels(
+    b: &[u8],
+    isa: Isa,
+    force_f32: bool,
+) -> Result<(String, PackedPanels, Codec)> {
+    if !force_f32 {
+        let mut pos = 0usize;
+        let meta = parse_frame_meta(b, &mut pos)?;
+        if meta.dims.len() == 2 && (meta.tag == TAG_INT8 || meta.tag == TAG_INT4) {
+            let block = get_varint(b, &mut pos)? as usize;
+            if quant_panels_admissible(meta.dims[0], meta.dims[1], block) {
+                let (name, pq, codec) = decode_frame_into_packed_q(b, isa)?;
+                return Ok((name, PackedPanels::Quant(pq), codec));
+            }
+        }
+    }
+    let (name, pb, codec) = decode_frame_into_packed(b, isa)?;
+    Ok((name, PackedPanels::F32(pb), codec))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -649,6 +765,95 @@ mod tests {
         let mut body = encode_frame("m", &t2, Codec::Int8 { block: 4 }).unwrap();
         body.truncate(body.len() - 1);
         assert!(decode_frame_into_packed(&body, Isa::Scalar).is_err());
+    }
+
+    #[test]
+    fn packed_q_decode_matches_quantize_then_pack() {
+        // decode-to-PackedBQ must equal quantize(source) + pack_bq_for
+        // bit-for-bit: a frame embeds exactly quantize(w) (ISA-invariant
+        // by the quantizer parity tests) and the wire round-trips symbols
+        // and scales exactly.
+        use crate::mcnc::kernel;
+        let (k, n) = (20usize, 33usize);
+        let vals = Stream::new(19).normal_f32(k * n, 0.05);
+        let t = Tensor::from_f32(vals.clone(), &[k, n]).unwrap();
+        for isa in [Isa::Scalar, kernel::active()] {
+            for codec in [
+                Codec::Int8 { block: n },     // one row per group
+                Codec::Int4 { block: 2 * n }, // two rows per group
+                Codec::Int8 { block: k * n }, // single group
+            ] {
+                let (bits, block) = match codec {
+                    Codec::Int8 { block } => (8u32, block),
+                    Codec::Int4 { block } => (4, block),
+                    Codec::Lossless => unreachable!(),
+                };
+                let body = encode_frame("w", &t, codec).unwrap();
+                let (name, pq, c) = decode_frame_into_packed_q(&body, isa).unwrap();
+                assert_eq!(name, "w");
+                assert_eq!(c, codec);
+                let q = quantizer::quantize_with(Isa::Scalar, &vals, bits, block);
+                let want =
+                    kernel::pack_bq_for(isa, k, n, bits, block, &q.scales, &q.symbols).unwrap();
+                assert_eq!(pq.isa(), want.isa(), "{isa:?} {codec:?}");
+                assert_eq!(pq.ku(), want.ku(), "{isa:?} {codec:?}");
+                assert_eq!(pq.panels(), want.panels(), "{isa:?} {codec:?}");
+                assert_eq!(pq.scales(), want.scales(), "{isa:?} {codec:?}");
+                assert_eq!(pq.group_rows(), want.group_rows());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_q_decode_rejects_lossless_straddle_non_2d_and_corrupt() {
+        let t = Tensor::ones(&[4, 6]);
+        // lossless frames have no symbols to keep — callers fall back
+        let body = encode_frame("w", &t, Codec::Lossless).unwrap();
+        let err = decode_frame_into_packed_q(&body, Isa::Scalar).unwrap_err();
+        assert!(format!("{err:#}").contains("lossless"), "{err:#}");
+        // a block that straddles rows fails the layout admission rule
+        let body = encode_frame("w", &t, Codec::Int8 { block: 4 }).unwrap();
+        let err = decode_frame_into_packed_q(&body, Isa::Scalar).unwrap_err();
+        assert!(format!("{err:#}").contains("straddles"), "{err:#}");
+        // non-2-D rejected like the f32 fused path
+        let body = encode_frame("v", &Tensor::ones(&[6]), Codec::Int8 { block: 6 }).unwrap();
+        let err = decode_frame_into_packed_q(&body, Isa::Scalar).unwrap_err();
+        assert!(format!("{err:#}").contains("2-D"), "{err:#}");
+        // truncation errors (never panics) at every cut point
+        let body = encode_frame("w", &t, Codec::Int8 { block: 6 }).unwrap();
+        for cut in 0..body.len() {
+            assert!(
+                decode_frame_into_packed_q(&body[..cut], Isa::Scalar).is_err(),
+                "cut at {cut} did not error"
+            );
+        }
+    }
+
+    #[test]
+    fn panels_decode_selects_path_per_frame() {
+        let t = Tensor::from_f32(Stream::new(5).normal_f32(48, 0.1), &[6, 8]).unwrap();
+        // row-aligned quantized frame → compressed-domain panels
+        let body = encode_frame("w", &t, Codec::Int8 { block: 8 }).unwrap();
+        let (name, p, c) = decode_frame_into_panels(&body, Isa::Scalar, false).unwrap();
+        assert_eq!((name.as_str(), c), ("w", Codec::Int8 { block: 8 }));
+        assert!(p.is_quant());
+        assert_eq!((p.k(), p.n()), (6, 8));
+        // the forced-oracle switch pins the f32 fallback on the same frame
+        let (_, p, _) = decode_frame_into_panels(&body, Isa::Scalar, true).unwrap();
+        assert!(!p.is_quant());
+        assert_eq!((p.k(), p.n()), (6, 8));
+        // a row-straddling block falls back instead of erroring
+        let body = encode_frame("w", &t, Codec::Int8 { block: 5 }).unwrap();
+        let (_, p, _) = decode_frame_into_panels(&body, Isa::Scalar, false).unwrap();
+        assert!(!p.is_quant());
+        // lossless frames always take the f32 path
+        let body = encode_frame("w", &t, Codec::Lossless).unwrap();
+        let (_, p, c) = decode_frame_into_panels(&body, Isa::Scalar, false).unwrap();
+        assert!(!p.is_quant());
+        assert_eq!(c, Codec::Lossless);
+        // non-2-D frames error on both paths, so selection errors too
+        let body = encode_frame("v", &Tensor::ones(&[5]), Codec::Int8 { block: 5 }).unwrap();
+        assert!(decode_frame_into_panels(&body, Isa::Scalar, false).is_err());
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub mod stream;
 
 use anyhow::{bail, Result};
 
-pub use container::{ContainerHeader, MAGIC_V2};
+pub use container::{ContainerHeader, PackedPanels, MAGIC_V2};
 pub use stream::{Decoder, Encoder};
 
 /// Per-tensor payload encoding inside an MCNC2 container.

@@ -18,6 +18,12 @@
 //! (enforced by the kernel's parity tests), so a checkpoint encodes to the
 //! same bytes on every host; [`quantize_with`] pins the ISA explicitly for
 //! tests and benches.
+//!
+//! The symbols/scales pair is also exactly what the compressed-domain
+//! GEMM consumes: `mcnc::kernel::pack_bq` lays the biased symbols out as
+//! i8 panels and `gemm_q` multiplies against them directly, so a weight
+//! whose scale blocks tile whole rows never needs [`dequantize`] on the
+//! serving path at all (see `codec::container::decode_frame_into_packed_q`).
 
 use crate::mcnc::kernel::{self, Isa};
 

@@ -27,11 +27,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
 use super::container::{
-    crc32, decode_frame_into_packed, encode_frame, read_varint, ContainerHeader, MAGIC_V2,
-    MAX_FRAME, MAX_HEADER,
+    crc32, decode_frame_into_packed, decode_frame_into_packed_q, encode_frame, read_varint,
+    ContainerHeader, PackedPanels, MAGIC_V2, MAX_FRAME, MAX_HEADER,
 };
 use super::{container, Codec};
-use crate::mcnc::kernel::{Isa, PackedB};
+use crate::mcnc::kernel::{Isa, PackedB, PackedBQ};
 use crate::tensor::Tensor;
 use crate::util::threadpool::{self, ThreadPool};
 
@@ -279,6 +279,66 @@ impl<R: Read> Decoder<R> {
             .map(Some)
     }
 
+    /// Decode the next frame straight into the kernel layer's [`PackedBQ`]
+    /// quantized panels for `isa` — the compressed-domain path: rANS
+    /// symbols land in i8 panel slots with the wire scales alongside, and
+    /// no f32 weight is ever materialized (see
+    /// [`container::decode_frame_into_packed_q`]). Errors — never panics —
+    /// on lossless frames and on row-straddling scale blocks; callers that
+    /// must handle every codec use [`Decoder::decode_all_panels_with`] or
+    /// fall back to [`Decoder::next_packed`].
+    pub fn next_packed_q(&mut self, isa: Isa) -> Result<Option<(String, PackedBQ, Codec)>> {
+        let Some(f) = self.read_raw_frame()? else {
+            return Ok(None);
+        };
+        verify_crc(&f)?;
+        decode_frame_into_packed_q(&f.body, isa)
+            .with_context(|| format!("frame {} at byte offset {}", f.index, f.offset))
+            .map(Some)
+    }
+
+    /// Decode every remaining frame into panels across the pool, selecting
+    /// the compressed-domain or f32 path per frame by codec tag + block
+    /// layout (see [`container::decode_frame_into_panels`]); `force_f32`
+    /// pins the f32 fallback everywhere — the oracle switch. Ordering,
+    /// error and bit-identity guarantees match [`Decoder::decode_all_with`].
+    pub fn decode_all_panels_with(
+        &mut self,
+        pool: &ThreadPool,
+        isa: Isa,
+        force_f32: bool,
+    ) -> Result<Vec<(String, PackedPanels, Codec)>> {
+        self.decode_all_panels_filtered_with(pool, isa, force_f32, |_| true)
+    }
+
+    /// [`Decoder::decode_all_panels_with`], decoding only frames whose
+    /// *name* passes `keep` — the shard-sliced warm ingest, panel edition.
+    /// Every frame is still CRC-verified (corruption anywhere stays an
+    /// error); skipped frames pay neither entropy decode nor packing.
+    pub fn decode_all_panels_filtered_with(
+        &mut self,
+        pool: &ThreadPool,
+        isa: Isa,
+        force_f32: bool,
+        keep: impl Fn(&str) -> bool + Send + Sync + Clone + 'static,
+    ) -> Result<Vec<(String, PackedPanels, Codec)>> {
+        let results = self.decode_windowed(
+            pool,
+            move |f: &RawFrame| -> Result<Option<(String, PackedPanels, Codec)>> {
+                verify_crc(f)?;
+                let name = container::peek_frame_name(&f.body)
+                    .with_context(|| format!("frame {} at byte offset {}", f.index, f.offset))?;
+                if !keep(&name) {
+                    return Ok(None);
+                }
+                container::decode_frame_into_panels(&f.body, isa, force_f32)
+                    .with_context(|| format!("frame {} at byte offset {}", f.index, f.offset))
+                    .map(Some)
+            },
+        )?;
+        Ok(results.into_iter().flatten().collect())
+    }
+
     /// Decode every remaining frame, fanning CRC verification + entropy
     /// decode + dequantization across the process-wide thread pool in
     /// bounded windows. Results are in frame order and bit-identical to
@@ -524,6 +584,78 @@ mod tests {
         assert_eq!((pb.k, pb.n), (54, 9));
         // the second frame is 1-D: the packed path must reject it cleanly
         assert!(dec.next_packed(kernel::Isa::Scalar).is_err());
+    }
+
+    #[test]
+    fn next_packed_q_yields_quantized_panels() {
+        use crate::mcnc::kernel;
+        // alpha is [54, 9]: block 9 tiles whole rows → admissible
+        let header = ContainerHeader { entry: "q".into(), seed: 1, step: 0.0, n_tensors: Some(1) };
+        let mut enc = Encoder::new(Vec::new(), &header).unwrap();
+        let t = sample_tensors().remove(0).1;
+        enc.write_tensor("alpha", &t, Codec::Int8 { block: 9 }).unwrap();
+        let (bytes, _) = enc.finish().unwrap();
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let (name, pq, codec) = dec.next_packed_q(kernel::Isa::Scalar).unwrap().unwrap();
+        assert_eq!(name, "alpha");
+        assert_eq!(codec, Codec::Int8 { block: 9 });
+        assert_eq!((pq.k, pq.n), (54, 9));
+        assert!(dec.next_packed_q(kernel::Isa::Scalar).unwrap().is_none());
+
+        // block 64 straddles the 9-wide rows: the fused-q path must reject
+        // it cleanly through the streaming wrapper too
+        let bytes = encode_all(Codec::Int8 { block: 64 });
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let err = dec.next_packed_q(kernel::Isa::Scalar).unwrap_err();
+        assert!(format!("{err:#}").contains("straddles"), "{err:#}");
+    }
+
+    #[test]
+    fn decode_all_panels_selects_per_frame_and_respects_filter() {
+        use crate::mcnc::kernel::Isa;
+        let mut s = Prng::new(33);
+        let header = ContainerHeader { entry: "p".into(), seed: 3, step: 0.0, n_tensors: Some(3) };
+        let mut enc = Encoder::new(Vec::new(), &header).unwrap();
+        let q = Tensor::from_f32(s.normal_f32(54 * 9, 0.05), &[54, 9]).unwrap();
+        let l = Tensor::from_f32(s.normal_f32(4 * 6, 0.05), &[4, 6]).unwrap();
+        enc.write_tensor("quant", &q, Codec::Int8 { block: 9 }).unwrap();
+        enc.write_tensor("lossless", &l, Codec::Lossless).unwrap();
+        enc.write_tensor("straddle", &l, Codec::Int8 { block: 5 }).unwrap();
+        let (bytes, _) = enc.finish().unwrap();
+        let pool = crate::util::threadpool::ThreadPool::new(2);
+
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let out = dec.decode_all_panels_with(&pool, Isa::Scalar, false).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out[0].1.is_quant(), "row-aligned int8 frame takes the q path");
+        assert!(!out[1].1.is_quant(), "lossless falls back to f32 panels");
+        assert!(!out[2].1.is_quant(), "straddling block falls back to f32 panels");
+        assert_eq!((out[0].1.k(), out[0].1.n()), (54, 9));
+
+        // the oracle switch pins f32 everywhere
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let forced = dec.decode_all_panels_with(&pool, Isa::Scalar, true).unwrap();
+        assert!(forced.iter().all(|(_, p, _)| !p.is_quant()));
+
+        // filtered: only the kept frame decodes, all frames CRC-checked
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let kept = dec
+            .decode_all_panels_filtered_with(&pool, Isa::Scalar, false, |n| n == "quant")
+            .unwrap();
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].0, "quant");
+        assert_eq!(dec.frames_seen(), 3);
+
+        // a bit flip anywhere still errors on the panels path
+        let mut dec = Decoder::new(&bytes[..]).unwrap();
+        let f0 = dec.read_raw_frame().unwrap().unwrap();
+        let mut bad = bytes.clone();
+        bad[f0.offset + 3] ^= 0x10;
+        let err = Decoder::new(&bad[..])
+            .unwrap()
+            .decode_all_panels_with(&pool, Isa::Scalar, false)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("frame 0"), "{err:#}");
     }
 
     #[test]

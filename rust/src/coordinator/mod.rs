@@ -12,6 +12,12 @@
 //! server answers its first request per task from cache instead of paying
 //! entropy decode + reconstruction on the request path.
 //!
+//! The PJRT engine is not the only [`EngineCore`]: [`qserve::QuantEngine`]
+//! serves 2-D head tasks straight from decoded GEMM panels, and quantized
+//! artifacts stay in the compressed domain end to end — rANS → int8 panels
+//! → int8 GEMM, no f32 weight ever materialized (f32 panels remain the
+//! per-frame oracle/fallback path).
+//!
 //! Fault *recovery* is first-class as well: shard engines run under a
 //! supervisor that contains batch panics, restarts dead engines with
 //! bounded backoff (re-warming from the preload artifact), sheds expired
@@ -34,6 +40,7 @@
 pub mod cache;
 pub mod chaos;
 pub mod metrics;
+pub mod qserve;
 pub mod router;
 pub mod server;
 pub mod shard;
@@ -43,6 +50,7 @@ pub mod workload;
 pub use cache::LruCache;
 pub use chaos::{Chaos, ChaosCfg, ChaosReport, FaultyEngine};
 pub use metrics::{Histogram, ServeStats};
+pub use qserve::{QServeCfg, QuantEngine, WEIGHT_SLOT};
 pub use router::{Batch, BatchPolicy, Request, Router};
 pub use server::{
     BreakerCfg, Engine, Mode, Response, RestartPolicy, RetryPolicy, ServeError, Server,

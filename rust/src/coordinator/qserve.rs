@@ -1,0 +1,502 @@
+//! Compressed-domain panel serving: a PJRT-free [`EngineCore`] whose
+//! per-task weight is one 2-D `[seq, vocab]` head matrix held as decoded
+//! GEMM panels — *quantized* panels ([`kernel::PackedBQ`], fed to the int8
+//! [`kernel::gemm_q`]) when the artifact frame's codec and scale-block
+//! layout admit the compressed-domain kernel, f32 panels
+//! ([`kernel::PackedB`]) otherwise. Frames go rANS → panels with no f32
+//! weight materialization on the quantized path; the f32 path is retained
+//! as the oracle and fallback, selected per frame by codec tag (see
+//! `codec::container::decode_frame_into_panels`).
+//!
+//! Panels arrive two ways, mirroring the PJRT engine's Merged mode:
+//!
+//! * **warm**: [`EngineCore::preload`] (via `Server::preload`) ingests a
+//!   whole `task{t}/w`-framed warm artifact in parallel, each shard
+//!   keeping only the tasks it owns — the supervisor re-runs this after a
+//!   crash, so a killed shard comes back with its panels re-filled;
+//! * **cold**: a request for a task with no panels triggers a cold fill
+//!   from the configured artifact inside `run_batch`, counted in
+//!   `ServeStats::cache_misses` exactly like a Merged-mode cold
+//!   reconstruction (quantized fills also count `native_fills` — they run
+//!   on the native int8 GEMM).
+//!
+//! A batch executes as `logits[m, vocab] = tokens[m, seq] · W[seq, vocab]`
+//! with the token values as f32 features, then per-row argmax. On the
+//! quantized path the activations are absmax-quantized per scale group
+//! ([`kernel::quantize_a`]) so the whole product runs in int8×int8 → i32;
+//! `force_f32` pins every task to the f32 oracle instead, which is how
+//! `rust/tests/integration_quant_serving.rs` proves the two paths agree
+//! on every prediction over a live socket.
+//!
+//! This file is on mcnc-lint's `panic-freedom` list: the fill path runs on
+//! live requests, so every fallible step propagates a `Result`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::codec::{self, PackedPanels};
+use crate::coordinator::metrics::ServeStats;
+use crate::coordinator::router::Batch;
+use crate::coordinator::shard::EngineCore;
+use crate::coordinator::warm::{self, WarmStats};
+use crate::mcnc::kernel;
+use crate::obs;
+
+/// The single adapter slot a panel-served task carries: its head matrix,
+/// framed as `task{t}/w` in warm artifacts.
+pub const WEIGHT_SLOT: &str = "w";
+
+/// Configuration for [`QuantEngine`] — one value shared by every shard's
+/// factory (see `Server::start_with`).
+#[derive(Debug, Clone)]
+pub struct QServeCfg {
+    /// Adapter-family kind; warm artifacts must carry a matching
+    /// `{kind}_warm` container entry (the same convention as the PJRT
+    /// engine's warm path).
+    pub kind: String,
+    /// Tasks served across all shards; shard `s` owns `t % n_shards == s`.
+    pub n_tasks: usize,
+    /// Shard count the task space is split over.
+    pub n_shards: usize,
+    /// Token-sequence length = rows `k` of every task's weight.
+    pub seq: usize,
+    /// Vocabulary size = columns `n` of every task's weight.
+    pub vocab: usize,
+    /// Pin every task to the f32 panel path, even for quantized frames —
+    /// the oracle switch the parity tests flip.
+    pub force_f32: bool,
+    /// Artifact backing cold fills: a request for a task with no panels
+    /// decodes them from here. `None` means preload-only (cold tasks fail
+    /// their batches instead).
+    pub artifact: Option<PathBuf>,
+}
+
+impl QServeCfg {
+    /// A cfg serving `n_tasks` tasks of `[seq, vocab]` heads on one shard,
+    /// quantized path enabled, no cold-fill artifact.
+    pub fn new(kind: &str, n_tasks: usize, seq: usize, vocab: usize) -> QServeCfg {
+        QServeCfg {
+            kind: kind.to_string(),
+            n_tasks,
+            n_shards: 1,
+            seq,
+            vocab,
+            force_f32: false,
+            artifact: None,
+        }
+    }
+}
+
+/// One shard's panel-serving engine. Single-threaded by design (one
+/// engine per shard thread); `Server` fans requests across shards.
+pub struct QuantEngine {
+    cfg: QServeCfg,
+    shard: usize,
+    /// Per-task decoded panels, quantized or f32 per the source frame.
+    panels: HashMap<usize, PackedPanels>,
+    /// This engine's serving counters (merged across shards on stop).
+    pub stats: ServeStats,
+}
+
+impl QuantEngine {
+    /// Build the engine for one shard. Rejects degenerate geometry up
+    /// front so the serving path never sees a zero-sized GEMM.
+    pub fn new(cfg: QServeCfg, shard: usize) -> Result<QuantEngine> {
+        if cfg.seq == 0 || cfg.vocab == 0 {
+            bail!("panel engine needs seq and vocab > 0, got [{}, {}]", cfg.seq, cfg.vocab);
+        }
+        if shard >= cfg.n_shards.max(1) {
+            bail!("shard {shard} out of range for {} shards", cfg.n_shards.max(1));
+        }
+        Ok(QuantEngine { cfg, shard, panels: HashMap::new(), stats: ServeStats::default() })
+    }
+
+    /// Whether this shard owns `task`.
+    fn owned(&self, task: usize) -> bool {
+        task < self.cfg.n_tasks && task % self.cfg.n_shards.max(1) == self.shard
+    }
+
+    /// How many tasks currently have panels resident, and how many of
+    /// those are on the compressed-domain path — the warm/parity tests'
+    /// introspection hook.
+    pub fn resident(&self) -> (usize, usize) {
+        let quant = self.panels.values().filter(|p| p.is_quant()).count();
+        (self.panels.len(), quant)
+    }
+
+    /// Panel geometry must match the configured head shape; decode paths
+    /// can't check this (they see only the frame), so install does.
+    fn validate_panels(&self, task: usize, p: &PackedPanels) -> Result<()> {
+        if p.k() != self.cfg.seq || p.n() != self.cfg.vocab {
+            bail!(
+                "task {task}: weight is [{}, {}], engine serves [{}, {}] heads",
+                p.k(),
+                p.n(),
+                self.cfg.seq,
+                self.cfg.vocab
+            );
+        }
+        Ok(())
+    }
+
+    /// Decode one cold task's panels from the configured artifact. Pays a
+    /// full container scan (every frame CRC-checked, only the wanted one
+    /// entropy-decoded) — the cold path a preload exists to avoid.
+    fn cold_fill(&self, task: usize) -> Result<PackedPanels> {
+        let Some(path) = &self.cfg.artifact else {
+            bail!("task {task} has no panels and no cold-fill artifact is configured");
+        };
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening cold-fill artifact {}", path.display()))?;
+        let mut dec = codec::Decoder::new(std::io::BufReader::new(f))
+            .context("decoding cold-fill artifact")?;
+        if !dec.header().entry.starts_with(&self.cfg.kind) {
+            bail!(
+                "cold-fill artifact is for entry {:?}, this engine serves kind {:?}",
+                dec.header().entry,
+                self.cfg.kind
+            );
+        }
+        let want = warm::frame_name(task, WEIGHT_SLOT);
+        let keep = want.clone();
+        let mut frames = dec.decode_all_panels_filtered_with(
+            crate::util::threadpool::global(),
+            kernel::active(),
+            self.cfg.force_f32,
+            move |name| name == keep,
+        )?;
+        if frames.len() > 1 {
+            bail!("artifact has {} frames named {want:?}", frames.len());
+        }
+        let (_, p, codec) =
+            frames.pop().ok_or_else(|| anyhow!("artifact has no frame {want:?}"))?;
+        self.validate_panels(task, &p)?;
+        obs::count_decoded_frame(codec.name());
+        Ok(p)
+    }
+
+    /// Panels for `task`, filling cold from the artifact if needed; the
+    /// bool says whether this call was a (cache-miss) fill.
+    fn task_panels(&mut self, task: usize) -> Result<(&PackedPanels, bool)> {
+        let filled = if self.panels.contains_key(&task) {
+            false
+        } else {
+            let p = self.cold_fill(task)?;
+            self.panels.insert(task, p);
+            true
+        };
+        let p = self
+            .panels
+            .get(&task)
+            .ok_or_else(|| anyhow!("task {task}: panels missing after fill"))?;
+        Ok((p, filled))
+    }
+}
+
+impl EngineCore for QuantEngine {
+    fn seq(&self) -> usize {
+        self.cfg.seq
+    }
+
+    fn has_task(&self, task: usize) -> bool {
+        self.owned(task)
+    }
+
+    /// One single-task batch: token features × the task head, per-row
+    /// argmax. Quantized panels run the whole product in the compressed
+    /// domain; f32 panels are the oracle path.
+    fn run_batch(&mut self, batch: &Batch) -> Result<Vec<i32>> {
+        if !self.owned(batch.task) {
+            bail!("task {} belongs to another shard, not {}", batch.task, self.shard);
+        }
+        let (k, n) = (self.cfg.seq, self.cfg.vocab);
+        let m = batch.requests.len();
+        let mut a = vec![0.0f32; m * k];
+        for (i, req) in batch.requests.iter().enumerate() {
+            if req.tokens.len() != k {
+                bail!("request {} has {} tokens, engine wants {k}", req.id, req.tokens.len());
+            }
+            for (j, &t) in req.tokens.iter().enumerate() {
+                a[i * k + j] = t as f32;
+            }
+        }
+
+        let (p, filled) = self.task_panels(batch.task)?;
+        let mut c = vec![0.0f32; m * n];
+        let quant = match p {
+            PackedPanels::F32(pb) => {
+                kernel::gemm(&a, m, pb, &mut c);
+                false
+            }
+            PackedPanels::Quant(pq) => {
+                let qa = kernel::quantize_a(&a, m, k, pq.group_rows());
+                kernel::gemm_q(&qa, pq, &mut c);
+                true
+            }
+        };
+        if filled {
+            self.stats.cache_misses += 1;
+            if quant {
+                // a quantized fill is served by the native int8 GEMM, the
+                // compressed-domain analogue of a Merged native fill
+                self.stats.native_fills += 1;
+            }
+        } else {
+            self.stats.cache_hits += 1;
+        }
+
+        let preds = (0..m)
+            .map(|i| {
+                let row = &c[i * n..(i + 1) * n];
+                let mut best = (f32::MIN, 0i32);
+                for (j, &v) in row.iter().enumerate() {
+                    if v > best.0 {
+                        best = (v, j as i32);
+                    }
+                }
+                best.1
+            })
+            .collect();
+        self.stats.batches += 1;
+        self.stats.rows += m as u64;
+        Ok(preds)
+    }
+
+    fn stats_mut(&mut self) -> &mut ServeStats {
+        &mut self.stats
+    }
+
+    fn into_stats(self) -> ServeStats {
+        self.stats
+    }
+
+    /// Warm-start every owned task's panels from a `task{t}/w`-framed
+    /// warm artifact: frames decode in parallel straight to panels (the
+    /// quantized ones never touching f32), foreign frames are CRC-checked
+    /// and skipped. `WarmStats::quantized` counts the frames that landed
+    /// on the compressed-domain path; `prefilled` equals `installed`
+    /// because panels *are* the serving form — the first request per
+    /// warmed task is a cache hit.
+    fn preload(&mut self, artifact: &Path) -> Result<WarmStats> {
+        let f = std::fs::File::open(artifact).with_context(|| {
+            format!("opening warm-start artifact {}", artifact.display())
+        })?;
+        let mut dec = codec::Decoder::new(std::io::BufReader::new(f))
+            .context("decoding warm-start artifact")?;
+        if !dec.header().entry.starts_with(&self.cfg.kind) {
+            bail!(
+                "warm artifact is for entry {:?}, this engine serves kind {:?}",
+                dec.header().entry,
+                self.cfg.kind
+            );
+        }
+        let n_shards = self.cfg.n_shards.max(1);
+        let shard = self.shard;
+        // misnamed frames pass the filter so the naming error below stays
+        // precise instead of frames vanishing silently
+        let frames = dec.decode_all_panels_filtered_with(
+            crate::util::threadpool::global(),
+            kernel::active(),
+            self.cfg.force_f32,
+            move |name| match warm::parse_frame_name(name) {
+                Some((task, _)) => task % n_shards == shard,
+                None => true,
+            },
+        )?;
+        let skipped = dec.frames_seen() - frames.len();
+        // validate everything before the first install so a bad artifact
+        // fails the preload without leaving the shard half-warmed
+        let mut owned = Vec::with_capacity(frames.len());
+        for (name, p, codec) in frames {
+            let Some((task, slot)) = warm::parse_frame_name(&name) else {
+                bail!("warm artifact frame {name:?} is not task{{t}}/{{slot}}-named");
+            };
+            if slot != WEIGHT_SLOT {
+                bail!(
+                    "warm artifact frame {name:?}: the panel engine serves single-slot \
+                     {WEIGHT_SLOT:?} adapters"
+                );
+            }
+            if task >= self.cfg.n_tasks {
+                bail!(
+                    "warm artifact task {task} out of range (server has {} tasks)",
+                    self.cfg.n_tasks
+                );
+            }
+            self.validate_panels(task, &p)?;
+            owned.push((task, p, codec));
+        }
+        let mut stats = WarmStats { skipped, ..WarmStats::default() };
+        for (task, p, codec) in owned {
+            obs::count_decoded_frame(codec.name());
+            if p.is_quant() {
+                stats.quantized += 1;
+            }
+            self.panels.insert(task, p);
+            stats.installed += 1;
+        }
+        stats.prefilled = stats.installed;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Codec;
+    use crate::coordinator::router::Request;
+    use crate::tensor::Tensor;
+    use std::time::Instant;
+
+    /// An artifact of `n_tasks` heads where task `t`'s weight steers every
+    /// prediction to class `t % vocab` by a wide margin (dominant column 8.0,
+    /// noise ±0.25 — far beyond int8 quantization error for these shapes).
+    fn fixture_artifact(n_tasks: usize, seq: usize, vocab: usize, codec: Codec) -> Vec<u8> {
+        let mut adapters = Vec::new();
+        for t in 0..n_tasks {
+            let target = t % vocab;
+            let mut w = vec![0.0f32; seq * vocab];
+            for kk in 0..seq {
+                for j in 0..vocab {
+                    // deterministic small noise in [-0.25, 0.25]
+                    let h = ((kk * 31 + j * 17 + t * 7) % 101) as f32 / 100.0 - 0.5;
+                    w[kk * vocab + j] = if j == target { 8.0 } else { h * 0.5 };
+                }
+            }
+            let tensor = Tensor::from_f32(w, &[seq, vocab]).unwrap();
+            adapters.push((t, vec![(WEIGHT_SLOT.to_string(), tensor)]));
+        }
+        let mut bytes = Vec::new();
+        warm::write_artifact(&mut bytes, "panelhead", 7, codec, &adapters).unwrap();
+        bytes
+    }
+
+    fn write_tmp(bytes: &[u8], name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("mcnc_qserve_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{name}_{}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    fn req(id: u64, task: usize, tokens: Vec<i32>) -> Request {
+        Request { id, task, tokens, enqueued: Instant::now(), deadline: None }
+    }
+
+    fn batch_of(task: usize, reqs: Vec<Request>) -> Batch {
+        Batch { task, requests: reqs }
+    }
+
+    #[test]
+    fn preload_stores_quantized_panels_and_serves_expected_argmax() {
+        let (n_tasks, seq, vocab) = (4usize, 8usize, 16usize);
+        let bytes = fixture_artifact(n_tasks, seq, vocab, Codec::Int8 { block: vocab });
+        let path = write_tmp(&bytes, "warm_int8");
+        let mut cfg = QServeCfg::new("panelhead", n_tasks, seq, vocab);
+        cfg.artifact = Some(path.clone());
+        let mut eng = QuantEngine::new(cfg, 0).unwrap();
+        let ws = eng.preload(&path).unwrap();
+        assert_eq!(ws.installed, n_tasks);
+        assert_eq!(ws.prefilled, n_tasks);
+        assert_eq!(ws.quantized, n_tasks, "int8 frames must stay compressed");
+        assert_eq!(eng.resident(), (n_tasks, n_tasks));
+        for t in 0..n_tasks {
+            let tokens: Vec<i32> = (0..seq).map(|j| (j % 5) as i32).collect();
+            let preds = eng.run_batch(&batch_of(t, vec![req(1, t, tokens)])).unwrap();
+            assert_eq!(preds, vec![(t % vocab) as i32], "task {t}");
+        }
+        assert_eq!(eng.stats.cache_hits, n_tasks as u64, "warm tasks never cold-fill");
+        assert_eq!(eng.stats.cache_misses, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cold_fill_quantized_vs_forced_f32_agree_on_argmax() {
+        let (n_tasks, seq, vocab) = (3usize, 8usize, 12usize);
+        let bytes = fixture_artifact(n_tasks, seq, vocab, Codec::Int8 { block: vocab });
+        let path = write_tmp(&bytes, "cold_int8");
+        let mk = |force_f32: bool| {
+            let mut cfg = QServeCfg::new("panelhead", n_tasks, seq, vocab);
+            cfg.artifact = Some(path.clone());
+            cfg.force_f32 = force_f32;
+            QuantEngine::new(cfg, 0).unwrap()
+        };
+        let mut q = mk(false);
+        let mut f = mk(true);
+        for t in 0..n_tasks {
+            for r in 0..3u64 {
+                let tokens: Vec<i32> =
+                    (0..seq).map(|j| ((j as u64 + r * 3 + t as u64) % 4) as i32).collect();
+                let b = batch_of(t, vec![req(r, t, tokens.clone())]);
+                assert_eq!(
+                    q.run_batch(&b).unwrap(),
+                    f.run_batch(&batch_of(t, vec![req(r, t, tokens)])).unwrap(),
+                    "task {t} req {r}"
+                );
+            }
+        }
+        assert_eq!(q.stats.cache_misses, n_tasks as u64, "one cold fill per task");
+        assert_eq!(q.stats.native_fills, n_tasks as u64, "quantized fills are native");
+        assert_eq!(q.resident(), (n_tasks, n_tasks));
+        assert_eq!(f.stats.native_fills, 0, "forced-f32 fills are not native");
+        assert_eq!(f.resident().1, 0, "forced-f32 engine holds no quantized panels");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn preload_rejects_bad_kind_shape_and_slot() {
+        let (n_tasks, seq, vocab) = (2usize, 4usize, 8usize);
+        let bytes = fixture_artifact(n_tasks, seq, vocab, Codec::Int8 { block: vocab });
+        let path = write_tmp(&bytes, "rejects");
+        // wrong kind
+        let mut eng = QuantEngine::new(QServeCfg::new("otherkind", n_tasks, seq, vocab), 0).unwrap();
+        let err = eng.preload(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("serves kind"), "{err:#}");
+        // wrong geometry
+        let mut eng =
+            QuantEngine::new(QServeCfg::new("panelhead", n_tasks, seq + 1, vocab), 0).unwrap();
+        let err = eng.preload(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("heads"), "{err:#}");
+        assert_eq!(eng.resident(), (0, 0), "failed preload must not half-install");
+        // wrong slot name
+        let w = Tensor::from_f32(vec![0.5; seq * vocab], &[seq, vocab]).unwrap();
+        let mut bytes = Vec::new();
+        warm::write_artifact(
+            &mut bytes,
+            "panelhead",
+            7,
+            Codec::Lossless,
+            &[(0, vec![("theta".to_string(), w)])],
+        )
+        .unwrap();
+        let p2 = write_tmp(&bytes, "badslot");
+        let mut eng = QuantEngine::new(QServeCfg::new("panelhead", 1, seq, vocab), 0).unwrap();
+        let err = eng.preload(&p2).unwrap_err();
+        assert!(format!("{err:#}").contains("single-slot"), "{err:#}");
+        // cold fill with no artifact configured errors, never panics
+        let mut eng = QuantEngine::new(QServeCfg::new("panelhead", 1, seq, vocab), 0).unwrap();
+        let err = eng.run_batch(&batch_of(0, vec![req(0, 0, vec![0; seq])])).unwrap_err();
+        assert!(format!("{err:#}").contains("no cold-fill artifact"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&p2);
+    }
+
+    #[test]
+    fn sharded_preload_keeps_only_owned_tasks() {
+        let (n_tasks, seq, vocab) = (4usize, 4usize, 8usize);
+        let bytes = fixture_artifact(n_tasks, seq, vocab, Codec::Int4 { block: vocab });
+        let path = write_tmp(&bytes, "sharded");
+        let mut cfg = QServeCfg::new("panelhead", n_tasks, seq, vocab);
+        cfg.n_shards = 2;
+        let mut eng = QuantEngine::new(cfg, 1).unwrap();
+        let ws = eng.preload(&path).unwrap();
+        assert_eq!(ws.installed, 2, "shard 1 owns tasks 1 and 3");
+        assert_eq!(ws.skipped, 2);
+        assert_eq!(ws.quantized, 2, "int4 frames stay compressed too");
+        assert!(eng.has_task(1) && eng.has_task(3));
+        assert!(!eng.has_task(0) && !eng.has_task(2));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -812,6 +812,7 @@ impl Engine {
         for (_, _, codec) in &frames {
             obs::count_decoded_frame(codec.name());
         }
+        let quantized = frames.iter().filter(|(_, _, c)| !c.is_lossless()).count();
         let (owned, _) = warm::group_for_shard(frames, &self.trainable_specs, shard, n_shards)?;
         // validate every owned task (range + manifest shapes — the same
         // checks install_adapter runs) *before* the first install, so a
@@ -827,7 +828,7 @@ impl Engine {
             validate_adapter(&self.trainable_specs, trainables)
                 .with_context(|| format!("warm artifact task {task}"))?;
         }
-        let mut stats = WarmStats { skipped, ..WarmStats::default() };
+        let mut stats = WarmStats { skipped, quantized, ..WarmStats::default() };
         let mut warmed_tasks = Vec::new();
         for (task, trainables) in owned {
             self.install_adapter(task, trainables)?;

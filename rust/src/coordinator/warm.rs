@@ -59,6 +59,12 @@ pub struct WarmStats {
     pub prefilled: usize,
     /// Frames skipped because another shard owns their task.
     pub skipped: usize,
+    /// Frames that arrived quantized and stayed in the compressed domain
+    /// end to end: the panel-serving engine counts the frames it ingested
+    /// as `PackedBQ` (int8 GEMM operands, no f32 weight materialized);
+    /// the PJRT engine counts quantized-codec frames it decoded. Zero on
+    /// lossless artifacts or when the f32 oracle path is forced.
+    pub quantized: usize,
 }
 
 impl WarmStats {
@@ -67,6 +73,7 @@ impl WarmStats {
         self.installed += other.installed;
         self.prefilled += other.prefilled;
         self.skipped += other.skipped;
+        self.quantized += other.quantized;
     }
 }
 

@@ -10,8 +10,15 @@
 //!
 //! Tests and benches that need *both* paths in one process bypass the
 //! cached probe through the explicit `*_for` entry points in the parent
-//! module (`pack_b_for`, `gemv_for`, …) — that is the dispatch override
-//! hook, and it keeps the seam exercised even on scalar-only hosts.
+//! module (`pack_b_for`, `pack_bq_for`, `gemv_for`, …) — that is the
+//! dispatch override hook, and it keeps the seam exercised even on
+//! scalar-only hosts.
+//!
+//! One probe covers both kernel families: the int8 compressed-domain
+//! kernels (`x86_i8`/`neon_i8`) need no features beyond what the f32
+//! probe already established (AVX2's `maddubs`/`madd`, baseline NEON
+//! widening multiplies — deliberately not the optional `dotprod`
+//! extension), so an `Isa` means the same thing on either path.
 
 use std::sync::OnceLock;
 

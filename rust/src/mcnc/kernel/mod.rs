@@ -31,23 +31,42 @@
 //! the same order but fuse each multiply-add (one rounding per term), so
 //! they agree with scalar to a K-scaled ulp bound — pinned by the parity
 //! properties in `rust/tests/prop_generator_gemm.rs`.
+//!
+//! **Compressed-domain path.** int8/int4 artifacts can skip f32
+//! materialization entirely: [`PackedBQ`] keeps the rANS-decoded symbols as
+//! centered-i8 panels (per-ISA `ku` k-interleave, 8 columns per panel),
+//! [`quantize_a`] maps activations per (row, k-group) to symmetric
+//! `[-127, 127]` symbols, and [`gemm_q`] multiplies in integers: an exact
+//! i32 dot product per scale group, rescaled to f32 once at the group edge
+//! as `acc += (Σ qa·qb) as f32 * (sa·sb)` — convert, multiply, add, never
+//! fused. The integer part is order-free and the float edge sequence is
+//! fixed, so *every* ISA is bit-identical on this path: the scalar int8
+//! kernel is the cross-ISA oracle, with AVX2 (`maddubs` over
+//! `|b|`/`sign(b)·a`) and NEON (`vmull_s8` + `vpadalq_s16`) kernels pinned
+//! to it by `rust/tests/prop_int8_gemm.rs`, which also pins the analytic
+//! error bound of the whole path against the f32 oracle.
 
 pub mod dispatch;
 #[cfg(target_arch = "aarch64")]
 mod neon;
+#[cfg(target_arch = "aarch64")]
+mod neon_i8;
 mod scalar;
 #[cfg(target_arch = "x86_64")]
 mod x86;
+#[cfg(target_arch = "x86_64")]
+mod x86_i8;
 
 pub use dispatch::{active, available, Isa};
 
-/// Per-ISA dispatch counters — `mcnc_kernel_gemm_total{isa}` and
-/// `mcnc_kernel_gemv_total{isa}` — bound lazily in the obs registry the
-/// first time a kernel dispatches. After binding, each dispatch costs one
-/// relaxed atomic add; the counters live here (not in `dispatch`) so the
-/// increment sits next to the `match` that actually picks the kernel.
-fn dispatch_counters() -> &'static [[std::sync::Arc<crate::obs::Counter>; 3]; 2] {
-    static COUNTERS: std::sync::OnceLock<[[std::sync::Arc<crate::obs::Counter>; 3]; 2]> =
+/// Per-ISA dispatch counters — `mcnc_kernel_gemm_total{isa}`,
+/// `mcnc_kernel_gemv_total{isa}` and `mcnc_kernel_gemm_q_total{isa}` —
+/// bound lazily in the obs registry the first time a kernel dispatches.
+/// After binding, each dispatch costs one relaxed atomic add; the counters
+/// live here (not in `dispatch`) so the increment sits next to the `match`
+/// that actually picks the kernel.
+fn dispatch_counters() -> &'static [[std::sync::Arc<crate::obs::Counter>; 3]; 3] {
+    static COUNTERS: std::sync::OnceLock<[[std::sync::Arc<crate::obs::Counter>; 3]; 3]> =
         std::sync::OnceLock::new();
     COUNTERS.get_or_init(|| {
         let r = crate::obs::registry();
@@ -55,12 +74,17 @@ fn dispatch_counters() -> &'static [[std::sync::Arc<crate::obs::Counter>; 3]; 2]
             [Isa::Scalar, Isa::Avx2, Isa::Neon]
                 .map(|isa| r.counter(name, &[("isa", isa.name())]))
         };
-        [bind("mcnc_kernel_gemm_total"), bind("mcnc_kernel_gemv_total")]
+        [
+            bind("mcnc_kernel_gemm_total"),
+            bind("mcnc_kernel_gemv_total"),
+            bind("mcnc_kernel_gemm_q_total"),
+        ]
     })
 }
 
 const OP_GEMM: usize = 0;
 const OP_GEMV: usize = 1;
+const OP_GEMM_Q: usize = 2;
 
 fn count_dispatch(op: usize, isa: Isa) {
     let ix = match isa {
@@ -373,6 +397,409 @@ pub fn quantize_block_for(isa: Isa, chunk: &[f32], scale: f32, bits: u32, out: &
     }
 }
 
+/// Panel width of every int8 kernel. Unlike f32 (where AVX2 widens to
+/// NR = 16), eight i32 lanes fill a whole ymm/q pair, so the quantized
+/// layout shares one panel width across ISAs; only the k-interleave
+/// ([`PackedBQ::ku`]) differs.
+const NR_Q: usize = 8;
+
+/// k-rows interleaved per step in an ISA's quantized panel layout — the
+/// unit one SIMD load covers (AVX2 reads 8 columns × 4 k's per ymm, NEON
+/// 8 columns × 2 k's per q-register). The scalar kernel can read *any*
+/// interleave; its own canonical layout uses the NEON-shaped ku = 2.
+fn ku_of(isa: Isa) -> usize {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86_i8::KU,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon_i8::KU,
+        _ => scalar::KU_Q,
+    }
+}
+
+/// Rows-per-scale-group admission rule for the fused quantized-panel path.
+///
+/// MCNC2 scale blocks cover `block` consecutive elements of the flattened
+/// row-major `[k, n]` weight. Integer accumulation needs one scalar scale
+/// per (k-range × all columns) group, so the fused path admits exactly the
+/// shapes where blocks tile whole rows: `block % n == 0` (`block/n` rows
+/// per group) or a single block covering the whole tensor. Anything else
+/// errors — callers fall back to dequantize + [`pack_b_for`].
+fn qgroup_rows(k: usize, n: usize, block: usize) -> anyhow::Result<usize> {
+    if k == 0 || n == 0 {
+        return Ok(1);
+    }
+    anyhow::ensure!(block > 0, "scale block size 0 for a {k}x{n} weight");
+    if block % n == 0 {
+        Ok(block / n)
+    } else if k * n <= block {
+        Ok(k)
+    } else {
+        anyhow::bail!(
+            "scale block {block} straddles rows of a {k}x{n} weight; the \
+             quantized-panel path needs block % n == 0 or one block covering \
+             the whole tensor"
+        )
+    }
+}
+
+/// Can a `[k, n]` weight whose scale blocks cover `block` flattened
+/// elements be packed into [`PackedBQ`]'s row-group layout? Exactly the
+/// `qgroup_rows` admission rule above, exposed so a cold-fill consumer can
+/// peek a frame's shape + block and pick the compressed-domain path or
+/// the f32 fallback *before* committing to either decode.
+pub fn quant_panels_admissible(k: usize, n: usize, block: usize) -> bool {
+    qgroup_rows(k, n, block).is_ok()
+}
+
+/// `B [K, N]` as *quantized* panels: the wire's biased symbols, centered to
+/// i8, in ⌈N/8⌉ panels of `kpad × 8` with a per-ISA `ku` k-interleave
+/// (slot `(kk/ku)·8·ku + (j%8)·ku + kk%ku` inside a panel), plus the
+/// per-group f32 scales. `k` is zero-padded to a `ku` multiple — a 0
+/// symbol is exactly 0 after centering, so pads add nothing to any integer
+/// sum. Like [`PackedB`], the struct records the layout ISA so packing and
+/// compute can never disagree.
+#[derive(Debug, Clone)]
+pub struct PackedBQ {
+    /// Rows of the logical `[k, n]` weight.
+    pub k: usize,
+    /// Columns of the logical `[k, n]` weight.
+    pub n: usize,
+    nr: usize,
+    ku: usize,
+    kpad: usize,
+    isa: Isa,
+    bits: u32,
+    kg: usize,
+    n_groups: usize,
+    scales: Vec<f32>,
+    panels: Vec<i8>,
+}
+
+impl PackedBQ {
+    /// The ISA whose panel layout (and preferred kernel) this B uses.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Panel width (always 8 — shared across ISAs on the int8 path).
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// k-interleave of the layout (AVX2 4, NEON/scalar 2).
+    pub fn ku(&self) -> usize {
+        self.ku
+    }
+
+    /// Symbol width in bits of the source quantization (2..=8).
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// k-rows per scale group: `scales()[g]` covers rows
+    /// `g·group_rows() ..` of the weight, across all columns.
+    pub fn group_rows(&self) -> usize {
+        self.kg
+    }
+
+    /// Per-group dequantization scales (`k.div_ceil(group_rows())` of
+    /// them; 0.0 marks an all-zero group).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Raw panel storage (centered i8 symbols in the interleaved layout).
+    /// Exposed so consumers that built a `PackedBQ` two ways (fused
+    /// decode→pack vs [`pack_bq_for`]) can assert the layouts agree.
+    pub fn panels(&self) -> &[i8] {
+        &self.panels
+    }
+
+    /// Bytes held (symbol panels + scales) — the compressed-domain
+    /// footprint, ~4× smaller than the equivalent [`PackedB`].
+    pub fn size_bytes(&self) -> usize {
+        self.panels.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Incremental [`PackedBQ`] construction from a row-major *symbol* stream —
+/// the fused decode→pack path for quantized frames, mirroring
+/// [`PackedBBuilder`] but skipping dequantization entirely: rANS-decoded
+/// wire symbols go straight into i8 panel slots and no f32 weight buffer
+/// ever exists.
+///
+/// Scales arrive up front (the MCNC2 payload stores them before the symbol
+/// section); [`PackedBQBuilder::push`] must then be called exactly `k * n`
+/// times in row-major order and [`PackedBQBuilder::finish`] checks the
+/// count. Construction errors when the scale blocks straddle rows (see
+/// [`PackedBQ`]'s layout rule) — callers fall back to the f32 path.
+pub struct PackedBQBuilder {
+    k: usize,
+    n: usize,
+    ku: usize,
+    kpad: usize,
+    isa: Isa,
+    bits: u32,
+    kg: usize,
+    n_groups: usize,
+    bias: i32,
+    scales: Vec<f32>,
+    panels: Vec<i8>,
+    filled: usize,
+}
+
+impl PackedBQBuilder {
+    /// Builder targeting the process-wide ISA's quantized panel layout.
+    pub fn new(
+        k: usize,
+        n: usize,
+        bits: u32,
+        block: usize,
+        scales: Vec<f32>,
+    ) -> anyhow::Result<PackedBQBuilder> {
+        PackedBQBuilder::new_for(dispatch::active(), k, n, bits, block, scales)
+    }
+
+    /// Builder for an explicit ISA (degrades to scalar if unavailable,
+    /// exactly like [`pack_b_for`]). `block` is the wire quantizer's
+    /// flattened block size; `scales` its per-block scales. Panels start
+    /// zero-filled, so neither the ku-padding of k nor the 8-padding of
+    /// the last panel needs a separate pass.
+    pub fn new_for(
+        isa: Isa,
+        k: usize,
+        n: usize,
+        bits: u32,
+        block: usize,
+        scales: Vec<f32>,
+    ) -> anyhow::Result<PackedBQBuilder> {
+        anyhow::ensure!((2..=8).contains(&bits), "symbol width {bits} outside 2..=8 bits");
+        let isa = dispatch::clamp(isa);
+        let ku = ku_of(isa);
+        let kg = qgroup_rows(k, n, block)?;
+        let n_groups = if k * n == 0 { 0 } else { k.div_ceil(kg) };
+        anyhow::ensure!(
+            scales.len() == n_groups,
+            "{} scales for {n_groups} row groups of a {k}x{n} weight (block {block})",
+            scales.len()
+        );
+        let kpad = k.div_ceil(ku) * ku;
+        let np = n.div_ceil(NR_Q).max(1);
+        Ok(PackedBQBuilder {
+            k,
+            n,
+            ku,
+            kpad,
+            isa,
+            bits,
+            kg,
+            n_groups,
+            bias: 1i32 << (bits - 1),
+            scales,
+            panels: vec![0i8; np * kpad * NR_Q],
+            filled: 0,
+        })
+    }
+
+    /// Append the next row-major *biased* symbol of B (row `i/n`, column
+    /// `i%n` for the `i`-th call), centering it and writing it straight
+    /// into its interleaved panel slot.
+    pub fn push(&mut self, sym: u8) {
+        assert!(
+            self.filled < self.k * self.n,
+            "PackedBQBuilder overfilled past {}x{}",
+            self.k,
+            self.n
+        );
+        debug_assert!((sym as i32) < (1i32 << self.bits), "symbol {sym} outside the alphabet");
+        let (kk, j) = (self.filled / self.n, self.filled % self.n);
+        let slot = (j / NR_Q) * self.kpad * NR_Q
+            + (kk / self.ku) * (NR_Q * self.ku)
+            + (j % NR_Q) * self.ku
+            + (kk % self.ku);
+        self.panels[slot] = (sym as i32 - self.bias) as i8;
+        self.filled += 1;
+    }
+
+    /// Number of symbols pushed so far (of the `k * n` required).
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// Seal the builder into a [`PackedBQ`]; errors if the symbol count is
+    /// short (a truncated producer must surface as `Err`, not a silently
+    /// zero-padded weight panel).
+    pub fn finish(self) -> anyhow::Result<PackedBQ> {
+        if self.filled != self.k * self.n {
+            anyhow::bail!(
+                "PackedBQBuilder got {} of {} symbols for {}x{}",
+                self.filled,
+                self.k * self.n,
+                self.k,
+                self.n
+            );
+        }
+        Ok(PackedBQ {
+            k: self.k,
+            n: self.n,
+            nr: NR_Q,
+            ku: self.ku,
+            kpad: self.kpad,
+            isa: self.isa,
+            bits: self.bits,
+            kg: self.kg,
+            n_groups: self.n_groups,
+            scales: self.scales,
+            panels: self.panels,
+        })
+    }
+}
+
+/// Pack the quantized form of row-major `B [k, n]` — per-block `scales`
+/// plus biased `symbols`, exactly as `codec::quantizer::Quantized` stores
+/// them — into quantized panels for the process-wide ISA.
+pub fn pack_bq(
+    k: usize,
+    n: usize,
+    bits: u32,
+    block: usize,
+    scales: &[f32],
+    symbols: &[u8],
+) -> anyhow::Result<PackedBQ> {
+    pack_bq_for(dispatch::active(), k, n, bits, block, scales, symbols)
+}
+
+/// [`pack_bq`] for an explicit ISA (degrades to scalar if unavailable —
+/// check `.isa()` on the result). Errors when the scale blocks straddle
+/// rows of the weight; see the layout rule on [`PackedBQ`].
+pub fn pack_bq_for(
+    isa: Isa,
+    k: usize,
+    n: usize,
+    bits: u32,
+    block: usize,
+    scales: &[f32],
+    symbols: &[u8],
+) -> anyhow::Result<PackedBQ> {
+    anyhow::ensure!(symbols.len() == k * n, "{} symbols for a {k}x{n} weight", symbols.len());
+    let mut b = PackedBQBuilder::new_for(isa, k, n, bits, block, scales.to_vec())?;
+    for &s in symbols {
+        b.push(s);
+    }
+    b.finish()
+}
+
+/// Activations quantized for [`gemm_q`]: per (row, k-group) symmetric
+/// absmax int8. Symbols stay in `[-127, 127]` — never −128, so the AVX2
+/// sign trick cannot overflow — with one f32 scale `sa = absmax/127` per
+/// group, and rows zero-padded to a multiple of 4 so every ISA's
+/// interleave can over-read. The scan is deliberately scalar shared code,
+/// identical on every host, which is one half of what keeps
+/// dispatched-vs-scalar [`gemm_q`] bit-exact.
+#[derive(Debug, Clone)]
+pub struct QuantA {
+    /// Rows (batch dimension).
+    pub m: usize,
+    /// Reduction length (must equal the consumed panel's `k`).
+    pub k: usize,
+    kpad: usize,
+    kg: usize,
+    n_groups: usize,
+    syms: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantA {
+    /// k-rows per scale group (must match the consumed panel's).
+    pub fn group_rows(&self) -> usize {
+        self.kg
+    }
+
+    /// Bytes held (symbols + scales).
+    pub fn size_bytes(&self) -> usize {
+        self.syms.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Quantize row-major `a [m, k]` per (row, `kg`-row k-group) for
+/// [`gemm_q`]. `kg` must be the consuming panel's [`PackedBQ::group_rows`]
+/// so A-group and B-group boundaries coincide. NaN quantizes to symbol 0;
+/// an all-zero (or all-NaN, or underflowing-denormal) group gets scale 0.0
+/// and contributes an exact 0. A group containing ±inf gets an inf scale,
+/// which surfaces as NaN/inf output downstream — same contract as the f32
+/// path, where non-finite inputs produce non-finite outputs.
+pub fn quantize_a(a: &[f32], m: usize, k: usize, kg: usize) -> QuantA {
+    assert!(a.len() >= m * k, "A smaller than {m}x{k}");
+    let kg = kg.max(1);
+    let n_groups = if k == 0 { 0 } else { k.div_ceil(kg) };
+    let kpad = k.div_ceil(4) * 4;
+    let mut syms = vec![0i8; m * kpad];
+    let mut scales = vec![0.0f32; m * n_groups];
+    for i in 0..m {
+        let row = &a[i * k..i * k + k];
+        for g in 0..n_groups {
+            let k0 = g * kg;
+            let k1 = (k0 + kg).min(k);
+            let am = scalar::absmax(&row[k0..k1]);
+            let sa = am / 127.0;
+            if sa == 0.0 {
+                // absmax 0 (or a denormal that underflowed the division):
+                // scale stays 0.0 and the symbols stay 0 — the group is an
+                // exact zero contribution
+                continue;
+            }
+            scales[i * n_groups + g] = sa;
+            for (kk, &v) in row[k0..k1].iter().enumerate() {
+                let q = (v / sa).round().clamp(-127.0, 127.0) as i32;
+                syms[i * kpad + k0 + kk] = q as i8;
+            }
+        }
+    }
+    QuantA { m, k, kpad, kg, n_groups, syms, scales }
+}
+
+/// `C[M, N] = A · B` computed in the compressed domain (C overwritten):
+/// per scale group an exact i32 dot product of int8 symbols, rescaled to
+/// f32 once at the group edge — `acc += (Σ qa·qb) as f32 * (sa·sb)`,
+/// convert / multiply / add, never fused. The integer sums are order-free
+/// and the float edge sequence is fixed, so the result is bit-identical on
+/// every ISA; the scalar kernel is the oracle (`rust/tests/
+/// prop_int8_gemm.rs` pins parity and the analytic bound vs the f32 path).
+///
+/// `qa` must come from [`quantize_a`] with `kg == b.group_rows()` and the
+/// same `k`. SIMD kernels additionally need the group length to be a `ku`
+/// multiple; other admitted shapes silently run the scalar kernel on the
+/// same panels (still bit-identical — it reads any interleave).
+pub fn gemm_q(qa: &QuantA, b: &PackedBQ, c: &mut [f32]) {
+    assert_eq!(qa.k, b.k, "A quantized for k={} but panels have k={}", qa.k, b.k);
+    assert_eq!(
+        qa.kg, b.kg,
+        "A has {} rows per scale group but the panels have {}",
+        qa.kg, b.kg
+    );
+    assert!(c.len() >= qa.m * b.n, "C smaller than {}x{}", qa.m, b.n);
+    // exact i32 accumulation: |qa·qb| ≤ 127·128 per term, so the longest
+    // group span must stay under i32::MAX/16256 ≈ 132k terms — far above
+    // any real reduction length; reject loudly rather than overflow
+    let span = if b.n_groups <= 1 { b.kpad } else { b.kg + b.ku };
+    assert!(
+        span <= (i32::MAX as usize) / (127 * 128),
+        "scale group of {span} k-rows would overflow i32 accumulation"
+    );
+    if qa.m == 0 || b.n == 0 {
+        return;
+    }
+    count_dispatch(OP_GEMM_Q, b.isa);
+    match b.isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if b.n_groups <= 1 || b.kg % b.ku == 0 => x86_i8::gemm_q(qa, b, c),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if b.n_groups <= 1 || b.kg % b.ku == 0 => neon_i8::gemm_q(qa, b, c),
+        _ => scalar::gemm_q(qa, b, c),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -646,6 +1073,150 @@ mod tests {
         assert_eq!(absmax(&xs).to_bits(), want.to_bits());
         assert_eq!(absmax(&[]), 0.0);
         assert_eq!(absmax(&[f32::NAN]), 0.0);
+    }
+
+    /// Reference for the quantized-path semantics, written directly from
+    /// the formula in the `gemm_q` docs (row-major symbol arrays, no
+    /// panels): per group an i32 dot product, then
+    /// `acc += sum as f32 * (sa·sb)`.
+    fn naive_q(qa: &QuantA, bsyms: &[u8], bscales: &[f32], b: &PackedBQ) -> Vec<f32> {
+        let (m, k, n) = (qa.m, qa.k, b.n);
+        let bias = 1i32 << (b.bits() - 1);
+        let (kg, ng) = (b.group_rows(), b.n_groups);
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for g in 0..ng {
+                    let (k0, k1) = (g * kg, ((g + 1) * kg).min(k));
+                    let mut sum = 0i32;
+                    for kk in k0..k1 {
+                        let bs = bsyms[kk * n + j] as i32 - bias;
+                        sum += qa.syms[i * qa.kpad + kk] as i32 * bs;
+                    }
+                    let t = qa.scales[i * qa.n_groups + g] * bscales[g];
+                    acc += sum as f32 * t;
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn scalar_gemm_q_matches_reference_formula_bit_for_bit() {
+        // block = n (one row per group), 2n, and whole-tensor single group
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 9, 8), (5, 13, 17), (7, 40, 33)] {
+            let a = Stream::new(11).uniform_f32(m * k, -2.0, 2.0);
+            let w = Stream::new(12).uniform_f32(k * n, -0.7, 0.7);
+            for block in [n, 2 * n, k * n] {
+                let q = crate::codec::quantizer::quantize_with(Isa::Scalar, &w, 8, block);
+                let pb =
+                    pack_bq_for(Isa::Scalar, k, n, 8, block, &q.scales, &q.symbols).unwrap();
+                let qa = quantize_a(&a, m, k, pb.group_rows());
+                let mut c = vec![f32::NAN; m * n];
+                gemm_q(&qa, &pb, &mut c);
+                let want = naive_q(&qa, &q.symbols, &q.scales, &pb);
+                for (x, y) in c.iter().zip(&want) {
+                    assert!(x.to_bits() == y.to_bits(), "({m},{k},{n}) blk {block}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_gemm_q_bit_identical_to_scalar() {
+        // every admitted group shape, incl. one that forces the SIMD
+        // kernels' misaligned-group fallback (kg = 1 with several groups)
+        for &(m, k, n) in &[(1usize, 7usize, 5usize), (4, 16, 16), (6, 33, 23), (13, 40, 50)] {
+            let a = Stream::new(13).uniform_f32(m * k, -3.0, 3.0);
+            let w = Stream::new(14).uniform_f32(k * n, -1.0, 1.0);
+            for (bits, block) in [(8u32, n), (8, 4 * n), (4, 2 * n), (8, k * n)] {
+                let q = crate::codec::quantizer::quantize_with(Isa::Scalar, &w, bits, block);
+                let ps = pack_bq_for(Isa::Scalar, k, n, bits, block, &q.scales, &q.symbols)
+                    .unwrap();
+                let pd = pack_bq(k, n, bits, block, &q.scales, &q.symbols).unwrap();
+                let qa = quantize_a(&a, m, k, ps.group_rows());
+                let mut cs = vec![f32::NAN; m * n];
+                let mut cd = vec![f32::NAN; m * n];
+                gemm_q(&qa, &ps, &mut cs);
+                gemm_q(&qa, &pd, &mut cd);
+                assert_eq!(pd.isa(), active());
+                for (ix, (x, y)) in cs.iter().zip(&cd).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "({m},{k},{n}) bits {bits} blk {block} [{ix}]: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_bq_rejects_row_straddling_blocks_and_bad_counts() {
+        let q = crate::codec::quantizer::quantize(&[0.5f32; 15], 8, 4);
+        // 3x5 weight, block 4: blocks straddle rows → admission error
+        let err = pack_bq_for(Isa::Scalar, 3, 5, 8, 4, &q.scales, &q.symbols).unwrap_err();
+        assert!(format!("{err:#}").contains("straddles"), "{err:#}");
+        // wrong scale count
+        let err = PackedBQBuilder::new_for(Isa::Scalar, 3, 5, 8, 5, vec![1.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("row groups"), "{err:#}");
+        // short fill
+        let mut b = PackedBQBuilder::new_for(Isa::Scalar, 3, 5, 8, 5, vec![1.0; 3]).unwrap();
+        b.push(128);
+        let err = b.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("1 of 15"), "{err:#}");
+    }
+
+    #[test]
+    fn packed_bq_layout_and_degenerate_shapes() {
+        // hand-checked slots for a 3x10 weight on the scalar ku=2 layout:
+        // kpad = 4, two panels; symbol at (kk, j) lands at
+        // (j/8)·32 + (kk/2)·16 + (j%8)·2 + kk%2
+        let (k, n) = (3usize, 10usize);
+        let syms: Vec<u8> = (0..k * n).map(|i| (i % 251) as u8).collect();
+        let scales = vec![1.0f32; 3];
+        let pb = pack_bq_for(Isa::Scalar, k, n, 8, n, &scales, &syms).unwrap();
+        assert_eq!((pb.nr(), pb.ku(), pb.bits()), (8, 2, 8));
+        assert_eq!(pb.panels().len(), 2 * 4 * 8);
+        for kk in 0..k {
+            for j in 0..n {
+                let slot = (j / 8) * 32 + (kk / 2) * 16 + (j % 8) * 2 + kk % 2;
+                let want = syms[kk * n + j] as i32 - 128;
+                assert_eq!(pb.panels()[slot] as i32, want, "({kk},{j})");
+            }
+        }
+        // ku-pad row and last-panel pad columns are zero symbols
+        for j in 0..8 {
+            assert_eq!(pb.panels()[16 + j * 2 + 1], 0, "k-pad at col {j}");
+        }
+        // degenerate shapes are safe end to end
+        for isa in [Isa::Scalar, active()] {
+            let pb = pack_bq_for(isa, 0, 0, 8, 64, &[], &[]).unwrap();
+            gemm_q(&quantize_a(&[], 0, 0, pb.group_rows()), &pb, &mut []);
+            let pb = pack_bq_for(isa, 2, 1, 8, 2, &[0.5], &[130, 126]).unwrap();
+            let qa = quantize_a(&[3.0, 4.0], 1, 2, pb.group_rows());
+            let mut c = [f32::NAN];
+            gemm_q(&qa, &pb, &mut c);
+            // (3·2 + 4·(−2))·(sa·0.5) with sa = 4/127 — small integers,
+            // exact in every path
+            let sa = 4.0f32 / 127.0;
+            let qs = (3.0f32 / sa).round() as i32;
+            let want = ((qs * 2 - 127 * 2) as f32) * (sa * 0.5);
+            assert_eq!(c[0].to_bits(), want.to_bits(), "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn gemm_q_dispatch_is_counted_per_isa() {
+        let ctr = crate::obs::registry()
+            .counter("mcnc_kernel_gemm_q_total", &[("isa", Isa::Scalar.name())]);
+        let before = ctr.get();
+        let pb = pack_bq_for(Isa::Scalar, 2, 1, 8, 2, &[0.1], &[129, 127]).unwrap();
+        let qa = quantize_a(&[1.0, 1.0], 1, 2, pb.group_rows());
+        let mut c = [0.0f32];
+        gemm_q(&qa, &pb, &mut c);
+        assert!(ctr.get() >= before + 1, "scalar gemm_q dispatch not counted");
     }
 
     #[test]

@@ -1,0 +1,106 @@
+//! NEON int8 GEMM microkernel (aarch64): widening-multiply accumulation
+//! over quantized panels, bit-identical to the scalar int8 reference.
+//!
+//! The `sdot` byte-dot instruction needs the optional `dotprod` extension,
+//! so this kernel uses the baseline widening pipeline instead:
+//! `vmull_s8` multiplies signed bytes into exact i16 products (|qa·qb| ≤
+//! 127·128 = 16256, well inside i16), and `vpadalq_s16` folds adjacent
+//! pairs into i32 accumulators — the pairwise add happens *after*
+//! widening, so nothing ever saturates and the per-group sums are exact.
+//!
+//! One 16-byte q-register load covers 8 columns × 2 consecutive k's
+//! ([`KU`] = 2); the matching A pair broadcasts as a single i16. Two i32
+//! accumulators (columns 0–3 / 4–7) per row make the micro-tile. The f32
+//! rescale at each scale-group edge replays the scalar oracle's exact
+//! instruction sequence — `scvtf` convert, multiply, add; never a fused
+//! `vfmaq` — so the kernel is bit-identical to `scalar::gemm_q`, pinned by
+//! `rust/tests/prop_int8_gemm.rs`.
+//!
+//! NEON is architecturally mandatory on aarch64, so `dispatch` enables
+//! this path unconditionally there.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::*;
+
+use super::{PackedBQ, QuantA};
+
+/// k-rows per interleave step: one q-register load covers 8 columns × 2
+/// consecutive k's (`[b(kk..kk+2, j) for j in 0..8]`).
+pub(super) const KU: usize = 2;
+
+/// Micro-tile rows: 8 i32 + 8 f32 q-register accumulators plus the B
+/// halves and per-row temporaries fit easily in 32 registers.
+const MR: usize = 4;
+
+/// `C[M, N] = A · B-panels` over the KU = 2 interleaved layout. Caller
+/// (the `gemm_q` dispatcher) guarantees the group length is a KU multiple
+/// or there is a single group, so every group span covers whole pairs.
+pub(super) fn gemm_q(qa: &QuantA, b: &PackedBQ, c: &mut [f32]) {
+    // SAFETY: NEON is architecturally mandatory on aarch64, where this
+    // module is compiled; struct consistency is the constructors' contract.
+    unsafe { gemm_q_inner(qa, b, c) };
+}
+
+// SAFETY: callers pass structurally consistent `qa`/`b` (the public
+// constructors are the only way to build them): panels hold ⌈n/8⌉ panels
+// of kpad×8 bytes with kpad a KU multiple, so every 16-byte load at pair
+// `kk/2` stays inside its panel; A rows are m × qa.kpad with qa.kpad
+// (k rounded up to 4) ≥ b.kpad (k rounded up to 2), so every 2-byte pair
+// read at `kk` stays inside the row. Stores are masked to the live mr×w
+// region of `c` (len ≥ m·n, checked by the dispatcher). NEON itself is
+// baseline on aarch64.
+#[target_feature(enable = "neon")]
+unsafe fn gemm_q_inner(qa: &QuantA, b: &PackedBQ, c: &mut [f32]) {
+    let (m, n) = (qa.m, b.n);
+    let (nr, kpad, kg, ng) = (b.nr, b.kpad, b.kg, b.n_groups);
+    debug_assert!(nr == super::NR_Q && b.ku == KU && kpad <= qa.kpad);
+    let np = n.div_ceil(nr);
+    for p in 0..np {
+        let j0 = p * nr;
+        let w = nr.min(n - j0);
+        let panel = b.panels.as_ptr().add(p * kpad * nr);
+        let mut i = 0usize;
+        while i < m {
+            let mr = MR.min(m - i);
+            let zf = vdupq_n_f32(0.0);
+            let mut accf = [[zf; 2]; MR];
+            let mut k0 = 0usize;
+            for g in 0..ng {
+                // the dispatcher's alignment rule makes every boundary a
+                // KU multiple; the last group runs through the zero pads
+                // (0 symbols on both sides — they add 0 to the exact sum)
+                let k1 = if g + 1 == ng { kpad } else { k0 + kg };
+                let zi = vdupq_n_s32(0);
+                let mut acci = [[zi; 2]; MR];
+                let mut kk = k0;
+                while kk < k1 {
+                    let bv = vld1q_s8(panel.add((kk / KU) * (nr * KU)));
+                    let blo = vget_low_s8(bv);
+                    let bhi = vget_high_s8(bv);
+                    for (r, acc) in acci.iter_mut().enumerate().take(mr) {
+                        let ap = qa.syms.as_ptr().add((i + r) * qa.kpad + kk) as *const i16;
+                        let av = vreinterpret_s8_s16(vdup_n_s16(ap.read_unaligned()));
+                        acc[0] = vpadalq_s16(acc[0], vmull_s8(blo, av));
+                        acc[1] = vpadalq_s16(acc[1], vmull_s8(bhi, av));
+                    }
+                    kk += KU;
+                }
+                for (r, acc) in accf.iter_mut().enumerate().take(mr) {
+                    let t = qa.scales[(i + r) * qa.n_groups + g] * b.scales[g];
+                    acc[0] = vaddq_f32(acc[0], vmulq_n_f32(vcvtq_f32_s32(acci[r][0]), t));
+                    acc[1] = vaddq_f32(acc[1], vmulq_n_f32(vcvtq_f32_s32(acci[r][1]), t));
+                }
+                k0 = k1;
+            }
+            let mut buf = [0.0f32; 8];
+            for (r, acc) in accf.iter().enumerate().take(mr) {
+                vst1q_f32(buf.as_mut_ptr(), acc[0]);
+                vst1q_f32(buf.as_mut_ptr().add(4), acc[1]);
+                let dst = c.as_mut_ptr().add((i + r) * n + j0);
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), dst, w);
+            }
+            i += mr;
+        }
+    }
+}

@@ -111,3 +111,48 @@ pub(super) fn quantize_block(chunk: &[f32], scale: f32, bits: u32, out: &mut Vec
         out.push((q + bias) as u8);
     }
 }
+
+/// k-interleave of the scalar canonical quantized-panel layout (shared
+/// with NEON; the scalar kernel itself reads *any* interleave).
+pub(super) const KU_Q: usize = 2;
+
+/// Int8 GEMM reference — the bit-exactness oracle for the whole
+/// compressed-domain path. Per scale group g it forms the exact i32 dot
+/// product `Σ_{kk∈g} qa[i,kk]·qb[kk,j]`, then rescales at the group edge
+/// with a *fixed* f32 sequence the SIMD kernels reproduce instruction for
+/// instruction: `t = sa·sb` (one f32 multiply), `sumf = sum as f32`
+/// (round-to-nearest, same as `cvtepi32_ps`/`scvtf`), `acc += sumf * t`
+/// (separate multiply then add — never an FMA, which would round once
+/// instead of twice and break cross-ISA bit-identity).
+///
+/// Reads the panel through the generic slot formula
+/// `(kk/ku)·nr·ku + (j%nr)·ku + kk%ku`, so it consumes any ISA's layout —
+/// which is how misaligned-group shapes fall back without repacking.
+/// Only real k-rows (`kk < k`) are visited; the ku-pads hold 0 symbols
+/// and would add 0 to every sum, so SIMD kernels that do read them agree
+/// exactly.
+pub(super) fn gemm_q(qa: &super::QuantA, b: &super::PackedBQ, c: &mut [f32]) {
+    let (m, k, n) = (qa.m, qa.k, b.n);
+    let (nr, ku, kpad, kg, ng) = (b.nr, b.ku, b.kpad, b.kg, b.n_groups);
+    for i in 0..m {
+        let asy = &qa.syms[i * qa.kpad..i * qa.kpad + qa.kpad];
+        let asc = &qa.scales[i * qa.n_groups..i * qa.n_groups + qa.n_groups];
+        for j in 0..n {
+            let panel = &b.panels[(j / nr) * kpad * nr..];
+            let lane = (j % nr) * ku;
+            let mut acc = 0.0f32;
+            for g in 0..ng {
+                let k0 = g * kg;
+                let k1 = (k0 + kg).min(k);
+                let mut sum = 0i32;
+                for kk in k0..k1 {
+                    let bs = panel[(kk / ku) * (nr * ku) + lane + (kk % ku)] as i32;
+                    sum += asy[kk] as i32 * bs;
+                }
+                let t = asc[g] * b.scales[g];
+                acc += sum as f32 * t;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}

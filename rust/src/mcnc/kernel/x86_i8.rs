@@ -1,0 +1,114 @@
+//! AVX2 int8 GEMM microkernel (x86-64): `maddubs`-style u8×i8 → i16 → i32
+//! accumulation over quantized panels, bit-identical to the scalar int8
+//! reference.
+//!
+//! AVX2 has no signed-×-signed byte multiply; `vpmaddubsw` multiplies an
+//! *unsigned* byte vector by a signed one and saturates the adjacent-pair
+//! i16 sums. Both problems dissolve with one identity:
+//!
+//! ```text
+//! a·b = |b| · (sign(b)·a)      (vpabsb on b, vpsignb a by b)
+//! ```
+//!
+//! * `vpabsb(-128)` wraps to `0x80`, which `maddubs` reads as *unsigned*
+//!   128 — exactly `|-128|`, so the wire's most negative symbol (produced
+//!   only by −inf source values) is handled exactly;
+//! * `vpsignb` applies b's sign to the A symbol, which [`super::quantize_a`]
+//!   confines to `[-127, 127]` — negation can never wrap, and b = 0 zeroes
+//!   the lane (product 0, correct);
+//! * every |product| ≤ 128·127 = 16256, so an adjacent pair ≤ 32512 <
+//!   32767 — the i16 saturation in `maddubs` is unreachable and the pair
+//!   sums are exact.
+//!
+//! `vpmaddwd` against ones then folds the i16 pairs into exact i32 quad
+//! sums, one lane per panel column. Integer sums per scale group are
+//! order-free, and the f32 rescale at the group edge replays the scalar
+//! oracle's exact instruction sequence (convert, multiply, add — no FMA),
+//! so the whole kernel is bit-identical to `scalar::gemm_q` — pinned by
+//! `rust/tests/prop_int8_gemm.rs`.
+//!
+//! Only reachable through `dispatch` after the avx2 probe passed, so the
+//! `#[target_feature]` functions are sound to call.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+
+use super::{PackedBQ, QuantA};
+
+/// k-rows per interleave step: one 32-byte ymm load covers 8 columns × 4
+/// consecutive k's (`[b(kk..kk+4, j) for j in 0..8]`), and the matching A
+/// quad broadcasts as a single i32.
+pub(super) const KU: usize = 4;
+
+/// Micro-tile rows: 4 i32 + 4 f32 ymm accumulators, plus |b|, b and the
+/// per-row sign/product temporaries, stay inside 16 registers.
+const MR: usize = 4;
+
+/// `C[M, N] = A · B-panels` over the KU = 4 interleaved layout. Caller
+/// (the `gemm_q` dispatcher) guarantees the group length is a KU multiple
+/// or there is a single group, so every group span covers whole quads.
+pub(super) fn gemm_q(qa: &QuantA, b: &PackedBQ, c: &mut [f32]) {
+    // SAFETY: only reachable via dispatch after the avx2 probe passed.
+    unsafe { gemm_q_inner(qa, b, c) };
+}
+
+// SAFETY: callers must have verified avx2 and pass structurally consistent
+// `qa`/`b` (the public constructors are the only way to build them):
+// panels hold ⌈n/8⌉ panels of kpad×8 bytes with kpad a KU multiple, so
+// every 32-byte load at quad `kk/4` stays inside its panel; A rows are
+// m × qa.kpad with qa.kpad ≥ b.kpad (both round k up, A to 4 — equal to
+// AVX2's KU), so every 4-byte quad read at `kk` stays inside the row.
+// Stores are masked to the live mr×w region of `c` (len ≥ m·n, checked by
+// the dispatcher).
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_q_inner(qa: &QuantA, b: &PackedBQ, c: &mut [f32]) {
+    let (m, n) = (qa.m, b.n);
+    let (nr, kpad, kg, ng) = (b.nr, b.kpad, b.kg, b.n_groups);
+    debug_assert!(nr == super::NR_Q && b.ku == KU && kpad <= qa.kpad);
+    let ones = _mm256_set1_epi16(1);
+    let np = n.div_ceil(nr);
+    for p in 0..np {
+        let j0 = p * nr;
+        let w = nr.min(n - j0);
+        let panel = b.panels.as_ptr().add(p * kpad * nr);
+        let mut i = 0usize;
+        while i < m {
+            let mr = MR.min(m - i);
+            let mut accf = [_mm256_setzero_ps(); MR];
+            let mut k0 = 0usize;
+            for g in 0..ng {
+                // the dispatcher's alignment rule makes every boundary a
+                // KU multiple; the last group runs through the zero pads
+                // (0 symbols on both sides — they add 0 to the exact sum)
+                let k1 = if g + 1 == ng { kpad } else { k0 + kg };
+                let mut acci = [_mm256_setzero_si256(); MR];
+                let mut kk = k0;
+                while kk < k1 {
+                    let bv = _mm256_loadu_si256(panel.add((kk / KU) * (nr * KU)) as *const _);
+                    let babs = _mm256_abs_epi8(bv);
+                    for (r, acc) in acci.iter_mut().enumerate().take(mr) {
+                        let aq = qa.syms.as_ptr().add((i + r) * qa.kpad + kk) as *const i32;
+                        let av = _mm256_set1_epi32(aq.read_unaligned());
+                        let prod = _mm256_maddubs_epi16(babs, _mm256_sign_epi8(av, bv));
+                        *acc = _mm256_add_epi32(*acc, _mm256_madd_epi16(prod, ones));
+                    }
+                    kk += KU;
+                }
+                for (r, acc) in accf.iter_mut().enumerate().take(mr) {
+                    let t = qa.scales[(i + r) * qa.n_groups + g] * b.scales[g];
+                    let sumf = _mm256_cvtepi32_ps(acci[r]);
+                    *acc = _mm256_add_ps(*acc, _mm256_mul_ps(sumf, _mm256_set1_ps(t)));
+                }
+                k0 = k1;
+            }
+            let mut buf = [0.0f32; 8];
+            for (r, acc) in accf.iter().enumerate().take(mr) {
+                _mm256_storeu_ps(buf.as_mut_ptr(), *acc);
+                let dst = c.as_mut_ptr().add((i + r) * n + j0);
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), dst, w);
+            }
+            i += mr;
+        }
+    }
+}

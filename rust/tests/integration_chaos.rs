@@ -70,7 +70,7 @@ impl EngineCore for ChaosMock {
 
     fn preload(&mut self, _artifact: &Path) -> Result<WarmStats> {
         self.warmed = true;
-        Ok(WarmStats { installed: self.n_tasks, prefilled: 0, skipped: 0 })
+        Ok(WarmStats { installed: self.n_tasks, ..WarmStats::default() })
     }
 }
 

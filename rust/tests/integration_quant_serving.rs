@@ -1,0 +1,301 @@
+//! End-to-end compressed-domain serving over the MCNP1 socket front-end:
+//! a fleet of per-task head matrices is packed at int8, served by
+//! `QuantEngine` (rANS → quantized panels → int8 GEMM, no f32 weights),
+//! and every prediction must be *identical* to the forced-f32 oracle
+//! server fed the same artifact and the same requests — including after
+//! `Chaos` kills a shard and the supervisor re-warms the replacement from
+//! the parked artifact.
+//!
+//! The fixture weights are engineered so int8 error cannot flip an
+//! argmax: task `t`'s target column carries weight 8.0, every other
+//! column ≤ 0.25, and requests use token values ≤ 4 — the target/runner-up
+//! logit gap is orders of magnitude above the quantization error bound
+//! pinned by `prop_int8_gemm.rs`, so "identical predictions" is a sound
+//! requirement, not a lucky one.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use anyhow::Result;
+use mcnc::codec::Codec;
+use mcnc::coordinator::{
+    warm, BatchPolicy, Chaos, ChaosCfg, QServeCfg, QuantEngine, Server, ServerCfg, WEIGHT_SLOT,
+};
+use mcnc::net::protocol::{encode_frame, Deframer, Msg, NET_MAGIC};
+use mcnc::net::{NetCfg, NetListener, NetReport};
+use mcnc::tensor::Tensor;
+
+const SEQ: usize = 8;
+const VOCAB: usize = 16;
+const N_TASKS: usize = 6;
+const N_SHARDS: usize = 2;
+
+/// Write the engineered int8 warm artifact (see module docs) to a temp
+/// file and return its path.
+fn fixture_artifact(tag: &str) -> PathBuf {
+    let mut adapters = Vec::new();
+    for t in 0..N_TASKS {
+        let target = t % VOCAB;
+        let mut w = vec![0.0f32; SEQ * VOCAB];
+        for kk in 0..SEQ {
+            for j in 0..VOCAB {
+                let h = ((kk * 31 + j * 17 + t * 7) % 101) as f32 / 100.0 - 0.5;
+                w[kk * VOCAB + j] = if j == target { 8.0 } else { h * 0.5 };
+            }
+        }
+        let tensor = Tensor::from_f32(w, &[SEQ, VOCAB]).expect("fixture tensor");
+        adapters.push((t, vec![(WEIGHT_SLOT.to_string(), tensor)]));
+    }
+    let mut bytes = Vec::new();
+    warm::write_artifact(&mut bytes, "panelhead", 11, Codec::Int8 { block: VOCAB }, &adapters)
+        .expect("write warm artifact");
+    let dir = std::env::temp_dir().join("mcnc_quant_serving");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join(format!("{tag}_{}.mcnc2", std::process::id()));
+    std::fs::write(&path, &bytes).expect("write artifact file");
+    path
+}
+
+fn qserve_cfg(artifact: PathBuf, force_f32: bool) -> QServeCfg {
+    QServeCfg {
+        kind: "panelhead".to_string(),
+        n_tasks: N_TASKS,
+        n_shards: N_SHARDS,
+        seq: SEQ,
+        vocab: VOCAB,
+        force_f32,
+        artifact: Some(artifact),
+    }
+}
+
+fn server_cfg() -> ServerCfg {
+    ServerCfg {
+        n_tasks: N_TASKS,
+        n_shards: N_SHARDS,
+        policy: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
+        heartbeat: Duration::from_millis(10),
+        ..ServerCfg::default()
+    }
+}
+
+/// A server of `QuantEngine`s over the given artifact.
+fn quant_server(artifact: &PathBuf, force_f32: bool) -> Server {
+    let cfg = qserve_cfg(artifact.clone(), force_f32);
+    Server::start_with(&server_cfg(), move |shard| -> Result<QuantEngine> {
+        QuantEngine::new(cfg.clone(), shard)
+    })
+    .expect("start quant server")
+}
+
+/// Bind an ephemeral loopback listener, run its poll loop while `f`
+/// drives clients, then stop and hand back `f`'s result and the report.
+fn with_listener<R>(server: &Server, f: impl FnOnce(SocketAddr) -> R) -> (R, NetReport) {
+    let listener = NetListener::bind(NetCfg::default()).expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let pump = scope.spawn(|| listener.run(server, &stop));
+        let r = f(addr);
+        stop.store(true, Ordering::Relaxed);
+        let report = pump.join().expect("listener thread").expect("listener run");
+        (r, report)
+    })
+}
+
+/// Minimal blocking MCNP1 client (mirrors `integration_net.rs`).
+struct Client {
+    stream: TcpStream,
+    de: Deframer,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout");
+        let mut c = Client { stream, de: Deframer::new(), buf: vec![0u8; 16 * 1024] };
+        c.stream.write_all(NET_MAGIC).expect("preamble");
+        c
+    }
+
+    fn send(&mut self, m: &Msg) {
+        self.stream.write_all(&encode_frame(m)).expect("send frame");
+    }
+
+    fn recv(&mut self) -> Msg {
+        loop {
+            if let Some(m) = self.de.next().expect("deframe reply") {
+                return m;
+            }
+            let n = self.stream.read(&mut self.buf).expect("read reply");
+            assert!(n > 0, "connection closed while awaiting a reply");
+            self.de.push(&self.buf[..n]);
+        }
+    }
+}
+
+/// Deterministic small-valued token pattern for (task, round): values ≤ 4.
+fn probe_tokens(task: usize, round: usize) -> Vec<i32> {
+    (0..SEQ).map(|j| ((j + round * 3 + task) % 5) as i32).collect()
+}
+
+fn request(id: u64, task: usize, tokens: Vec<i32>) -> Msg {
+    Msg::Req { id, task: task as u64, tokens, deadline_us: 0 }
+}
+
+/// Send one request and return the prediction from a `ReplyOk`.
+fn ask(c: &mut Client, id: u64, task: usize, tokens: Vec<i32>) -> i32 {
+    c.send(&request(id, task, tokens));
+    match c.recv() {
+        Msg::ReplyOk { id: rid, token, .. } => {
+            assert_eq!(rid, id, "reply id mismatch");
+            token
+        }
+        other => panic!("task {task} req {id}: unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn quantized_serving_matches_f32_oracle_on_every_socket_prediction() {
+    let artifact = fixture_artifact("parity");
+    let qs = quant_server(&artifact, false);
+    let fs = quant_server(&artifact, true);
+
+    // warm both fleets from the same artifact; the quant server must keep
+    // every frame in the compressed domain, the oracle none
+    let wq = qs.preload(&artifact).expect("preload quant server");
+    assert_eq!(wq.installed, N_TASKS);
+    assert_eq!(wq.prefilled, N_TASKS, "panels are the serving form");
+    assert_eq!(wq.quantized, N_TASKS, "int8 frames must stay compressed");
+    assert_eq!(wq.skipped, N_TASKS * (N_SHARDS - 1), "foreign frames skipped per shard");
+    let wf = fs.preload(&artifact).expect("preload f32 server");
+    assert_eq!(wf.installed, N_TASKS);
+    assert_eq!(wf.quantized, 0, "forced-f32 must not hold quantized panels");
+
+    let rounds = 5usize;
+    let (preds, _) = with_listener(&qs, |addr| {
+        let mut c = Client::connect(addr);
+        let mut out = Vec::new();
+        for r in 0..rounds {
+            for t in 0..N_TASKS {
+                out.push(ask(&mut c, (r * N_TASKS + t) as u64, t, probe_tokens(t, r)));
+            }
+        }
+        out
+    });
+    let (oracle, _) = with_listener(&fs, |addr| {
+        let mut c = Client::connect(addr);
+        let mut out = Vec::new();
+        for r in 0..rounds {
+            for t in 0..N_TASKS {
+                out.push(ask(&mut c, (r * N_TASKS + t) as u64, t, probe_tokens(t, r)));
+            }
+        }
+        out
+    });
+    assert_eq!(preds, oracle, "compressed-domain predictions diverged from the f32 path");
+    for (x, &p) in preds.iter().enumerate() {
+        let t = x % N_TASKS;
+        assert_eq!(p, (t % VOCAB) as i32, "request {x}: wrong class for task {t}");
+    }
+
+    // both fleets served warm: no cold fills after preload
+    let sq = qs.stop().expect("stop quant server");
+    assert_eq!(sq.cache_misses, 0, "preloaded tasks must not cold-fill");
+    assert!(sq.cache_hits >= (rounds * N_TASKS) as u64 / 2, "hits: {}", sq.cache_hits);
+    assert_eq!(sq.errors, 0);
+    let sf = fs.stop().expect("stop f32 server");
+    assert_eq!(sf.native_fills, 0, "f32 path must not count native fills");
+    let _ = std::fs::remove_file(&artifact);
+}
+
+#[test]
+fn cold_fill_serving_matches_f32_oracle_without_preload() {
+    let artifact = fixture_artifact("coldfill");
+    let qs = quant_server(&artifact, false);
+    let fs = quant_server(&artifact, true);
+    let (preds, _) = with_listener(&qs, |addr| {
+        let mut c = Client::connect(addr);
+        (0..N_TASKS).map(|t| ask(&mut c, t as u64, t, probe_tokens(t, 0))).collect::<Vec<_>>()
+    });
+    let (oracle, _) = with_listener(&fs, |addr| {
+        let mut c = Client::connect(addr);
+        (0..N_TASKS).map(|t| ask(&mut c, t as u64, t, probe_tokens(t, 0))).collect::<Vec<_>>()
+    });
+    assert_eq!(preds, oracle, "cold-filled predictions diverged from the f32 path");
+    let sq = qs.stop().expect("stop quant server");
+    assert_eq!(sq.cache_misses, N_TASKS as u64, "one cold fill per task");
+    assert_eq!(sq.native_fills, N_TASKS as u64, "int8 cold fills run the native int8 GEMM");
+    let sf = fs.stop().expect("stop f32 server");
+    assert_eq!(sf.native_fills, 0);
+    let _ = std::fs::remove_file(&artifact);
+}
+
+#[test]
+fn chaos_kill_restart_rewarms_quantized_panels_and_keeps_predictions() {
+    let artifact = fixture_artifact("chaos");
+    let chaos = Chaos::new(ChaosCfg {
+        seed: 0xC0FFEE,
+        window: 8,
+        panics: 1,
+        kills: 1,
+        ..ChaosCfg::default()
+    });
+    let cfg = qserve_cfg(artifact.clone(), false);
+    let ch = chaos.clone();
+    let server = Server::start_with(&server_cfg(), move |shard| {
+        ch.factory_gate()?;
+        Ok(ch.wrap(QuantEngine::new(cfg.clone(), shard)?))
+    })
+    .expect("start chaos quant server");
+    // park the artifact: supervisor restarts re-warm replacements from it
+    let ws = server.preload(&artifact).expect("preload");
+    assert_eq!(ws.installed, N_TASKS);
+    assert_eq!(ws.quantized, N_TASKS);
+
+    let ((), _report) = with_listener(&server, |addr| {
+        let mut c = Client::connect(addr);
+        // hammer until the fault schedule is spent: kills/panics surface
+        // as Failed replies or brief rejections, never hangs or resets
+        let mut id = 0u64;
+        let t0 = std::time::Instant::now();
+        while !chaos.exhausted() {
+            assert!(t0.elapsed() < Duration::from_secs(60), "chaos schedule never fired");
+            for t in 0..N_TASKS {
+                c.send(&request(id, t, probe_tokens(t, id as usize)));
+                id += 1;
+            }
+            for _ in 0..N_TASKS {
+                let _ = c.recv(); // any typed reply is fine mid-chaos
+            }
+        }
+        // post-chaos: the restarted shard re-warmed from the parked
+        // artifact, so every task must predict its engineered class again
+        // (retry through restart backoff — replies stay typed throughout)
+        for t in 0..N_TASKS {
+            let want = (t % VOCAB) as i32;
+            let mut got = None;
+            for _attempt in 0..200 {
+                id += 1;
+                c.send(&request(id, t, probe_tokens(t, 1)));
+                match c.recv() {
+                    Msg::ReplyOk { token, .. } => {
+                        got = Some(token);
+                        break;
+                    }
+                    Msg::ReplyErr { .. } => std::thread::sleep(Duration::from_millis(10)),
+                    other => panic!("task {t}: unexpected {other:?}"),
+                }
+            }
+            assert_eq!(got, Some(want), "task {t} lost its panels after chaos");
+        }
+    });
+
+    let stats = server.stop().expect("stop chaos server");
+    assert!(stats.restarts >= 1, "chaos injected no restart — the test is vacuous");
+    let _ = std::fs::remove_file(&artifact);
+}

@@ -356,7 +356,7 @@ impl EngineCore for WarmMock {
             anyhow::bail!("injected preload failure");
         }
         self.log.lock().unwrap().push((self.shard, artifact.to_path_buf()));
-        Ok(mcnc::coordinator::WarmStats { installed: 1, prefilled: 1, skipped: 2 })
+        Ok(mcnc::coordinator::WarmStats { installed: 1, prefilled: 1, skipped: 2, quantized: 0 })
     }
 }
 

@@ -6,7 +6,8 @@
 //! anywhere in the stream — always fail with an error: never a panic,
 //! never a silent mis-decode.
 
-use mcnc::codec::{container, rans, Codec, ContainerHeader, Decoder, Encoder};
+use mcnc::codec::{container, quantizer, rans, Codec, ContainerHeader, Decoder, Encoder};
+use mcnc::mcnc::kernel::{self, Isa};
 use mcnc::prop_assert;
 use mcnc::tensor::Tensor;
 use mcnc::train::Checkpoint;
@@ -185,6 +186,103 @@ fn bit_flipped_streams_always_error() {
             Err(_) => Ok(()),
             Ok(_) => Err(format!("bit flip at byte {ix} bit {bit} decoded cleanly")),
         }
+    });
+}
+
+#[test]
+fn fused_packed_q_decode_equals_quantize_then_pack() {
+    // the compressed-domain decode (wire symbols → i8 panels, no f32
+    // materialization) must build bit-for-bit the same PackedBQ as the
+    // two-step reference: quantize the SOURCE weight (what the wire
+    // embeds, ISA-invariantly) and pack the result — on every ISA
+    run_prop("codec_packed_q_parity", 40, |g| {
+        let k = g.usize(1, 20);
+        let n = g.usize(1, 16);
+        let block = *g.pick(&[n, 2 * n, k * n]);
+        let codec = if g.bool() { Codec::Int8 { block } } else { Codec::Int4 { block } };
+        let bits = if matches!(codec, Codec::Int8 { .. }) { 8u32 } else { 4 };
+        let vals = g.vec_f32(k * n, -2.0, 2.0);
+        let t = Tensor::from_f32(vals.clone(), &[k, n]).unwrap();
+        let body = e(container::encode_frame("w", &t, codec))?;
+        let q = quantizer::quantize_with(Isa::Scalar, &vals, bits, block);
+        for isa in [Isa::Scalar, kernel::active()] {
+            let (name, pq, c) = e(container::decode_frame_into_packed_q(&body, isa))?;
+            prop_assert!(name == "w" && c == codec, "meta drifted ({isa:?})");
+            let want = e(kernel::pack_bq_for(isa, k, n, bits, block, &q.scales, &q.symbols))?;
+            prop_assert!(
+                pq.isa() == want.isa()
+                    && pq.ku() == want.ku()
+                    && pq.bits() == want.bits()
+                    && pq.group_rows() == want.group_rows(),
+                "({k},{n}) block={block} {isa:?}: layout metadata drifted"
+            );
+            prop_assert!(
+                pq.panels() == want.panels(),
+                "({k},{n}) block={block} {isa:?}: panel bytes drifted"
+            );
+            prop_assert!(
+                pq.scales().iter().zip(want.scales()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "({k},{n}) block={block} {isa:?}: scales not bit-identical"
+            );
+        }
+        // every strict prefix of the frame body errors — never panics,
+        // never a silently zero-padded panel
+        let cut = g.usize(0, body.len() - 1);
+        prop_assert!(
+            container::decode_frame_into_packed_q(&body[..cut], Isa::Scalar).is_err(),
+            "({k},{n}) block={block}: truncation to {cut}/{} decoded cleanly",
+            body.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_packed_q_stream_corruption_errors_never_panics() {
+    // an all-quantized container drained through next_packed_q: truncation
+    // or a bit flip anywhere must fail with an error on the fused path too
+    run_prop("codec_packed_q_corruption", 40, |g| {
+        let n_t = g.usize(1, 4);
+        let header =
+            ContainerHeader { entry: "prop".into(), seed: 7, step: 0.0, n_tensors: Some(n_t) };
+        let mut enc = e(Encoder::new(Vec::new(), &header))?;
+        let mut shapes = Vec::new();
+        for i in 0..n_t {
+            let k = g.usize(1, 12);
+            let n = g.usize(1, 10);
+            let vals = g.vec_f32(k * n, -1.0, 1.0);
+            let t = Tensor::from_f32(vals, &[k, n]).unwrap();
+            let codec =
+                if g.bool() { Codec::Int8 { block: n } } else { Codec::Int4 { block: n } };
+            e(enc.write_tensor(&format!("t{i}"), &t, codec))?;
+            shapes.push((k, n));
+        }
+        let (bytes, _total) = e(enc.finish())?;
+        let drain_q = |b: &[u8]| -> anyhow::Result<usize> {
+            let mut dec = Decoder::new(b)?;
+            let mut got = 0;
+            while let Some((_, pq, _)) = dec.next_packed_q(kernel::active())? {
+                anyhow::ensure!((pq.k, pq.n) == shapes[got], "shape drifted at frame {got}");
+                got += 1;
+            }
+            Ok(got)
+        };
+        prop_assert!(e(drain_q(&bytes))? == n_t, "pristine container lost frames");
+        let cut = g.usize(0, bytes.len() - 1);
+        prop_assert!(
+            drain_q(&bytes[..cut]).is_err(),
+            "prefix {cut}/{} decoded cleanly on the fused path",
+            bytes.len()
+        );
+        let mut bad = bytes;
+        let ix = g.usize(0, bad.len() - 1);
+        let bit = g.usize(0, 7);
+        bad[ix] ^= 1 << bit;
+        prop_assert!(
+            drain_q(&bad).is_err(),
+            "bit flip at byte {ix} bit {bit} decoded cleanly on the fused path"
+        );
+        Ok(())
     });
 }
 

@@ -1,0 +1,340 @@
+//! The int8 GEMM oracle-parity battery — the contract that lets serving
+//! run GEMMs in the compressed domain without revalidating numerics:
+//!
+//! * **Analytic accuracy vs the f32 path.** Forced-scalar [`gemm_q`] over
+//!   quantized panels must land within a *pinned analytic bound* of the
+//!   f32 oracle (scalar `gemm` on the original A and the dequantized B).
+//!   B's quantization cancels — both sides consume the same
+//!   symbols×scales — so the bound is exactly the A-side absmax
+//!   quantization error plus float-rounding slop, derived per element
+//!   from the recomputed per-group A scales:
+//!
+//!   `|Δ[i,j]| ≤ Σ_g 0.51·sa_ig·Σ_{k∈g}|B̃[k,j]|              (A rounding)
+//!             + Σ_{g: sa_ig=0} Σ_{k∈g}|a[i,k]|·|B̃[k,j]|     (underflow→0)
+//!             + (3G+K+8)·ε·Σ_k(|a[i,k]|+0.51·sa)·|B̃[k,j]|   (f32 rounding)
+//!             + (G+1)·2·MIN_POSITIVE`                         (denormal slop)
+//!
+//! * **Bit-exact cross-ISA dispatch.** Dispatched [`gemm_q`] (AVX2/NEON
+//!   when available) must equal forced-scalar bit-for-bit on every
+//!   element — including the misaligned-scale-group shapes that silently
+//!   fall back to the scalar kernel over the SIMD panel layout. This is
+//!   what the f32 kernels can *not* promise (they allow fused-madd ulp
+//!   drift); the int8 path's i32 inner sums and fixed float edge sequence
+//!   make exactness testable, so it is pinned, not bounded.
+//!
+//! * **Exhaustive remainder tiles.** Every `m % MR` × `n % NR_Q` residue
+//!   the microkernels can see, swept deterministically.
+//!
+//! * **Hostile inputs.** Absmax-0 blocks, denormal scales, all-saturated
+//!   ±qmax blocks, and NaN/±inf in the f32 sources never panic, keep
+//!   scalar/dispatched parity, and stay in-bound wherever finite.
+
+use mcnc::codec::quantizer;
+use mcnc::mcnc::kernel::{self, Isa};
+use mcnc::prop_assert;
+use mcnc::util::prng::Stream;
+use mcnc::util::prop::{run_prop, Gen};
+
+/// anyhow → property-error adapter.
+fn e<T>(r: anyhow::Result<T>) -> Result<T, String> {
+    r.map_err(|x| format!("{x:#}"))
+}
+
+/// The f32 oracle: forced-scalar `gemm` on (original A, dequantized B).
+fn f32_oracle(a: &[f32], bdeq: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let pb = kernel::pack_b_for(Isa::Scalar, bdeq, k, n);
+    let mut c = vec![f32::NAN; m * n];
+    kernel::gemm(a, m, &pb, &mut c);
+    c
+}
+
+/// Per-element pinned analytic bound (see module docs). `sa[g]` must be
+/// the *recomputed* A-row group scales — `absmax/127` exactly as
+/// `quantize_a` derives them — so the bound is independent of the
+/// implementation under test.
+fn analytic_tol(a_row: &[f32], bdeq: &[f32], j: usize, n: usize, kg: usize, sa: &[f32]) -> f64 {
+    let k = a_row.len();
+    let mut quant = 0.0f64;
+    let mut under = 0.0f64;
+    let mut mag = 0.0f64;
+    for (g, &sa_g) in sa.iter().enumerate() {
+        let sa_g = sa_g as f64;
+        for kk in g * kg..((g + 1) * kg).min(k) {
+            let bd = (bdeq[kk * n + j] as f64).abs();
+            let av = (a_row[kk] as f64).abs();
+            quant += 0.51 * sa_g * bd;
+            mag += (av + 0.51 * sa_g) * bd;
+            if sa_g == 0.0 {
+                under += av * bd;
+            }
+        }
+    }
+    // ≤3 float roundings per group on the quant edge (scale product,
+    // rescale multiply, accumulate add), K on the oracle's accumulation
+    let groups = sa.len() as f64;
+    quant
+        + under
+        + (3.0 * groups + k as f64 + 8.0) * f32::EPSILON as f64 * mag
+        + (groups + 1.0) * 2.0 * f32::MIN_POSITIVE as f64
+}
+
+/// Recompute row `i`'s per-group A scales exactly as `quantize_a` does:
+/// scalar absmax over the group, divided by 127 in f32 (underflow → 0.0).
+fn a_scales(a: &[f32], i: usize, k: usize, kg: usize) -> Vec<f32> {
+    let row = &a[i * k..i * k + k];
+    (0..k.div_ceil(kg))
+        .map(|g| kernel::absmax_for(Isa::Scalar, &row[g * kg..((g + 1) * kg).min(k)]) / 127.0)
+        .collect()
+}
+
+/// Quantize B, pack it for `isa`, quantize A to match, run `gemm_q`.
+/// Returns (C, dequantized B, group_rows).
+fn quant_gemm(
+    isa: Isa,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bits: u32,
+    block: usize,
+) -> Result<(Vec<f32>, Vec<f32>, usize), String> {
+    let q = quantizer::quantize_with(Isa::Scalar, b, bits, block);
+    let pq = e(kernel::pack_bq_for(isa, k, n, bits, block, &q.scales, &q.symbols))?;
+    let qa = kernel::quantize_a(a, m, k, pq.group_rows());
+    let mut c = vec![f32::NAN; m * n];
+    kernel::gemm_q(&qa, &pq, &mut c);
+    Ok((c, quantizer::dequantize(&q), pq.group_rows()))
+}
+
+/// An admissible scale block for a `[k, n]` weight: whole rows or the
+/// whole tensor (the only shapes the panel layout accepts).
+fn admissible_block(g: &mut Gen, k: usize, n: usize) -> usize {
+    *g.pick(&[n, 2 * n, 4 * n, k * n])
+}
+
+#[test]
+fn forced_scalar_int8_gemm_within_pinned_analytic_bound() {
+    run_prop("int8_gemm_analytic_bound", 60, |g| {
+        let m = g.usize(1, 12);
+        let k = g.usize(1, 48);
+        let n = g.usize(1, 24);
+        let bits = *g.pick(&[4u32, 8]);
+        let block = admissible_block(g, k, n);
+        let a = g.vec_f32(m * k, -2.0, 2.0);
+        let b = g.vec_f32(k * n, -1.0, 1.0);
+        let (cq, bdeq, kg) = quant_gemm(Isa::Scalar, &a, &b, m, k, n, bits, block)?;
+        let cf = f32_oracle(&a, &bdeq, m, k, n);
+        for i in 0..m {
+            let sa = a_scales(&a, i, k, kg);
+            for j in 0..n {
+                let (got, want) = (cq[i * n + j] as f64, cf[i * n + j] as f64);
+                let tol = analytic_tol(&a[i * k..(i + 1) * k], &bdeq, j, n, kg, &sa);
+                let diff = (got - want).abs();
+                prop_assert!(
+                    diff <= tol,
+                    "({m},{k},{n}) bits={bits} block={block} [{i},{j}]: \
+                     quant {got:e} vs f32 {want:e} (diff {diff:e} > tol {tol:e})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatched_int8_gemm_bit_identical_to_forced_scalar() {
+    run_prop("int8_dispatched_vs_scalar", 60, |g| {
+        let m = g.usize(1, 12);
+        let k = g.usize(1, 48);
+        let n = g.usize(1, 24);
+        let bits = *g.pick(&[4u32, 8]);
+        // n → kg=1 (misaligned for every SIMD ku: scalar-kernel fallback
+        // over the SIMD layout), 2n/4n → ku-aligned groups, k·n → one group
+        let block = *g.pick(&[n, 2 * n, 3 * n, 4 * n, k * n]);
+        let a = g.vec_f32(m * k, -2.0, 2.0);
+        let b = g.vec_f32(k * n, -1.0, 1.0);
+        let q = quantizer::quantize_with(Isa::Scalar, &b, bits, block);
+        let ps = e(kernel::pack_bq_for(Isa::Scalar, k, n, bits, block, &q.scales, &q.symbols))?;
+        let pd = e(kernel::pack_bq(k, n, bits, block, &q.scales, &q.symbols))?;
+        prop_assert!(ps.isa() == Isa::Scalar, "scalar override leaked {:?}", ps.isa());
+        prop_assert!(kernel::available(pd.isa()), "dispatched to unavailable {:?}", pd.isa());
+        prop_assert!(
+            ps.group_rows() == pd.group_rows() && ps.bits() == pd.bits(),
+            "layout metadata diverged between ISAs"
+        );
+        let qa = kernel::quantize_a(&a, m, k, pd.group_rows());
+        let mut cs = vec![f32::NAN; m * n];
+        let mut cd = vec![f32::NAN; m * n];
+        kernel::gemm_q(&qa, &ps, &mut cs);
+        kernel::gemm_q(&qa, &pd, &mut cd);
+        for i in 0..m {
+            for j in 0..n {
+                let (s, d) = (cs[i * n + j], cd[i * n + j]);
+                prop_assert!(
+                    s.to_bits() == d.to_bits(),
+                    "({m},{k},{n}) bits={bits} block={block} [{i},{j}]: \
+                     {:?} {d:e} != scalar {s:e}",
+                    pd.isa()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn int8_parity_covers_every_remainder_tile_shape() {
+    // exhaustive m residues for MR=4 and n residues for NR_Q=8: m ∈ 1..=13
+    // hits every m % 4 including multi-tile, n ∈ 1..=17 ∪ {31, 32, 33}
+    // hits every n % 8 including full-panel and one-past boundaries; block
+    // n (scalar fallback), 4n (ku-aligned) and k·n (single group) steer
+    // all three gemm_q admission branches.
+    for m in 1..=13usize {
+        for n in (1..=17usize).chain([31, 32, 33]) {
+            for k in [1usize, 7, 33] {
+                let a = Stream::new((m * 131 + n * 17 + k) as u64).uniform_f32(m * k, -2.0, 2.0);
+                let b = Stream::new((m + n * 29 + k * 5) as u64).uniform_f32(k * n, -1.0, 1.0);
+                for block in [n, 4 * n, k * n] {
+                    let q = quantizer::quantize_with(Isa::Scalar, &b, 8, block);
+                    let ps =
+                        kernel::pack_bq_for(Isa::Scalar, k, n, 8, block, &q.scales, &q.symbols)
+                            .unwrap();
+                    let pd = kernel::pack_bq(k, n, 8, block, &q.scales, &q.symbols).unwrap();
+                    let qa = kernel::quantize_a(&a, m, k, pd.group_rows());
+                    let mut cs = vec![f32::NAN; m * n];
+                    let mut cd = vec![f32::NAN; m * n];
+                    kernel::gemm_q(&qa, &ps, &mut cs);
+                    kernel::gemm_q(&qa, &pd, &mut cd);
+                    for i in 0..m {
+                        for j in 0..n {
+                            let (s, d) = (cs[i * n + j], cd[i * n + j]);
+                            assert!(
+                                s.to_bits() == d.to_bits(),
+                                "({m},{k},{n}) block={block} [{i},{j}]: {d:e} != scalar {s:e}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hostile_inputs_never_panic_and_stay_in_bound() {
+    run_prop("int8_hostile_inputs", 60, |g| {
+        let m = g.usize(1, 6);
+        let k = g.usize(1, 24);
+        let n = g.usize(1, 12);
+        let block = if g.bool() { n } else { k * n };
+        let mut a = g.vec_f32(m * k, -2.0, 2.0);
+        let mut b = g.vec_f32(k * n, -1.0, 1.0);
+        let mode = g.usize(0, 5);
+        let mut finite = true;
+        match mode {
+            0 => {
+                // absmax-0 scale blocks: zero one whole block of B and one
+                // whole A-quantization group of a row
+                let blk = g.usize(0, (k * n - 1) / block);
+                for v in &mut b[blk * block..((blk + 1) * block).min(k * n)] {
+                    *v = 0.0;
+                }
+                let kg = if block % n == 0 { block / n } else { k };
+                let (i, gg) = (g.usize(0, m - 1), g.usize(0, (k - 1) / kg));
+                for kk in gg * kg..((gg + 1) * kg).min(k) {
+                    a[i * k + kk] = 0.0;
+                }
+            }
+            1 => {
+                // denormal scales on both sides
+                for v in &mut b {
+                    *v *= 1.0e-42;
+                }
+                let i = g.usize(0, m - 1);
+                for v in &mut a[i * k..(i + 1) * k] {
+                    *v *= 1.0e-42;
+                }
+            }
+            2 => {
+                // all-saturated blocks: |v| == absmax everywhere → every
+                // symbol lands on ±qmax (±127 at 8 bits)
+                for (x, v) in b.iter_mut().enumerate() {
+                    *v = if x % 2 == 0 { 0.75 } else { -0.75 };
+                }
+            }
+            3 => {
+                a[g.usize(0, m * k - 1)] = f32::NAN;
+            }
+            4 => {
+                a[g.usize(0, m * k - 1)] = f32::INFINITY;
+                finite = false;
+            }
+            _ => {
+                b[g.usize(0, k * n - 1)] = if g.bool() { f32::NAN } else { f32::NEG_INFINITY };
+                finite = false;
+            }
+        }
+        // none of this may panic
+        let q = quantizer::quantize_with(Isa::Scalar, &b, 8, block);
+        let ps = e(kernel::pack_bq_for(Isa::Scalar, k, n, 8, block, &q.scales, &q.symbols))?;
+        let pd = e(kernel::pack_bq(k, n, 8, block, &q.scales, &q.symbols))?;
+        let qa = kernel::quantize_a(&a, m, k, pd.group_rows());
+        let mut cs = vec![f32::NAN; m * n];
+        let mut cd = vec![f32::NAN; m * n];
+        kernel::gemm_q(&qa, &ps, &mut cs);
+        kernel::gemm_q(&qa, &pd, &mut cd);
+        // dispatched stays bit-identical to scalar even on hostile inputs
+        for (x, (s, d)) in cs.iter().zip(&cd).enumerate() {
+            prop_assert!(
+                s.to_bits() == d.to_bits(),
+                "mode {mode} ({m},{k},{n}) block={block} [{x}]: {d:e} != scalar {s:e}"
+            );
+        }
+        if !finite {
+            return Ok(()); // inf-poisoned: only the no-panic + parity contract
+        }
+        // NaN in A quantizes to symbol 0 under a NaN-ignoring absmax, so
+        // the quantized output stays finite (documented contract) …
+        for (x, v) in cs.iter().enumerate() {
+            prop_assert!(v.is_finite(), "mode {mode} [{x}]: non-finite {v} from finite scales");
+        }
+        if mode == 3 {
+            return Ok(()); // … but the f32 oracle goes NaN: bound not comparable
+        }
+        let bdeq = quantizer::dequantize(&q);
+        let cf = f32_oracle(&a, &bdeq, m, k, n);
+        let kg = pd.group_rows();
+        for i in 0..m {
+            let sa = a_scales(&a, i, k, kg);
+            for j in 0..n {
+                let (got, want) = (cs[i * n + j] as f64, cf[i * n + j] as f64);
+                let tol = analytic_tol(&a[i * k..(i + 1) * k], &bdeq, j, n, kg, &sa);
+                prop_assert!(
+                    (got - want).abs() <= tol,
+                    "mode {mode} ({m},{k},{n}) block={block} [{i},{j}]: \
+                     quant {got:e} vs f32 {want:e} (tol {tol:e})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn straddling_blocks_and_bad_shapes_error_cleanly() {
+    // the panel layout's admission rule: whole rows or whole tensor only
+    assert!(kernel::quant_panels_admissible(4, 6, 6));
+    assert!(kernel::quant_panels_admissible(4, 6, 12));
+    assert!(kernel::quant_panels_admissible(4, 6, 24));
+    assert!(kernel::quant_panels_admissible(4, 6, 64), "one block covers the whole tensor");
+    assert!(!kernel::quant_panels_admissible(4, 6, 5), "straddles rows");
+    assert!(!kernel::quant_panels_admissible(4, 6, 0), "zero block");
+    let q = quantizer::quantize_with(Isa::Scalar, &vec![0.5f32; 24], 8, 5);
+    let err = kernel::pack_bq_for(Isa::Scalar, 4, 6, 8, 5, &q.scales, &q.symbols).unwrap_err();
+    assert!(format!("{err:#}").contains("straddles"), "{err:#}");
+    // short symbol stream must error, not zero-pad
+    let q = quantizer::quantize_with(Isa::Scalar, &vec![0.5f32; 24], 8, 6);
+    let err = kernel::pack_bq_for(Isa::Scalar, 4, 6, 8, 6, &q.scales, &q.symbols[..20]).unwrap_err();
+    assert!(format!("{err:#}").contains("symbols"), "{err:#}");
+}

@@ -9,7 +9,8 @@
 //!   example, hand-assembled here byte for byte, decodes to the documented
 //!   tensor.
 
-use mcnc::codec::{Codec, ContainerHeader, Decoder, Encoder};
+use mcnc::codec::{Codec, ContainerHeader, Decoder, Encoder, PackedPanels};
+use mcnc::mcnc::kernel;
 use mcnc::prop_assert;
 use mcnc::tensor::Tensor;
 use mcnc::util::prop::{run_prop, Gen};
@@ -118,6 +119,163 @@ fn parallel_decode_bit_flips_always_error() {
                 Err(format!("bit flip at byte {ix} bit {bit} decoded cleanly ({threads} threads)"))
             }
         }
+    });
+}
+
+/// A random 2-D container whose quantized frames all use row-aligned
+/// scale blocks (admissible for the quantized-panel path); lossless
+/// frames are mixed in so the per-frame codec-tag selection is exercised.
+fn random_panels_container(g: &mut Gen) -> Result<Vec<u8>, String> {
+    let n_t = g.usize(1, 5);
+    let header =
+        ContainerHeader { entry: "prop".into(), seed: 7, step: 0.0, n_tensors: Some(n_t) };
+    let mut enc = e(Encoder::new(Vec::new(), &header))?;
+    for i in 0..n_t {
+        let k = g.usize(1, 12);
+        let n = g.usize(1, 10);
+        let vals = g.vec_f32(k * n, -1.0, 1.0);
+        let t = Tensor::from_f32(vals, &[k, n]).unwrap();
+        let codec = *g.pick(&[
+            Codec::Lossless,
+            Codec::Int8 { block: n },
+            Codec::Int4 { block: 2 * n },
+            Codec::Int8 { block: k * n },
+        ]);
+        e(enc.write_tensor(&format!("t{i}"), &t, codec))?;
+    }
+    let (bytes, _total) = e(enc.finish())?;
+    Ok(bytes)
+}
+
+/// Serial panels drain: quantized frames through `next_packed_q`, f32
+/// frames through `next_packed` — two passes over the stream, matched up
+/// by the per-frame codec tag.
+fn serial_panels_drain(
+    bytes: &[u8],
+    force_f32: bool,
+) -> anyhow::Result<Vec<(String, PackedPanels, Codec)>> {
+    let isa = kernel::active();
+    let mut tags = Vec::new();
+    {
+        let mut dec = Decoder::new(bytes)?;
+        while let Some((_, t, codec)) = dec.next_tensor()? {
+            let quant = !force_f32
+                && !codec.is_lossless()
+                && t.dims.len() == 2
+                && match codec {
+                    Codec::Int8 { block } | Codec::Int4 { block } => {
+                        kernel::quant_panels_admissible(t.dims[0], t.dims[1], block)
+                    }
+                    Codec::Lossless => false,
+                };
+            tags.push(quant);
+        }
+    }
+    let mut out = Vec::new();
+    for (i, &quant) in tags.iter().enumerate() {
+        // re-open the stream and step to frame i on the matching path
+        let mut dec = Decoder::new(bytes)?;
+        for _ in 0..i {
+            dec.next_tensor()?;
+        }
+        if quant {
+            let (name, pq, codec) =
+                dec.next_packed_q(isa)?.ok_or_else(|| anyhow::anyhow!("frame {i} vanished"))?;
+            out.push((name, PackedPanels::Quant(pq), codec));
+        } else {
+            let (name, pb, codec) =
+                dec.next_packed(isa)?.ok_or_else(|| anyhow::anyhow!("frame {i} vanished"))?;
+            out.push((name, PackedPanels::F32(pb), codec));
+        }
+    }
+    Ok(out)
+}
+
+#[test]
+fn parallel_panels_decode_matches_serial_at_every_width() {
+    run_prop("parallel_panels_identical", 30, |g| {
+        let bytes = random_panels_container(g)?;
+        for force_f32 in [false, true] {
+            let serial = e(serial_panels_drain(&bytes, force_f32))?;
+            for threads in [1usize, 2, 4, 8] {
+                let pool = ThreadPool::new(threads);
+                let par = e(e(Decoder::new(&bytes[..]))?.decode_all_panels_with(
+                    &pool,
+                    kernel::active(),
+                    force_f32,
+                ))?;
+                prop_assert!(
+                    par.len() == serial.len(),
+                    "{threads} threads decoded {} of {} frames (force_f32 {force_f32})",
+                    par.len(),
+                    serial.len()
+                );
+                for (i, ((an, ap, ac), (bn, bp, bc))) in par.iter().zip(&serial).enumerate() {
+                    let ctx = format!("[{i}] ({threads} threads, force_f32 {force_f32})");
+                    prop_assert!(an == bn && ac == bc, "{ctx}: name/codec drifted");
+                    match (ap, bp) {
+                        (PackedPanels::Quant(a), PackedPanels::Quant(b)) => {
+                            prop_assert!(
+                                a.panels() == b.panels()
+                                    && a.scales().iter().zip(b.scales()).all(|(x, y)| {
+                                        x.to_bits() == y.to_bits()
+                                    })
+                                    && a.group_rows() == b.group_rows(),
+                                "{ctx}: quantized panels not bit-identical"
+                            );
+                        }
+                        (PackedPanels::F32(a), PackedPanels::F32(b)) => {
+                            prop_assert!(
+                                a.k == b.k
+                                    && a.n == b.n
+                                    && a.panels().iter().zip(b.panels()).all(|(x, y)| {
+                                        x.to_bits() == y.to_bits()
+                                    }),
+                                "{ctx}: f32 panels not bit-identical"
+                            );
+                        }
+                        _ => {
+                            return Err(format!(
+                                "{ctx}: path selection drifted (parallel is_quant {} vs {})",
+                                ap.is_quant(),
+                                bp.is_quant()
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_panels_decode_corruption_always_errors() {
+    run_prop("parallel_panels_corruption", 30, |g| {
+        let bytes = random_panels_container(g)?;
+        let threads = *g.pick(&[1usize, 2, 4, 8]);
+        let pool = ThreadPool::new(threads);
+        let drain = |b: &[u8]| -> anyhow::Result<usize> {
+            Ok(Decoder::new(b)?
+                .decode_all_panels_with(&pool, kernel::active(), false)?
+                .len())
+        };
+        let n_ok = e(drain(&bytes))?;
+        let cut = g.usize(0, bytes.len() - 1);
+        prop_assert!(
+            drain(&bytes[..cut]).is_err(),
+            "prefix {cut}/{} decoded cleanly ({n_ok} frames expected, {threads} threads)",
+            bytes.len()
+        );
+        let mut bad = bytes;
+        let ix = g.usize(0, bad.len() - 1);
+        let bit = g.usize(0, 7);
+        bad[ix] ^= 1 << bit;
+        prop_assert!(
+            drain(&bad).is_err(),
+            "bit flip at byte {ix} bit {bit} decoded cleanly ({threads} threads)"
+        );
+        Ok(())
     });
 }
 

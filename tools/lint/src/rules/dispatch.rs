@@ -1,11 +1,12 @@
 //! `dispatch-containment`: ISA-specific code stays behind the dispatch
 //! layer. Intrinsics (`core::arch`, `#[target_feature]`) may appear only
-//! in `mcnc/kernel/{x86,neon}.rs`; runtime feature probes only there or
-//! in `mcnc/kernel/dispatch.rs`; and the `x86::`/`neon::`/`scalar::`
-//! backend modules may be named only inside `mcnc/kernel/`. Everything
-//! above the kernel layer must go through `kernel::dispatch`, which is
-//! what makes "scalar and SIMD backends are bit-identical" a checkable
-//! claim instead of a convention.
+//! in `mcnc/kernel/{x86,neon,x86_i8,neon_i8}.rs` — the f32 microkernels
+//! and their int8 compressed-domain siblings; runtime feature probes only
+//! there or in `mcnc/kernel/dispatch.rs`; and the
+//! `x86::`/`neon::`/`scalar::` backend modules may be named only inside
+//! `mcnc/kernel/`. Everything above the kernel layer must go through
+//! `kernel::dispatch`, which is what makes "scalar and SIMD backends are
+//! bit-identical" a checkable claim instead of a convention.
 
 use crate::lexer::find_token;
 use crate::{Finding, SourceFile};
@@ -13,7 +14,12 @@ use crate::{Finding, SourceFile};
 /// Stable rule name.
 pub const ID: &str = "dispatch-containment";
 
-const ARCH_FILES: [&str; 2] = ["mcnc/kernel/x86.rs", "mcnc/kernel/neon.rs"];
+const ARCH_FILES: [&str; 4] = [
+    "mcnc/kernel/x86.rs",
+    "mcnc/kernel/neon.rs",
+    "mcnc/kernel/x86_i8.rs",
+    "mcnc/kernel/neon_i8.rs",
+];
 const DETECT_FILES: [&str; 3] =
     ["mcnc/kernel/x86.rs", "mcnc/kernel/neon.rs", "mcnc/kernel/dispatch.rs"];
 const KERNEL_DIR: &str = "mcnc/kernel/";

@@ -1,10 +1,12 @@
 //! `panic-freedom`: the serving path must degrade, not die. A panic in
-//! `coordinator/{shard,server,router}.rs` takes down a shard that the
-//! supervisor then has to resurrect, and a panic in `net/` takes down
+//! `coordinator/{shard,server,router,qserve}.rs` takes down a shard that
+//! the supervisor then has to resurrect, and a panic in `net/` takes down
 //! the socket front-end's poll loop with every connection on it — every
 //! fallible step there must propagate a `Result` so the deadline/
 //! circuit-breaker machinery (and per-connection error replies) can do
-//! their job. `#[cfg(test)]` regions are exempt.
+//! their job. `qserve.rs` is on the list because its panel cold-fill path
+//! runs inside `run_batch` on live requests. `#[cfg(test)]` regions are
+//! exempt.
 
 use crate::lexer::find_token;
 use crate::{Finding, SourceFile};
@@ -12,8 +14,12 @@ use crate::{Finding, SourceFile};
 /// Stable rule name.
 pub const ID: &str = "panic-freedom";
 
-const PANIC_FILES: [&str; 3] =
-    ["coordinator/shard.rs", "coordinator/server.rs", "coordinator/router.rs"];
+const PANIC_FILES: [&str; 4] = [
+    "coordinator/shard.rs",
+    "coordinator/server.rs",
+    "coordinator/router.rs",
+    "coordinator/qserve.rs",
+];
 
 /// Flag `.unwrap()`/`.expect()` calls and panicking macros in non-test
 /// code of the serving-path files (the coordinator hot path and the

@@ -1,0 +1,5 @@
+use core::arch::x86_64::{_mm256_maddubs_epi16, _mm256_sign_epi8};
+
+#[target_feature(enable = "avx2")]
+// SAFETY: fixture only; never executed.
+pub unsafe fn maddubs_probe() {}

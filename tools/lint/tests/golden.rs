@@ -73,6 +73,26 @@ fn dispatch_negative_inside_kernel() {
 }
 
 #[test]
+fn dispatch_negative_inside_i8_kernels() {
+    // the int8 compressed-domain kernels are sanctioned intrinsics files
+    for rel in ["mcnc/kernel/x86_i8.rs", "mcnc/kernel/neon_i8.rs"] {
+        let rep = lint_one(rel, "dispatch/negative_i8.rs");
+        assert!(rep.findings.is_empty(), "{rel}: {:?}", rep.findings);
+    }
+}
+
+#[test]
+fn dispatch_fires_for_i8_constructs_outside_kernel() {
+    // the same maddubs-style constructs anywhere else must fire
+    let rep = lint_one("codec/container.rs", "dispatch/negative_i8.rs");
+    let want = [
+        loc("codec/container.rs", 1), // core::arch import
+        loc("codec/container.rs", 3), // #[target_feature]
+    ];
+    assert_eq!(hits(&rep.findings, "dispatch-containment"), want);
+}
+
+#[test]
 fn dispatch_suppressed() {
     let rep = lint_one("runtime/session.rs", "dispatch/suppressed.rs");
     assert!(rep.findings.is_empty(), "{:?}", rep.findings);
@@ -114,6 +134,14 @@ fn panic_freedom_applies_to_net() {
     // the socket front-end is a serving path too: net/*.rs is gated
     let rep = lint_one("net/listener.rs", "panic_freedom/positive.rs");
     let want = [loc("net/listener.rs", 2), loc("net/listener.rs", 4)];
+    assert_eq!(hits(&rep.findings, "panic-freedom"), want);
+}
+
+#[test]
+fn panic_freedom_applies_to_qserve() {
+    // the quantized-panel engine's cold-fill path serves live requests
+    let rep = lint_one("coordinator/qserve.rs", "panic_freedom/positive.rs");
+    let want = [loc("coordinator/qserve.rs", 2), loc("coordinator/qserve.rs", 4)];
     assert_eq!(hits(&rep.findings, "panic-freedom"), want);
 }
 
